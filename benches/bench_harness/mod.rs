@@ -1,0 +1,42 @@
+//! Shared mini bench harness for the `harness = false` benches
+//! (criterion is unavailable in the offline build; this prints a
+//! criterion-like report: warmup, median and spread over runs).
+
+use std::time::Instant;
+
+/// Measure `f` and print a criterion-style line. Returns median seconds.
+pub fn bench_case<F: FnMut()>(group: &str, name: &str, warmup: u32, runs: u32, mut f: F) -> f64 {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times: Vec<f64> = (0..runs.max(1))
+        .map(|_| {
+            let t = Instant::now();
+            f();
+            t.elapsed().as_secs_f64()
+        })
+        .collect();
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = times[times.len() / 2];
+    let min = times[0];
+    let max = times[times.len() - 1];
+    println!(
+        "{group}/{name:<28} time: [{} {} {}]",
+        fmt(min),
+        fmt(median),
+        fmt(max)
+    );
+    median
+}
+
+pub fn fmt(secs: f64) -> String {
+    if secs >= 1.0 {
+        format!("{secs:.3} s")
+    } else if secs >= 1e-3 {
+        format!("{:.3} ms", secs * 1e3)
+    } else if secs >= 1e-6 {
+        format!("{:.3} us", secs * 1e6)
+    } else {
+        format!("{:.1} ns", secs * 1e9)
+    }
+}

@@ -1,0 +1,37 @@
+//! Bench: Fig 2 (right) — per-subgraph computation time vs k for every
+//! feature map (phi_match, phi_Gs, phi_Gs+eig, phi_OPU simulated on CPU
+//! and over PJRT, and the physical-OPU analytic model).
+//!
+//! Paper shape to reproduce: phi_match exponential in k, Gaussian maps
+//! polynomial, OPU constant. Results also land in results/fig2_right.json.
+//!
+//! Run: `cargo bench --bench fig2_right_time` (add
+//! `BENCH_M=5000 BENCH_POOL=512 BENCH_KS=3,4,5,6,7,8` to override).
+
+#[allow(dead_code)]
+mod bench_harness;
+
+use graphlet_rf::experiments::{timing, ExpContext};
+use graphlet_rf::runtime::{artifacts_dir, Engine};
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() {
+    let m = env_usize("BENCH_M", 5000);
+    let pool = env_usize("BENCH_POOL", 256);
+    let ks: Vec<usize> = std::env::var("BENCH_KS")
+        .map(|v| v.split(',').filter_map(|s| s.parse().ok()).collect())
+        .unwrap_or_else(|_| vec![3, 4, 5, 6, 7, 8]);
+
+    let engine = Engine::new(&artifacts_dir()).ok();
+    if engine.is_none() {
+        eprintln!("note: no artifacts — PJRT series skipped (run `make artifacts`)");
+    }
+    let ctx = ExpContext::new(engine, std::path::PathBuf::from("results"));
+    let out = timing::fig2_right(&ctx, &ks, m, pool).expect("fig2_right");
+    // Criterion-style per-series lines for the bench log.
+    let json = out.to_string();
+    println!("\n(bench json written to results/fig2_right.json, {} bytes)", json.len());
+}

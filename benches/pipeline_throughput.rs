@@ -1,0 +1,116 @@
+//! Bench: end-to-end coordinator throughput (samples/second through the
+//! full sample -> batch -> feature -> accumulate pipeline), across engine
+//! modes and batch sizes. This is the L3 §Perf driver — EXPERIMENTS.md
+//! quotes its numbers.
+
+mod bench_harness;
+
+use bench_harness::bench_case;
+use graphlet_rf::coordinator::{embed_dataset, EngineMode, GsaConfig};
+use graphlet_rf::features::Variant;
+use graphlet_rf::gen::SbmConfig;
+use graphlet_rf::runtime::{artifacts_dir, Engine};
+use graphlet_rf::util::Rng;
+
+/// L2 §Perf ablation: fused on-device mean (embed artifact, (s,d)->(m,))
+/// vs the streaming per-batch path ((B,d)->(B,m) + host-side scatter).
+/// The fused path avoids shipping s*m floats back per graph.
+fn bench_fused_vs_streaming(engine: &Engine) {
+    use graphlet_rf::features::RfParams;
+    use graphlet_rf::runtime::{HostTensor, RfExecutor};
+    let (d, m, s) = (36usize, 5000usize, 2000usize);
+    let mut rng = Rng::new(5);
+    let params = RfParams::generate(Variant::Opu, d, m, 1.0, &mut rng);
+    let mut x = vec![0.0f32; s * d];
+    for v in x.iter_mut() {
+        *v = rng.bool(0.3) as u8 as f32;
+    }
+    // Streaming path: 8 batches of 256 through the rf artifact, mean on
+    // host (what the pipeline does, minus sampling).
+    let exec = RfExecutor::new(engine, "xla", &params, 256).unwrap();
+    let t_stream = bench_case("embed_one_graph", "streaming_b256", 1, 5, || {
+        let mut sum = vec![0.0f32; m];
+        for chunk in 0..(s / 256) {
+            let rows = &x[chunk * 256 * d..(chunk + 1) * 256 * d];
+            let y = exec.map(engine, rows, 256).unwrap();
+            for r in 0..256 {
+                for (a, &v) in sum.iter_mut().zip(&y[r * m..(r + 1) * m]) {
+                    *a += v;
+                }
+            }
+        }
+        std::hint::black_box(sum);
+    });
+    // Fused path: one call, mean computed on device.
+    let art = engine.load("embed_opu_xla_d36_m5000_s2000").unwrap();
+    let inputs = vec![
+        HostTensor::F32(x.clone()),
+        HostTensor::F32(params.mats[0].clone()),
+        HostTensor::F32(params.mats[1].clone()),
+        HostTensor::F32(params.biases[0].clone()),
+        HostTensor::F32(params.biases[1].clone()),
+    ];
+    let t_fused = bench_case("embed_one_graph", "fused_embed_s2000", 1, 5, || {
+        std::hint::black_box(art.execute(&inputs).unwrap());
+    });
+    println!(
+        "  -> fused/streaming speedup: {:.2}x ({} vs {})",
+        t_stream / t_fused,
+        bench_harness::fmt(t_stream),
+        bench_harness::fmt(t_fused)
+    );
+    // L1 ablation: the pallas-impl artifact for the same fused embedding.
+    if let Ok(art_p) = engine.load("embed_opu_pallas_d36_m5000_s2000") {
+        let t_pallas = bench_case("embed_one_graph", "fused_embed_pallas", 1, 3, || {
+            std::hint::black_box(art_p.execute(&inputs).unwrap());
+        });
+        println!(
+            "  -> pallas-interpret vs fused-xla: {:.2}x slower (expected: \
+             interpret-mode pallas lowers to loop HLO; the kernel targets TPU)",
+            t_pallas / t_fused
+        );
+    }
+}
+
+fn main() {
+    let ds = SbmConfig { per_class: 10, r: 1.2, ..Default::default() }
+        .generate(&mut Rng::new(3));
+    let engine = Engine::new(&artifacts_dir()).ok();
+    if let Some(e) = &engine {
+        bench_fused_vs_streaming(e);
+    }
+    let s = 1000usize;
+
+    for (mode, name) in [
+        (EngineMode::Cpu, "cpu"),
+        (EngineMode::CpuInline, "cpu-inline"),
+        (EngineMode::Pjrt, "pjrt"),
+    ] {
+        if mode == EngineMode::Pjrt && engine.is_none() {
+            eprintln!("skipping pjrt (no artifacts)");
+            continue;
+        }
+        for m in [1000usize, 5000] {
+            let cfg = GsaConfig {
+                k: 6,
+                s,
+                m,
+                batch: 256,
+                variant: Variant::Opu,
+                engine: mode,
+                seed: 1,
+                ..Default::default()
+            };
+            let samples = ds.len() * s;
+            let t = bench_case("pipeline", &format!("{name}_m{m}"), 1, 3, || {
+                let (emb, _) = embed_dataset(&ds, &cfg, engine.as_ref()).unwrap();
+                std::hint::black_box(emb);
+            });
+            println!(
+                "  -> {name} m={m}: {:.0} samples/s ({} graphs x {s} samples)",
+                samples as f64 / t,
+                ds.len()
+            );
+        }
+    }
+}

@@ -1,0 +1,113 @@
+//! Bench: Table 1 — empirical verification of the per-graph GSA-phi
+//! complexities:
+//!
+//!   phi_match    O(C_S s N_k C_k)   — exponential in k
+//!   phi_Gs       O(C_S s m k^2)     — linear in m, quadratic-ish in k
+//!   phi_Gs+eig   O(C_S s (mk+k^3))  — linear in m, cheaper in k
+//!   phi_OPU      O(C_S s)           — constant per projection (physical)
+//!
+//! Measures scaling in BOTH k (fixed m) and m (fixed k) and prints the
+//! fitted rates next to the theoretical ones.
+
+mod bench_harness;
+
+use bench_harness::bench_case;
+use graphlet_rf::features::{CpuFeatureMap, RfParams, Variant};
+use graphlet_rf::gen::SbmConfig;
+use graphlet_rf::iso::GraphletRegistry;
+use graphlet_rf::sample::{GraphletSampler, UniformSampler};
+use graphlet_rf::util::Rng;
+
+fn pool(k: usize, n: usize, seed: u64) -> Vec<graphlet_rf::graph::Graphlet> {
+    let g = SbmConfig::default().sample_graph(1, &mut Rng::new(seed));
+    let mut rng = Rng::new(seed ^ 1);
+    let mut scratch = Vec::new();
+    (0..n).map(|_| UniformSampler.sample(&g, k, &mut rng, &mut scratch)).collect()
+}
+
+fn fit_slope(xs: &[f64], ys: &[f64]) -> f64 {
+    let n = xs.len() as f64;
+    let mx = xs.iter().sum::<f64>() / n;
+    let my = ys.iter().sum::<f64>() / n;
+    let cov: f64 = xs.iter().zip(ys).map(|(x, y)| (x - mx) * (y - my)).sum();
+    let var: f64 = xs.iter().map(|x| (x - mx) * (x - mx)).sum();
+    cov / var.max(1e-300)
+}
+
+fn main() {
+    let n = 256usize;
+    let mut rng = Rng::new(7);
+
+    // --- scaling in m at fixed k (phi_Gs and phi_OPU are O(m)) ---------
+    println!("# Table 1: scaling in m (k = 6 fixed)");
+    let k = 6usize;
+    let d = k * k;
+    let graphlets = pool(k, n, 11);
+    let mut x = vec![0.0f32; n * d];
+    for (i, g) in graphlets.iter().enumerate() {
+        g.write_flat_adj(&mut x[i * d..(i + 1) * d]);
+    }
+    for variant in [Variant::Gauss, Variant::Opu] {
+        let (mut lms, mut lts) = (Vec::new(), Vec::new());
+        for m in [250usize, 1000, 4000] {
+            let params = RfParams::generate(variant, d, m, 0.1, &mut rng);
+            let map = CpuFeatureMap::new(params);
+            let mut y = vec![0.0f32; n * m];
+            let t = bench_case("table1_m", &format!("{}_m{m}", variant.name()), 1, 5, || {
+                map.map_batch(&x, n, &mut y);
+            });
+            lms.push((m as f64).ln());
+            lts.push(t.max(1e-12).ln());
+        }
+        println!("  -> {} m-exponent: {:.2} (theory: 1.0)", variant.name(), fit_slope(&lms, &lts));
+    }
+
+    // --- scaling in k at fixed m ----------------------------------------
+    println!("\n# Table 1: scaling in k (m = 2000 fixed)");
+    let m = 2000usize;
+    // phi_match: time per classify (exponential).
+    let (mut ks_f, mut lt_match) = (Vec::new(), Vec::new());
+    for k in [4usize, 5, 6, 7, 8] {
+        let graphlets = pool(k, n, 23 + k as u64);
+        let mut reg = GraphletRegistry::new();
+        let t = bench_case("table1_k", &format!("match_k{k}"), 1, 3, || {
+            for g in &graphlets {
+                std::hint::black_box(reg.classify(g));
+            }
+        });
+        ks_f.push(k as f64);
+        lt_match.push((t / n as f64).max(1e-12).ln());
+    }
+    println!("  -> match log-time slope per k: {:.2} (exponential => > 0.3)", fit_slope(&ks_f, &lt_match));
+
+    for variant in [Variant::Gauss, Variant::Opu] {
+        let (mut lks, mut lts) = (Vec::new(), Vec::new());
+        for k in [4usize, 6, 8] {
+            let d = k * k;
+            let graphlets = pool(k, n, 31 + k as u64);
+            let mut x = vec![0.0f32; n * d];
+            for (i, g) in graphlets.iter().enumerate() {
+                g.write_flat_adj(&mut x[i * d..(i + 1) * d]);
+            }
+            let params = RfParams::generate(variant, d, m, 0.1, &mut rng);
+            let map = CpuFeatureMap::new(params);
+            let mut y = vec![0.0f32; n * m];
+            let t = bench_case("table1_k", &format!("{}_k{k}", variant.name()), 1, 5, || {
+                map.map_batch(&x, n, &mut y);
+            });
+            lks.push((k as f64).ln());
+            lts.push(t.max(1e-12).ln());
+        }
+        println!(
+            "  -> {} k-degree: {:.2} (theory: ~2 for adjacency input)",
+            variant.name(),
+            fit_slope(&lks, &lts)
+        );
+    }
+
+    // Physical OPU: constant by the device model.
+    println!(
+        "\nphysical OPU model: {} per projection for ANY k, m (constant)",
+        bench_harness::fmt(graphlet_rf::features::OPU_SECONDS_PER_PROJECTION)
+    );
+}

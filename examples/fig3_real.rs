@@ -1,0 +1,34 @@
+//! Fig 3: the real-data protocol (D&D and Reddit-Binary) — accuracy vs m
+//! against the exact graphlet-kernel baseline, k = 7, s = 4000 at full
+//! scale.
+//!
+//! The default datasets are the structure-matched synthetic substitutes
+//! (DESIGN.md §2); real TU-format data drops in via `--tu-dir`:
+//!
+//! ```bash
+//! cargo run --release --example fig3_real -- --dataset dd
+//! cargo run --release --example fig3_real -- --dataset reddit --scale full
+//! cargo run --release --example fig3_real -- --dataset DD --tu-dir /data/TU
+//! ```
+
+use anyhow::Result;
+use graphlet_rf::coordinator::EngineMode;
+use graphlet_rf::experiments::{figures, ExpContext, Scale};
+use graphlet_rf::runtime::{artifacts_dir, Engine};
+use graphlet_rf::util::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let dataset = args.str_or("dataset", "dd").to_string();
+    let seed: u64 = args.parse_or("seed", 0u64);
+    let scale = Scale::parse(args.str_or("scale", "quick"));
+    let tu_dir = args.get("tu-dir").map(std::path::PathBuf::from);
+
+    let engine = Engine::new(&artifacts_dir()).ok();
+    let mut ctx = ExpContext::new(engine, std::path::PathBuf::from(args.str_or("out", "results")));
+    if let Some(mode) = args.get("engine").map(EngineMode::parse) {
+        ctx.engine_mode = Some(mode);
+    }
+    figures::fig3(&ctx, &scale, &dataset, tu_dir.as_deref(), seed)?;
+    Ok(())
+}

@@ -1,0 +1,77 @@
+//! End-to-end quickstart — the system-validation driver (DESIGN.md §5).
+//!
+//! Exercises every layer on a real small workload:
+//!   1. generate an SBM graph-classification dataset (paper §4.1),
+//!   2. random-walk-sample graphlets in parallel worker threads,
+//!   3. embed them with simulated-OPU random features executed from the
+//!      AOT-compiled XLA artifact over PJRT (L1/L2 build-time python,
+//!      never imported here),
+//!   4. train the linear SVM tail and report test accuracy + pipeline
+//!      throughput.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+//! Falls back to the rust CPU feature engine when artifacts are missing.
+
+use anyhow::Result;
+use graphlet_rf::classify::{train_and_eval, TrainConfig};
+use graphlet_rf::coordinator::{embed_dataset, EngineMode, GsaConfig};
+use graphlet_rf::gen::SbmConfig;
+use graphlet_rf::runtime::{artifacts_dir, Engine};
+use graphlet_rf::util::{Args, Rng, Timer};
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let seed: u64 = args.parse_or("seed", 0u64);
+    let r = args.parse_or("r", 1.2f64);
+    let per_class = args.parse_or("per-class", 60usize);
+
+    // PJRT engine if `make artifacts` has been run.
+    let engine = match Engine::new(&artifacts_dir()) {
+        Ok(e) => {
+            println!("engine: PJRT ({})", e.platform());
+            Some(e)
+        }
+        Err(e) => {
+            println!("engine: rust CPU fallback ({e})");
+            None
+        }
+    };
+
+    let total = Timer::start();
+    let ds = SbmConfig { r, per_class, ..Default::default() }.generate(&mut Rng::new(seed));
+    println!("dataset: {}", ds.summary());
+
+    let cfg = GsaConfig {
+        k: args.parse_or("k", 6usize),
+        s: args.parse_or("s", 2000usize),
+        m: args.parse_or("m", 5000usize),
+        engine: if engine.is_some() { EngineMode::Pjrt } else { EngineMode::CpuInline },
+        seed,
+        ..Default::default()
+    };
+    println!(
+        "GSA-phi_OPU: k={} s={} m={} sampler={} batch={}",
+        cfg.k, cfg.s, cfg.m, cfg.sampler, cfg.batch
+    );
+    let (emb, metrics) = embed_dataset(&ds, &cfg, engine.as_ref())?;
+    println!("pipeline: {}", metrics.report());
+
+    let split = ds.split(0.8, &mut Rng::new(seed ^ 0xACC));
+    let acc = train_and_eval(
+        &emb,
+        &ds.labels,
+        cfg.m,
+        &split.train,
+        &split.test,
+        &TrainConfig::default(),
+    );
+    println!(
+        "test accuracy: {acc:.3} ({} train / {} test graphs)",
+        split.train.len(),
+        split.test.len()
+    );
+    println!("total wall time: {:.1}s", total.elapsed_secs());
+    Ok(())
+}

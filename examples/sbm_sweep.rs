@@ -1,0 +1,40 @@
+//! SBM accuracy sweeps: regenerates Fig 1 (left), Fig 1 (right) and
+//! Fig 2 (left) of the paper.
+//!
+//! ```bash
+//! cargo run --release --example sbm_sweep -- fig1-left            # quick scale
+//! cargo run --release --example sbm_sweep -- fig1-right --scale full
+//! cargo run --release --example sbm_sweep -- fig2-left
+//! cargo run --release --example sbm_sweep -- all
+//! ```
+//! Results print as rows and land in `results/<figure>.json`.
+
+use anyhow::Result;
+use graphlet_rf::coordinator::EngineMode;
+use graphlet_rf::experiments::{figures, ExpContext, Scale};
+use graphlet_rf::runtime::{artifacts_dir, Engine};
+use graphlet_rf::util::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let which = args.positional().first().map(|s| s.as_str()).unwrap_or("all");
+    let seed: u64 = args.parse_or("seed", 0u64);
+    let scale = Scale::parse(args.str_or("scale", "quick"));
+
+    let engine = Engine::new(&artifacts_dir()).ok();
+    let mut ctx = ExpContext::new(engine, std::path::PathBuf::from(args.str_or("out", "results")));
+    if let Some(mode) = args.get("engine").map(EngineMode::parse) {
+        ctx.engine_mode = Some(mode);
+    }
+
+    if matches!(which, "fig1-left" | "all") {
+        figures::fig1_left(&ctx, &scale, seed)?;
+    }
+    if matches!(which, "fig1-right" | "all") {
+        figures::fig1_right(&ctx, &scale, seed)?;
+    }
+    if matches!(which, "fig2-left" | "all") {
+        figures::fig2_left(&ctx, &scale, seed)?;
+    }
+    Ok(())
+}

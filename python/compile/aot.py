@@ -1,0 +1,170 @@
+"""AOT compiler: lower every configured jax function to HLO text + manifest.
+
+Run once by `make artifacts`; the rust runtime consumes only the outputs:
+
+  artifacts/<name>.hlo.txt   one HLO module per artifact (text format)
+  artifacts/manifest.txt     line-oriented index parsed by runtime::manifest
+
+HLO *text* is the interchange format, NOT serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids that the crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Manifest grammar (one token-separated record per artifact):
+
+  manifest-version 1
+  artifact <name>
+  file <name>.hlo.txt
+  kind rf|embed|gin_train|gin_predict
+  meta <key>=<value> ...          # variant/impl/d/m/batch/s/v as relevant
+  input <name> <dtype> <d0,d1,..> # in positional order
+  output <name> <dtype> <d0,..>   # outputs of the (always) returned tuple
+  end
+"""
+
+import argparse
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import configs, model
+
+_DTYPES = {jnp.float32.dtype: "f32", jnp.int32.dtype: "i32"}
+
+
+def to_hlo_text(lowered) -> str:
+    """Lower jax's stablehlo to XLA HLO text via an XlaComputation."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _fmt_shape(s):
+    return ",".join(str(d) for d in s.shape) if s.shape else "scalar"
+
+
+def _manifest_record(cfg, in_names, in_specs, out_names, out_specs, fname):
+    lines = [f"artifact {cfg['name']}", f"file {fname}", f"kind {cfg['kind']}"]
+    meta = " ".join(
+        f"{k}={cfg[k]}" for k in ("variant", "impl", "d", "m", "batch", "s", "v")
+        if k in cfg
+    )
+    if meta:
+        lines.append(f"meta {meta}")
+    for n, s in zip(in_names, in_specs):
+        lines.append(f"input {n} {_DTYPES[s.dtype]} {_fmt_shape(s)}")
+    for n, s in zip(out_names, out_specs):
+        lines.append(f"output {n} {_DTYPES[s.dtype]} {_fmt_shape(s)}")
+    lines.append("end")
+    return "\n".join(lines)
+
+
+def build_rf(cfg):
+    """(fn, input names, input specs, output names)."""
+    d, m, b = cfg["d"], cfg["m"], cfg["batch"]
+    fn = model.rf_features(cfg["variant"], cfg["impl"])
+    if cfg["variant"] == "opu":
+        names = ["x", "wr", "wi", "br", "bi"]
+        specs = [spec((b, d)), spec((d, m)), spec((d, m)), spec((m,)), spec((m,))]
+    else:
+        names = ["x", "w", "b"]
+        specs = [spec((b, d)), spec((d, m)), spec((m,))]
+    return fn, names, specs, ["y"]
+
+
+def build_embed(cfg):
+    d, m, s = cfg["d"], cfg["m"], cfg["s"]
+    fn = model.gsa_embed(cfg["variant"], cfg["impl"])
+    if cfg["variant"] == "opu":
+        names = ["x", "wr", "wi", "br", "bi"]
+        specs = [spec((s, d)), spec((d, m)), spec((d, m)), spec((m,)), spec((m,))]
+    else:
+        names = ["x", "w", "b"]
+        specs = [spec((s, d)), spec((d, m)), spec((m,))]
+    return fn, names, specs, ["f"]
+
+
+def build_gin_train(cfg):
+    b, v = cfg["batch"], cfg["v"]
+    shapes = model.gin_param_shapes()
+    fn = model.gin_train_step()
+    names = ["step", "adj", "labels"]
+    specs = [spec(()), spec((b, v, v)), spec((b,), jnp.int32)]
+    for prefix in ("p", "m", "v"):
+        for pname, pshape in shapes:
+            names.append(f"{prefix}_{pname}")
+            specs.append(spec(pshape))
+    out_names = ["loss"]
+    for prefix in ("p", "m", "v"):
+        out_names += [f"{prefix}_{pname}" for pname, _ in shapes]
+    return fn, names, specs, out_names
+
+
+def build_gin_predict(cfg):
+    b, v = cfg["batch"], cfg["v"]
+    shapes = model.gin_param_shapes()
+    fn = model.gin_predict()
+    names = ["adj"] + [f"p_{pname}" for pname, _ in shapes]
+    specs = [spec((b, v, v))] + [spec(pshape) for _, pshape in shapes]
+    return fn, names, specs, ["pred", "logits"]
+
+
+_BUILDERS = {
+    "rf": build_rf,
+    "embed": build_embed,
+    "gin_train": build_gin_train,
+    "gin_predict": build_gin_predict,
+}
+
+
+def lower_one(cfg, out_dir):
+    fn, in_names, in_specs, out_names = _BUILDERS[cfg["kind"]](cfg)
+    lowered = jax.jit(fn).lower(*in_specs)
+    text = to_hlo_text(lowered)
+    fname = f"{cfg['name']}.hlo.txt"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        f.write(text)
+    # Output specs from the lowering itself (authoritative).
+    out_avals = lowered.out_info
+    flat = jax.tree_util.tree_leaves(out_avals)
+    out_specs = [spec(o.shape, o.dtype) for o in flat]
+    assert len(out_specs) == len(out_names), (cfg["name"], len(out_specs), len(out_names))
+    return _manifest_record(cfg, in_names, in_specs, out_names, out_specs, fname)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default=os.path.join(os.path.dirname(__file__), "..", "..", "artifacts"))
+    ap.add_argument("--only", default=None, help="substring filter on artifact names")
+    args = ap.parse_args()
+    out_dir = os.path.abspath(args.out_dir)
+    os.makedirs(out_dir, exist_ok=True)
+
+    cfgs = configs.all_configs()
+    if args.only:
+        cfgs = [c for c in cfgs if args.only in c["name"]]
+    records = ["manifest-version 1"]
+    t0 = time.time()
+    for i, cfg in enumerate(cfgs):
+        t = time.time()
+        records.append(lower_one(cfg, out_dir))
+        print(f"[{i + 1}/{len(cfgs)}] {cfg['name']} ({time.time() - t:.2f}s)",
+              file=sys.stderr)
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(records) + "\n")
+    print(f"wrote {len(cfgs)} artifacts + manifest to {out_dir} "
+          f"in {time.time() - t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

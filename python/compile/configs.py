@@ -1,0 +1,88 @@
+"""The artifact matrix: every HLO module `make artifacts` produces.
+
+Keyed by the experiments in DESIGN.md §5:
+  - Fig 1 left  : opu, d = k^2 for k in 3..6, m in {500..5000}, uniform
+  - Fig 1 right : opu RW k in 3..6 (d 9..36) + GIN train/predict
+  - Fig 2 left  : opu / gauss / gauss-eig sweeps over m at k = 6
+  - Fig 2 right + Table 1 : timing over k in 3..8 (d 9..64)
+  - Fig 3       : k = 7 (d = 49), m sweep, s = 4000
+The rust runtime looks artifacts up by name; aot.py writes the manifest.
+
+impl notes: 'xla' lowers the pure-jnp body (kernels/ref.py) — XLA-CPU fuses
+it into dot + epilogue and it is the runtime fast path. 'pallas' lowers the
+L1 kernel in interpret mode — structurally the TPU kernel, used for
+validation and the L1-vs-L2 perf comparison (EXPERIMENTS.md §Perf).
+"""
+
+# k values used across the experiments and the matching flattened dims
+KS = [3, 4, 5, 6, 7, 8]
+M_SWEEP = [100, 500, 1000, 2000, 5000]
+DEFAULT_BATCH = 256
+
+GIN_BATCH_TRAIN = 32
+GIN_BATCH_PREDICT = 60
+GIN_NODES = 60  # SBM graphs are v = 60 (paper §4.1)
+
+
+def rf_name(variant, impl, d, m, batch):
+    return f"rf_{variant}_{impl}_d{d}_m{m}_b{batch}"
+
+
+def embed_name(variant, impl, d, m, s):
+    return f"embed_{variant}_{impl}_d{d}_m{m}_s{s}"
+
+
+def rf_configs():
+    """List of dicts describing every random-feature artifact."""
+    cfgs = []
+
+    def add(variant, impl, d, m, batch=DEFAULT_BATCH):
+        cfgs.append(
+            dict(kind="rf", variant=variant, impl=impl, d=d, m=m, batch=batch,
+                 name=rf_name(variant, impl, d, m, batch))
+        )
+
+    # Full xla-impl matrix over adjacency dims (d = k^2) and the m sweep.
+    for k in KS:
+        for m in M_SWEEP:
+            add("opu", "xla", k * k, m)
+            add("gauss", "xla", k * k, m)
+    # Gs+eig variant: gaussian features on sorted-eigenvalue vectors, d = k.
+    for k in KS:
+        for m in M_SWEEP:
+            add("gauss", "xla", k, m)
+    # Pallas validation/perf artifacts (kernel correctness is covered by
+    # pytest across many shapes; these exercise the AOT->PJRT path).
+    for variant in ("opu", "gauss"):
+        add(variant, "pallas", 36, 500)
+        add(variant, "pallas", 36, 5000)
+        add(variant, "pallas", 9, 64, batch=32)
+        add(variant, "xla", 9, 64, batch=32)  # smoke-test twin
+    return cfgs
+
+
+def embed_configs():
+    """Fused (s,d)->(m,) per-graph embedding artifacts (fast path when the
+    per-graph sample count is fixed; avoids returning (s, m) to the host)."""
+    cfgs = []
+    for variant, impl, d, m, s in [
+        ("opu", "xla", 36, 5000, 2000),
+        ("opu", "xla", 49, 5000, 4000),
+        ("opu", "pallas", 36, 5000, 2000),
+    ]:
+        cfgs.append(dict(kind="embed", variant=variant, impl=impl, d=d, m=m,
+                         s=s, name=embed_name(variant, impl, d, m, s)))
+    return cfgs
+
+
+def gin_configs():
+    return [
+        dict(kind="gin_train", batch=GIN_BATCH_TRAIN, v=GIN_NODES,
+             name=f"gin_train_b{GIN_BATCH_TRAIN}_v{GIN_NODES}"),
+        dict(kind="gin_predict", batch=GIN_BATCH_PREDICT, v=GIN_NODES,
+             name=f"gin_predict_b{GIN_BATCH_PREDICT}_v{GIN_NODES}"),
+    ]
+
+
+def all_configs():
+    return rf_configs() + embed_configs() + gin_configs()

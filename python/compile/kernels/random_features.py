@@ -1,0 +1,150 @@
+"""L1 Pallas kernels: tiled random-feature projections.
+
+The compute hot-spot of GSA-phi is a dense random projection of a batch of
+flattened graphlet adjacencies followed by an elementwise nonlinearity:
+
+  gaussian : y = sqrt(2/m) * cos(x @ W + b)            (phi_Gs, paper eq. 8)
+  opu      : y = m^{-1/2} * ((x@Wr+br)^2 + (x@Wi+bi)^2) (phi_OPU, simulated)
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's "device"
+is an optical matrix multiplier; on a TPU the same workload is MXU-shaped.
+We tile the (B, m) output into (block_b, block_m) VMEM blocks via BlockSpec,
+keep the full d-panel of x and W resident per block (d = k^2 <= 64, tiny),
+and fuse the nonlinearity into the same kernel so the projection never
+round-trips to HBM. The grid iterates row-major over B blocks so the W
+column panel is reused across consecutive grid steps.
+
+interpret=True everywhere: real-TPU lowering emits a Mosaic custom-call the
+CPU PJRT plugin cannot execute; interpret mode lowers to plain HLO, which is
+what the rust runtime loads. Correctness vs kernels/ref.py is enforced by
+python/tests/test_kernels.py (hypothesis sweeps shapes and dtypes).
+"""
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _largest_divisor_leq(n: int, cap: int) -> int:
+    """Largest divisor of n that is <= cap (>=1). Used to pick block sizes
+    that tile the batch/feature dims exactly, so no masking is needed."""
+    for c in range(min(n, cap), 0, -1):
+        if n % c == 0:
+            return c
+    return 1
+
+
+def default_blocks(batch: int, m: int) -> tuple[int, int]:
+    """Default (block_b, block_m) tiling.
+
+    Chosen so the working set (x-block + two W panels + out-block) fits a
+    16 MiB VMEM budget with room for double buffering; see DESIGN.md §Perf
+    for the footprint table. Both must divide their dims exactly.
+    """
+    return _largest_divisor_leq(batch, 128), _largest_divisor_leq(m, 512)
+
+
+def _gaussian_kernel(x_ref, w_ref, b_ref, o_ref, *, scale):
+    """One (block_b, block_m) output tile of sqrt(2/m)*cos(x@W + b)."""
+    acc = jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+    o_ref[...] = (scale * jnp.cos(acc + b_ref[...][None, :])).astype(o_ref.dtype)
+
+
+def _opu_kernel(x_ref, wr_ref, wi_ref, br_ref, bi_ref, o_ref, *, scale):
+    """One (block_b, block_m) output tile of m^{-1/2}*|x@W + b|^2.
+
+    Two MXU dots (real and imaginary panel) share the same x block; the
+    squared-modulus epilogue is fused so only the final tile hits HBM.
+    """
+    x = x_ref[...]
+    re = jnp.dot(x, wr_ref[...], preferred_element_type=jnp.float32)
+    im = jnp.dot(x, wi_ref[...], preferred_element_type=jnp.float32)
+    re = re + br_ref[...][None, :]
+    im = im + bi_ref[...][None, :]
+    o_ref[...] = (scale * (re * re + im * im)).astype(o_ref.dtype)
+
+
+def gaussian_rf_pallas(x, w, b, *, block_b=None, block_m=None):
+    """Pallas phi_Gs: sqrt(2/m) * cos(x @ w + b).
+
+    Args:
+      x: (B, d); w: (d, m); b: (m,). Any float dtype; accumulation in f32.
+      block_b, block_m: optional tile sizes (must divide B and m).
+    Returns: (B, m) array with x's dtype.
+    """
+    batch, d = x.shape
+    d2, m = w.shape
+    assert d == d2, f"x/w contraction mismatch: {d} vs {d2}"
+    assert b.shape == (m,)
+    bb = block_b or default_blocks(batch, m)[0]
+    bm = block_m or default_blocks(batch, m)[1]
+    assert batch % bb == 0 and m % bm == 0, (batch, m, bb, bm)
+    grid = (batch // bb, m // bm)
+    return pl.pallas_call(
+        functools.partial(_gaussian_kernel, scale=math.sqrt(2.0 / m)),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((d, bm), lambda i, j: (0, j)),
+            pl.BlockSpec((bm,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bb, bm), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((batch, m), x.dtype),
+        interpret=True,
+    )(x, w, b)
+
+
+def opu_rf_pallas(x, wr, wi, br, bi, *, block_b=None, block_m=None):
+    """Pallas phi_OPU: m^{-1/2} * ((x@wr+br)^2 + (x@wi+bi)^2).
+
+    Args:
+      x: (B, d); wr, wi: (d, m); br, bi: (m,).
+    Returns: (B, m) array with x's dtype.
+    """
+    batch, d = x.shape
+    d2, m = wr.shape
+    assert d == d2 and wi.shape == (d, m)
+    assert br.shape == (m,) and bi.shape == (m,)
+    bb = block_b or default_blocks(batch, m)[0]
+    bm = block_m or default_blocks(batch, m)[1]
+    assert batch % bb == 0 and m % bm == 0, (batch, m, bb, bm)
+    grid = (batch // bb, m // bm)
+    return pl.pallas_call(
+        functools.partial(_opu_kernel, scale=1.0 / math.sqrt(m)),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((d, bm), lambda i, j: (0, j)),
+            pl.BlockSpec((d, bm), lambda i, j: (0, j)),
+            pl.BlockSpec((bm,), lambda i, j: (j,)),
+            pl.BlockSpec((bm,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bb, bm), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((batch, m), x.dtype),
+        interpret=True,
+    )(x, wr, wi, br, bi)
+
+
+def vmem_footprint_bytes(block_b: int, block_m: int, d: int, variant: str) -> int:
+    """Estimated VMEM bytes for one grid step (f32), used by the §Perf
+    tables in DESIGN.md/EXPERIMENTS.md: x block + W panel(s) + bias(es) +
+    out block, x2 for double buffering of the streamed operands."""
+    panels = 2 if variant == "opu" else 1
+    x_b = block_b * d * 4
+    w_b = panels * d * block_m * 4
+    bias_b = panels * block_m * 4
+    out_b = block_b * block_m * 4
+    return 2 * (x_b + w_b + bias_b) + out_b
+
+
+def mxu_utilization_estimate(block_b: int, block_m: int, d: int) -> float:
+    """Fraction of 128x128 MXU systolic-tile slots doing useful work for a
+    (block_b, d) x (d, block_m) dot — the structural utilization bound for
+    this kernel on TPU (d <= 64 always under-fills the contraction dim)."""
+    eff_b = min(block_b, 128) / 128.0
+    eff_d = min(d, 128) / 128.0
+    eff_m = min(block_m, 128) / 128.0
+    return eff_b * eff_d * eff_m

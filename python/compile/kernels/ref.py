@@ -1,0 +1,52 @@
+"""Pure-jnp oracles for the random-feature kernels.
+
+These are the ground truth the Pallas kernels (random_features.py) are
+checked against in python/tests/, and they double as the `impl=xla`
+artifact bodies: the same mathematical map lowered without Pallas, which
+XLA-CPU fuses into a single dot + elementwise epilogue (the fast path the
+rust runtime uses by default; the Pallas path validates the TPU-shaped
+kernel structure).
+
+Conventions (match the paper, §3.3):
+  gaussian_rf : phi_Gs(x)  = sqrt(2/m) * cos(x @ W + b)      (eq. 8)
+  opu_rf      : phi_OPU(x) = m^{-1/2} * |x @ (Wr + i Wi) + (br + i bi)|^2
+x is a batch of flattened graphlet adjacency matrices (B, d) with d = k*k,
+or a batch of sorted-eigenvalue vectors (B, k) for the Gs+eig variant.
+"""
+
+import jax.numpy as jnp
+
+
+def gaussian_rf(x, w, b):
+    """Gaussian random features: sqrt(2/m) * cos(x @ w + b).
+
+    Args:
+      x: (B, d) float array, flattened graphlet adjacencies.
+      w: (d, m) float array, iid N(0, 1/sigma^2)-scaled Gaussian frequencies.
+      b: (m,)  float array, iid U[0, 2*pi) phases.
+    Returns:
+      (B, m) float array of random features.
+    """
+    m = w.shape[1]
+    return jnp.sqrt(2.0 / m) * jnp.cos(x @ w + b)
+
+
+def opu_rf(x, wr, wi, br, bi):
+    """Simulated OPU features: m^{-1/2} * |x @ W + b|^2, W complex Gaussian.
+
+    The physical OPU computes the squared modulus of a random complex
+    projection of the (binary) input through a scattering medium; we
+    simulate it with an explicit complex Gaussian matrix W = wr + i*wi and
+    bias b = br + i*bi (DESIGN.md §2).
+
+    Args:
+      x:  (B, d) float array.
+      wr, wi: (d, m) float arrays, real/imaginary parts of W.
+      br, bi: (m,)  float arrays, real/imaginary parts of the bias.
+    Returns:
+      (B, m) float array of optical random features.
+    """
+    m = wr.shape[1]
+    re = x @ wr + br
+    im = x @ wi + bi
+    return (re * re + im * im) / jnp.sqrt(m * 1.0)

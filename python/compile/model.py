@@ -1,0 +1,180 @@
+"""L2: the GSA-phi compute graphs and the GIN baseline, in jax.
+
+Everything here is build-time only: aot.py lowers these functions to HLO
+text which the rust runtime loads via PJRT. Nothing in this file runs on
+the request path.
+
+Artifact families
+-----------------
+rf features   : (B, d) batch of flattened graphlet adjacencies (or sorted
+                eigenvalue vectors for the Gs+eig variant, d = k) plus the
+                random-feature parameters -> (B, m) features. The rust
+                coordinator averages features per graph (eq. 3), which
+                keeps s (samples per graph) flexible at runtime.
+gsa embed     : (s, d) subgraphs of ONE graph -> (m,) mean embedding, the
+                fused fast path used when s is fixed; saves transferring
+                (s, m) back to the host.
+gin train/qry : the GNN baseline of Fig 1 (right): 5 GIN layers (hidden 4)
+                + 2 fully-connected layers, trained with Adam from rust.
+
+Eigenvalue note: phi_Gs+eig(F) = phi_Gs(lambda(F)). We deliberately do NOT
+lower eigvalsh: on CPU it becomes a LAPACK custom-call that xla_extension
+0.5.1 cannot execute. The rust side computes sorted eigenvalues with its
+own Jacobi solver (k <= 8) and feeds them to a d = k gaussian artifact.
+"""
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import random_features as rf
+from .kernels import ref
+
+
+# --------------------------------------------------------------------------
+# Random-feature artifact bodies
+# --------------------------------------------------------------------------
+
+def rf_features(variant: str, impl: str):
+    """Return the (B,d)->(B,m) feature function for a variant/impl pair.
+
+    variant: 'opu' (x, wr, wi, br, bi) or 'gauss' (x, w, b)
+    impl:    'pallas' (L1 kernel) or 'xla' (pure-jnp reference body)
+    """
+    if variant == "opu":
+        return rf.opu_rf_pallas if impl == "pallas" else ref.opu_rf
+    if variant == "gauss":
+        return rf.gaussian_rf_pallas if impl == "pallas" else ref.gaussian_rf
+    raise ValueError(f"unknown variant {variant!r}")
+
+
+def gsa_embed(variant: str, impl: str):
+    """(s, d) subgraph batch of one graph -> (m,) mean embedding (eq. 3)."""
+    feat = rf_features(variant, impl)
+
+    def embed(x, *params):
+        return jnp.mean(feat(x, *params), axis=0)
+
+    return embed
+
+
+# --------------------------------------------------------------------------
+# GIN baseline (Fig 1 right): 5 GIN layers, hidden width 4, 2 FC layers
+# --------------------------------------------------------------------------
+
+GIN_LAYERS = 5
+GIN_HIDDEN = 4
+GIN_CLASSES = 2
+ADAM_B1, ADAM_B2, ADAM_EPS = 0.9, 0.999, 1e-8
+
+
+def gin_param_shapes(in_dim: int = 1):
+    """Ordered list of (name, shape) for all GIN parameters.
+
+    Order is the wire format between aot.py's manifest and the rust gnn
+    driver: parameters are passed positionally in exactly this order.
+    """
+    shapes = []
+    d = in_dim
+    for layer in range(GIN_LAYERS):
+        shapes.append((f"gin{layer}_w1", (d, GIN_HIDDEN)))
+        shapes.append((f"gin{layer}_b1", (GIN_HIDDEN,)))
+        shapes.append((f"gin{layer}_w2", (GIN_HIDDEN, GIN_HIDDEN)))
+        shapes.append((f"gin{layer}_b2", (GIN_HIDDEN,)))
+        d = GIN_HIDDEN
+    shapes.append(("fc1_w", (GIN_HIDDEN, GIN_HIDDEN)))
+    shapes.append(("fc1_b", (GIN_HIDDEN,)))
+    shapes.append(("fc2_w", (GIN_HIDDEN, GIN_CLASSES)))
+    shapes.append(("fc2_b", (GIN_CLASSES,)))
+    return shapes
+
+
+def gin_init_params(key, in_dim: int = 1):
+    """Glorot-ish init, returned as a flat list in gin_param_shapes order.
+
+    Biases start small-positive: with hidden width 4, a zero-bias ReLU
+    layer can initialize fully dead, which is a permanent fixed point
+    (zero activations and zero gradients). Mirrors rust gnn::GinModel.
+    """
+    params = []
+    for _, shape in gin_param_shapes(in_dim):
+        key, sub = jax.random.split(key)
+        if len(shape) == 2:
+            scale = math.sqrt(2.0 / (shape[0] + shape[1]))
+            params.append(scale * jax.random.normal(sub, shape, jnp.float32))
+        else:
+            params.append(jnp.full(shape, 0.05, jnp.float32))
+    return params
+
+
+def gin_forward(params, adj):
+    """GIN forward pass on dense adjacency.
+
+    Args:
+      params: flat list in gin_param_shapes order.
+      adj: (B, v, v) float adjacency matrices (no node features available:
+           input feature = degree / v, per the structure-only protocol).
+    Returns: (B, 2) class logits.
+    """
+    v = adj.shape[-1]
+    h = jnp.sum(adj, axis=-1, keepdims=True) / float(v)  # (B, v, 1) degrees
+    idx = 0
+    for _ in range(GIN_LAYERS):
+        w1, b1, w2, b2 = params[idx : idx + 4]
+        idx += 4
+        # (1 + eps) * h + sum_neighbours h, eps fixed at 0 (GIN-0)
+        z = h + adj @ h
+        z = jax.nn.relu(z @ w1 + b1)
+        h = jax.nn.relu(z @ w2 + b2)
+    g = jnp.sum(h, axis=1)  # (B, hidden) sum readout
+    fc1_w, fc1_b, fc2_w, fc2_b = params[idx : idx + 4]
+    g = jax.nn.relu(g @ fc1_w + fc1_b)
+    return g @ fc2_w + fc2_b
+
+
+def gin_loss(params, adj, labels):
+    """Mean softmax cross-entropy over the batch; labels (B,) int32."""
+    logits = gin_forward(params, adj)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))
+
+
+def gin_train_step(lr: float = 1e-2):
+    """Build the Adam train-step function lowered for the rust driver.
+
+    Signature (all f32 unless noted):
+      (step, adj(B,v,v), labels(B,) i32, *params, *adam_m, *adam_v)
+        -> (loss, *new_params, *new_m, *new_v)
+    `step` is the 1-based Adam timestep as an f32 scalar.
+    """
+    n = len(gin_param_shapes())
+
+    def train_step(step, adj, labels, *state):
+        params = list(state[:n])
+        m_st = list(state[n : 2 * n])
+        v_st = list(state[2 * n :])
+        loss, grads = jax.value_and_grad(gin_loss)(params, adj, labels)
+        bc1 = 1.0 - ADAM_B1**step
+        bc2 = 1.0 - ADAM_B2**step
+        new_p, new_m, new_v = [], [], []
+        for p, g, mm, vv in zip(params, grads, m_st, v_st):
+            mm = ADAM_B1 * mm + (1.0 - ADAM_B1) * g
+            vv = ADAM_B2 * vv + (1.0 - ADAM_B2) * g * g
+            p = p - lr * (mm / bc1) / (jnp.sqrt(vv / bc2) + ADAM_EPS)
+            new_p.append(p)
+            new_m.append(mm)
+            new_v.append(vv)
+        return (loss, *new_p, *new_m, *new_v)
+
+    return train_step
+
+
+def gin_predict(params_and_adj_sig=None):
+    """(adj, *params) -> (B,) int32 argmax class prediction + (B,2) logits."""
+
+    def predict(adj, *params):
+        logits = gin_forward(list(params), adj)
+        return (jnp.argmax(logits, axis=-1).astype(jnp.int32), logits)
+
+    return predict

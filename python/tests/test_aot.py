@@ -1,0 +1,127 @@
+"""AOT pipeline tests: manifest grammar, HLO emission, config matrix."""
+
+import os
+import re
+import subprocess
+import sys
+import tempfile
+
+import pytest
+
+from compile import aot, configs
+
+
+def test_config_matrix_covers_experiments():
+    """The artifact matrix must cover every experiment in DESIGN.md §5."""
+    names = {c["name"] for c in configs.all_configs()}
+    # Fig 1 left: opu uniform, k in 3..6 (d 9..36) at m=5000, m sweep at k=6
+    for d in (9, 16, 25, 36):
+        assert f"rf_opu_xla_d{d}_m5000_b256" in names
+    for m in (500, 1000, 2000, 5000):
+        assert f"rf_opu_xla_d36_m{m}_b256" in names
+    # Fig 2 left: gauss + gauss-eig (d = k = 6) sweeps
+    for m in configs.M_SWEEP:
+        assert f"rf_gauss_xla_d36_m{m}_b256" in names
+        assert f"rf_gauss_xla_d6_m{m}_b256" in names
+    # Fig 2 right / Table 1: all k in 3..8
+    for k in configs.KS:
+        assert f"rf_opu_xla_d{k * k}_m5000_b256" in names
+    # Fig 3: k = 7 -> d = 49
+    assert "rf_opu_xla_d49_m5000_b256" in names
+    # GIN baseline
+    assert "gin_train_b32_v60" in names
+    assert "gin_predict_b60_v60" in names
+
+
+def test_unique_names():
+    names = [c["name"] for c in configs.all_configs()]
+    assert len(names) == len(set(names))
+
+
+@pytest.fixture(scope="module")
+def small_artifacts(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    cfgs = [c for c in configs.all_configs() if "_d9_m64_b32" in c["name"]]
+    assert len(cfgs) >= 4
+    records = ["manifest-version 1"]
+    for c in cfgs:
+        records.append(aot.lower_one(c, str(out)))
+    (out / "manifest.txt").write_text("\n".join(records) + "\n")
+    return out, cfgs
+
+
+def test_hlo_files_written(small_artifacts):
+    out, cfgs = small_artifacts
+    for c in cfgs:
+        path = out / f"{c['name']}.hlo.txt"
+        text = path.read_text()
+        assert text.startswith("HloModule"), c["name"]
+        assert "ENTRY" in text
+
+
+def test_hlo_output_is_tuple(small_artifacts):
+    """The rust loader unwraps a tuple root; every artifact must return one."""
+    out, cfgs = small_artifacts
+    for c in cfgs:
+        text = (out / f"{c['name']}.hlo.txt").read_text()
+        m = re.search(r"->\s*(\([^)]*\))", text)
+        assert m, f"no tuple return in {c['name']}"
+
+
+def test_manifest_grammar(small_artifacts):
+    out, cfgs = small_artifacts
+    lines = (out / "manifest.txt").read_text().splitlines()
+    assert lines[0] == "manifest-version 1"
+    fields = {"artifact", "file", "kind", "meta", "input", "output", "end"}
+    n_end = 0
+    for line in lines[1:]:
+        key = line.split()[0]
+        assert key in fields, line
+        n_end += key == "end"
+    assert n_end == len(cfgs)
+
+
+def test_manifest_shapes_match_config(small_artifacts):
+    out, cfgs = small_artifacts
+    text = (out / "manifest.txt").read_text()
+    opu = [c for c in cfgs if c.get("variant") == "opu" and c["impl"] == "xla"][0]
+    block = text.split(f"artifact {opu['name']}")[1].split("end")[0]
+    assert f"input x f32 {opu['batch']},{opu['d']}" in block
+    assert f"input wr f32 {opu['d']},{opu['m']}" in block
+    assert f"output y f32 {opu['batch']},{opu['m']}" in block
+
+
+def test_pallas_and_xla_artifacts_agree_numerically(small_artifacts):
+    """Load both impls of the same config back through jax and compare —
+    the AOT text must encode identical math."""
+    import numpy as np
+    import jax
+    import jax.numpy as jnp
+    from compile import model
+
+    g = np.random.default_rng(0)
+    d, m, b = 9, 64, 32
+    x = g.integers(0, 2, size=(b, d)).astype(np.float32)
+    wr = g.normal(size=(d, m)).astype(np.float32)
+    wi = g.normal(size=(d, m)).astype(np.float32)
+    br = g.normal(size=(m,)).astype(np.float32)
+    bi = g.normal(size=(m,)).astype(np.float32)
+    args = list(map(jnp.asarray, (x, wr, wi, br, bi)))
+    y_pallas = model.rf_features("opu", "pallas")(*args)
+    y_xla = model.rf_features("opu", "xla")(*args)
+    np.testing.assert_allclose(np.asarray(y_pallas), np.asarray(y_xla),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_cli_only_filter(tmp_path):
+    """aot.py --only must build just the matching artifacts."""
+    env = dict(os.environ)
+    r = subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out-dir", str(tmp_path),
+         "--only", "rf_gauss_pallas_d9_m64_b32"],
+        cwd=os.path.join(os.path.dirname(__file__), ".."),
+        capture_output=True, text=True, env=env,
+    )
+    assert r.returncode == 0, r.stderr
+    files = {p.name for p in tmp_path.iterdir()}
+    assert files == {"rf_gauss_pallas_d9_m64_b32.hlo.txt", "manifest.txt"}

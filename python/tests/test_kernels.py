@@ -1,0 +1,183 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (kernels/ref.py).
+
+Hypothesis sweeps shapes and dtypes; this is the CORE correctness signal
+for the kernels the AOT pipeline ships to the rust runtime.
+"""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import random_features as rf
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rng(seed):
+    return np.random.default_rng(seed)
+
+
+def _gaussian_tol(dtype, x, w, b, m):
+    """bf16 rounds the phase (x@w + b) to ~2^-8 relative precision BEFORE
+    cos; the resulting error on cos is bounded by the absolute phase error.
+    Scale atol accordingly (cos output is further scaled by sqrt(2/m))."""
+    if dtype != jnp.bfloat16:
+        return dict(rtol=1e-5, atol=1e-5)
+    phase = np.abs(np.asarray(x, np.float32) @ np.asarray(w, np.float32)
+                   + np.asarray(b, np.float32)).max()
+    return dict(rtol=5e-2, atol=math.sqrt(2.0 / m) * (phase * 2.0**-7 + 0.05))
+
+
+def _opu_tol(dtype, out):
+    if dtype != jnp.bfloat16:
+        return dict(rtol=1e-5, atol=1e-5)
+    return dict(rtol=6e-2, atol=6e-2 * float(np.abs(np.asarray(out, np.float32)).max() + 1e-3))
+
+
+shapes = st.tuples(
+    st.integers(min_value=1, max_value=40),   # batch
+    st.integers(min_value=1, max_value=64),   # d
+    st.integers(min_value=1, max_value=96),   # m
+)
+dtypes = st.sampled_from([jnp.float32, jnp.bfloat16])
+
+
+@settings(max_examples=40, deadline=None)
+@given(shapes=shapes, dtype=dtypes, seed=st.integers(0, 2**31 - 1))
+def test_gaussian_rf_matches_ref(shapes, dtype, seed):
+    b, d, m = shapes
+    g = _rng(seed)
+    x = jnp.asarray(g.normal(size=(b, d)), dtype)
+    w = jnp.asarray(g.normal(size=(d, m)), dtype)
+    bias = jnp.asarray(g.uniform(0, 2 * math.pi, size=(m,)), dtype)
+    got = rf.gaussian_rf_pallas(x, w, bias)
+    # Oracle in f32 from the rounded inputs: the kernel accumulates in f32.
+    want = ref.gaussian_rf(*(jnp.asarray(a, jnp.float32) for a in (x, w, bias)))
+    assert got.shape == (b, m) and got.dtype == dtype
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        **_gaussian_tol(dtype, x, w, bias, m)
+    )
+
+
+@settings(max_examples=40, deadline=None)
+@given(shapes=shapes, dtype=dtypes, seed=st.integers(0, 2**31 - 1))
+def test_opu_rf_matches_ref(shapes, dtype, seed):
+    b, d, m = shapes
+    g = _rng(seed)
+    x = jnp.asarray(g.integers(0, 2, size=(b, d)), dtype)  # binary adjacency
+    wr = jnp.asarray(g.normal(size=(d, m)), dtype)
+    wi = jnp.asarray(g.normal(size=(d, m)), dtype)
+    br = jnp.asarray(g.normal(size=(m,)), dtype)
+    bi = jnp.asarray(g.normal(size=(m,)), dtype)
+    got = rf.opu_rf_pallas(x, wr, wi, br, bi)
+    want = ref.opu_rf(*(jnp.asarray(a, jnp.float32) for a in (x, wr, wi, br, bi)))
+    assert got.shape == (b, m) and got.dtype == dtype
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        **_opu_tol(dtype, want)
+    )
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    b=st.integers(1, 16), d=st.integers(1, 30), m=st.integers(1, 48),
+    bb=st.integers(1, 16), bm=st.integers(1, 48), seed=st.integers(0, 2**31 - 1),
+)
+def test_explicit_block_shapes(b, d, m, bb, bm, seed):
+    """Any exact tiling must give identical results (tiling is an
+    implementation detail, not a semantic knob)."""
+    bb = math.gcd(b, bb) or 1
+    bm = math.gcd(m, bm) or 1
+    g = _rng(seed)
+    x = jnp.asarray(g.normal(size=(b, d)), jnp.float32)
+    w = jnp.asarray(g.normal(size=(d, m)), jnp.float32)
+    bias = jnp.asarray(g.normal(size=(m,)), jnp.float32)
+    got = rf.gaussian_rf_pallas(x, w, bias, block_b=bb, block_m=bm)
+    want = ref.gaussian_rf(x, w, bias)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_opu_features_nonnegative():
+    """|.|^2 features are nonnegative by construction."""
+    g = _rng(0)
+    x = jnp.asarray(g.integers(0, 2, size=(8, 16)), jnp.float32)
+    wr = jnp.asarray(g.normal(size=(16, 32)), jnp.float32)
+    wi = jnp.asarray(g.normal(size=(16, 32)), jnp.float32)
+    br = jnp.asarray(g.normal(size=(32,)), jnp.float32)
+    bi = jnp.asarray(g.normal(size=(32,)), jnp.float32)
+    out = np.asarray(rf.opu_rf_pallas(x, wr, wi, br, bi))
+    assert (out >= 0).all()
+
+
+def test_gaussian_features_bounded():
+    """cos features are bounded by sqrt(2/m) in magnitude."""
+    g = _rng(1)
+    m = 64
+    x = jnp.asarray(g.normal(size=(8, 9)), jnp.float32)
+    w = jnp.asarray(g.normal(size=(9, m)), jnp.float32)
+    bias = jnp.asarray(g.normal(size=(m,)), jnp.float32)
+    out = np.asarray(rf.gaussian_rf_pallas(x, w, bias))
+    assert (np.abs(out) <= math.sqrt(2.0 / m) + 1e-6).all()
+
+
+def test_gaussian_kernel_approximation():
+    """Sanity: phi_Gs(x).phi_Gs(y) approximates the Gaussian kernel
+    exp(-||x - y||^2 / (2 sigma^2)) for w ~ N(0, 1/sigma^2)."""
+    g = _rng(2)
+    d, m, sigma = 6, 60_000, 1.3
+    x = g.normal(size=(2, d)).astype(np.float32)
+    w = (g.normal(size=(d, m)) / sigma).astype(np.float32)
+    bias = g.uniform(0, 2 * math.pi, size=(m,)).astype(np.float32)
+    phi = np.asarray(rf.gaussian_rf_pallas(jnp.asarray(x), jnp.asarray(w), jnp.asarray(bias),
+                                           block_b=2, block_m=1000))
+    approx = float(phi[0] @ phi[1])
+    exact = float(np.exp(-np.sum((x[0] - x[1]) ** 2) / (2 * sigma**2)))
+    assert abs(approx - exact) < 0.03, (approx, exact)
+
+
+def test_opu_kernel_closed_form():
+    """The OPU kernel has the closed form (Saade et al. 2016), for
+    W entries ~ CN(0, 2) (unit-variance real and imaginary parts), b = 0:
+
+      E[phi(x).phi(y)] * sqrt(m) / m = ||x||^2 ||y||^2 + |<x, y>|^2
+
+    We verify the empirical average converges to it."""
+    g = _rng(3)
+    d, m = 5, 200_000
+    x = g.normal(size=(d,)).astype(np.float32)
+    y = g.normal(size=(d,)).astype(np.float32)
+    wr = g.normal(size=(d, m)).astype(np.float32)
+    wi = g.normal(size=(d, m)).astype(np.float32)
+    zeros = np.zeros((m,), np.float32)
+    phi = np.asarray(
+        rf.opu_rf_pallas(jnp.asarray(np.stack([x, y])), jnp.asarray(wr),
+                         jnp.asarray(wi), jnp.asarray(zeros), jnp.asarray(zeros),
+                         block_b=2, block_m=2000)
+    )
+    # phi includes m^{-1/2}; the dot over m then estimates m * E[.] / m
+    approx = float(phi[0] @ phi[1])
+    nx2, ny2 = float(x @ x), float(y @ y)
+    ip = float(x @ y)
+    # E[|w.x|^2 |w.y|^2] for complex gaussian w with E|w_i|^2 = 2:
+    #   4 * (||x||^2 ||y||^2 + <x,y>^2)
+    exact = 4.0 * (nx2 * ny2 + ip * ip)
+    assert abs(approx - exact) / exact < 0.05, (approx, exact)
+
+
+@pytest.mark.parametrize("variant", ["opu", "gauss"])
+def test_vmem_footprint_within_budget(variant):
+    """Default tiles must fit the 16 MiB VMEM budget from DESIGN.md §Perf."""
+    for batch, m, d in [(256, 5000, 64), (256, 5000, 9), (2000, 5000, 36)]:
+        bb, bm = rf.default_blocks(batch, m)
+        assert rf.vmem_footprint_bytes(bb, bm, d, variant) <= 16 * 2**20
+
+
+def test_mxu_estimate_monotone():
+    assert rf.mxu_utilization_estimate(128, 512, 64) == pytest.approx(0.5)
+    assert rf.mxu_utilization_estimate(64, 512, 64) < rf.mxu_utilization_estimate(128, 512, 64)

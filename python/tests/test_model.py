@@ -1,0 +1,155 @@
+"""L2 correctness: GSA embeddings and the GIN baseline."""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rng(seed=0):
+    return np.random.default_rng(seed)
+
+
+# --------------------------------------------------------------------------
+# GSA embedding
+# --------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(s=st.integers(1, 64), d=st.integers(1, 49), m=st.integers(1, 80),
+       seed=st.integers(0, 2**31 - 1))
+def test_embed_is_mean_of_features(s, d, m, seed):
+    g = _rng(seed)
+    x = g.integers(0, 2, size=(s, d)).astype(np.float32)
+    wr = g.normal(size=(d, m)).astype(np.float32)
+    wi = g.normal(size=(d, m)).astype(np.float32)
+    br = g.normal(size=(m,)).astype(np.float32)
+    bi = g.normal(size=(m,)).astype(np.float32)
+    emb = model.gsa_embed("opu", "xla")(*map(jnp.asarray, (x, wr, wi, br, bi)))
+    feats = ref.opu_rf(*map(jnp.asarray, (x, wr, wi, br, bi)))
+    np.testing.assert_allclose(np.asarray(emb), np.asarray(feats).mean(axis=0),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_embed_permutation_invariant_over_samples():
+    """Averaging makes the embedding invariant to sample order (the
+    graph-level permutation-invariance argument of §3.1)."""
+    g = _rng(7)
+    s, d, m = 32, 16, 24
+    x = g.integers(0, 2, size=(s, d)).astype(np.float32)
+    params = [g.normal(size=(d, m)).astype(np.float32),
+              g.normal(size=(d, m)).astype(np.float32),
+              g.normal(size=(m,)).astype(np.float32),
+              g.normal(size=(m,)).astype(np.float32)]
+    embed = model.gsa_embed("opu", "xla")
+    e1 = embed(jnp.asarray(x), *map(jnp.asarray, params))
+    e2 = embed(jnp.asarray(x[::-1].copy()), *map(jnp.asarray, params))
+    np.testing.assert_allclose(np.asarray(e1), np.asarray(e2), rtol=1e-5, atol=1e-6)
+
+
+def test_mmd_concentration_theorem1():
+    """Empirical check of Theorem 1's structure: as m grows, the squared
+    distance between embeddings of two DIFFERENT subgraph distributions
+    concentrates; we verify the error to the m->inf limit shrinks."""
+    g = _rng(42)
+    d, s = 9, 4000
+    # Two distinct distributions over binary vectors (sparse vs dense).
+    xa = (g.random(size=(s, d)) < 0.2).astype(np.float32)
+    xb = (g.random(size=(s, d)) < 0.7).astype(np.float32)
+    errs = []
+    ms = [50, 500, 5000]
+    # "Ground truth" MMD^2 via a very large m.
+    def sqdist(m, seed):
+        gg = _rng(seed)
+        w = (gg.normal(size=(d, m)) / 1.0).astype(np.float32)
+        b = gg.uniform(0, 2 * math.pi, size=(m,)).astype(np.float32)
+        fa = np.asarray(ref.gaussian_rf(jnp.asarray(xa), jnp.asarray(w), jnp.asarray(b))).mean(0)
+        fb = np.asarray(ref.gaussian_rf(jnp.asarray(xb), jnp.asarray(w), jnp.asarray(b))).mean(0)
+        return float(((fa - fb) ** 2).sum())
+    truth = np.mean([sqdist(20000, 100 + i) for i in range(3)])
+    for m in ms:
+        errs.append(abs(np.mean([sqdist(m, 200 + r) for r in range(5)]) - truth))
+    # error at m=5000 must be well below error at m=50
+    assert errs[-1] < errs[0] * 0.5 + 1e-4, (errs, truth)
+
+
+# --------------------------------------------------------------------------
+# GIN baseline
+# --------------------------------------------------------------------------
+
+def _random_adj(g, b, v, p=0.15):
+    a = (g.random(size=(b, v, v)) < p).astype(np.float32)
+    a = np.triu(a, 1)
+    return a + a.transpose(0, 2, 1)
+
+
+def test_gin_forward_shapes():
+    g = _rng(0)
+    params = model.gin_init_params(jax.random.PRNGKey(0))
+    adj = jnp.asarray(_random_adj(g, 6, 60))
+    logits = model.gin_forward(params, adj)
+    assert logits.shape == (6, model.GIN_CLASSES)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+def test_gin_permutation_invariance():
+    """GIN with sum readout is invariant to node relabelling."""
+    g = _rng(1)
+    v = 20
+    params = model.gin_init_params(jax.random.PRNGKey(1))
+    adj = _random_adj(g, 1, v)
+    perm = g.permutation(v)
+    adj_p = adj[:, perm][:, :, perm]
+    l1 = np.asarray(model.gin_forward(params, jnp.asarray(adj)))
+    l2 = np.asarray(model.gin_forward(params, jnp.asarray(adj_p)))
+    np.testing.assert_allclose(l1, l2, rtol=1e-4, atol=1e-5)
+
+
+def test_gin_train_step_decreases_loss():
+    """A few Adam steps on a separable toy task must reduce the loss, and
+    the lowered signature (flat param/m/v lists) must round-trip."""
+    g = _rng(2)
+    b, v = 16, 60
+    # class 0: sparse graphs; class 1: dense graphs
+    adj = np.concatenate([_random_adj(g, b // 2, v, 0.05),
+                          _random_adj(g, b // 2, v, 0.4)])
+    labels = np.array([0] * (b // 2) + [1] * (b // 2), np.int32)
+    params = [np.asarray(p) for p in model.gin_init_params(jax.random.PRNGKey(2))]
+    m_st = [np.zeros_like(p) for p in params]
+    v_st = [np.zeros_like(p) for p in params]
+    step_fn = jax.jit(model.gin_train_step(lr=5e-2))
+    losses = []
+    for t in range(1, 41):
+        out = step_fn(jnp.float32(t), jnp.asarray(adj), jnp.asarray(labels),
+                      *map(jnp.asarray, params), *map(jnp.asarray, m_st),
+                      *map(jnp.asarray, v_st))
+        loss, rest = out[0], out[1:]
+        n = len(params)
+        params = [np.asarray(a) for a in rest[:n]]
+        m_st = [np.asarray(a) for a in rest[n:2 * n]]
+        v_st = [np.asarray(a) for a in rest[2 * n:]]
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] * 0.7, losses[:3] + losses[-3:]
+
+
+def test_gin_predict_consistent_with_forward():
+    g = _rng(3)
+    params = model.gin_init_params(jax.random.PRNGKey(3))
+    adj = jnp.asarray(_random_adj(g, 4, 60))
+    pred, logits = model.gin_predict()(adj, *params)
+    np.testing.assert_array_equal(np.asarray(pred),
+                                  np.asarray(jnp.argmax(logits, -1)).astype(np.int32))
+
+
+def test_gin_param_shapes_count():
+    shapes = model.gin_param_shapes()
+    assert len(shapes) == model.GIN_LAYERS * 4 + 4
+    assert shapes[0][1] == (1, model.GIN_HIDDEN)
+    assert shapes[-2][1] == (model.GIN_HIDDEN, model.GIN_CLASSES)
+    assert shapes[-1][1] == (model.GIN_CLASSES,)

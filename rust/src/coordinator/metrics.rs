@@ -1,0 +1,77 @@
+//! Pipeline metrics: what the coordinator reports after an embedding run.
+
+use crate::util::Stats;
+
+/// Aggregated counters/timings for one `embed_dataset` run.
+#[derive(Debug, Default, Clone)]
+pub struct PipelineMetrics {
+    /// Graphs embedded.
+    pub graphs: usize,
+    /// Total subgraph samples drawn.
+    pub samples: usize,
+    /// Batches executed by the feature engine.
+    pub batches: usize,
+    /// Rows that were padding (partial final batch).
+    pub padded_rows: usize,
+    /// Wall-clock of the whole run (seconds).
+    pub wall_secs: f64,
+    /// Cumulative sampler-thread busy time (seconds, summed over workers).
+    pub sample_secs: f64,
+    /// Feature-engine execution time (seconds).
+    pub feature_secs: f64,
+    /// Per-batch feature latency.
+    pub batch_latency: Stats,
+}
+
+impl PipelineMetrics {
+    /// Throughput in subgraph samples per wall second.
+    pub fn samples_per_sec(&self) -> f64 {
+        if self.wall_secs > 0.0 {
+            self.samples as f64 / self.wall_secs
+        } else {
+            0.0
+        }
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "graphs={} samples={} batches={} padded_rows={} wall={:.2}s \
+             sample_busy={:.2}s feature={:.2}s throughput={:.0} samples/s \
+             batch_p50={:.2}ms p95={:.2}ms",
+            self.graphs,
+            self.samples,
+            self.batches,
+            self.padded_rows,
+            self.wall_secs,
+            self.sample_secs,
+            self.feature_secs,
+            self.samples_per_sec(),
+            self.batch_latency.percentile(50.0) * 1e3,
+            self.batch_latency.percentile(95.0) * 1e3,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn throughput_and_report() {
+        let mut m = PipelineMetrics::default();
+        m.samples = 1000;
+        m.wall_secs = 2.0;
+        m.graphs = 10;
+        m.batch_latency.record(0.01);
+        assert_eq!(m.samples_per_sec(), 500.0);
+        let r = m.report();
+        assert!(r.contains("graphs=10"), "{r}");
+        assert!(r.contains("500 samples/s"), "{r}");
+    }
+
+    #[test]
+    fn zero_wall_clock_safe() {
+        let m = PipelineMetrics::default();
+        assert_eq!(m.samples_per_sec(), 0.0);
+    }
+}

@@ -1,0 +1,17 @@
+//! The GSA-phi coordinator: dataset -> sampler workers -> dynamic batcher
+//! -> feature engine -> per-graph averaging -> embeddings.
+//!
+//! This is the L3 "system" of the reproduction (DESIGN.md §3): a
+//! multi-threaded dataflow with bounded channels for backpressure.
+//! Sampler workers (std::thread, seeded independently via `Rng::fork`)
+//! draw subgraphs and pack their feature-map inputs into *cross-graph*
+//! batches of exactly the artifact's batch size; the feature engine —
+//! which owns the PJRT handles, confined to one thread because they are
+//! not `Sync` — executes batches as they arrive and scatters feature rows
+//! into per-graph accumulators. Python never runs here.
+
+pub mod metrics;
+pub mod pipeline;
+
+pub use metrics::PipelineMetrics;
+pub use pipeline::{embed_dataset, EngineMode, GsaConfig};

@@ -1,0 +1,456 @@
+//! The embedding pipeline (Alg. 1 of the paper, as a dataflow system).
+//!
+//! ```text
+//!   graphs ──► sampler workers ──► bounded channel ──► feature engine
+//!              (std::thread x W)    (backpressure)      (PJRT or CPU,
+//!               sample s subgraphs                       single thread)
+//!               pack cross-graph                              │
+//!               batches of B rows                             ▼
+//!                                                   per-graph accumulators
+//!                                                    mean over s  ──► (n, m)
+//! ```
+//!
+//! Design notes:
+//! - **Cross-graph batching**: a batch carries `(graph, rows)` segments so
+//!   every executed batch is exactly the artifact's compiled size B
+//!   (except the final flush). Padding only ever happens once per run.
+//! - **Backpressure**: the channel holds at most `queue_cap` batches;
+//!   samplers block when the feature engine falls behind, bounding memory
+//!   at O(queue_cap * B * d).
+//! - **Determinism**: workers fork seeded RNG streams per *graph* (not per
+//!   worker), so results are independent of thread scheduling.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::sync_channel;
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use super::metrics::PipelineMetrics;
+use crate::data::Dataset;
+use crate::features::{CpuFeatureMap, RfParams, Variant};
+use crate::runtime::{Engine, RfExecutor};
+use crate::sample::sampler_by_name;
+use crate::util::{Rng, Timer};
+
+/// Which feature engine executes batches.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EngineMode {
+    /// AOT artifacts over PJRT (the paper's OPU stand-in; default).
+    Pjrt,
+    /// Rust CPU fallback on the feature-engine thread.
+    Cpu,
+    /// CPU features computed inside the sampler workers; only per-graph
+    /// sums cross the channel. Perf ablation (EXPERIMENTS.md §Perf).
+    CpuInline,
+}
+
+impl EngineMode {
+    pub fn parse(s: &str) -> EngineMode {
+        match s {
+            "pjrt" => EngineMode::Pjrt,
+            "cpu" => EngineMode::Cpu,
+            "cpu-inline" => EngineMode::CpuInline,
+            other => panic!("unknown engine {other:?} (pjrt|cpu|cpu-inline)"),
+        }
+    }
+}
+
+/// Configuration of one GSA-phi embedding run.
+#[derive(Clone, Debug)]
+pub struct GsaConfig {
+    /// Graphlet size.
+    pub k: usize,
+    /// Samples per graph (s in the paper).
+    pub s: usize,
+    /// Number of random features (m).
+    pub m: usize,
+    pub variant: Variant,
+    /// Artifact implementation: "xla" (fused fast path) or "pallas".
+    pub impl_: String,
+    /// "uniform" | "rw".
+    pub sampler: String,
+    /// Gaussian kernel bandwidth (phi_Gs / phi_Gs+eig only).
+    pub sigma: f32,
+    /// Batch size (must match a compiled artifact for PJRT mode).
+    pub batch: usize,
+    /// Sampler worker threads.
+    pub workers: usize,
+    /// Bounded queue capacity (batches in flight).
+    pub queue_cap: usize,
+    pub engine: EngineMode,
+    pub seed: u64,
+}
+
+impl Default for GsaConfig {
+    fn default() -> Self {
+        GsaConfig {
+            k: 6,
+            s: 2000,
+            m: 5000,
+            variant: Variant::Opu,
+            impl_: "xla".into(),
+            sampler: "rw".into(),
+            sigma: 0.1,
+            batch: 256,
+            workers: std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4).min(8),
+            queue_cap: 8,
+            engine: EngineMode::Pjrt,
+            seed: 0,
+        }
+    }
+}
+
+impl GsaConfig {
+    pub fn input_dim(&self) -> usize {
+        self.variant.input_dim(self.k)
+    }
+}
+
+/// A batch in flight: row-major input rows + the (graph, rows) segments
+/// they belong to.
+struct Batch {
+    data: Vec<f32>,
+    segments: Vec<(usize, usize)>,
+    rows: usize,
+    /// Sampler busy-time attributed to this batch (metrics).
+    sample_secs: f64,
+}
+
+/// Message from CpuInline workers: a finished per-graph feature sum.
+struct GraphSum {
+    graph: usize,
+    sum: Vec<f32>,
+    samples: usize,
+    sample_secs: f64,
+}
+
+enum Msg {
+    Batch(Batch),
+    Sum(GraphSum),
+}
+
+/// Embed every graph of `ds`: returns row-major (n, m) embeddings and the
+/// run metrics. `engine` must be Some for [`EngineMode::Pjrt`].
+pub fn embed_dataset(
+    ds: &Dataset,
+    cfg: &GsaConfig,
+    engine: Option<&Engine>,
+) -> Result<(Vec<f32>, PipelineMetrics)> {
+    let n = ds.len();
+    let d = cfg.input_dim();
+    let wall = Timer::start();
+
+    // Shared feature parameters: one draw for the whole run (the paper's
+    // W is fixed across all graphs — it's the same "device").
+    let mut seed_rng = Rng::new(cfg.seed);
+    let params = RfParams::generate(cfg.variant, d, cfg.m, cfg.sigma, &mut seed_rng);
+    // Per-graph RNG seeds, independent of scheduling.
+    let graph_seeds: Vec<u64> = (0..n).map(|_| seed_rng.next_u64()).collect();
+
+    let next_graph = Arc::new(AtomicUsize::new(0));
+    let (tx, rx) = sync_channel::<Msg>(cfg.queue_cap.max(1));
+
+    let mut metrics = PipelineMetrics::default();
+    metrics.graphs = n;
+
+    let sums = std::thread::scope(|scope| -> Result<Vec<f32>> {
+        // ---- sampler workers ------------------------------------------
+        for _w in 0..cfg.workers.max(1) {
+            let tx = tx.clone();
+            let next = next_graph.clone();
+            let params_ref = &params;
+            let graph_seeds = &graph_seeds;
+            let cfg = cfg.clone();
+            let ds_ref = ds;
+            scope.spawn(move || {
+                let sampler = sampler_by_name(&cfg.sampler);
+                let inline_map = match cfg.engine {
+                    EngineMode::CpuInline => Some(CpuFeatureMap::new(params_ref.clone())),
+                    _ => None,
+                };
+                let d = cfg.input_dim();
+                let mut scratch: Vec<usize> = Vec::with_capacity(cfg.k);
+                let mut batch_data = vec![0.0f32; cfg.batch * d];
+                let mut batch_rows = 0usize;
+                let mut segments: Vec<(usize, usize)> = Vec::new();
+                let mut batch_sample_secs = 0.0f64;
+                // Inline mode scratch: feature rows for one chunk.
+                let mut feat_chunk = vec![0.0f32; if inline_map.is_some() { cfg.batch * cfg.m } else { 0 }];
+                loop {
+                    let g_idx = next.fetch_add(1, Ordering::Relaxed);
+                    if g_idx >= ds_ref.len() {
+                        break;
+                    }
+                    let g = &ds_ref.graphs[g_idx];
+                    let mut rng = Rng::new(graph_seeds[g_idx]);
+                    let mut t = Timer::start();
+                    match &inline_map {
+                        Some(map) => {
+                            // Compute features locally; ship only the sum.
+                            let mut sum = vec![0.0f32; cfg.m];
+                            let mut done = 0usize;
+                            while done < cfg.s {
+                                let chunk = (cfg.s - done).min(cfg.batch);
+                                for r in 0..chunk {
+                                    let gl = sampler.sample(g, cfg.k, &mut rng, &mut scratch);
+                                    cfg.variant
+                                        .write_input(&gl, &mut batch_data[r * d..(r + 1) * d]);
+                                }
+                                map.map_batch(
+                                    &batch_data[..chunk * d],
+                                    chunk,
+                                    &mut feat_chunk[..chunk * cfg.m],
+                                );
+                                for r in 0..chunk {
+                                    for (acc, &v) in
+                                        sum.iter_mut().zip(&feat_chunk[r * cfg.m..(r + 1) * cfg.m])
+                                    {
+                                        *acc += v;
+                                    }
+                                }
+                                done += chunk;
+                            }
+                            let msg = GraphSum {
+                                graph: g_idx,
+                                sum,
+                                samples: cfg.s,
+                                sample_secs: t.elapsed_secs(),
+                            };
+                            if tx.send(Msg::Sum(msg)).is_err() {
+                                return;
+                            }
+                        }
+                        None => {
+                            // Fill cross-graph batches of exactly cfg.batch.
+                            let mut remaining = cfg.s;
+                            while remaining > 0 {
+                                let take = remaining.min(cfg.batch - batch_rows);
+                                for r in 0..take {
+                                    let gl = sampler.sample(g, cfg.k, &mut rng, &mut scratch);
+                                    let row = batch_rows + r;
+                                    cfg.variant
+                                        .write_input(&gl, &mut batch_data[row * d..(row + 1) * d]);
+                                }
+                                segments.push((g_idx, take));
+                                batch_rows += take;
+                                remaining -= take;
+                                if batch_rows == cfg.batch {
+                                    batch_sample_secs += t.elapsed_secs();
+                                    t = Timer::start();
+                                    let msg = Batch {
+                                        data: std::mem::replace(
+                                            &mut batch_data,
+                                            vec![0.0f32; cfg.batch * d],
+                                        ),
+                                        segments: std::mem::take(&mut segments),
+                                        rows: cfg.batch,
+                                        sample_secs: std::mem::take(&mut batch_sample_secs),
+                                    };
+                                    batch_rows = 0;
+                                    if tx.send(Msg::Batch(msg)).is_err() {
+                                        return;
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+                // Flush the partial batch.
+                if batch_rows > 0 {
+                    let mut data = std::mem::take(&mut batch_data);
+                    data.truncate(batch_rows * d);
+                    let _ = tx.send(Msg::Batch(Batch {
+                        data,
+                        segments: std::mem::take(&mut segments),
+                        rows: batch_rows,
+                        sample_secs: batch_sample_secs,
+                    }));
+                }
+            });
+        }
+        drop(tx);
+
+        // ---- feature engine (this thread; owns any PJRT handles) ------
+        let rf_exec = match cfg.engine {
+            EngineMode::Pjrt => {
+                let engine =
+                    engine.ok_or_else(|| anyhow::anyhow!("PJRT mode requires an Engine"))?;
+                Some(RfExecutor::new(engine, &cfg.impl_, &params, cfg.batch)?)
+            }
+            _ => None,
+        };
+        let cpu_map = match cfg.engine {
+            EngineMode::Cpu => Some(CpuFeatureMap::new(params.clone())),
+            _ => None,
+        };
+
+        let mut sums = vec![0.0f32; n * cfg.m];
+        let mut counts = vec![0usize; n];
+        let mut cpu_out = vec![0.0f32; cfg.batch * cfg.m];
+        for msg in rx {
+            match msg {
+                Msg::Sum(gs) => {
+                    metrics.samples += gs.samples;
+                    metrics.sample_secs += gs.sample_secs;
+                    metrics.batches += 1;
+                    counts[gs.graph] += gs.samples;
+                    let row = &mut sums[gs.graph * cfg.m..(gs.graph + 1) * cfg.m];
+                    for (acc, v) in row.iter_mut().zip(gs.sum) {
+                        *acc += v;
+                    }
+                }
+                Msg::Batch(b) => {
+                    let t = Timer::start();
+                    let feats: &[f32] = match (&rf_exec, &cpu_map) {
+                        (Some(exec), _) => {
+                            let engine = engine.unwrap();
+                            metrics.padded_rows += cfg.batch - b.rows.min(cfg.batch);
+                            cpu_out.clear();
+                            cpu_out = exec.map(engine, &b.data, b.rows)?;
+                            &cpu_out
+                        }
+                        (None, Some(map)) => {
+                            cpu_out.resize(b.rows * cfg.m, 0.0);
+                            map.map_batch(&b.data, b.rows, &mut cpu_out[..b.rows * cfg.m]);
+                            &cpu_out[..b.rows * cfg.m]
+                        }
+                        _ => unreachable!("batch message in inline mode"),
+                    };
+                    let dt = t.elapsed_secs();
+                    metrics.feature_secs += dt;
+                    metrics.batch_latency.record(dt);
+                    metrics.batches += 1;
+                    metrics.samples += b.rows;
+                    metrics.sample_secs += b.sample_secs;
+                    // Scatter rows into per-graph accumulators.
+                    let mut row0 = 0usize;
+                    for (g_idx, rows) in b.segments {
+                        counts[g_idx] += rows;
+                        let acc = &mut sums[g_idx * cfg.m..(g_idx + 1) * cfg.m];
+                        for r in row0..row0 + rows {
+                            let frow = &feats[r * cfg.m..(r + 1) * cfg.m];
+                            for (a, &v) in acc.iter_mut().zip(frow) {
+                                *a += v;
+                            }
+                        }
+                        row0 += rows;
+                    }
+                }
+            }
+        }
+        // Mean over samples.
+        for g_idx in 0..n {
+            anyhow::ensure!(counts[g_idx] == cfg.s, "graph {g_idx} got {} samples", counts[g_idx]);
+            let inv = 1.0 / cfg.s as f32;
+            for v in &mut sums[g_idx * cfg.m..(g_idx + 1) * cfg.m] {
+                *v *= inv;
+            }
+        }
+        Ok(sums)
+    })?;
+
+    metrics.wall_secs = wall.elapsed_secs();
+    Ok((sums, metrics))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::SbmConfig;
+    use crate::runtime::artifacts_dir;
+    use crate::util::check;
+
+    fn small_ds() -> Dataset {
+        SbmConfig { per_class: 3, r: 1.5, ..Default::default() }.generate(&mut Rng::new(11))
+    }
+
+    fn small_cfg(engine: EngineMode) -> GsaConfig {
+        GsaConfig {
+            k: 3,
+            s: 100,
+            m: 64,
+            batch: 32,
+            workers: 3,
+            variant: Variant::Opu,
+            engine,
+            seed: 42,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn cpu_modes_agree_exactly() {
+        // Per-graph RNG seeding makes the embedding independent of worker
+        // scheduling AND of the batching strategy.
+        let ds = small_ds();
+        let (e1, m1) = embed_dataset(&ds, &small_cfg(EngineMode::Cpu), None).unwrap();
+        let (e2, m2) = embed_dataset(&ds, &small_cfg(EngineMode::CpuInline), None).unwrap();
+        check::assert_allclose(&e1, &e2, 1e-5, 1e-5);
+        assert_eq!(m1.samples, 6 * 100);
+        assert_eq!(m2.graphs, 6);
+    }
+
+    #[test]
+    fn deterministic_across_worker_counts() {
+        let ds = small_ds();
+        let mut cfg_a = small_cfg(EngineMode::Cpu);
+        cfg_a.workers = 1;
+        let mut cfg_b = small_cfg(EngineMode::Cpu);
+        cfg_b.workers = 7;
+        let (e1, _) = embed_dataset(&ds, &cfg_a, None).unwrap();
+        let (e2, _) = embed_dataset(&ds, &cfg_b, None).unwrap();
+        check::assert_allclose(&e1, &e2, 1e-5, 1e-5);
+    }
+
+    #[test]
+    fn pjrt_matches_cpu_when_artifacts_present() {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.txt").exists() {
+            eprintln!("skipping: no artifacts");
+            return;
+        }
+        let engine = Engine::new(&dir).unwrap();
+        let ds = small_ds();
+        let cfg = small_cfg(EngineMode::Pjrt);
+        let (e_pjrt, m) = embed_dataset(&ds, &cfg, Some(&engine)).unwrap();
+        let (e_cpu, _) = embed_dataset(&ds, &small_cfg(EngineMode::Cpu), None).unwrap();
+        check::assert_allclose(&e_pjrt, &e_cpu, 1e-3, 1e-4);
+        assert!(m.batches > 0 && m.samples == 600);
+    }
+
+    #[test]
+    fn gauss_eig_variant_runs() {
+        let ds = small_ds();
+        let mut cfg = small_cfg(EngineMode::Cpu);
+        cfg.variant = Variant::GaussEig;
+        cfg.sigma = 0.5;
+        let (emb, _) = embed_dataset(&ds, &cfg, None).unwrap();
+        assert_eq!(emb.len(), 6 * 64);
+        assert!(emb.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn embeddings_separate_easy_classes() {
+        // End-to-end sanity: r = 3 SBM should be separable from OPU
+        // embeddings with a linear classifier trained on the spot.
+        let ds = SbmConfig { per_class: 20, r: 3.0, ..Default::default() }
+            .generate(&mut Rng::new(5));
+        let mut cfg = small_cfg(EngineMode::CpuInline);
+        cfg.k = 4;
+        cfg.s = 300;
+        cfg.m = 128;
+        let (emb, _) = embed_dataset(&ds, &cfg, None).unwrap();
+        let mut rng = Rng::new(1);
+        let split = ds.split(0.75, &mut rng);
+        let acc = crate::classify::train_and_eval(
+            &emb,
+            &ds.labels,
+            cfg.m,
+            &split.train,
+            &split.test,
+            &crate::classify::TrainConfig::default(),
+        );
+        assert!(acc > 0.8, "accuracy {acc}");
+    }
+}

@@ -1,0 +1,242 @@
+//! Labelled graph datasets: container, splits, and the TU-format parser.
+//!
+//! The TU parser reads the standard benchmark layout (Morris et al. 2020)
+//! so the real D&D / REDDIT-BINARY data can be dropped in when available;
+//! the synthetic substitutes in [`crate::gen`] produce the same `Dataset`
+//! type, so everything downstream is agnostic.
+
+use std::io::BufRead;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::graph::{AnyGraph, CsrGraph};
+use crate::util::Rng;
+
+/// A labelled graph-classification dataset.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub name: String,
+    pub graphs: Vec<AnyGraph>,
+    /// Binary class labels (0 / 1).
+    pub labels: Vec<u8>,
+}
+
+/// Index-based train/test split of a [`Dataset`].
+#[derive(Clone, Debug)]
+pub struct Split {
+    pub train: Vec<usize>,
+    pub test: Vec<usize>,
+}
+
+impl Dataset {
+    pub fn new(name: impl Into<String>, graphs: Vec<AnyGraph>, labels: Vec<u8>) -> Self {
+        assert_eq!(graphs.len(), labels.len());
+        Dataset { name: name.into(), graphs, labels }
+    }
+
+    pub fn len(&self) -> usize {
+        self.graphs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.graphs.is_empty()
+    }
+
+    /// Stratified shuffled split: `train_frac` of each class to train.
+    pub fn split(&self, train_frac: f64, rng: &mut Rng) -> Split {
+        let mut by_class: [Vec<usize>; 2] = [Vec::new(), Vec::new()];
+        for (i, &l) in self.labels.iter().enumerate() {
+            by_class[l as usize].push(i);
+        }
+        let mut train = Vec::new();
+        let mut test = Vec::new();
+        for idxs in by_class.iter_mut() {
+            rng.shuffle(idxs);
+            let n_train = (idxs.len() as f64 * train_frac).round() as usize;
+            train.extend_from_slice(&idxs[..n_train]);
+            test.extend_from_slice(&idxs[n_train..]);
+        }
+        rng.shuffle(&mut train);
+        rng.shuffle(&mut test);
+        Split { train, test }
+    }
+
+    /// Summary line for logs: size, class balance, mean |V| and degree.
+    pub fn summary(&self) -> String {
+        let n1 = self.labels.iter().filter(|&&l| l == 1).count();
+        let mean_v =
+            self.graphs.iter().map(|g| g.v() as f64).sum::<f64>() / self.len().max(1) as f64;
+        let mean_deg =
+            self.graphs.iter().map(|g| g.mean_degree()).sum::<f64>() / self.len().max(1) as f64;
+        format!(
+            "{}: n={} (class1: {}), mean|V|={:.1}, mean deg={:.2}",
+            self.name,
+            self.len(),
+            n1,
+            mean_v,
+            mean_deg
+        )
+    }
+}
+
+/// Parse a TU-format dataset directory: `<name>_A.txt` (edge list,
+/// 1-based node ids), `<name>_graph_indicator.txt` (node -> graph id),
+/// `<name>_graph_labels.txt` (graph -> class). Binary labels are
+/// normalized to {0, 1} by mapping the smallest label to 0.
+pub fn load_tu_dataset(dir: &Path, name: &str) -> Result<Dataset> {
+    let read_lines = |suffix: &str| -> Result<Vec<String>> {
+        let path = dir.join(format!("{name}_{suffix}.txt"));
+        let f = std::fs::File::open(&path)
+            .with_context(|| format!("opening {}", path.display()))?;
+        Ok(std::io::BufReader::new(f)
+            .lines()
+            .collect::<std::io::Result<Vec<_>>>()?)
+    };
+
+    let indicator: Vec<usize> = read_lines("graph_indicator")?
+        .iter()
+        .filter(|l| !l.trim().is_empty())
+        .map(|l| l.trim().parse::<usize>().context("graph_indicator"))
+        .collect::<Result<_>>()?;
+    if indicator.is_empty() {
+        bail!("empty graph_indicator");
+    }
+    let n_graphs = *indicator.iter().max().unwrap();
+
+    let raw_labels: Vec<i64> = read_lines("graph_labels")?
+        .iter()
+        .filter(|l| !l.trim().is_empty())
+        .map(|l| l.trim().parse::<i64>().context("graph_labels"))
+        .collect::<Result<_>>()?;
+    if raw_labels.len() != n_graphs {
+        bail!("label count {} != graph count {}", raw_labels.len(), n_graphs);
+    }
+    // Normalize arbitrary binary label values (e.g. {-1, 1} or {1, 2})
+    // to {0, 1} by rank.
+    let mut distinct: Vec<i64> = raw_labels.to_vec();
+    distinct.sort_unstable();
+    distinct.dedup();
+    if distinct.len() > 2 {
+        bail!("only binary labels supported, saw {} classes", distinct.len());
+    }
+    let labels: Vec<u8> = raw_labels
+        .iter()
+        .map(|l| distinct.binary_search(l).unwrap() as u8)
+        .collect();
+
+    // Per-graph node ranges (TU node ids are 1-based and contiguous).
+    let mut node_graph = vec![0usize; indicator.len()];
+    let mut first_node = vec![usize::MAX; n_graphs];
+    let mut node_counts = vec![0usize; n_graphs];
+    for (node, &gid) in indicator.iter().enumerate() {
+        let g = gid - 1;
+        node_graph[node] = g;
+        first_node[g] = first_node[g].min(node);
+        node_counts[g] += 1;
+    }
+
+    let mut edge_lists: Vec<Vec<(usize, usize)>> = vec![Vec::new(); n_graphs];
+    for line in read_lines("A")? {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let (a, b) = line
+            .split_once(',')
+            .with_context(|| format!("bad edge line {line:?}"))?;
+        let a: usize = a.trim().parse().context("edge endpoint")?;
+        let b: usize = b.trim().parse().context("edge endpoint")?;
+        let (a, b) = (a - 1, b - 1);
+        let g = node_graph[a];
+        if node_graph[b] != g {
+            bail!("edge {a}-{b} crosses graphs");
+        }
+        edge_lists[g].push((a - first_node[g], b - first_node[g]));
+    }
+
+    let graphs: Vec<AnyGraph> = edge_lists
+        .iter()
+        .zip(&node_counts)
+        .map(|(edges, &v)| AnyGraph::Csr(CsrGraph::from_edges(v, edges)))
+        .collect();
+
+    Ok(Dataset::new(name.to_string(), graphs, labels))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::DenseGraph;
+
+    fn tiny_dataset(n: usize) -> Dataset {
+        let graphs: Vec<AnyGraph> = (0..n)
+            .map(|i| {
+                let mut g = DenseGraph::new(4);
+                g.add_edge(0, 1);
+                if i % 2 == 1 {
+                    g.add_edge(2, 3);
+                }
+                AnyGraph::Dense(g)
+            })
+            .collect();
+        let labels = (0..n).map(|i| (i % 2) as u8).collect();
+        Dataset::new("tiny", graphs, labels)
+    }
+
+    #[test]
+    fn split_is_stratified_partition() {
+        let ds = tiny_dataset(40);
+        let mut rng = Rng::new(1);
+        let split = ds.split(0.8, &mut rng);
+        assert_eq!(split.train.len(), 32);
+        assert_eq!(split.test.len(), 8);
+        let mut all: Vec<usize> = split.train.iter().chain(&split.test).copied().collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..40).collect::<Vec<_>>());
+        // Stratified: half of each side is class 1.
+        let c1 = split.train.iter().filter(|&&i| ds.labels[i] == 1).count();
+        assert_eq!(c1, 16);
+    }
+
+    #[test]
+    fn tu_parser_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("tu_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        // Two graphs: a triangle (nodes 1..3) and an edge (nodes 4..5).
+        std::fs::write(
+            dir.join("toy_A.txt"),
+            "1, 2\n2, 1\n2, 3\n3, 2\n1, 3\n3, 1\n4, 5\n5, 4\n",
+        )
+        .unwrap();
+        std::fs::write(dir.join("toy_graph_indicator.txt"), "1\n1\n1\n2\n2\n").unwrap();
+        std::fs::write(dir.join("toy_graph_labels.txt"), "-1\n1\n").unwrap();
+        let ds = load_tu_dataset(&dir, "toy").unwrap();
+        assert_eq!(ds.len(), 2);
+        assert_eq!(ds.labels, vec![0, 1]);
+        assert_eq!(ds.graphs[0].v(), 3);
+        assert_eq!(ds.graphs[0].num_edges(), 3);
+        assert_eq!(ds.graphs[1].v(), 2);
+        assert_eq!(ds.graphs[1].num_edges(), 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn tu_parser_rejects_cross_graph_edges() {
+        let dir = std::env::temp_dir().join(format!("tu_bad_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("bad_A.txt"), "1, 3\n").unwrap();
+        std::fs::write(dir.join("bad_graph_indicator.txt"), "1\n1\n2\n").unwrap();
+        std::fs::write(dir.join("bad_graph_labels.txt"), "0\n1\n").unwrap();
+        assert!(load_tu_dataset(&dir, "bad").is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn summary_contains_counts() {
+        let ds = tiny_dataset(10);
+        let s = ds.summary();
+        assert!(s.contains("n=10"), "{s}");
+        assert!(s.contains("class1: 5"), "{s}");
+    }
+}

@@ -1,0 +1,290 @@
+//! Experiment harnesses: one function per paper figure/table
+//! (DESIGN.md §5 maps each to its module and driver).
+//!
+//! Every harness prints the figure's rows/series to stdout and writes a
+//! JSON result file under `results/` so EXPERIMENTS.md can quote exact
+//! numbers. Paper-scale parameters are behind [`Scale::full`]; the
+//! default [`Scale::quick`] keeps every figure reproducible in minutes on
+//! a laptop while preserving the qualitative shape (who wins, where the
+//! curves cross).
+
+pub mod figures;
+pub mod thm1;
+pub mod timing;
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use crate::classify::{train_and_eval, TrainConfig};
+use crate::coordinator::{embed_dataset, EngineMode, GsaConfig};
+use crate::data::Dataset;
+
+use crate::kernelgk;
+use crate::runtime::Engine;
+use crate::sample::sampler_by_name;
+use crate::util::{Json, Rng};
+
+/// Experiment scale knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct Scale {
+    /// SBM graphs per class.
+    pub per_class: usize,
+    /// Subgraph samples per graph (paper: 2000 / 4000 for real data).
+    pub s: usize,
+    /// Largest m in sweeps (paper: 5000).
+    pub m_max: usize,
+    /// Repetitions per configuration (averaged).
+    pub reps: usize,
+}
+
+impl Scale {
+    /// Paper-scale parameters (§4).
+    pub fn full() -> Scale {
+        Scale { per_class: 150, s: 2000, m_max: 5000, reps: 3 }
+    }
+
+    /// Minutes-not-hours defaults preserving the figures' shape.
+    pub fn quick() -> Scale {
+        Scale { per_class: 40, s: 400, m_max: 2000, reps: 2 }
+    }
+
+    /// Mid scale: the single-core sweet spot — full m sweep, readable
+    /// curves, ~tens of minutes for the whole suite.
+    pub fn mid() -> Scale {
+        Scale { per_class: 60, s: 1000, m_max: 5000, reps: 2 }
+    }
+
+    /// Parse a scale name ("quick" | "mid" | "full").
+    pub fn parse(name: &str) -> Scale {
+        match name {
+            "quick" => Scale::quick(),
+            "mid" => Scale::mid(),
+            "full" => Scale::full(),
+            other => panic!("--scale {other:?}: expected quick|mid|full"),
+        }
+    }
+
+    /// Clamp an m-sweep to the scale's maximum (keeps artifact names in
+    /// the compiled matrix: {100, 500, 1000, 2000, 5000}).
+    pub fn m_sweep(&self) -> Vec<usize> {
+        [100usize, 500, 1000, 2000, 5000]
+            .into_iter()
+            .filter(|&m| m <= self.m_max)
+            .collect()
+    }
+}
+
+/// Shared context: PJRT engine (if artifacts are built) + output dir.
+pub struct ExpContext {
+    pub engine: Option<Engine>,
+    pub out_dir: PathBuf,
+    /// Force an engine mode (None = Pjrt when available, else CpuInline).
+    pub engine_mode: Option<EngineMode>,
+}
+
+impl ExpContext {
+    pub fn new(engine: Option<Engine>, out_dir: PathBuf) -> Self {
+        std::fs::create_dir_all(&out_dir).ok();
+        ExpContext { engine, out_dir, engine_mode: None }
+    }
+
+    pub fn mode(&self) -> EngineMode {
+        self.engine_mode.unwrap_or(if self.engine.is_some() {
+            EngineMode::Pjrt
+        } else {
+            EngineMode::CpuInline
+        })
+    }
+
+    pub fn write_json(&self, name: &str, json: &Json) -> Result<()> {
+        let path = self.out_dir.join(format!("{name}.json"));
+        std::fs::write(&path, json.to_string())?;
+        eprintln!("wrote {}", path.display());
+        Ok(())
+    }
+}
+
+/// Train the linear tail with the L2 strength chosen on a validation
+/// split (mirrors the paper's hyperparameter protocol), then report test
+/// accuracy. Embeddings are computed once; classifier passes are cheap.
+pub fn eval_with_lambda_search(
+    emb: &[f32],
+    ds: &Dataset,
+    m: usize,
+    seed: u64,
+) -> f64 {
+    let mut rng = Rng::new(seed ^ 0xACC);
+    let split = ds.split(0.8, &mut rng);
+    let n_val = (split.train.len() / 4).max(1);
+    let (val, tr) = split.train.split_at(n_val);
+    let mut best = (f64::NEG_INFINITY, 1e-2f32);
+    for lambda in [1e-1f32, 1e-2, 1e-3] {
+        let cfg = TrainConfig { lambda, seed, ..Default::default() };
+        let acc = train_and_eval(emb, &ds.labels, m, tr, val, &cfg);
+        if acc > best.0 {
+            best = (acc, lambda);
+        }
+    }
+    let cfg = TrainConfig { lambda: best.1, seed, ..Default::default() };
+    train_and_eval(emb, &ds.labels, m, &split.train, &split.test, &cfg)
+}
+
+/// Run one GSA-phi configuration end to end; returns mean test accuracy
+/// over `reps` re-splits (fresh RF draw + split per rep).
+pub fn run_gsa(
+    ctx: &ExpContext,
+    ds: &Dataset,
+    cfg: &GsaConfig,
+    reps: usize,
+    seed: u64,
+) -> Result<f64> {
+    let mut accs = Vec::new();
+    for rep in 0..reps.max(1) {
+        let mut cfg = cfg.clone();
+        cfg.seed = seed ^ (rep as u64) << 32 | rep as u64;
+        cfg.engine = ctx.mode();
+        // PJRT artifacts exist only for the compiled batch size.
+        let (emb, _metrics) = embed_dataset(ds, &cfg, ctx.engine.as_ref())?;
+        accs.push(eval_with_lambda_search(&emb, ds, cfg.m, cfg.seed));
+    }
+    Ok(accs.iter().sum::<f64>() / accs.len() as f64)
+}
+
+/// Gaussian variants: pick sigma on a validation split (the paper tunes
+/// sigma^2 to maximize validation accuracy, §4.3).
+pub fn run_gsa_sigma_search(
+    ctx: &ExpContext,
+    ds: &Dataset,
+    cfg: &GsaConfig,
+    sigmas: &[f32],
+    seed: u64,
+) -> Result<(f64, f32)> {
+    let mut best = (f64::NEG_INFINITY, sigmas[0]);
+    for &sigma in sigmas {
+        let mut c = cfg.clone();
+        c.sigma = sigma;
+        c.seed = seed;
+        c.engine = ctx.mode();
+        let (emb, _) = embed_dataset(ds, &c, ctx.engine.as_ref())?;
+        // Split train into train/val for the search.
+        let mut rng = Rng::new(seed ^ 0x5161);
+        let split = ds.split(0.8, &mut rng);
+        let n_val = split.train.len() / 4;
+        let (val, tr) = split.train.split_at(n_val);
+        let acc = train_and_eval(
+            &emb,
+            &ds.labels,
+            c.m,
+            tr,
+            val,
+            &TrainConfig { seed, ..Default::default() },
+        );
+        if acc > best.0 {
+            best = (acc, sigma);
+        }
+    }
+    // Final run at the chosen sigma on the real split.
+    let mut c = cfg.clone();
+    c.sigma = best.1;
+    let acc = run_gsa(ctx, ds, &c, 1, seed)?;
+    Ok((acc, best.1))
+}
+
+/// The exact graphlet-kernel baseline (GSA-phi_match): sampled k-spectra
+/// + the same linear tail.
+pub fn run_match(ds: &Dataset, k: usize, s: usize, sampler: &str, seed: u64) -> Result<f64> {
+    let sampler = sampler_by_name(sampler);
+    let mut rng = Rng::new(seed);
+    let (spectra, dim) = kernelgk::dataset_spectra(ds, k, s, sampler.as_ref(), &mut rng);
+    let mut split_rng = Rng::new(seed ^ 0xACC);
+    let split = ds.split(0.8, &mut split_rng);
+    Ok(train_and_eval(
+        &spectra,
+        &ds.labels,
+        dim,
+        &split.train,
+        &split.test,
+        &TrainConfig { seed, ..Default::default() },
+    ))
+}
+
+/// Default r grid for the SBM sweeps (1 = indistinguishable classes).
+pub const R_GRID: [f64; 6] = [1.0, 1.05, 1.1, 1.2, 1.35, 1.5];
+
+/// Printable accuracy table row.
+pub fn print_row(cols: &[String]) {
+    println!("{}", cols.join("\t"));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::features::Variant;
+    use crate::gen::SbmConfig;
+
+    fn ctx() -> ExpContext {
+        let mut c = ExpContext::new(None, std::env::temp_dir().join("graphlet_rf_test_results"));
+        c.engine_mode = Some(EngineMode::CpuInline);
+        c
+    }
+
+    #[test]
+    fn run_gsa_beats_chance_on_easy_task() {
+        let ds = SbmConfig { per_class: 25, r: 3.0, ..Default::default() }
+            .generate(&mut Rng::new(1));
+        let cfg = GsaConfig { k: 4, s: 300, m: 128, batch: 64, ..Default::default() };
+        let acc = run_gsa(&ctx(), &ds, &cfg, 1, 7).unwrap();
+        assert!(acc > 0.75, "acc={acc}");
+    }
+
+    #[test]
+    fn run_match_beats_chance_on_easy_task() {
+        // Density-separable classes (see kernelgk tests for why the
+        // equal-degree SBM is intentionally hard for phi_match).
+        let mut rng = Rng::new(2);
+        let mut graphs = Vec::new();
+        let mut labels = Vec::new();
+        for i in 0..40usize {
+            let class = (i % 2) as u8;
+            let p = if class == 0 { 0.08 } else { 0.25 };
+            let mut g = crate::graph::DenseGraph::new(40);
+            for a in 0..40 {
+                for b in (a + 1)..40 {
+                    if rng.bool(p) {
+                        g.add_edge(a, b);
+                    }
+                }
+            }
+            graphs.push(crate::graph::AnyGraph::Dense(g));
+            labels.push(class);
+        }
+        let ds = Dataset::new("density", graphs, labels);
+        let acc = run_match(&ds, 4, 800, "rw", 3).unwrap();
+        assert!(acc > 0.85, "acc={acc}");
+    }
+
+    #[test]
+    fn sigma_search_returns_grid_member() {
+        let ds = SbmConfig { per_class: 12, r: 2.0, ..Default::default() }
+            .generate(&mut Rng::new(3));
+        let cfg = GsaConfig {
+            k: 3,
+            s: 150,
+            m: 64,
+            batch: 64,
+            variant: Variant::GaussEig,
+            ..Default::default()
+        };
+        let sigmas = [0.1f32, 1.0];
+        let (acc, sigma) = run_gsa_sigma_search(&ctx(), &ds, &cfg, &sigmas, 5).unwrap();
+        assert!(sigmas.contains(&sigma));
+        assert!(acc >= 0.0 && acc <= 1.0);
+    }
+
+    #[test]
+    fn scale_m_sweep_respects_max() {
+        assert_eq!(Scale::quick().m_sweep(), vec![100, 500, 1000, 2000]);
+        assert_eq!(Scale::full().m_sweep(), vec![100, 500, 1000, 2000, 5000]);
+    }
+}

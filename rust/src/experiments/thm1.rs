@@ -1,0 +1,184 @@
+//! Theorem 1 empirical verification: the squared distance between GSA-phi
+//! embeddings concentrates around MMD^2(S_k(G), S_k(G')) within the bound
+//!
+//!   4 m^{-1/2} sqrt(log(6/delta)) + 8 s^{-1/2} (1 + sqrt(2 log(3/delta)))
+//!
+//! Protocol: pick two SBM graphs of different classes at small k, where a
+//! near-exact MMD^2 is computable by brute force (very large s and m on
+//! the *same* kernel); then check the deviation of finite-(m, s) runs
+//! against the bound across many trials — it must hold in >= 1 - delta of
+//! them (it is a high-probability bound, typically loose in practice).
+
+use anyhow::Result;
+
+use super::ExpContext;
+use crate::features::{CpuFeatureMap, RfParams, Variant};
+use crate::gen::SbmConfig;
+use crate::graph::AnyGraph;
+use crate::mmd::{embedding_sq_distance, theorem1_bound};
+use crate::sample::{GraphletSampler, UniformSampler};
+use crate::util::{Json, Rng};
+
+/// Mean embedding of `s` sampled subgraphs of `g` under a fixed map.
+fn embed(
+    g: &AnyGraph,
+    k: usize,
+    s: usize,
+    map: &CpuFeatureMap,
+    rng: &mut Rng,
+) -> Vec<f32> {
+    let d = map.params.d;
+    let m = map.params.m;
+    let mut scratch = Vec::new();
+    let chunk = 256usize;
+    let mut x = vec![0.0f32; chunk * d];
+    let mut y = vec![0.0f32; chunk * m];
+    let mut sum = vec![0.0f32; m];
+    let mut done = 0;
+    while done < s {
+        let take = (s - done).min(chunk);
+        for r in 0..take {
+            let gl = UniformSampler.sample(g, k, rng, &mut scratch);
+            gl.write_flat_adj(&mut x[r * d..(r + 1) * d]);
+        }
+        map.map_batch(&x[..take * d], take, &mut y[..take * m]);
+        for r in 0..take {
+            for (a, &v) in sum.iter_mut().zip(&y[r * m..(r + 1) * m]) {
+                *a += v;
+            }
+        }
+        done += take;
+    }
+    for v in sum.iter_mut() {
+        *v /= s as f32;
+    }
+    sum
+}
+
+/// Result of the concentration experiment.
+#[derive(Debug)]
+pub struct Thm1Result {
+    pub m: usize,
+    pub s: usize,
+    pub delta: f64,
+    pub bound: f64,
+    pub trials: usize,
+    pub violations: usize,
+    pub max_deviation: f64,
+    pub mean_deviation: f64,
+    pub mmd2_ref: f64,
+}
+
+/// Run the experiment for one (m, s) point.
+pub fn run_point(
+    k: usize,
+    m: usize,
+    s: usize,
+    delta: f64,
+    trials: usize,
+    seed: u64,
+) -> Result<Thm1Result> {
+    // Gaussian map: |xi| <= 1 holds per feature (sqrt(2) cos scaled), as
+    // Theorem 1 assumes (|xi_w(F)| <= 1 after the sqrt(2) convention —
+    // we use sigma such that features stay bounded; the bound uses the
+    // algebraic structure, the constant is conservative either way).
+    let mut rng = Rng::new(seed);
+    let cfg = SbmConfig { r: 2.0, ..Default::default() };
+    let ga = cfg.sample_graph(0, &mut rng);
+    let gb = cfg.sample_graph(1, &mut rng);
+    let d = k * k;
+
+    // Reference MMD^2: large m and s (law of large numbers on both).
+    // Sized for a single-core laptop: ~4x the operating point with floors
+    // high enough that the reference error is well below the bound.
+    let big_m = 6_000.max(4 * m);
+    let big_s = 12_000.max(8 * s);
+    let params_ref = RfParams::generate(Variant::Gauss, d, big_m, 1.0, &mut rng);
+    let map_ref = CpuFeatureMap::new(params_ref);
+    let fa = embed(&ga, k, big_s, &map_ref, &mut rng);
+    let fb = embed(&gb, k, big_s, &map_ref, &mut rng);
+    let mmd2_ref = embedding_sq_distance(&fa, &fb);
+
+    let bound = theorem1_bound(m, s, delta);
+    let mut violations = 0usize;
+    let mut max_dev = 0.0f64;
+    let mut sum_dev = 0.0f64;
+    for t in 0..trials {
+        let mut trial_rng = Rng::new(seed ^ (0x1000 + t as u64));
+        let params = RfParams::generate(Variant::Gauss, d, m, 1.0, &mut trial_rng);
+        let map = CpuFeatureMap::new(params);
+        let fa = embed(&ga, k, s, &map, &mut trial_rng);
+        let fb = embed(&gb, k, s, &map, &mut trial_rng);
+        let dev = (embedding_sq_distance(&fa, &fb) - mmd2_ref).abs();
+        max_dev = max_dev.max(dev);
+        sum_dev += dev;
+        if dev > bound {
+            violations += 1;
+        }
+    }
+    Ok(Thm1Result {
+        m,
+        s,
+        delta,
+        bound,
+        trials,
+        violations,
+        max_deviation: max_dev,
+        mean_deviation: sum_dev / trials as f64,
+        mmd2_ref,
+    })
+}
+
+/// Full sweep + report (the `thm1` CLI subcommand / example).
+pub fn run(ctx: &ExpContext, seed: u64) -> Result<Json> {
+    println!("# Theorem 1 concentration check (k=3, delta=0.05)");
+    let delta = 0.05;
+    let mut arr = Json::arr();
+    for (m, s) in [(50usize, 200usize), (200, 200), (1000, 1000), (2000, 4000)] {
+        let r = run_point(3, m, s, delta, 20, seed)?;
+        println!(
+            "m={:<5} s={:<5} bound={:.4} mean_dev={:.5} max_dev={:.5} violations={}/{} mmd2={:.4}",
+            r.m, r.s, r.bound, r.mean_deviation, r.max_deviation, r.violations, r.trials, r.mmd2_ref
+        );
+        assert!(
+            (r.violations as f64) <= (delta * r.trials as f64).ceil(),
+            "Theorem 1 bound violated too often"
+        );
+        arr.push(
+            Json::obj()
+                .set("m", r.m)
+                .set("s", r.s)
+                .set("bound", r.bound)
+                .set("mean_deviation", r.mean_deviation)
+                .set("max_deviation", r.max_deviation)
+                .set("violations", r.violations)
+                .set("trials", r.trials),
+        );
+    }
+    let out = Json::obj().set("experiment", "thm1").set("delta", delta).set("points", arr);
+    ctx.write_json("thm1", &out)?;
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bound_holds_and_deviation_shrinks() {
+        let a = run_point(3, 50, 100, 0.05, 8, 1).unwrap();
+        let b = run_point(3, 800, 1600, 0.05, 8, 1).unwrap();
+        // High-probability bound: allow <= delta fraction of violations.
+        assert!(a.violations <= 1, "{a:?}");
+        assert!(b.violations <= 1, "{b:?}");
+        // Deviation must shrink as m and s grow.
+        assert!(
+            b.mean_deviation < a.mean_deviation,
+            "{} !< {}",
+            b.mean_deviation,
+            a.mean_deviation
+        );
+        // And the bound itself shrinks.
+        assert!(b.bound < a.bound);
+    }
+}

@@ -1,0 +1,238 @@
+//! Fig 2 (right) + Table 1: per-subgraph computation time vs k for each
+//! feature map, plus the complexity-scaling fits.
+//!
+//! Measures, per k in 3..=8, the cost of mapping one sampled subgraph
+//! through: phi_match (canonical form + registry), phi_Gs (CPU),
+//! phi_Gs+eig (Jacobi + CPU map), phi_OPU simulation (CPU), the PJRT
+//! batched path when artifacts exist, and the analytic physical-OPU
+//! model (constant; DESIGN.md §2). The paper's claim to reproduce:
+//! phi_match grows exponentially in k, Gaussian maps polynomially, OPU
+//! stays flat.
+
+use anyhow::Result;
+
+use super::ExpContext;
+use crate::features::{opu_model_time, CpuFeatureMap, RfParams, Variant};
+use crate::gen::SbmConfig;
+use crate::graph::Graphlet;
+use crate::iso::GraphletRegistry;
+use crate::runtime::RfExecutor;
+use crate::sample::{GraphletSampler, UniformSampler};
+use crate::util::{bench, Json, Rng};
+
+/// One measured series: seconds per subgraph for each k.
+#[derive(Debug, Clone)]
+pub struct TimingSeries {
+    pub label: String,
+    pub ks: Vec<usize>,
+    pub secs_per_subgraph: Vec<f64>,
+}
+
+/// Sample a pool of subgraphs of one SBM graph for timing inputs.
+fn graphlet_pool(k: usize, n: usize, seed: u64) -> Vec<Graphlet> {
+    let g = SbmConfig::default().sample_graph(1, &mut Rng::new(seed));
+    let mut rng = Rng::new(seed ^ 1);
+    let mut scratch = Vec::new();
+    (0..n)
+        .map(|_| UniformSampler.sample(&g, k, &mut rng, &mut scratch))
+        .collect()
+}
+
+/// Measure all series. `m` is the feature dimension for the RF maps;
+/// `pool` controls how many subgraphs each measurement batches over.
+pub fn measure(ctx: &ExpContext, ks: &[usize], m: usize, pool: usize) -> Result<Vec<TimingSeries>> {
+    let mut out = Vec::new();
+    let mut rng = Rng::new(0x71);
+
+    // --- phi_match: canonicalize + classify each subgraph --------------
+    {
+        let mut secs = Vec::new();
+        for &k in ks {
+            let graphlets = graphlet_pool(k, pool, 42 + k as u64);
+            let mut reg = GraphletRegistry::new();
+            let t = bench(1, 5, || {
+                for g in &graphlets {
+                    std::hint::black_box(reg.classify(g));
+                }
+            });
+            secs.push(t / pool as f64);
+        }
+        out.push(TimingSeries { label: "match".into(), ks: ks.to_vec(), secs_per_subgraph: secs });
+    }
+
+    // --- CPU feature maps ----------------------------------------------
+    for (variant, label) in [
+        (Variant::Gauss, "gauss"),
+        (Variant::GaussEig, "gauss-eig"),
+        (Variant::Opu, "opu-sim"),
+    ] {
+        let mut secs = Vec::new();
+        for &k in ks {
+            let d = variant.input_dim(k);
+            let params = RfParams::generate(variant, d, m, 0.1, &mut rng);
+            let map = CpuFeatureMap::new(params);
+            let graphlets = graphlet_pool(k, pool, 7 + k as u64);
+            let mut x = vec![0.0f32; pool * d];
+            let mut y = vec![0.0f32; pool * m];
+            let t = bench(1, 5, || {
+                // Include the input transform (flatten / eigensolve):
+                // it is part of the per-subgraph cost in Table 1.
+                for (i, g) in graphlets.iter().enumerate() {
+                    variant.write_input(g, &mut x[i * d..(i + 1) * d]);
+                }
+                map.map_batch(&x, pool, &mut y);
+                std::hint::black_box(&y);
+            });
+            secs.push(t / pool as f64);
+        }
+        out.push(TimingSeries { label: label.into(), ks: ks.to_vec(), secs_per_subgraph: secs });
+    }
+
+    // --- PJRT batched path (when artifacts are compiled) ----------------
+    if let Some(engine) = &ctx.engine {
+        let batch = 256usize;
+        let mut secs = Vec::new();
+        let mut ok = true;
+        for &k in ks {
+            let d = k * k;
+            let params = RfParams::generate(Variant::Opu, d, m, 1.0, &mut rng);
+            match RfExecutor::new(engine, "xla", &params, batch) {
+                Ok(exec) => {
+                    let graphlets = graphlet_pool(k, batch, 9 + k as u64);
+                    let mut x = vec![0.0f32; batch * d];
+                    for (i, g) in graphlets.iter().enumerate() {
+                        g.write_flat_adj(&mut x[i * d..(i + 1) * d]);
+                    }
+                    let t = bench(2, 5, || {
+                        std::hint::black_box(exec.map(engine, &x, batch).unwrap());
+                    });
+                    secs.push(t / batch as f64);
+                }
+                Err(e) => {
+                    eprintln!("skipping pjrt series at k={k}: {e}");
+                    ok = false;
+                    break;
+                }
+            }
+        }
+        if ok {
+            out.push(TimingSeries {
+                label: "opu-sim-pjrt".into(),
+                ks: ks.to_vec(),
+                secs_per_subgraph: secs,
+            });
+        }
+    }
+
+    // --- physical OPU analytic model -------------------------------------
+    out.push(TimingSeries {
+        label: "opu-physical-model".into(),
+        ks: ks.to_vec(),
+        secs_per_subgraph: ks.iter().map(|_| opu_model_time(1)).collect(),
+    });
+
+    Ok(out)
+}
+
+/// Fit log(time) against k (exponential rate) and log(k) (polynomial
+/// degree); Table 1's empirical complexity check.
+pub fn scaling_fits(series: &TimingSeries) -> (f64, f64) {
+    let xs_exp: Vec<f64> = series.ks.iter().map(|&k| k as f64).collect();
+    let xs_poly: Vec<f64> = series.ks.iter().map(|&k| (k as f64).ln()).collect();
+    let ys: Vec<f64> = series.secs_per_subgraph.iter().map(|&t| t.max(1e-12).ln()).collect();
+    (slope(&xs_exp, &ys), slope(&xs_poly, &ys))
+}
+
+fn slope(xs: &[f64], ys: &[f64]) -> f64 {
+    let n = xs.len() as f64;
+    let mx = xs.iter().sum::<f64>() / n;
+    let my = ys.iter().sum::<f64>() / n;
+    let cov: f64 = xs.iter().zip(ys).map(|(x, y)| (x - mx) * (y - my)).sum();
+    let var: f64 = xs.iter().map(|x| (x - mx) * (x - mx)).sum();
+    cov / var.max(1e-300)
+}
+
+/// Run + print + persist the whole Fig 2 (right) / Table 1 study.
+pub fn fig2_right(ctx: &ExpContext, ks: &[usize], m: usize, pool: usize) -> Result<Json> {
+    println!("# Fig 2 (right) / Table 1: per-subgraph time vs k (m={m})");
+    let series = measure(ctx, ks, m, pool)?;
+    let mut out = Json::obj().set("figure", "fig2_right").set("m", m);
+    let mut arr = Json::arr();
+    for s in &series {
+        let (exp_rate, poly_deg) = scaling_fits(s);
+        println!(
+            "{:<20} {}",
+            s.label,
+            s.ks
+                .iter()
+                .zip(&s.secs_per_subgraph)
+                .map(|(k, t)| format!("k={k}: {:.3}us", t * 1e6))
+                .collect::<Vec<_>>()
+                .join("  ")
+        );
+        println!(
+            "{:<20} exp-rate/k={exp_rate:.2} poly-degree={poly_deg:.2}",
+            ""
+        );
+        arr.push(
+            Json::obj()
+                .set("label", s.label.as_str())
+                .set("k", s.ks.clone())
+                .set("secs_per_subgraph", s.secs_per_subgraph.clone())
+                .set("exp_rate", exp_rate)
+                .set("poly_degree", poly_deg),
+        );
+    }
+    out = out.set("series", arr);
+    ctx.write_json("fig2_right", &out)?;
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::EngineMode;
+
+    fn tiny_ctx() -> ExpContext {
+        let mut c = ExpContext::new(None, std::env::temp_dir().join("graphlet_rf_timing"));
+        c.engine_mode = Some(EngineMode::CpuInline);
+        c
+    }
+
+    #[test]
+    fn measures_all_cpu_series() {
+        let series = measure(&tiny_ctx(), &[3, 4], 32, 64).unwrap();
+        let labels: Vec<&str> = series.iter().map(|s| s.label.as_str()).collect();
+        for want in ["match", "gauss", "gauss-eig", "opu-sim", "opu-physical-model"] {
+            assert!(labels.contains(&want), "{labels:?}");
+        }
+        for s in &series {
+            assert!(s.secs_per_subgraph.iter().all(|&t| t >= 0.0));
+        }
+    }
+
+    #[test]
+    fn match_time_grows_with_k() {
+        let series = measure(&tiny_ctx(), &[3, 6], 16, 64).unwrap();
+        let m = series.iter().find(|s| s.label == "match").unwrap();
+        assert!(
+            m.secs_per_subgraph[1] > m.secs_per_subgraph[0],
+            "{:?}",
+            m.secs_per_subgraph
+        );
+    }
+
+    #[test]
+    fn physical_model_is_flat() {
+        let series = measure(&tiny_ctx(), &[3, 4, 5], 16, 16).unwrap();
+        let m = series.iter().find(|s| s.label == "opu-physical-model").unwrap();
+        assert!(m.secs_per_subgraph.windows(2).all(|w| w[0] == w[1]));
+    }
+
+    #[test]
+    fn slope_fits_line() {
+        let xs = [1.0, 2.0, 3.0];
+        let ys = [2.0, 4.0, 6.0];
+        assert!((slope(&xs, &ys) - 2.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,156 @@
+//! Jacobi eigenvalue solver for small symmetric matrices.
+//!
+//! The Gs+eig variant (paper §3.3) feeds the *sorted eigenvalues* of a
+//! graphlet's adjacency matrix to the Gaussian feature map. Graphlets are
+//! k <= 8, so the classical cyclic Jacobi rotation method is exact enough
+//! and allocation-light — and crucially it keeps eigenvalues out of the
+//! lowered HLO (CPU LAPACK custom-calls are not loadable by xla_extension
+//! 0.5.1; see python/compile/model.py).
+
+/// Sorted (ascending) eigenvalues of the symmetric `n x n` matrix `a`
+/// (row-major, only assumed symmetric — the strict upper triangle is
+/// trusted).
+pub fn sorted_eigenvalues(a: &[f64], n: usize) -> Vec<f64> {
+    assert_eq!(a.len(), n * n);
+    let mut m = a.to_vec();
+    // Cyclic Jacobi sweeps until off-diagonal mass is negligible.
+    for _sweep in 0..64 {
+        let mut off = 0.0;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                off += m[i * n + j] * m[i * n + j];
+            }
+        }
+        if off < 1e-22 {
+            break;
+        }
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = m[p * n + q];
+                if apq.abs() < 1e-300 {
+                    continue;
+                }
+                let app = m[p * n + p];
+                let aqq = m[q * n + q];
+                let theta = (aqq - app) / (2.0 * apq);
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                // Rotate rows/cols p and q.
+                for i in 0..n {
+                    let aip = m[i * n + p];
+                    let aiq = m[i * n + q];
+                    m[i * n + p] = c * aip - s * aiq;
+                    m[i * n + q] = s * aip + c * aiq;
+                }
+                for i in 0..n {
+                    let api = m[p * n + i];
+                    let aqi = m[q * n + i];
+                    m[p * n + i] = c * api - s * aqi;
+                    m[q * n + i] = s * api + c * aqi;
+                }
+            }
+        }
+    }
+    let mut vals: Vec<f64> = (0..n).map(|i| m[i * n + i]).collect();
+    vals.sort_by(|x, y| x.partial_cmp(y).unwrap());
+    vals
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Graphlet;
+    use crate::util::check;
+
+    fn assert_close(got: &[f64], want: &[f64], tol: f64) {
+        assert_eq!(got.len(), want.len());
+        for (g, w) in got.iter().zip(want) {
+            assert!((g - w).abs() < tol, "{got:?} vs {want:?}");
+        }
+    }
+
+    #[test]
+    fn diagonal_matrix() {
+        let a = [3.0, 0.0, 0.0, 0.0, -1.0, 0.0, 0.0, 0.0, 2.0];
+        assert_close(&sorted_eigenvalues(&a, 3), &[-1.0, 2.0, 3.0], 1e-12);
+    }
+
+    #[test]
+    fn single_edge() {
+        // Adjacency of K2: eigenvalues -1, 1.
+        let a = [0.0, 1.0, 1.0, 0.0];
+        assert_close(&sorted_eigenvalues(&a, 2), &[-1.0, 1.0], 1e-12);
+    }
+
+    #[test]
+    fn complete_graph_spectrum() {
+        // K_n adjacency: eigenvalues (n-1) once and -1 with multiplicity
+        // n-1.
+        for n in 2..=8 {
+            let mut a = vec![1.0; n * n];
+            for i in 0..n {
+                a[i * n + i] = 0.0;
+            }
+            let vals = sorted_eigenvalues(&a, n);
+            for v in &vals[..n - 1] {
+                assert!((v + 1.0).abs() < 1e-9, "{vals:?}");
+            }
+            assert!((vals[n - 1] - (n - 1) as f64).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn path_graph_spectrum() {
+        // P_n eigenvalues: 2 cos(pi i / (n+1)), i = 1..n.
+        let n = 5;
+        let mut g = Graphlet::empty(n);
+        for i in 0..n - 1 {
+            g.set_edge(i, i + 1);
+        }
+        let vals = sorted_eigenvalues(&g.adj_f64(), n);
+        let mut want: Vec<f64> = (1..=n)
+            .map(|i| 2.0 * (std::f64::consts::PI * i as f64 / (n + 1) as f64).cos())
+            .collect();
+        want.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_close(&vals, &want, 1e-9);
+    }
+
+    #[test]
+    fn trace_and_frobenius_preserved() {
+        check::check("eig-invariants", 0xE1, 100, |rng| {
+            let n = 2 + rng.usize(7);
+            // Random symmetric matrix.
+            let mut a = vec![0.0f64; n * n];
+            for i in 0..n {
+                for j in i..n {
+                    let v = rng.gaussian();
+                    a[i * n + j] = v;
+                    a[j * n + i] = v;
+                }
+            }
+            let vals = sorted_eigenvalues(&a, n);
+            let trace: f64 = (0..n).map(|i| a[i * n + i]).sum();
+            let fro: f64 = a.iter().map(|v| v * v).sum();
+            let sum: f64 = vals.iter().sum();
+            let sum2: f64 = vals.iter().map(|v| v * v).sum();
+            assert!((trace - sum).abs() < 1e-8, "trace {trace} vs {sum}");
+            assert!((fro - sum2).abs() < 1e-8, "fro {fro} vs {sum2}");
+        });
+    }
+
+    #[test]
+    fn eigenvalues_are_permutation_invariant() {
+        check::check("eig-perm", 0xE2, 100, |rng| {
+            let k = 2 + rng.usize(7);
+            let n_pairs = k * (k - 1) / 2;
+            let g = Graphlet::from_bits(k, (rng.next_u64() & ((1u64 << n_pairs) - 1)) as u32);
+            let mut perm: Vec<usize> = (0..k).collect();
+            rng.shuffle(&mut perm);
+            let h = g.permute(&perm);
+            let vg = sorted_eigenvalues(&g.adj_f64(), k);
+            let vh = sorted_eigenvalues(&h.adj_f64(), k);
+            assert_close(&vg, &vh, 1e-9);
+        });
+    }
+}

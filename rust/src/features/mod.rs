@@ -1,0 +1,316 @@
+//! CPU random-feature maps, the Jacobi eigensolver for the Gs+eig
+//! variant, and the analytic OPU cost model.
+//!
+//! These serve three roles:
+//! 1. **Fallback** feature engine when PJRT artifacts are unavailable
+//!    (`--engine cpu`), with *identical math* to the L2 jax bodies —
+//!    tests cross-check the two paths bit-for-bit-ish (allclose).
+//! 2. **Baselines** for the Fig. 2 (right) / Table 1 timing study:
+//!    `phi_Gs` and `phi_Gs+eig` per-subgraph cost measured here.
+//! 3. **Parameter source**: the random matrices/biases generated here are
+//!    the ones uploaded to the device for the PJRT path, so both engines
+//!    share randomness given a seed.
+
+pub mod eig;
+
+use crate::graph::Graphlet;
+use crate::util::Rng;
+
+/// Variant tag used across config, runtime, and result files.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Variant {
+    /// Simulated optical features `m^{-1/2} |Wx + b|^2` (phi_OPU).
+    Opu,
+    /// Gaussian features `sqrt(2/m) cos(Wx + b)` on flattened adjacency.
+    Gauss,
+    /// Gaussian features on sorted eigenvalues (phi_Gs+eig).
+    GaussEig,
+    /// Exact graphlet matching (phi_match) — the classical baseline.
+    Match,
+}
+
+impl Variant {
+    pub fn parse(s: &str) -> Variant {
+        match s {
+            "opu" => Variant::Opu,
+            "gauss" | "gaussian" => Variant::Gauss,
+            "gauss-eig" | "eig" => Variant::GaussEig,
+            "match" => Variant::Match,
+            other => panic!("unknown variant {other:?} (opu|gauss|gauss-eig|match)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Variant::Opu => "opu",
+            Variant::Gauss => "gauss",
+            Variant::GaussEig => "gauss-eig",
+            Variant::Match => "match",
+        }
+    }
+
+    /// Input dimension of the feature map for graphlet size k.
+    pub fn input_dim(&self, k: usize) -> usize {
+        match self {
+            Variant::GaussEig => k,
+            _ => k * k,
+        }
+    }
+
+    /// Write the feature-map input for one graphlet into `out`.
+    pub fn write_input(&self, g: &Graphlet, out: &mut [f32]) {
+        match self {
+            Variant::GaussEig => {
+                let vals = eig::sorted_eigenvalues(&g.adj_f64(), g.k());
+                for (o, v) in out.iter_mut().zip(vals) {
+                    *o = v as f32;
+                }
+            }
+            _ => g.write_flat_adj(out),
+        }
+    }
+}
+
+/// The random parameters of a feature map; uploaded to the device for the
+/// PJRT engine or used directly by the CPU engine.
+#[derive(Clone, Debug)]
+pub struct RfParams {
+    pub variant: Variant,
+    pub d: usize,
+    pub m: usize,
+    /// gauss / gauss-eig: W (d*m) and b (m). opu: Wr, Wi (d*m), br, bi (m).
+    pub mats: Vec<Vec<f32>>,
+    pub biases: Vec<Vec<f32>>,
+}
+
+impl RfParams {
+    /// Draw parameters. `sigma` scales the Gaussian frequency matrix
+    /// (paper Fig. 2 uses sigma^2 = 0.01 for phi_Gs); the OPU transmission
+    /// matrix is unit-variance complex Gaussian.
+    pub fn generate(variant: Variant, d: usize, m: usize, sigma: f32, rng: &mut Rng) -> Self {
+        let mat = |s: f32, rng: &mut Rng| {
+            let mut w = vec![0.0f32; d * m];
+            rng.fill_gaussian(&mut w, s);
+            w
+        };
+        let (mats, biases) = match variant {
+            Variant::Opu => {
+                let wr = mat(1.0, rng);
+                let wi = mat(1.0, rng);
+                let mut br = vec![0.0f32; m];
+                let mut bi = vec![0.0f32; m];
+                rng.fill_gaussian(&mut br, 1.0);
+                rng.fill_gaussian(&mut bi, 1.0);
+                (vec![wr, wi], vec![br, bi])
+            }
+            Variant::Gauss | Variant::GaussEig => {
+                // Frequencies ~ N(0, 1/sigma^2) approximate the Gaussian
+                // kernel of bandwidth sigma (Rahimi-Recht).
+                let w = mat(1.0 / sigma, rng);
+                let mut b = vec![0.0f32; m];
+                rng.fill_uniform(&mut b, 0.0, 2.0 * std::f32::consts::PI);
+                (vec![w], vec![b])
+            }
+            Variant::Match => (Vec::new(), Vec::new()),
+        };
+        RfParams { variant, d, m, mats, biases }
+    }
+}
+
+/// CPU implementation of the feature maps — same math as
+/// `python/compile/kernels/ref.py`.
+pub struct CpuFeatureMap {
+    pub params: RfParams,
+}
+
+impl CpuFeatureMap {
+    pub fn new(params: RfParams) -> Self {
+        CpuFeatureMap { params }
+    }
+
+    /// Map a row-major batch `x` of shape (batch, d) into `out` of shape
+    /// (batch, m).
+    pub fn map_batch(&self, x: &[f32], batch: usize, out: &mut [f32]) {
+        let p = &self.params;
+        assert_eq!(x.len(), batch * p.d);
+        assert_eq!(out.len(), batch * p.m);
+        match p.variant {
+            Variant::Gauss | Variant::GaussEig => {
+                let scale = (2.0 / p.m as f32).sqrt();
+                let w = &p.mats[0];
+                let b = &p.biases[0];
+                for r in 0..batch {
+                    let xr = &x[r * p.d..(r + 1) * p.d];
+                    let or = &mut out[r * p.m..(r + 1) * p.m];
+                    or.copy_from_slice(b);
+                    // Accumulate x_j * W[j, :] row-wise (W row-major d x m):
+                    // better locality than per-output dot products.
+                    for (j, &xj) in xr.iter().enumerate() {
+                        if xj == 0.0 {
+                            continue; // adjacency inputs are sparse 0/1
+                        }
+                        let wrow = &w[j * p.m..(j + 1) * p.m];
+                        for (o, &wv) in or.iter_mut().zip(wrow) {
+                            *o += xj * wv;
+                        }
+                    }
+                    for o in or.iter_mut() {
+                        *o = scale * o.cos();
+                    }
+                }
+            }
+            Variant::Opu => {
+                let scale = 1.0 / (p.m as f32).sqrt();
+                let (wr, wi) = (&p.mats[0], &p.mats[1]);
+                let (br, bi) = (&p.biases[0], &p.biases[1]);
+                let mut im = vec![0.0f32; p.m];
+                for r in 0..batch {
+                    let xr = &x[r * p.d..(r + 1) * p.d];
+                    let or = &mut out[r * p.m..(r + 1) * p.m];
+                    or.copy_from_slice(br);
+                    im.copy_from_slice(bi);
+                    for (j, &xj) in xr.iter().enumerate() {
+                        if xj == 0.0 {
+                            continue;
+                        }
+                        let wr_row = &wr[j * p.m..(j + 1) * p.m];
+                        let wi_row = &wi[j * p.m..(j + 1) * p.m];
+                        for idx in 0..p.m {
+                            or[idx] += xj * wr_row[idx];
+                            im[idx] += xj * wi_row[idx];
+                        }
+                    }
+                    for (o, &i_v) in or.iter_mut().zip(im.iter()) {
+                        *o = scale * (*o * *o + i_v * i_v);
+                    }
+                }
+            }
+            Variant::Match => panic!("phi_match is not a dense feature map"),
+        }
+    }
+}
+
+/// Analytic cost model of the physical OPU (DESIGN.md §2): a projection
+/// takes constant wall-clock time regardless of d and m (within the
+/// device's ~1e6 dimension limits). LightOn reports O(100 us) per
+/// projection at full frame rate; Fig. 2 (right)'s "constant in k" series
+/// is regenerated from this model while the simulation measures the
+/// O(m k^2) software path.
+pub const OPU_SECONDS_PER_PROJECTION: f64 = 1e-4;
+
+pub fn opu_model_time(n_projections: usize) -> f64 {
+    n_projections as f64 * OPU_SECONDS_PER_PROJECTION
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check;
+
+    fn naive_gauss(x: &[f32], d: usize, m: usize, w: &[f32], b: &[f32]) -> Vec<f32> {
+        let batch = x.len() / d;
+        let mut out = vec![0.0f32; batch * m];
+        for r in 0..batch {
+            for c in 0..m {
+                let mut acc = b[c];
+                for j in 0..d {
+                    acc += x[r * d + j] * w[j * m + c];
+                }
+                out[r * m + c] = (2.0 / m as f32).sqrt() * acc.cos();
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn cpu_gauss_matches_naive() {
+        check::check("cpu-gauss", 0xD1, 30, |rng| {
+            let (batch, d, m) = (1 + rng.usize(8), 1 + rng.usize(16), 1 + rng.usize(40));
+            let params = RfParams::generate(Variant::Gauss, d, m, 1.0, rng);
+            let mut x = vec![0.0f32; batch * d];
+            rng.fill_gaussian(&mut x, 1.0);
+            let mut out = vec![0.0f32; batch * m];
+            CpuFeatureMap::new(params.clone()).map_batch(&x, batch, &mut out);
+            let want = naive_gauss(&x, d, m, &params.mats[0], &params.biases[0]);
+            check::assert_allclose(&out, &want, 1e-5, 1e-5);
+        });
+    }
+
+    #[test]
+    fn cpu_opu_nonnegative_and_scaled() {
+        check::check("cpu-opu", 0xD2, 30, |rng| {
+            let (batch, d, m) = (1 + rng.usize(8), 1 + rng.usize(16), 1 + rng.usize(40));
+            let params = RfParams::generate(Variant::Opu, d, m, 1.0, rng);
+            let mut x = vec![0.0f32; batch * d];
+            for v in x.iter_mut() {
+                *v = rng.bool(0.5) as u8 as f32;
+            }
+            let mut out = vec![0.0f32; batch * m];
+            CpuFeatureMap::new(params).map_batch(&x, batch, &mut out);
+            assert!(out.iter().all(|&v| v >= 0.0));
+        });
+    }
+
+    #[test]
+    fn opu_kernel_closed_form() {
+        // Same law as the python test: for b = 0 and unit-variance complex
+        // gaussian W, E[phi(x).phi(y)] -> 4 (||x||^2||y||^2 + <x,y>^2) / m
+        // after accounting for the m^{-1/2} scaling (dot over m entries).
+        let mut rng = Rng::new(99);
+        let (d, m) = (4, 120_000);
+        let mut params = RfParams::generate(Variant::Opu, d, m, 1.0, &mut rng);
+        params.biases[0].fill(0.0);
+        params.biases[1].fill(0.0);
+        let x = [0.5f32, -1.0, 0.25, 2.0];
+        let y = [1.0f32, 1.0, -0.5, 0.0];
+        let mut input = Vec::new();
+        input.extend_from_slice(&x);
+        input.extend_from_slice(&y);
+        let mut out = vec![0.0f32; 2 * m];
+        CpuFeatureMap::new(params).map_batch(&input, 2, &mut out);
+        let dot: f64 = (0..m).map(|i| out[i] as f64 * out[m + i] as f64).sum();
+        let nx2: f64 = x.iter().map(|&v| (v * v) as f64).sum();
+        let ny2: f64 = y.iter().map(|&v| (v * v) as f64).sum();
+        let ip: f64 = x.iter().zip(&y).map(|(&a, &b)| (a * b) as f64).sum();
+        let exact = 4.0 * (nx2 * ny2 + ip * ip);
+        assert!((dot - exact).abs() / exact < 0.05, "{dot} vs {exact}");
+    }
+
+    #[test]
+    fn gauss_kernel_approximation() {
+        // phi(x).phi(y) ~ exp(-||x-y||^2 / (2 sigma^2))
+        let mut rng = Rng::new(5);
+        let (d, m, sigma) = (6, 80_000, 1.5f32);
+        let params = RfParams::generate(Variant::Gauss, d, m, sigma, &mut rng);
+        let mut xy = vec![0.0f32; 2 * d];
+        rng.fill_gaussian(&mut xy, 0.7);
+        let mut out = vec![0.0f32; 2 * m];
+        CpuFeatureMap::new(params).map_batch(&xy, 2, &mut out);
+        let dot: f64 = (0..m).map(|i| out[i] as f64 * out[m + i] as f64).sum();
+        let dist2: f64 = (0..d)
+            .map(|j| ((xy[j] - xy[d + j]) as f64).powi(2))
+            .sum();
+        let exact = (-dist2 / (2.0 * sigma as f64 * sigma as f64)).exp();
+        assert!((dot - exact).abs() < 0.03, "{dot} vs {exact}");
+    }
+
+    #[test]
+    fn variant_io_dims() {
+        assert_eq!(Variant::Opu.input_dim(6), 36);
+        assert_eq!(Variant::GaussEig.input_dim(6), 6);
+        let mut g = Graphlet::empty(3);
+        g.set_edge(0, 1);
+        let mut buf = vec![0.0f32; 9];
+        Variant::Gauss.write_input(&g, &mut buf);
+        assert_eq!(buf[1], 1.0);
+        let mut ebuf = vec![0.0f32; 3];
+        Variant::GaussEig.write_input(&g, &mut ebuf);
+        // Eigenvalues of a single edge + isolated node: -1, 0, 1 sorted.
+        check::assert_allclose(&ebuf, &[-1.0, 0.0, 1.0], 1e-5, 1e-5);
+    }
+
+    #[test]
+    fn opu_cost_model_is_constant_in_dims() {
+        assert_eq!(opu_model_time(10), 10.0 * OPU_SECONDS_PER_PROJECTION);
+    }
+}

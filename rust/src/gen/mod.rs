@@ -1,0 +1,16 @@
+//! Synthetic dataset generators.
+//!
+//! - [`sbm`]: the paper's controlled setting (§4.1): stochastic block
+//!   model graphs, 60 nodes, 6 communities, equal expected degree across
+//!   classes, inter-class similarity parameter `r`.
+//! - [`dd_like`] / [`reddit_like`]: structure-matched substitutes for the
+//!   D&D and Reddit-Binary datasets (DESIGN.md §2 documents the
+//!   substitution; real data drops in through `data::tu`).
+
+pub mod dd_like;
+pub mod reddit_like;
+pub mod sbm;
+
+pub use dd_like::DdLikeConfig;
+pub use reddit_like::RedditLikeConfig;
+pub use sbm::SbmConfig;

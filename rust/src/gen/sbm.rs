@@ -1,0 +1,158 @@
+//! Stochastic block model generator (paper §4.1).
+//!
+//! Each graph: `v = 60` nodes split equally into 6 communities. Two
+//! classes {0, 1}; class `c` has edge probability `p_in(c)` within a
+//! community and `p_out(c)` across. The pairs are chosen so both classes
+//! have the same expected degree (10), removing average degree as a
+//! trivial discriminant. One degree of freedom remains: `p_in(1)` is
+//! fixed at 0.3 and `r = p_in(1) / p_in(0)` controls class similarity —
+//! `r -> 1` makes the classes indistinguishable.
+
+use crate::data::Dataset;
+use crate::graph::{AnyGraph, DenseGraph};
+use crate::util::Rng;
+
+/// Configuration for one SBM dataset (defaults match the paper).
+#[derive(Clone, Debug)]
+pub struct SbmConfig {
+    /// Nodes per graph.
+    pub v: usize,
+    /// Number of communities (must divide `v`).
+    pub communities: usize,
+    /// Expected node degree in both classes.
+    pub expected_degree: f64,
+    /// Within-community edge probability of class 1.
+    pub p_in_1: f64,
+    /// Inter-class similarity: `r = p_in(1) / p_in(0)`.
+    pub r: f64,
+    /// Graphs per class.
+    pub per_class: usize,
+}
+
+impl Default for SbmConfig {
+    fn default() -> Self {
+        SbmConfig {
+            v: 60,
+            communities: 6,
+            expected_degree: 10.0,
+            p_in_1: 0.3,
+            r: 1.1,
+            per_class: 150,
+        }
+    }
+}
+
+impl SbmConfig {
+    /// (p_in, p_out) for class `c`, solving
+    /// `(v/comm - 1) * p_in + (v - v/comm) * p_out = expected_degree`.
+    pub fn edge_probs(&self, class: u8) -> (f64, f64) {
+        let p_in = match class {
+            1 => self.p_in_1,
+            0 => self.p_in_1 / self.r,
+            _ => panic!("binary classes only"),
+        };
+        let c = self.v / self.communities;
+        let within = (c - 1) as f64;
+        let across = (self.v - c) as f64;
+        let p_out = (self.expected_degree - within * p_in) / across;
+        assert!(
+            (0.0..=1.0).contains(&p_out),
+            "infeasible SBM: p_in={p_in} gives p_out={p_out}"
+        );
+        (p_in, p_out)
+    }
+
+    /// Sample one graph of the given class.
+    pub fn sample_graph(&self, class: u8, rng: &mut Rng) -> AnyGraph {
+        let (p_in, p_out) = self.edge_probs(class);
+        let c = self.v / self.communities;
+        let mut g = DenseGraph::new(self.v);
+        for a in 0..self.v {
+            for b in (a + 1)..self.v {
+                let p = if a / c == b / c { p_in } else { p_out };
+                if rng.bool(p) {
+                    g.add_edge(a, b);
+                }
+            }
+        }
+        AnyGraph::Dense(g)
+    }
+
+    /// Generate the full labelled dataset (balanced, interleaved labels).
+    pub fn generate(&self, rng: &mut Rng) -> Dataset {
+        assert_eq!(self.v % self.communities, 0, "communities must divide v");
+        let mut graphs = Vec::with_capacity(2 * self.per_class);
+        let mut labels = Vec::with_capacity(2 * self.per_class);
+        for i in 0..(2 * self.per_class) {
+            let class = (i % 2) as u8;
+            graphs.push(self.sample_graph(class, rng));
+            labels.push(class);
+        }
+        Dataset::new(format!("sbm_r{:.3}", self.r), graphs, labels)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn classes_share_expected_degree() {
+        let cfg = SbmConfig::default();
+        for class in [0u8, 1] {
+            let (p_in, p_out) = cfg.edge_probs(class);
+            let c = cfg.v / cfg.communities;
+            let deg = (c - 1) as f64 * p_in + (cfg.v - c) as f64 * p_out;
+            assert!((deg - cfg.expected_degree).abs() < 1e-9, "class {class}");
+        }
+    }
+
+    #[test]
+    fn r_controls_similarity() {
+        let mut cfg = SbmConfig::default();
+        cfg.r = 1.0;
+        let (pi0, po0) = cfg.edge_probs(0);
+        let (pi1, po1) = cfg.edge_probs(1);
+        assert!((pi0 - pi1).abs() < 1e-12 && (po0 - po1).abs() < 1e-12);
+        cfg.r = 2.0;
+        let (pi0, _) = cfg.edge_probs(0);
+        assert!((pi0 - 0.15).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empirical_degree_matches() {
+        let cfg = SbmConfig { per_class: 6, ..Default::default() };
+        let mut rng = Rng::new(1);
+        let ds = cfg.generate(&mut rng);
+        for class in [0u8, 1] {
+            let degs: Vec<f64> = ds
+                .graphs
+                .iter()
+                .zip(&ds.labels)
+                .filter(|(_, &l)| l == class)
+                .map(|(g, _)| g.mean_degree())
+                .collect();
+            let mean = degs.iter().sum::<f64>() / degs.len() as f64;
+            assert!((mean - 10.0).abs() < 1.2, "class {class}: {mean}");
+        }
+    }
+
+    #[test]
+    fn dataset_is_balanced_and_sized() {
+        let cfg = SbmConfig { per_class: 10, ..Default::default() };
+        let ds = cfg.generate(&mut Rng::new(2));
+        assert_eq!(ds.len(), 20);
+        assert_eq!(ds.labels.iter().filter(|&&l| l == 0).count(), 10);
+        assert!(ds.graphs.iter().all(|g| g.v() == 60));
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let cfg = SbmConfig { per_class: 3, ..Default::default() };
+        let a = cfg.generate(&mut Rng::new(7));
+        let b = cfg.generate(&mut Rng::new(7));
+        for (ga, gb) in a.graphs.iter().zip(&b.graphs) {
+            assert_eq!(ga.num_edges(), gb.num_edges());
+        }
+    }
+}

@@ -1,0 +1,584 @@
+//! Graph representations.
+//!
+//! Three types, each matched to its role in the pipeline:
+//!
+//! - [`Graphlet`]: a size-`k <= 8` undirected graph packed into a single
+//!   `u32` upper-triangle bitmask. This is the unit of work of GSA-phi:
+//!   subgraph samplers produce them, feature maps and the isomorphism
+//!   machinery consume them. Copy, hashable, 8 bytes.
+//! - [`DenseGraph`]: bitset adjacency rows; O(1) edge queries. Used for
+//!   the SBM graphs (v = 60) where uniform sampling needs fast
+//!   `has_edge` on arbitrary node pairs.
+//! - [`CsrGraph`]: compressed sparse rows; O(deg) neighbour iteration.
+//!   Used for the large sparse real-world-like graphs (D&D, Reddit)
+//!   where random-walk sampling needs fast neighbour access.
+//!
+//! [`AnyGraph`] unifies the two big-graph types behind one enum (cheaper
+//! and simpler than a trait object in the sampler hot loop).
+
+/// Maximum graphlet size supported by the `u32` upper-triangle encoding
+/// (C(8,2) = 28 bits) and by the isomorphism machinery.
+pub const MAX_K: usize = 8;
+
+/// Index of pair (i, j), i < j, in the packed upper triangle of a size-k
+/// adjacency matrix.
+#[inline]
+pub fn pair_index(i: usize, j: usize, k: usize) -> usize {
+    debug_assert!(i < j && j < k);
+    i * k - i * (i + 1) / 2 + (j - i - 1)
+}
+
+/// A small undirected graph on `k <= 8` nodes, adjacency packed as an
+/// upper-triangle bitmask. The canonical unit of GSA-phi.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug, PartialOrd, Ord)]
+pub struct Graphlet {
+    k: u8,
+    bits: u32,
+}
+
+impl Graphlet {
+    /// Empty graphlet on `k` nodes.
+    pub fn empty(k: usize) -> Self {
+        assert!(k >= 1 && k <= MAX_K, "graphlet size {k} out of range");
+        Graphlet { k: k as u8, bits: 0 }
+    }
+
+    /// Build from a raw upper-triangle bitmask.
+    pub fn from_bits(k: usize, bits: u32) -> Self {
+        assert!(k >= 1 && k <= MAX_K);
+        let n_pairs = k * (k - 1) / 2;
+        assert!(n_pairs == 32 || bits < (1u32 << n_pairs), "bits out of range");
+        Graphlet { k: k as u8, bits }
+    }
+
+    #[inline]
+    pub fn k(&self) -> usize {
+        self.k as usize
+    }
+
+    #[inline]
+    pub fn bits(&self) -> u32 {
+        self.bits
+    }
+
+    /// Number of distinct labelled graphs of size k (2^C(k,2)).
+    pub fn num_labelled(k: usize) -> u64 {
+        1u64 << (k * (k - 1) / 2)
+    }
+
+    #[inline]
+    pub fn set_edge(&mut self, i: usize, j: usize) {
+        let (a, b) = if i < j { (i, j) } else { (j, i) };
+        self.bits |= 1 << pair_index(a, b, self.k());
+    }
+
+    #[inline]
+    pub fn has_edge(&self, i: usize, j: usize) -> bool {
+        if i == j {
+            return false;
+        }
+        let (a, b) = if i < j { (i, j) } else { (j, i) };
+        self.bits >> pair_index(a, b, self.k()) & 1 == 1
+    }
+
+    pub fn num_edges(&self) -> u32 {
+        self.bits.count_ones()
+    }
+
+    pub fn degree(&self, i: usize) -> usize {
+        (0..self.k()).filter(|&j| self.has_edge(i, j)).count()
+    }
+
+    /// Degree sequence, ascending.
+    pub fn degree_sequence(&self) -> Vec<usize> {
+        let mut d: Vec<usize> = (0..self.k()).map(|i| self.degree(i)).collect();
+        d.sort_unstable();
+        d
+    }
+
+    /// Apply a node permutation: node i of the result is node `perm[i]` of
+    /// `self`. Isomorphism-preserving by construction.
+    pub fn permute(&self, perm: &[usize]) -> Graphlet {
+        let k = self.k();
+        debug_assert_eq!(perm.len(), k);
+        let mut out = Graphlet::empty(k);
+        for i in 0..k {
+            for j in (i + 1)..k {
+                if self.has_edge(perm[i], perm[j]) {
+                    out.set_edge(i, j);
+                }
+            }
+        }
+        out
+    }
+
+    /// Flatten to a row-major k*k f32 adjacency (the random-feature input;
+    /// symmetric, zero diagonal).
+    pub fn write_flat_adj(&self, out: &mut [f32]) {
+        let k = self.k();
+        debug_assert_eq!(out.len(), k * k);
+        out.fill(0.0);
+        for i in 0..k {
+            for j in (i + 1)..k {
+                if self.has_edge(i, j) {
+                    out[i * k + j] = 1.0;
+                    out[j * k + i] = 1.0;
+                }
+            }
+        }
+    }
+
+    pub fn flat_adj(&self) -> Vec<f32> {
+        let mut out = vec![0.0; self.k() * self.k()];
+        self.write_flat_adj(&mut out);
+        out
+    }
+
+    /// Dense symmetric adjacency as f64 (input to the Jacobi eigensolver).
+    pub fn adj_f64(&self) -> Vec<f64> {
+        let k = self.k();
+        let mut out = vec![0.0; k * k];
+        for i in 0..k {
+            for j in (i + 1)..k {
+                if self.has_edge(i, j) {
+                    out[i * k + j] = 1.0;
+                    out[j * k + i] = 1.0;
+                }
+            }
+        }
+        out
+    }
+
+    /// Is the graphlet connected? (BFS over the bitmask.)
+    pub fn is_connected(&self) -> bool {
+        let k = self.k();
+        let mut seen = 1u8; // node 0
+        let mut frontier = vec![0usize];
+        while let Some(u) = frontier.pop() {
+            for v in 0..k {
+                if seen >> v & 1 == 0 && self.has_edge(u, v) {
+                    seen |= 1 << v;
+                    frontier.push(v);
+                }
+            }
+        }
+        seen.count_ones() as usize == k
+    }
+}
+
+/// Dense bitset-adjacency graph; rows of `u64` words.
+#[derive(Clone, Debug)]
+pub struct DenseGraph {
+    v: usize,
+    words_per_row: usize,
+    rows: Vec<u64>,
+    degrees: Vec<u32>,
+}
+
+impl DenseGraph {
+    pub fn new(v: usize) -> Self {
+        let words_per_row = v.div_ceil(64);
+        DenseGraph {
+            v,
+            words_per_row,
+            rows: vec![0; v * words_per_row],
+            degrees: vec![0; v],
+        }
+    }
+
+    #[inline]
+    pub fn v(&self) -> usize {
+        self.v
+    }
+
+    pub fn add_edge(&mut self, a: usize, b: usize) {
+        debug_assert!(a != b && a < self.v && b < self.v);
+        if self.has_edge(a, b) {
+            return;
+        }
+        self.rows[a * self.words_per_row + b / 64] |= 1 << (b % 64);
+        self.rows[b * self.words_per_row + a / 64] |= 1 << (a % 64);
+        self.degrees[a] += 1;
+        self.degrees[b] += 1;
+    }
+
+    #[inline]
+    pub fn has_edge(&self, a: usize, b: usize) -> bool {
+        self.rows[a * self.words_per_row + b / 64] >> (b % 64) & 1 == 1
+    }
+
+    #[inline]
+    pub fn degree(&self, u: usize) -> usize {
+        self.degrees[u] as usize
+    }
+
+    pub fn num_edges(&self) -> usize {
+        self.degrees.iter().map(|&d| d as usize).sum::<usize>() / 2
+    }
+
+    /// Neighbours of `u` as a vector (bit-scan over the row).
+    pub fn neighbors(&self, u: usize) -> Vec<usize> {
+        let mut out = Vec::with_capacity(self.degree(u));
+        let row = &self.rows[u * self.words_per_row..(u + 1) * self.words_per_row];
+        for (wi, &w) in row.iter().enumerate() {
+            let mut bits = w;
+            while bits != 0 {
+                let b = bits.trailing_zeros() as usize;
+                out.push(wi * 64 + b);
+                bits &= bits - 1;
+            }
+        }
+        out
+    }
+
+    /// Induced subgraph on `nodes` as a [`Graphlet`] (order preserved:
+    /// graphlet node i = `nodes[i]`).
+    pub fn induced_graphlet(&self, nodes: &[usize]) -> Graphlet {
+        let k = nodes.len();
+        let mut g = Graphlet::empty(k);
+        for i in 0..k {
+            for j in (i + 1)..k {
+                if self.has_edge(nodes[i], nodes[j]) {
+                    g.set_edge(i, j);
+                }
+            }
+        }
+        g
+    }
+}
+
+/// Compressed-sparse-row graph for large sparse graphs.
+#[derive(Clone, Debug)]
+pub struct CsrGraph {
+    offsets: Vec<u32>,
+    neighbors: Vec<u32>,
+}
+
+impl CsrGraph {
+    /// Build from an undirected edge list on `v` nodes; duplicate edges and
+    /// self-loops are dropped.
+    pub fn from_edges(v: usize, edges: &[(usize, usize)]) -> Self {
+        let mut adj: Vec<Vec<u32>> = vec![Vec::new(); v];
+        for &(a, b) in edges {
+            if a == b || a >= v || b >= v {
+                continue;
+            }
+            adj[a].push(b as u32);
+            adj[b].push(a as u32);
+        }
+        let mut offsets = Vec::with_capacity(v + 1);
+        let mut neighbors = Vec::new();
+        offsets.push(0u32);
+        for list in adj.iter_mut() {
+            list.sort_unstable();
+            list.dedup();
+            neighbors.extend_from_slice(list);
+            offsets.push(neighbors.len() as u32);
+        }
+        CsrGraph { offsets, neighbors }
+    }
+
+    #[inline]
+    pub fn v(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    pub fn num_edges(&self) -> usize {
+        self.neighbors.len() / 2
+    }
+
+    #[inline]
+    pub fn degree(&self, u: usize) -> usize {
+        (self.offsets[u + 1] - self.offsets[u]) as usize
+    }
+
+    #[inline]
+    pub fn neighbors(&self, u: usize) -> &[u32] {
+        &self.neighbors[self.offsets[u] as usize..self.offsets[u + 1] as usize]
+    }
+
+    /// Binary search over the sorted neighbour list.
+    #[inline]
+    pub fn has_edge(&self, a: usize, b: usize) -> bool {
+        self.neighbors(a).binary_search(&(b as u32)).is_ok()
+    }
+
+    pub fn induced_graphlet(&self, nodes: &[usize]) -> Graphlet {
+        let k = nodes.len();
+        let mut g = Graphlet::empty(k);
+        for i in 0..k {
+            for j in (i + 1)..k {
+                if self.has_edge(nodes[i], nodes[j]) {
+                    g.set_edge(i, j);
+                }
+            }
+        }
+        g
+    }
+}
+
+/// Unified big-graph handle used by samplers and the pipeline.
+#[derive(Clone, Debug)]
+pub enum AnyGraph {
+    Dense(DenseGraph),
+    Csr(CsrGraph),
+}
+
+impl AnyGraph {
+    pub fn v(&self) -> usize {
+        match self {
+            AnyGraph::Dense(g) => g.v(),
+            AnyGraph::Csr(g) => g.v(),
+        }
+    }
+
+    pub fn num_edges(&self) -> usize {
+        match self {
+            AnyGraph::Dense(g) => g.num_edges(),
+            AnyGraph::Csr(g) => g.num_edges(),
+        }
+    }
+
+    pub fn degree(&self, u: usize) -> usize {
+        match self {
+            AnyGraph::Dense(g) => g.degree(u),
+            AnyGraph::Csr(g) => g.degree(u),
+        }
+    }
+
+    pub fn has_edge(&self, a: usize, b: usize) -> bool {
+        match self {
+            AnyGraph::Dense(g) => g.has_edge(a, b),
+            AnyGraph::Csr(g) => g.has_edge(a, b),
+        }
+    }
+
+    /// Neighbour list; for dense graphs this allocates (bit-scan), for CSR
+    /// it borrows. Callers in hot loops should use `nth_neighbor` instead.
+    pub fn neighbors(&self, u: usize) -> Vec<usize> {
+        match self {
+            AnyGraph::Dense(g) => g.neighbors(u),
+            AnyGraph::Csr(g) => g.neighbors(u).iter().map(|&x| x as usize).collect(),
+        }
+    }
+
+    /// The `idx`-th neighbour of `u` (0 <= idx < degree(u)) without
+    /// allocating; the random-walk sampler's inner step.
+    pub fn nth_neighbor(&self, u: usize, idx: usize) -> usize {
+        match self {
+            AnyGraph::Csr(g) => g.neighbors(u)[idx] as usize,
+            AnyGraph::Dense(g) => {
+                // Bit-scan to the idx-th set bit of row u.
+                let row = &g.rows[u * g.words_per_row..(u + 1) * g.words_per_row];
+                let mut remaining = idx;
+                for (wi, &w) in row.iter().enumerate() {
+                    let ones = w.count_ones() as usize;
+                    if remaining < ones {
+                        let mut bits = w;
+                        for _ in 0..remaining {
+                            bits &= bits - 1;
+                        }
+                        return wi * 64 + bits.trailing_zeros() as usize;
+                    }
+                    remaining -= ones;
+                }
+                panic!("nth_neighbor: idx {idx} >= degree({u})");
+            }
+        }
+    }
+
+    pub fn induced_graphlet(&self, nodes: &[usize]) -> Graphlet {
+        match self {
+            AnyGraph::Dense(g) => g.induced_graphlet(nodes),
+            AnyGraph::Csr(g) => g.induced_graphlet(nodes),
+        }
+    }
+
+    /// Mean degree (used by dataset reports).
+    pub fn mean_degree(&self) -> f64 {
+        2.0 * self.num_edges() as f64 / self.v() as f64
+    }
+
+    /// Dense row-major f32 adjacency (GIN baseline input); v must be small.
+    pub fn flat_adj(&self, pad_to: usize) -> Vec<f32> {
+        let v = self.v();
+        assert!(v <= pad_to, "graph ({v}) larger than pad size {pad_to}");
+        let mut out = vec![0.0f32; pad_to * pad_to];
+        for u in 0..v {
+            for w in self.neighbors(u) {
+                out[u * pad_to + w] = 1.0;
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{check, Rng};
+
+    fn random_graphlet(rng: &mut Rng, k: usize) -> Graphlet {
+        let n_pairs = k * (k - 1) / 2;
+        Graphlet::from_bits(k, (rng.next_u64() & ((1u64 << n_pairs) - 1)) as u32)
+    }
+
+    #[test]
+    fn pair_index_is_bijective() {
+        for k in 2..=MAX_K {
+            let mut seen = std::collections::HashSet::new();
+            for i in 0..k {
+                for j in (i + 1)..k {
+                    let idx = pair_index(i, j, k);
+                    assert!(idx < k * (k - 1) / 2);
+                    assert!(seen.insert(idx));
+                }
+            }
+            assert_eq!(seen.len(), k * (k - 1) / 2);
+        }
+    }
+
+    #[test]
+    fn graphlet_edges_roundtrip() {
+        let mut g = Graphlet::empty(5);
+        g.set_edge(0, 1);
+        g.set_edge(3, 2);
+        g.set_edge(4, 0);
+        assert!(g.has_edge(1, 0) && g.has_edge(2, 3) && g.has_edge(0, 4));
+        assert!(!g.has_edge(1, 2) && !g.has_edge(0, 0));
+        assert_eq!(g.num_edges(), 3);
+        assert_eq!(g.degree(0), 2);
+    }
+
+    #[test]
+    fn graphlet_permute_preserves_structure() {
+        check::check("permute-structure", 0xA1, 200, |rng| {
+            let k = 2 + rng.usize(MAX_K - 1);
+            let g = random_graphlet(rng, k);
+            let mut perm: Vec<usize> = (0..k).collect();
+            rng.shuffle(&mut perm);
+            let h = g.permute(&perm);
+            assert_eq!(g.num_edges(), h.num_edges());
+            assert_eq!(g.degree_sequence(), h.degree_sequence());
+            for i in 0..k {
+                for j in 0..k {
+                    assert_eq!(h.has_edge(i, j), g.has_edge(perm[i], perm[j]));
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn flat_adj_is_symmetric_zero_diag() {
+        check::check("flat-adj", 0xA2, 100, |rng| {
+            let k = 2 + rng.usize(MAX_K - 1);
+            let g = random_graphlet(rng, k);
+            let a = g.flat_adj();
+            for i in 0..k {
+                assert_eq!(a[i * k + i], 0.0);
+                for j in 0..k {
+                    assert_eq!(a[i * k + j], a[j * k + i]);
+                    assert_eq!(a[i * k + j] == 1.0, g.has_edge(i, j));
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn connectivity() {
+        let mut path = Graphlet::empty(4);
+        path.set_edge(0, 1);
+        path.set_edge(1, 2);
+        path.set_edge(2, 3);
+        assert!(path.is_connected());
+        let mut split = Graphlet::empty(4);
+        split.set_edge(0, 1);
+        split.set_edge(2, 3);
+        assert!(!split.is_connected());
+        assert!(Graphlet::empty(1).is_connected());
+    }
+
+    #[test]
+    fn dense_graph_basics() {
+        let mut g = DenseGraph::new(70); // spans two words per row
+        g.add_edge(0, 69);
+        g.add_edge(0, 69); // duplicate ignored
+        g.add_edge(5, 64);
+        assert!(g.has_edge(69, 0));
+        assert!(!g.has_edge(1, 2));
+        assert_eq!(g.degree(0), 1);
+        assert_eq!(g.num_edges(), 2);
+        assert_eq!(g.neighbors(0), vec![69]);
+        assert_eq!(g.neighbors(5), vec![64]);
+    }
+
+    #[test]
+    fn csr_graph_basics() {
+        let g = CsrGraph::from_edges(5, &[(0, 1), (1, 2), (0, 1), (3, 3), (2, 0)]);
+        assert_eq!(g.v(), 5);
+        assert_eq!(g.num_edges(), 3); // dup + self-loop dropped
+        assert_eq!(g.neighbors(0), &[1, 2]);
+        assert!(g.has_edge(2, 1));
+        assert!(!g.has_edge(3, 4));
+        assert_eq!(g.degree(4), 0);
+    }
+
+    #[test]
+    fn dense_and_csr_agree_on_induced_subgraphs() {
+        check::check("dense-csr-agree", 0xA3, 50, |rng| {
+            let v = 20 + rng.usize(30);
+            let mut edges = Vec::new();
+            let mut dense = DenseGraph::new(v);
+            for a in 0..v {
+                for b in (a + 1)..v {
+                    if rng.bool(0.15) {
+                        edges.push((a, b));
+                        dense.add_edge(a, b);
+                    }
+                }
+            }
+            let csr = CsrGraph::from_edges(v, &edges);
+            assert_eq!(dense.num_edges(), csr.num_edges());
+            let mut nodes = Vec::new();
+            rng.sample_distinct(v, 5, &mut nodes);
+            assert_eq!(dense.induced_graphlet(&nodes), csr.induced_graphlet(&nodes));
+        });
+    }
+
+    #[test]
+    fn nth_neighbor_matches_neighbors() {
+        check::check("nth-neighbor", 0xA4, 50, |rng| {
+            let v = 10 + rng.usize(80);
+            let mut edges = Vec::new();
+            for a in 0..v {
+                for b in (a + 1)..v {
+                    if rng.bool(0.1) {
+                        edges.push((a, b));
+                    }
+                }
+            }
+            let mut dense = DenseGraph::new(v);
+            for &(a, b) in &edges {
+                dense.add_edge(a, b);
+            }
+            for g in [AnyGraph::Dense(dense), AnyGraph::Csr(CsrGraph::from_edges(v, &edges))] {
+                let u = rng.usize(v);
+                let ns = g.neighbors(u);
+                for (idx, &n) in ns.iter().enumerate() {
+                    assert_eq!(g.nth_neighbor(u, idx), n);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn flat_adj_pads() {
+        let g = AnyGraph::Csr(CsrGraph::from_edges(3, &[(0, 1), (1, 2)]));
+        let a = g.flat_adj(5);
+        assert_eq!(a.len(), 25);
+        assert_eq!(a[0 * 5 + 1], 1.0);
+        assert_eq!(a[1 * 5 + 2], 1.0);
+        assert_eq!(a[0 * 5 + 2], 0.0);
+        assert_eq!(a.iter().filter(|&&x| x == 1.0).count(), 4);
+    }
+}

@@ -1,0 +1,429 @@
+//! Graph isomorphism for graphlets: canonical forms, the matching map
+//! `phi_match`, and graphlet enumeration.
+//!
+//! The graphlet kernel (paper §2.2) needs an isomorphism test per sampled
+//! subgraph — the cost the paper is attacking. We implement it properly so
+//! the baseline `GSA-phi_match` is real:
+//!
+//! 1. **Canonical form**: the minimum upper-triangle bitmask over a set of
+//!    node permutations that is (a) isomorphism-invariant and (b) contains
+//!    at least one permutation per isomorphism class. We use 1-WL colour
+//!    refinement to partition nodes into invariant cells, order cells by
+//!    their invariant colour keys, and take the minimum over all
+//!    permutations that respect the cell order. Two graphlets are
+//!    isomorphic iff their canonical forms are equal.
+//! 2. **GraphletRegistry**: assigns dense indices to canonical forms on
+//!    first sight. `phi_match` histograms are built over the registry, so
+//!    the full `N_k` enumeration (exponential in k) is never materialized
+//!    unless asked for (see [`enumerate_canonical`], used in tests to
+//!    verify N_k = 1, 2, 4, 11, 34, 156, ...).
+
+use std::collections::HashMap;
+
+use crate::graph::Graphlet;
+
+/// Number of non-isomorphic graphs on k nodes (OEIS A000088), used by
+/// tests and the complexity tables.
+pub const N_K: [u64; 9] = [1, 1, 2, 4, 11, 34, 156, 1044, 12346];
+
+/// 1-WL colour refinement. Returns a per-node colour id in [0, n_colors),
+/// where colours are *canonical*: they depend only on the isomorphism
+/// class, not on node numbering (colour ids are assigned by sorted
+/// signature, and signatures are built from sorted multisets).
+fn wl_colors(g: &Graphlet) -> Vec<u32> {
+    let k = g.k();
+    // Initial colour: degree.
+    let mut colors: Vec<u32> = (0..k).map(|i| g.degree(i) as u32).collect();
+    // Normalize to dense ids ordered by value.
+    normalize(&mut colors);
+    for _round in 0..k {
+        // Signature of node i: (own colour, sorted neighbour colours).
+        let mut sigs: Vec<(u32, Vec<u32>)> = (0..k)
+            .map(|i| {
+                let mut ns: Vec<u32> = (0..k)
+                    .filter(|&j| g.has_edge(i, j))
+                    .map(|j| colors[j])
+                    .collect();
+                ns.sort_unstable();
+                (colors[i], ns)
+            })
+            .collect();
+        // Canonical dense ids: sort unique signatures, map each node.
+        let mut uniq: Vec<(u32, Vec<u32>)> = sigs.clone();
+        uniq.sort();
+        uniq.dedup();
+        let new: Vec<u32> = sigs
+            .drain(..)
+            .map(|s| uniq.binary_search(&s).unwrap() as u32)
+            .collect();
+        if new == colors {
+            break;
+        }
+        colors = new;
+    }
+    colors
+}
+
+fn normalize(colors: &mut [u32]) {
+    let mut uniq: Vec<u32> = colors.to_vec();
+    uniq.sort_unstable();
+    uniq.dedup();
+    for c in colors.iter_mut() {
+        *c = uniq.binary_search(c).unwrap() as u32;
+    }
+}
+
+/// Canonical form: minimum bitmask over all permutations that order nodes
+/// by nondecreasing WL colour (cells in colour order; all orders within a
+/// cell). Isomorphic graphlets map to the same form; non-isomorphic ones
+/// cannot collide because the form *is* an adjacency encoding.
+pub fn canonical_form(g: &Graphlet) -> Graphlet {
+    let k = g.k();
+    if k == 1 {
+        return *g;
+    }
+    let colors = wl_colors(g);
+    // Nodes grouped by colour (colour ids are canonical, so cell order is).
+    let mut order: Vec<usize> = (0..k).collect();
+    order.sort_by_key(|&i| (colors[i], i));
+    // Cell boundaries.
+    let mut cells: Vec<(usize, usize)> = Vec::new();
+    let mut start = 0;
+    for i in 1..=k {
+        if i == k || colors[order[i]] != colors[order[start]] {
+            cells.push((start, i));
+            start = i;
+        }
+    }
+    // Enumerate permutations within cells (product of per-cell perms),
+    // tracking the minimum permuted bitmask.
+    let mut best: Option<Graphlet> = None;
+    let mut perm = order.clone();
+    permute_cells(&mut perm, &cells, 0, g, &mut best);
+    best.expect("at least one permutation")
+}
+
+fn permute_cells(
+    perm: &mut Vec<usize>,
+    cells: &[(usize, usize)],
+    ci: usize,
+    g: &Graphlet,
+    best: &mut Option<Graphlet>,
+) {
+    if ci == cells.len() {
+        let cand = g.permute(perm);
+        if best.map(|b| cand.bits() < b.bits()).unwrap_or(true) {
+            *best = Some(cand);
+        }
+        return;
+    }
+    let (lo, hi) = cells[ci];
+    heap_permute(perm, lo, hi - lo, cells, ci, g, best);
+}
+
+/// Heap's algorithm over perm[lo..lo+n], recursing into the next cell for
+/// each arrangement.
+fn heap_permute(
+    perm: &mut Vec<usize>,
+    lo: usize,
+    n: usize,
+    cells: &[(usize, usize)],
+    ci: usize,
+    g: &Graphlet,
+    best: &mut Option<Graphlet>,
+) {
+    if n <= 1 {
+        permute_cells(perm, cells, ci + 1, g, best);
+        return;
+    }
+    for i in 0..n {
+        heap_permute(perm, lo, n - 1, cells, ci, g, best);
+        if n % 2 == 0 {
+            perm.swap(lo + i, lo + n - 1);
+        } else {
+            perm.swap(lo, lo + n - 1);
+        }
+    }
+}
+
+/// Isomorphism test via canonical forms.
+pub fn are_isomorphic(a: &Graphlet, b: &Graphlet) -> bool {
+    a.k() == b.k() && canonical_form(a) == canonical_form(b)
+}
+
+/// Assigns dense indices to canonical forms on first sight. This is how
+/// `phi_match` histograms are dimensioned without enumerating all N_k
+/// graphlets: unseen graphlets contribute zeros to every histogram, so
+/// dropping them changes no pairwise distance.
+#[derive(Default, Debug, Clone)]
+pub struct GraphletRegistry {
+    index: HashMap<Graphlet, u32>,
+}
+
+impl GraphletRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Index of the isomorphism class of `g`, canonicalizing first.
+    pub fn classify(&mut self, g: &Graphlet) -> u32 {
+        let canon = canonical_form(g);
+        let next = self.index.len() as u32;
+        *self.index.entry(canon).or_insert(next)
+    }
+
+    /// Index if the class has been seen (no insertion).
+    pub fn lookup(&self, g: &Graphlet) -> Option<u32> {
+        self.index.get(&canonical_form(g)).copied()
+    }
+
+    pub fn len(&self) -> usize {
+        self.index.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.index.is_empty()
+    }
+}
+
+/// phi_match over a registry: one-hot at the class index (eq. 1/2's
+/// matching function, with lazily-discovered dimensions).
+pub fn phi_match(reg: &mut GraphletRegistry, g: &Graphlet) -> u32 {
+    reg.classify(g)
+}
+
+/// Exhaustively enumerate all canonical forms on k nodes (2^C(k,2) work;
+/// call only for k <= 6 — tests verify against OEIS A000088).
+pub fn enumerate_canonical(k: usize) -> Vec<Graphlet> {
+    let n_pairs = k * (k - 1) / 2;
+    let mut seen = std::collections::HashSet::new();
+    for bits in 0..(1u64 << n_pairs) {
+        let g = Graphlet::from_bits(k, bits as u32);
+        seen.insert(canonical_form(&g));
+    }
+    let mut out: Vec<Graphlet> = seen.into_iter().collect();
+    out.sort();
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{check, Rng};
+
+    fn random_graphlet(rng: &mut Rng, k: usize) -> Graphlet {
+        let n_pairs = k * (k - 1) / 2;
+        let mask = if n_pairs == 64 { u64::MAX } else { (1u64 << n_pairs) - 1 };
+        Graphlet::from_bits(k, (rng.next_u64() & mask) as u32)
+    }
+
+    #[test]
+    fn canonical_is_isomorphic_invariant() {
+        check::check("canon-invariant", 0xB1, 300, |rng| {
+            let k = 2 + rng.usize(7); // 2..=8
+            let g = random_graphlet(rng, k);
+            let mut perm: Vec<usize> = (0..k).collect();
+            rng.shuffle(&mut perm);
+            let h = g.permute(&perm);
+            assert_eq!(canonical_form(&g), canonical_form(&h), "k={k} g={g:?}");
+        });
+    }
+
+    #[test]
+    fn canonical_is_idempotent_and_isomorphic_to_input() {
+        check::check("canon-idempotent", 0xB2, 200, |rng| {
+            let k = 2 + rng.usize(7);
+            let g = random_graphlet(rng, k);
+            let c = canonical_form(&g);
+            assert_eq!(canonical_form(&c), c);
+            assert_eq!(c.num_edges(), g.num_edges());
+            assert_eq!(c.degree_sequence(), g.degree_sequence());
+        });
+    }
+
+    #[test]
+    fn distinguishes_path_from_star() {
+        // P4 and K1,3 have different degree sequences.
+        let mut p4 = Graphlet::empty(4);
+        p4.set_edge(0, 1);
+        p4.set_edge(1, 2);
+        p4.set_edge(2, 3);
+        let mut star = Graphlet::empty(4);
+        star.set_edge(0, 1);
+        star.set_edge(0, 2);
+        star.set_edge(0, 3);
+        assert!(!are_isomorphic(&p4, &star));
+        // But a relabelled path IS isomorphic.
+        let relabeled = p4.permute(&[2, 0, 3, 1]);
+        assert!(are_isomorphic(&p4, &relabeled));
+    }
+
+    #[test]
+    fn distinguishes_regular_cospectral_like_pairs() {
+        // C6 (6-cycle) vs 2x K3 (two triangles): both 2-regular with 6
+        // edges; WL alone can't split them but the canonical bitmask can.
+        let mut c6 = Graphlet::empty(6);
+        for i in 0..6 {
+            c6.set_edge(i, (i + 1) % 6);
+        }
+        let mut kk = Graphlet::empty(6);
+        kk.set_edge(0, 1);
+        kk.set_edge(1, 2);
+        kk.set_edge(0, 2);
+        kk.set_edge(3, 4);
+        kk.set_edge(4, 5);
+        kk.set_edge(3, 5);
+        assert!(!are_isomorphic(&c6, &kk));
+    }
+
+    #[test]
+    fn enumeration_matches_oeis() {
+        for k in 1..=5 {
+            assert_eq!(enumerate_canonical(k).len() as u64, N_K[k], "k={k}");
+        }
+    }
+
+    #[test]
+    #[cfg_attr(debug_assertions, ignore = "k=6 enumeration is release-only")]
+    fn enumeration_matches_oeis_k6() {
+        assert_eq!(enumerate_canonical(6).len() as u64, N_K[6]);
+    }
+
+    #[test]
+    fn registry_assigns_stable_dense_indices() {
+        let mut reg = GraphletRegistry::new();
+        let mut tri = Graphlet::empty(3);
+        tri.set_edge(0, 1);
+        tri.set_edge(1, 2);
+        tri.set_edge(0, 2);
+        let mut path = Graphlet::empty(3);
+        path.set_edge(0, 1);
+        path.set_edge(1, 2);
+        let i_tri = reg.classify(&tri);
+        let i_path = reg.classify(&path);
+        assert_ne!(i_tri, i_path);
+        // Isomorphic copy maps to the same index.
+        let path2 = path.permute(&[2, 1, 0]);
+        assert_eq!(reg.classify(&path2), i_path);
+        assert_eq!(reg.len(), 2);
+        assert_eq!(reg.lookup(&tri), Some(i_tri));
+    }
+
+    #[test]
+    fn registry_covers_all_k4_classes() {
+        let mut reg = GraphletRegistry::new();
+        for bits in 0..64u32 {
+            reg.classify(&Graphlet::from_bits(4, bits));
+        }
+        assert_eq!(reg.len() as u64, N_K[4]);
+    }
+
+    #[test]
+    fn non_isomorphic_never_collide_exhaustive_k4() {
+        // Canonical forms of all 64 labelled 4-graphs partition them into
+        // exactly the 11 classes, and forms within a class are identical.
+        let mut groups: std::collections::HashMap<Graphlet, Vec<u32>> = Default::default();
+        for bits in 0..64u32 {
+            let g = Graphlet::from_bits(4, bits);
+            groups.entry(canonical_form(&g)).or_default().push(bits);
+        }
+        assert_eq!(groups.len(), 11);
+        let total: usize = groups.values().map(|v| v.len()).sum();
+        assert_eq!(total, 64);
+    }
+
+    /// The strongest canonicalization guarantee: the WL-pruned canonical
+    /// form must partition labelled graphs into EXACTLY the same classes
+    /// as the unpruned min-over-all-k!-permutations form. Brute force is
+    /// feasible for k <= 5 (1024 graphs x 120 perms).
+    #[test]
+    fn canonical_matches_bruteforce_min_over_all_perms() {
+        fn brute_canonical(g: &Graphlet) -> Graphlet {
+            let k = g.k();
+            let mut perm: Vec<usize> = (0..k).collect();
+            let mut best = g.permute(&perm);
+            // Heap's algorithm over all k! permutations.
+            let mut c = vec![0usize; k];
+            let mut i = 1;
+            while i < k {
+                if c[i] < i {
+                    if i % 2 == 0 {
+                        perm.swap(0, i);
+                    } else {
+                        perm.swap(c[i], i);
+                    }
+                    let cand = g.permute(&perm);
+                    if cand.bits() < best.bits() {
+                        best = cand;
+                    }
+                    c[i] += 1;
+                    i = 1;
+                } else {
+                    c[i] = 0;
+                    i += 1;
+                }
+            }
+            best
+        }
+        for k in 2..=4usize {
+            let n_pairs = k * (k - 1) / 2;
+            for bits in 0..(1u32 << n_pairs) {
+                let g = Graphlet::from_bits(k, bits);
+                // Not necessarily the same representative, but the same
+                // partition: two graphs share a WL-canonical form iff they
+                // share a brute-force canonical form.
+                let brute = brute_canonical(&g);
+                let wl = canonical_form(&g);
+                assert_eq!(
+                    canonical_form(&brute),
+                    wl,
+                    "partition mismatch at k={k} bits={bits:#b}"
+                );
+            }
+        }
+        // Spot-check k = 5 on random graphs (full space is 1024 graphs
+        // but permute is the hot cost; sample instead).
+        check::check("canon-vs-brute-k5", 0xB7, 100, |rng| {
+            let g = random_graphlet(rng, 5);
+            let mut perm: Vec<usize> = (0..5).collect();
+            rng.shuffle(&mut perm);
+            // canonical(g) must be invariant AND isomorphic to g via
+            // SOME permutation found by brute force.
+            let c = canonical_form(&g);
+            assert_eq!(c, canonical_form(&g.permute(&perm)));
+            assert!(are_isomorphic(&g, &c));
+        });
+    }
+
+    /// Canonical forms of all k=5 labelled graphs produce exactly N_5=34
+    /// classes with class sizes summing to 2^10 (orbit-stabilizer check).
+    #[test]
+    fn k5_partition_complete() {
+        let mut classes: std::collections::HashMap<Graphlet, u32> = Default::default();
+        for bits in 0..(1u32 << 10) {
+            *classes.entry(canonical_form(&Graphlet::from_bits(5, bits))).or_default() += 1;
+        }
+        assert_eq!(classes.len() as u64, N_K[5]);
+        assert_eq!(classes.values().sum::<u32>(), 1 << 10);
+        // Each class size must divide k! = 120 (it is 120 / |Aut|).
+        for (g, &size) in &classes {
+            assert_eq!(120 % size, 0, "class of {g:?} has size {size}");
+        }
+    }
+
+    #[test]
+    fn wl_colors_are_invariant() {
+        check::check("wl-invariant", 0xB3, 200, |rng| {
+            let k = 2 + rng.usize(7);
+            let g = random_graphlet(rng, k);
+            let mut perm: Vec<usize> = (0..k).collect();
+            rng.shuffle(&mut perm);
+            let h = g.permute(&perm);
+            let mut cg = wl_colors(&g);
+            let mut ch = wl_colors(&h);
+            cg.sort_unstable();
+            ch.sort_unstable();
+            assert_eq!(cg, ch);
+        });
+    }
+}

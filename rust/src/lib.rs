@@ -1,0 +1,37 @@
+//! # graphlet-rf — Fast Graph Kernel with Optical Random Features
+//!
+//! A three-layer reproduction of Ghanem, Keriven & Tremblay (2020):
+//! graph classification by **G**raphlet **S**ampling and **A**veraging
+//! with random feature maps (GSA-phi), including a simulated optical
+//! processing unit (OPU) feature map executed through AOT-compiled XLA
+//! artifacts.
+//!
+//! Layering (DESIGN.md §3):
+//! - **L3 (this crate)**: datasets, samplers, the exact graphlet-kernel
+//!   baseline, the batching pipeline, classifier, benches and the CLI.
+//! - **L2/L1 (python, build-time only)**: jax feature models and Pallas
+//!   kernels lowered to `artifacts/*.hlo.txt` by `make artifacts`.
+//! - **runtime**: loads those artifacts over PJRT (`xla` crate) and
+//!   executes them from the request path — python is never loaded at
+//!   runtime.
+//!
+//! Quick tour: generate a dataset ([`gen`]), sample graphlets
+//! ([`sample`]), embed them with a feature map ([`features`] on CPU or
+//! [`runtime`] + [`coordinator`] for the batched PJRT pipeline), train
+//! the linear tail ([`classify`]), or reproduce a paper figure
+//! ([`experiments`]).
+
+pub mod classify;
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod features;
+pub mod gen;
+pub mod gnn;
+pub mod graph;
+pub mod iso;
+pub mod kernelgk;
+pub mod mmd;
+pub mod runtime;
+pub mod sample;
+pub mod util;

@@ -1,0 +1,182 @@
+//! graphlet-rf CLI: the L3 coordinator entrypoint.
+//!
+//! Subcommands map one-to-one onto the paper's experiments (DESIGN.md §5):
+//!
+//! ```text
+//! graphlet-rf quickstart                end-to-end smoke run (see examples/)
+//! graphlet-rf fig1-left  [--scale full] Fig 1 left  (uniform sampling sweeps)
+//! graphlet-rf fig1-right [--scale full] Fig 1 right (RW vs match vs GIN)
+//! graphlet-rf fig2-left  [--scale full] Fig 2 left  (feature-map comparison)
+//! graphlet-rf fig2-right                Fig 2 right + Table 1 (timing vs k)
+//! graphlet-rf fig3 --dataset dd|reddit  Fig 3 (real-data protocol)
+//! graphlet-rf thm1                      Theorem 1 concentration check
+//! graphlet-rf gnn                       GIN baseline training run
+//! graphlet-rf info                      platform + artifact inventory
+//! ```
+//!
+//! Common flags: `--seed N`, `--engine pjrt|cpu|cpu-inline`,
+//! `--artifacts DIR`, `--out DIR`, `--scale quick|full`.
+
+use anyhow::Result;
+use graphlet_rf::coordinator::EngineMode;
+use graphlet_rf::experiments::{figures, thm1, timing, ExpContext, Scale};
+use graphlet_rf::gen::SbmConfig;
+use graphlet_rf::gnn::{GinConfig, GinModel};
+use graphlet_rf::runtime::{artifacts_dir, Engine};
+use graphlet_rf::util::{Args, Rng};
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let cmd = args.positional().first().map(|s| s.as_str()).unwrap_or("help");
+    let seed: u64 = args.parse_or("seed", 0u64);
+    let scale = Scale::parse(args.str_or("scale", "quick"));
+
+    // Engine setup: PJRT when artifacts exist (or --engine pjrt forces it).
+    let dir = args
+        .get("artifacts")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(artifacts_dir);
+    let engine_flag = args.get("engine").map(EngineMode::parse);
+    let engine = match engine_flag {
+        Some(EngineMode::Cpu) | Some(EngineMode::CpuInline) => None,
+        _ => match Engine::new(&dir) {
+            Ok(e) => {
+                eprintln!("PJRT engine up: platform={}, artifacts={}", e.platform(), dir.display());
+                Some(e)
+            }
+            Err(err) => {
+                if engine_flag == Some(EngineMode::Pjrt) {
+                    return Err(err.context("--engine pjrt requested but engine setup failed"));
+                }
+                eprintln!("no PJRT artifacts ({err}); falling back to CPU feature maps");
+                None
+            }
+        },
+    };
+    let out_dir = std::path::PathBuf::from(args.str_or("out", "results"));
+    let mut ctx = ExpContext::new(engine, out_dir);
+    if let Some(mode) = engine_flag {
+        ctx.engine_mode = Some(mode);
+    }
+
+    match cmd {
+        "quickstart" => quickstart(&ctx, &args, seed)?,
+        "fig1-left" => {
+            figures::fig1_left(&ctx, &scale, seed)?;
+        }
+        "fig1-right" => {
+            figures::fig1_right(&ctx, &scale, seed)?;
+        }
+        "fig2-left" => {
+            figures::fig2_left(&ctx, &scale, seed)?;
+        }
+        "fig2-right" => {
+            let ks = args.parse_list("ks", &[3usize, 4, 5, 6, 7, 8]);
+            let m = args.parse_or("m", 5000usize);
+            let pool = args.parse_or("pool", 512usize);
+            timing::fig2_right(&ctx, &ks, m, pool)?;
+        }
+        "fig3" => {
+            let dataset = args.str_or("dataset", "dd").to_string();
+            let tu_dir = args.get("tu-dir").map(std::path::Path::new);
+            figures::fig3(&ctx, &scale, &dataset, tu_dir, seed)?;
+        }
+        "thm1" => {
+            thm1::run(&ctx, seed)?;
+        }
+        "gnn" => gnn_cmd(&ctx, &args, seed)?,
+        "info" => info(&ctx)?,
+        "help" | _ => {
+            println!("{}", HELP);
+        }
+    }
+    Ok(())
+}
+
+const HELP: &str = "graphlet-rf — Fast Graph Kernel with Optical Random Features
+
+USAGE: graphlet-rf <quickstart|fig1-left|fig1-right|fig2-left|fig2-right|fig3|thm1|gnn|info>
+             [--scale quick|mid|full] [--seed N] [--engine pjrt|cpu|cpu-inline]
+             [--artifacts DIR] [--out DIR] [--dataset dd|reddit] [--tu-dir DIR]
+
+Run `make artifacts` first to build the AOT XLA artifacts (PJRT engine);
+without them the CPU fallback engine is used automatically.";
+
+/// End-to-end smoke run: SBM dataset -> RW sampling -> OPU features
+/// (PJRT if available) -> SVM -> accuracy + throughput.
+fn quickstart(ctx: &ExpContext, args: &Args, seed: u64) -> Result<()> {
+    use graphlet_rf::classify::{train_and_eval, TrainConfig};
+    use graphlet_rf::coordinator::{embed_dataset, GsaConfig};
+
+    let r = args.parse_or("r", 1.2f64);
+    let per_class = args.parse_or("per-class", 60usize);
+    let cfg = GsaConfig {
+        k: args.parse_or("k", 6usize),
+        s: args.parse_or("s", 1000usize),
+        m: args.parse_or("m", 5000usize),
+        batch: 256,
+        engine: ctx.mode(),
+        seed,
+        ..Default::default()
+    };
+    println!("generating SBM dataset: r={r}, {} graphs", 2 * per_class);
+    let ds = SbmConfig { r, per_class, ..Default::default() }.generate(&mut Rng::new(seed));
+    println!("{}", ds.summary());
+    println!(
+        "embedding: k={} s={} m={} sampler={} engine={:?}",
+        cfg.k, cfg.s, cfg.m, cfg.sampler, cfg.engine
+    );
+    let (emb, metrics) = embed_dataset(&ds, &cfg, ctx.engine.as_ref())?;
+    println!("pipeline: {}", metrics.report());
+    let mut rng = Rng::new(seed ^ 0xACC);
+    let split = ds.split(0.8, &mut rng);
+    let acc = train_and_eval(
+        &emb,
+        &ds.labels,
+        cfg.m,
+        &split.train,
+        &split.test,
+        &TrainConfig::default(),
+    );
+    println!("test accuracy: {acc:.3}");
+    Ok(())
+}
+
+fn gnn_cmd(ctx: &ExpContext, args: &Args, seed: u64) -> Result<()> {
+    let engine = ctx
+        .engine
+        .as_ref()
+        .ok_or_else(|| anyhow::anyhow!("gnn requires PJRT artifacts (run `make artifacts`)"))?;
+    let r = args.parse_or("r", 1.2f64);
+    let per_class = args.parse_or("per-class", 100usize);
+    let steps = args.parse_or("steps", 300usize);
+    let ds = SbmConfig { r, per_class, ..Default::default() }.generate(&mut Rng::new(seed));
+    println!("{}", ds.summary());
+    let split = ds.split(0.8, &mut Rng::new(seed ^ 0xACC));
+    let cfg = GinConfig { steps, seed, ..Default::default() };
+    let (acc, curve) = GinModel::train_and_eval(engine, &ds, &split, &cfg)?;
+    for (step, loss) in &curve {
+        println!("step {step}: loss {loss:.4}");
+    }
+    println!("GIN test accuracy: {acc:.3}");
+    Ok(())
+}
+
+fn info(ctx: &ExpContext) -> Result<()> {
+    match &ctx.engine {
+        Some(engine) => {
+            println!("platform: {}", engine.platform());
+            let manifest = engine.manifest();
+            println!("artifacts: {}", manifest.artifacts.len());
+            let mut by_kind: std::collections::BTreeMap<&str, usize> = Default::default();
+            for a in manifest.artifacts.values() {
+                *by_kind.entry(a.kind.as_str()).or_default() += 1;
+            }
+            for (kind, n) in by_kind {
+                println!("  {kind}: {n}");
+            }
+        }
+        None => println!("no PJRT engine (artifacts missing) — CPU fallback active"),
+    }
+    Ok(())
+}

@@ -1,0 +1,170 @@
+//! Maximum Mean Discrepancy machinery + the Theorem 1 bound.
+//!
+//! Theorem 1 (paper §3.2): with probability >= 1 - delta,
+//!
+//!   | ||f_G - f_G'||^2 - MMD^2(S_k(G), S_k(G')) |
+//!       <= 4 m^{-1/2} sqrt(log(6/delta)) + 8 s^{-1/2} (1 + sqrt(2 log(3/delta)))
+//!
+//! This module provides: the embedding-space MMD estimator (what GSA-phi
+//! computes), the exact MMD under the *matching kernel* (where MMD^2 is
+//! just the squared distance of the folded histograms — computable
+//! exactly for small k, which is what `examples/thm1_concentration.rs`
+//! uses as ground truth), and the bound itself.
+
+use crate::graph::Graphlet;
+use crate::iso::GraphletRegistry;
+
+/// Squared Euclidean distance between two mean embeddings — the plug-in
+/// MMD^2 estimator of GSA-phi (LHS of Theorem 1 without the expectation).
+pub fn embedding_sq_distance(f1: &[f32], f2: &[f32]) -> f64 {
+    assert_eq!(f1.len(), f2.len());
+    f1.iter()
+        .zip(f2)
+        .map(|(&a, &b)| {
+            let d = (a - b) as f64;
+            d * d
+        })
+        .sum()
+}
+
+/// Exact MMD^2 under the matching kernel kappa(F, F') = 1{F ~= F'}:
+/// fold both sample sets into histograms over isomorphism classes and
+/// return the squared histogram distance. For exhaustive inputs (or very
+/// large samples) this is the "true" MMD GSA-phi_match approximates.
+pub fn match_kernel_mmd2(samples_a: &[Graphlet], samples_b: &[Graphlet]) -> f64 {
+    let mut reg = GraphletRegistry::new();
+    let hist = |samples: &[Graphlet], reg: &mut GraphletRegistry| {
+        let mut counts: Vec<f64> = Vec::new();
+        for g in samples {
+            let idx = reg.classify(g) as usize;
+            if idx >= counts.len() {
+                counts.resize(idx + 1, 0.0);
+            }
+            counts[idx] += 1.0;
+        }
+        let n = samples.len().max(1) as f64;
+        for c in counts.iter_mut() {
+            *c /= n;
+        }
+        counts
+    };
+    let ha = hist(samples_a, &mut reg);
+    let hb = hist(samples_b, &mut reg);
+    let dim = ha.len().max(hb.len());
+    (0..dim)
+        .map(|i| {
+            let a = ha.get(i).copied().unwrap_or(0.0);
+            let b = hb.get(i).copied().unwrap_or(0.0);
+            (a - b) * (a - b)
+        })
+        .sum()
+}
+
+/// The deviation bound of Theorem 1 at confidence `1 - delta`.
+pub fn theorem1_bound(m: usize, s: usize, delta: f64) -> f64 {
+    assert!(delta > 0.0 && delta < 1.0);
+    let term_m = 4.0 / (m as f64).sqrt() * (6.0 / delta).ln().sqrt();
+    let term_s = 8.0 / (s as f64).sqrt() * (1.0 + (2.0 * (3.0 / delta).ln()).sqrt());
+    term_m + term_s
+}
+
+/// Biased (V-statistic) MMD^2 estimate from explicit kernel evaluations:
+/// used to cross-check the embedding estimator on small cases.
+pub fn mmd2_from_gram<F: Fn(usize, usize) -> f64>(na: usize, nb: usize, k_aa_ab_bb: F) -> f64 {
+    // Index convention: nodes 0..na are A, na..na+nb are B.
+    let mut kaa = 0.0;
+    for i in 0..na {
+        for j in 0..na {
+            kaa += k_aa_ab_bb(i, j);
+        }
+    }
+    let mut kbb = 0.0;
+    for i in 0..nb {
+        for j in 0..nb {
+            kbb += k_aa_ab_bb(na + i, na + j);
+        }
+    }
+    let mut kab = 0.0;
+    for i in 0..na {
+        for j in 0..nb {
+            kab += k_aa_ab_bb(i, na + j);
+        }
+    }
+    kaa / (na * na) as f64 + kbb / (nb * nb) as f64 - 2.0 * kab / (na * nb) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{check, Rng};
+
+    fn random_graphlet(rng: &mut Rng, k: usize) -> Graphlet {
+        let n_pairs = k * (k - 1) / 2;
+        Graphlet::from_bits(k, (rng.next_u64() & ((1u64 << n_pairs) - 1)) as u32)
+    }
+
+    #[test]
+    fn sq_distance_basics() {
+        assert_eq!(embedding_sq_distance(&[0.0, 0.0], &[3.0, 4.0]), 25.0);
+        assert_eq!(embedding_sq_distance(&[1.0], &[1.0]), 0.0);
+    }
+
+    #[test]
+    fn match_mmd_zero_for_identical_distributions() {
+        let mut rng = Rng::new(1);
+        let samples: Vec<Graphlet> = (0..200).map(|_| random_graphlet(&mut rng, 4)).collect();
+        let d = match_kernel_mmd2(&samples, &samples.clone());
+        assert!(d.abs() < 1e-12, "{d}");
+    }
+
+    #[test]
+    fn match_mmd_positive_for_different_distributions() {
+        // A: empty graphlets only; B: complete graphlets only.
+        let a: Vec<Graphlet> = (0..50).map(|_| Graphlet::empty(4)).collect();
+        let b: Vec<Graphlet> = (0..50).map(|_| Graphlet::from_bits(4, 0b111111)).collect();
+        let d = match_kernel_mmd2(&a, &b);
+        assert!((d - 2.0).abs() < 1e-12, "disjoint histograms: {d}");
+    }
+
+    #[test]
+    fn match_mmd_invariant_to_relabelling() {
+        check::check("mmd-relabel", 0x101, 50, |rng| {
+            let k = 3 + rng.usize(3);
+            let a: Vec<Graphlet> = (0..40).map(|_| random_graphlet(rng, k)).collect();
+            let b: Vec<Graphlet> = a
+                .iter()
+                .map(|g| {
+                    let mut perm: Vec<usize> = (0..k).collect();
+                    rng.shuffle(&mut perm);
+                    g.permute(&perm)
+                })
+                .collect();
+            // Same multiset up to isomorphism -> MMD = 0.
+            let d = match_kernel_mmd2(&a, &b);
+            assert!(d.abs() < 1e-12, "{d}");
+        });
+    }
+
+    #[test]
+    fn theorem1_bound_shrinks_with_m_and_s() {
+        let b = theorem1_bound(5000, 2000, 0.05);
+        assert!(b < theorem1_bound(500, 2000, 0.05));
+        assert!(b < theorem1_bound(5000, 200, 0.05));
+        assert!(b > 0.0);
+        // Bound at the paper's operating point is macroscopic but finite.
+        assert!(b < 1.0, "bound={b}");
+    }
+
+    #[test]
+    fn gram_mmd_agrees_with_histogram_mmd_for_match_kernel() {
+        let mut rng = Rng::new(5);
+        let a: Vec<Graphlet> = (0..30).map(|_| random_graphlet(&mut rng, 3)).collect();
+        let b: Vec<Graphlet> = (0..20).map(|_| random_graphlet(&mut rng, 3)).collect();
+        let hist_mmd = match_kernel_mmd2(&a, &b);
+        let all: Vec<Graphlet> = a.iter().chain(&b).copied().collect();
+        let gram_mmd = mmd2_from_gram(a.len(), b.len(), |i, j| {
+            crate::iso::are_isomorphic(&all[i], &all[j]) as u8 as f64
+        });
+        assert!((hist_mmd - gram_mmd).abs() < 1e-9, "{hist_mmd} vs {gram_mmd}");
+    }
+}

@@ -1,0 +1,382 @@
+//! PJRT execution engine: load HLO-text artifacts, compile once, execute
+//! many times.
+//!
+//! Follows the reference wiring of /opt/xla-example/load_hlo: HLO *text*
+//! -> `HloModuleProto::from_text_file` -> `XlaComputation::from_proto` ->
+//! `PjRtClient::compile` -> `execute`. All artifacts are lowered with
+//! `return_tuple=True`, so outputs are decomposed from a single tuple
+//! literal.
+//!
+//! Threading note: PJRT handles are raw pointers without `Sync`; the
+//! coordinator therefore confines one [`Engine`] to one feature-engine
+//! thread and communicates through channels (coordinator/pipeline.rs).
+//! XLA-CPU itself multithreads the heavy dots internally.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use anyhow::{bail, Context, Result};
+
+use super::manifest::{ArtifactSpec, DType, Manifest, TensorSpec};
+
+/// Host-side tensor handed to / returned by the engine.
+#[derive(Clone, Debug)]
+pub enum HostTensor {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl HostTensor {
+    pub fn as_f32(&self) -> &[f32] {
+        match self {
+            HostTensor::F32(v) => v,
+            _ => panic!("expected f32 tensor"),
+        }
+    }
+
+    pub fn as_i32(&self) -> &[i32] {
+        match self {
+            HostTensor::I32(v) => v,
+            _ => panic!("expected i32 tensor"),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            HostTensor::F32(v) => v.len(),
+            HostTensor::I32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Default artifacts directory: `$GRAPHLET_RF_ARTIFACTS`, else
+/// `<manifest dir>/artifacts` (so tests work from any cwd), else
+/// `./artifacts`.
+pub fn artifacts_dir() -> PathBuf {
+    if let Ok(dir) = std::env::var("GRAPHLET_RF_ARTIFACTS") {
+        return PathBuf::from(dir);
+    }
+    let manifest_rel = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if manifest_rel.exists() {
+        return manifest_rel;
+    }
+    PathBuf::from("artifacts")
+}
+
+/// A compiled artifact plus its spec (shape checking on every call).
+pub struct LoadedArtifact {
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl LoadedArtifact {
+    /// Execute with host tensors; validates shapes against the manifest.
+    pub fn execute(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let literals = self.to_literals(inputs)?;
+        let result = self.exe.execute::<xla::Literal>(&literals)?;
+        self.decompose_outputs(result)
+    }
+
+    /// Execute with pre-uploaded device buffers (fast path: RF parameter
+    /// matrices stay resident across calls).
+    pub fn execute_buffers(&self, inputs: &[&xla::PjRtBuffer]) -> Result<Vec<HostTensor>> {
+        anyhow::ensure!(
+            inputs.len() == self.spec.inputs.len(),
+            "artifact {}: got {} inputs, want {}",
+            self.spec.name,
+            inputs.len(),
+            self.spec.inputs.len()
+        );
+        let result = self.exe.execute_b::<&xla::PjRtBuffer>(inputs)?;
+        self.decompose_outputs(result)
+    }
+
+    fn to_literals(&self, inputs: &[HostTensor]) -> Result<Vec<xla::Literal>> {
+        anyhow::ensure!(
+            inputs.len() == self.spec.inputs.len(),
+            "artifact {}: got {} inputs, want {}",
+            self.spec.name,
+            inputs.len(),
+            self.spec.inputs.len()
+        );
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (t, spec) in inputs.iter().zip(&self.spec.inputs) {
+            literals.push(host_to_literal(t, spec)?);
+        }
+        Ok(literals)
+    }
+
+    fn decompose_outputs(&self, result: Vec<Vec<xla::PjRtBuffer>>) -> Result<Vec<HostTensor>> {
+        let buffer = result
+            .first()
+            .and_then(|r| r.first())
+            .context("empty execution result")?;
+        let literal = buffer.to_literal_sync()?;
+        let parts = literal.to_tuple()?;
+        anyhow::ensure!(
+            parts.len() == self.spec.outputs.len(),
+            "artifact {}: got {} outputs, want {}",
+            self.spec.name,
+            parts.len(),
+            self.spec.outputs.len()
+        );
+        parts
+            .into_iter()
+            .zip(&self.spec.outputs)
+            .map(|(lit, spec)| literal_to_host(&lit, spec))
+            .collect()
+    }
+}
+
+fn host_to_literal(t: &HostTensor, spec: &TensorSpec) -> Result<xla::Literal> {
+    anyhow::ensure!(
+        t.len() == spec.element_count(),
+        "input {}: got {} elements, want {} ({:?})",
+        spec.name,
+        t.len(),
+        spec.element_count(),
+        spec.dims
+    );
+    let dims: Vec<i64> = spec.dims.iter().map(|&d| d as i64).collect();
+    let lit = match (t, spec.dtype) {
+        (HostTensor::F32(v), DType::F32) => xla::Literal::vec1(v).reshape(&dims)?,
+        (HostTensor::I32(v), DType::I32) => xla::Literal::vec1(v).reshape(&dims)?,
+        _ => bail!("input {}: dtype mismatch", spec.name),
+    };
+    Ok(lit)
+}
+
+fn literal_to_host(lit: &xla::Literal, spec: &TensorSpec) -> Result<HostTensor> {
+    let out = match spec.dtype {
+        DType::F32 => HostTensor::F32(lit.to_vec::<f32>()?),
+        DType::I32 => HostTensor::I32(lit.to_vec::<i32>()?),
+    };
+    anyhow::ensure!(
+        out.len() == spec.element_count(),
+        "output {}: got {} elements, want {}",
+        spec.name,
+        out.len(),
+        spec.element_count()
+    );
+    Ok(out)
+}
+
+/// The engine: one PJRT CPU client + compile cache over the manifest.
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    dir: PathBuf,
+    cache: std::cell::RefCell<HashMap<String, Rc<LoadedArtifact>>>,
+}
+
+impl Engine {
+    /// Create an engine over an artifacts directory (see
+    /// [`artifacts_dir`] for the default).
+    pub fn new(dir: &Path) -> Result<Engine> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine {
+            client,
+            manifest,
+            dir: dir.to_path_buf(),
+            cache: Default::default(),
+        })
+    }
+
+    pub fn with_default_dir() -> Result<Engine> {
+        Self::new(&artifacts_dir())
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an artifact (cached).
+    pub fn load(&self, name: &str) -> Result<Rc<LoadedArtifact>> {
+        if let Some(hit) = self.cache.borrow().get(name) {
+            return Ok(hit.clone());
+        }
+        let spec = self.manifest.get(name)?.clone();
+        let path = self.dir.join(&spec.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling artifact {name}"))?;
+        let loaded = Rc::new(LoadedArtifact { spec, exe });
+        self.cache.borrow_mut().insert(name.to_string(), loaded.clone());
+        Ok(loaded)
+    }
+
+    /// Upload a host f32 tensor to the device (for resident parameters).
+    pub fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer::<f32>(data, dims, None)?)
+    }
+
+    pub fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer::<i32>(data, dims, None)?)
+    }
+
+    /// One-call convenience: load (cached) + execute host tensors.
+    pub fn execute(&self, name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        self.load(name)?.execute(inputs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// These tests require `make artifacts`; they are skipped (cleanly)
+    /// when the artifacts directory is absent so `cargo test` works in a
+    /// fresh checkout too.
+    fn engine() -> Option<Engine> {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.txt").exists() {
+            eprintln!("skipping runtime test: no artifacts at {}", dir.display());
+            return None;
+        }
+        Some(Engine::new(&dir).expect("engine"))
+    }
+
+    #[test]
+    fn loads_and_executes_smoke_artifact() {
+        let Some(engine) = engine() else { return };
+        let art = engine.load("rf_opu_xla_d9_m64_b32").unwrap();
+        let (b, d, m) = (32, 9, 64);
+        let inputs = vec![
+            HostTensor::F32(vec![1.0; b * d]),
+            HostTensor::F32(vec![0.1; d * m]),
+            HostTensor::F32(vec![0.2; d * m]),
+            HostTensor::F32(vec![0.0; m]),
+            HostTensor::F32(vec![0.0; m]),
+        ];
+        let out = art.execute(&inputs).unwrap();
+        assert_eq!(out.len(), 1);
+        let y = out[0].as_f32();
+        assert_eq!(y.len(), b * m);
+        // |9*0.1|^2 + |9*0.2|^2 = 0.81 + 3.24 = 4.05, scaled by 1/sqrt(64).
+        let want = 4.05f32 / 8.0;
+        assert!((y[0] - want).abs() < 1e-4, "{} vs {want}", y[0]);
+        assert!(y.iter().all(|&v| (v - want).abs() < 1e-4));
+    }
+
+    #[test]
+    fn pallas_and_xla_artifacts_agree() {
+        let Some(engine) = engine() else { return };
+        let (b, d, m) = (32, 9, 64);
+        let mut rng = crate::util::Rng::new(7);
+        let mut mk = |n: usize| {
+            let mut v = vec![0.0f32; n];
+            rng.fill_gaussian(&mut v, 1.0);
+            v
+        };
+        let inputs = vec![
+            HostTensor::F32(mk(b * d)),
+            HostTensor::F32(mk(d * m)),
+            HostTensor::F32(mk(d * m)),
+            HostTensor::F32(mk(m)),
+            HostTensor::F32(mk(m)),
+        ];
+        let y_xla = engine.execute("rf_opu_xla_d9_m64_b32", &inputs).unwrap();
+        let y_pal = engine.execute("rf_opu_pallas_d9_m64_b32", &inputs).unwrap();
+        crate::util::check::assert_allclose(
+            y_pal[0].as_f32(),
+            y_xla[0].as_f32(),
+            1e-4,
+            1e-4,
+        );
+    }
+
+    #[test]
+    fn device_resident_buffers_match_literal_path() {
+        let Some(engine) = engine() else { return };
+        let art = engine.load("rf_gauss_xla_d9_m64_b32").unwrap();
+        let (b, d, m) = (32, 9, 64);
+        let mut rng = crate::util::Rng::new(8);
+        let mut x = vec![0.0f32; b * d];
+        let mut w = vec![0.0f32; d * m];
+        let mut bias = vec![0.0f32; m];
+        rng.fill_gaussian(&mut x, 1.0);
+        rng.fill_gaussian(&mut w, 1.0);
+        rng.fill_gaussian(&mut bias, 1.0);
+        let via_literal = art
+            .execute(&[
+                HostTensor::F32(x.clone()),
+                HostTensor::F32(w.clone()),
+                HostTensor::F32(bias.clone()),
+            ])
+            .unwrap();
+        let xb = engine.upload_f32(&x, &[b, d]).unwrap();
+        let wb = engine.upload_f32(&w, &[d, m]).unwrap();
+        let bb = engine.upload_f32(&bias, &[m]).unwrap();
+        let via_buffers = art.execute_buffers(&[&xb, &wb, &bb]).unwrap();
+        crate::util::check::assert_allclose(
+            via_buffers[0].as_f32(),
+            via_literal[0].as_f32(),
+            1e-6,
+            1e-6,
+        );
+    }
+
+    #[test]
+    fn engine_matches_cpu_feature_map() {
+        // The PJRT path and the rust CPU fallback must compute the same
+        // math given the same parameters — this pins L2<->L3 agreement.
+        let Some(engine) = engine() else { return };
+        let (b, d, m) = (32, 9, 64);
+        let mut rng = crate::util::Rng::new(9);
+        let params = crate::features::RfParams::generate(
+            crate::features::Variant::Opu,
+            d,
+            m,
+            1.0,
+            &mut rng,
+        );
+        let mut x = vec![0.0f32; b * d];
+        for v in x.iter_mut() {
+            *v = rng.bool(0.4) as u8 as f32;
+        }
+        let out = engine
+            .execute(
+                "rf_opu_xla_d9_m64_b32",
+                &[
+                    HostTensor::F32(x.clone()),
+                    HostTensor::F32(params.mats[0].clone()),
+                    HostTensor::F32(params.mats[1].clone()),
+                    HostTensor::F32(params.biases[0].clone()),
+                    HostTensor::F32(params.biases[1].clone()),
+                ],
+            )
+            .unwrap();
+        let mut cpu_out = vec![0.0f32; b * m];
+        crate::features::CpuFeatureMap::new(params).map_batch(&x, b, &mut cpu_out);
+        crate::util::check::assert_allclose(out[0].as_f32(), &cpu_out, 1e-4, 1e-4);
+    }
+
+    #[test]
+    fn shape_mismatch_is_error() {
+        let Some(engine) = engine() else { return };
+        let art = engine.load("rf_gauss_xla_d9_m64_b32").unwrap();
+        let bad = vec![
+            HostTensor::F32(vec![0.0; 5]), // wrong element count
+            HostTensor::F32(vec![0.0; 9 * 64]),
+            HostTensor::F32(vec![0.0; 64]),
+        ];
+        assert!(art.execute(&bad).is_err());
+        assert!(art.execute(&bad[..2]).is_err());
+    }
+}

@@ -1,0 +1,259 @@
+//! Parser for `artifacts/manifest.txt`, the line-oriented index written by
+//! `python/compile/aot.py` (grammar documented there). No serde offline,
+//! so the format is deliberately trivial to parse.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+/// Element type of a tensor (only what the artifacts use).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    fn parse(s: &str) -> Result<DType> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "i32" => Ok(DType::I32),
+            other => bail!("unsupported dtype {other:?}"),
+        }
+    }
+}
+
+/// Shape + dtype + positional name of one artifact input/output.
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    pub name: String,
+    pub dtype: DType,
+    /// Empty for scalars.
+    pub dims: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn element_count(&self) -> usize {
+        self.dims.iter().product()
+    }
+}
+
+/// One artifact record from the manifest.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    /// HLO text file, relative to the artifacts dir.
+    pub file: PathBuf,
+    /// rf | embed | gin_train | gin_predict
+    pub kind: String,
+    /// Free-form key=value metadata (variant, impl, d, m, batch, s, v).
+    pub meta: BTreeMap<String, String>,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+impl ArtifactSpec {
+    /// Typed metadata accessor.
+    pub fn meta_usize(&self, key: &str) -> Result<usize> {
+        self.meta
+            .get(key)
+            .with_context(|| format!("artifact {}: missing meta {key}", self.name))?
+            .parse()
+            .with_context(|| format!("artifact {}: meta {key} not an integer", self.name))
+    }
+
+    pub fn meta_str(&self, key: &str) -> Option<&str> {
+        self.meta.get(key).map(|s| s.as_str())
+    }
+}
+
+/// The parsed manifest: artifact specs by name.
+#[derive(Debug, Default)]
+pub struct Manifest {
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+impl Manifest {
+    /// Parse `manifest.txt` content.
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let mut lines = text.lines().map(str::trim).filter(|l| !l.is_empty());
+        match lines.next() {
+            Some("manifest-version 1") => {}
+            other => bail!("unsupported manifest header: {other:?}"),
+        }
+        let mut artifacts = BTreeMap::new();
+        let mut cur: Option<ArtifactSpec> = None;
+        for line in lines {
+            let mut parts = line.split_whitespace();
+            let key = parts.next().unwrap();
+            match key {
+                "artifact" => {
+                    if cur.is_some() {
+                        bail!("artifact record not closed with 'end'");
+                    }
+                    let name = parts.next().context("artifact without name")?;
+                    cur = Some(ArtifactSpec {
+                        name: name.to_string(),
+                        file: PathBuf::new(),
+                        kind: String::new(),
+                        meta: BTreeMap::new(),
+                        inputs: Vec::new(),
+                        outputs: Vec::new(),
+                    });
+                }
+                "file" => {
+                    let a = cur.as_mut().context("file outside artifact")?;
+                    a.file = PathBuf::from(parts.next().context("file without path")?);
+                }
+                "kind" => {
+                    let a = cur.as_mut().context("kind outside artifact")?;
+                    a.kind = parts.next().context("kind without value")?.to_string();
+                }
+                "meta" => {
+                    let a = cur.as_mut().context("meta outside artifact")?;
+                    for kv in parts {
+                        let (k, v) = kv
+                            .split_once('=')
+                            .with_context(|| format!("bad meta token {kv:?}"))?;
+                        a.meta.insert(k.to_string(), v.to_string());
+                    }
+                }
+                "input" | "output" => {
+                    let a = cur.as_mut().context("tensor outside artifact")?;
+                    let name = parts.next().context("tensor without name")?;
+                    let dtype = DType::parse(parts.next().context("tensor without dtype")?)?;
+                    let shape_tok = parts.next().context("tensor without shape")?;
+                    let dims: Vec<usize> = if shape_tok == "scalar" {
+                        Vec::new()
+                    } else {
+                        shape_tok
+                            .split(',')
+                            .map(|d| d.parse().context("bad dim"))
+                            .collect::<Result<_>>()?
+                    };
+                    let spec = TensorSpec { name: name.to_string(), dtype, dims };
+                    if key == "input" {
+                        a.inputs.push(spec);
+                    } else {
+                        a.outputs.push(spec);
+                    }
+                }
+                "end" => {
+                    let a = cur.take().context("end outside artifact")?;
+                    if a.file.as_os_str().is_empty() || a.kind.is_empty() {
+                        bail!("artifact {} missing file/kind", a.name);
+                    }
+                    artifacts.insert(a.name.clone(), a);
+                }
+                other => bail!("unknown manifest key {other:?}"),
+            }
+        }
+        if cur.is_some() {
+            bail!("unterminated artifact record");
+        }
+        Ok(Manifest { artifacts })
+    }
+
+    /// Load from `<dir>/manifest.txt`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!(
+                "reading {} — run `make artifacts` first",
+                path.display()
+            )
+        })?;
+        Self::parse(&text)
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts.get(name).with_context(|| {
+            format!("artifact {name:?} not in manifest — re-run `make artifacts`")
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+manifest-version 1
+artifact rf_opu_xla_d9_m64_b32
+file rf_opu_xla_d9_m64_b32.hlo.txt
+kind rf
+meta variant=opu impl=xla d=9 m=64 batch=32
+input x f32 32,9
+input wr f32 9,64
+input wi f32 9,64
+input br f32 64
+input bi f32 64
+output y f32 32,64
+end
+artifact gin_train_b32_v60
+file gin_train_b32_v60.hlo.txt
+kind gin_train
+meta batch=32 v=60
+input step f32 scalar
+input adj f32 32,60,60
+input labels i32 32
+output loss f32 scalar
+end
+";
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.artifacts.len(), 2);
+        let a = m.get("rf_opu_xla_d9_m64_b32").unwrap();
+        assert_eq!(a.kind, "rf");
+        assert_eq!(a.meta_usize("m").unwrap(), 64);
+        assert_eq!(a.meta_str("variant"), Some("opu"));
+        assert_eq!(a.inputs.len(), 5);
+        assert_eq!(a.inputs[0].dims, vec![32, 9]);
+        assert_eq!(a.inputs[0].element_count(), 288);
+        assert_eq!(a.outputs[0].dtype, DType::F32);
+        let g = m.get("gin_train_b32_v60").unwrap();
+        assert!(g.inputs[0].dims.is_empty(), "scalar");
+        assert_eq!(g.inputs[2].dtype, DType::I32);
+    }
+
+    #[test]
+    fn missing_artifact_is_helpful_error() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let err = m.get("nope").unwrap_err().to_string();
+        assert!(err.contains("make artifacts"), "{err}");
+    }
+
+    #[test]
+    fn rejects_bad_header() {
+        assert!(Manifest::parse("manifest-version 2\n").is_err());
+        assert!(Manifest::parse("").is_err());
+    }
+
+    #[test]
+    fn rejects_unclosed_record() {
+        let text = "manifest-version 1\nartifact a\nfile f\nkind rf\n";
+        assert!(Manifest::parse(text).is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_keys_and_bad_dims() {
+        assert!(Manifest::parse("manifest-version 1\nbogus x\n").is_err());
+        let text = "manifest-version 1\nartifact a\nfile f\nkind rf\ninput x f32 3,x\nend\n";
+        assert!(Manifest::parse(text).is_err());
+    }
+
+    #[test]
+    fn parses_real_manifest_if_built() {
+        // Integration smoke: if `make artifacts` has run, the real
+        // manifest must parse and contain the quickstart artifact.
+        let dir = crate::runtime::artifacts_dir();
+        if dir.join("manifest.txt").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(m.artifacts.len() >= 50);
+            assert!(m.get("rf_opu_xla_d36_m5000_b256").is_ok());
+        }
+    }
+}

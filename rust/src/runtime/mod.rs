@@ -1,0 +1,14 @@
+//! Runtime layer: the bridge from rust to the AOT-compiled XLA artifacts.
+//!
+//! `manifest` parses the artifact index written by `python/compile/aot.py`;
+//! `engine` owns the PJRT CPU client, the compile cache, and typed
+//! execution; `rf` wraps the random-feature artifacts with device-resident
+//! parameters (the pipeline's fast path).
+
+pub mod engine;
+pub mod manifest;
+pub mod rf;
+
+pub use engine::{artifacts_dir, Engine, HostTensor, LoadedArtifact};
+pub use manifest::{ArtifactSpec, DType, Manifest, TensorSpec};
+pub use rf::RfExecutor;

@@ -1,0 +1,174 @@
+//! Random-feature executor: one artifact + device-resident parameters.
+//!
+//! The parameter matrices (W / Wr, Wi and biases) are uploaded to the
+//! device **once** and reused across every batch — per call only the
+//! (batch, d) input crosses the host/device boundary. This mirrors the
+//! physical OPU, whose transmission matrix is literally baked into the
+//! scattering medium.
+
+use anyhow::{bail, Context, Result};
+
+use super::engine::{Engine, HostTensor, LoadedArtifact};
+use crate::features::{RfParams, Variant};
+
+/// Naming helper mirroring python/compile/configs.py.
+pub fn rf_artifact_name(variant: Variant, impl_: &str, d: usize, m: usize, batch: usize) -> String {
+    let v = match variant {
+        Variant::Opu => "opu",
+        // gauss-eig shares the gaussian artifact at d = k (DESIGN.md §3).
+        Variant::Gauss | Variant::GaussEig => "gauss",
+        Variant::Match => panic!("phi_match has no artifact"),
+    };
+    format!("rf_{v}_{impl_}_d{d}_m{m}_b{batch}")
+}
+
+/// A ready-to-run random-feature map on the PJRT device.
+pub struct RfExecutor {
+    artifact: std::rc::Rc<LoadedArtifact>,
+    params: Vec<xla::PjRtBuffer>,
+    pub variant: Variant,
+    pub d: usize,
+    pub m: usize,
+    pub batch: usize,
+    /// Scratch for padding partial batches.
+    pad_buf: std::cell::RefCell<Vec<f32>>,
+}
+
+impl RfExecutor {
+    /// Load the artifact for (variant, impl, d, m, batch) and pin the
+    /// given parameters on device.
+    pub fn new(
+        engine: &Engine,
+        impl_: &str,
+        params: &RfParams,
+        batch: usize,
+    ) -> Result<RfExecutor> {
+        let name = rf_artifact_name(params.variant, impl_, params.d, params.m, batch);
+        let artifact = engine
+            .load(&name)
+            .with_context(|| format!("loading RF artifact {name}"))?;
+        let expected_inputs = match params.variant {
+            Variant::Opu => 5,
+            _ => 3,
+        };
+        if artifact.spec.inputs.len() != expected_inputs {
+            bail!("artifact {name}: unexpected input arity");
+        }
+        let mut bufs = Vec::new();
+        for mat in &params.mats {
+            bufs.push(engine.upload_f32(mat, &[params.d, params.m])?);
+        }
+        for bias in &params.biases {
+            bufs.push(engine.upload_f32(bias, &[params.m])?);
+        }
+        Ok(RfExecutor {
+            artifact,
+            params: bufs,
+            variant: params.variant,
+            d: params.d,
+            m: params.m,
+            batch,
+            pad_buf: Default::default(),
+        })
+    }
+
+    /// Map `rows` rows of input (row-major rows*d) to features
+    /// (rows*m). `rows` may be <= batch; partial batches are zero-padded
+    /// on upload and trimmed on return.
+    pub fn map(&self, engine: &Engine, x: &[f32], rows: usize) -> Result<Vec<f32>> {
+        anyhow::ensure!(rows > 0 && rows <= self.batch, "rows {rows} vs batch {}", self.batch);
+        anyhow::ensure!(x.len() == rows * self.d, "input length mismatch");
+        let x_buf = if rows == self.batch {
+            engine.upload_f32(x, &[self.batch, self.d])?
+        } else {
+            let mut pad = self.pad_buf.borrow_mut();
+            pad.clear();
+            pad.resize(self.batch * self.d, 0.0);
+            pad[..x.len()].copy_from_slice(x);
+            engine.upload_f32(&pad, &[self.batch, self.d])?
+        };
+        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(1 + self.params.len());
+        args.push(&x_buf);
+        // Parameter order matches the artifact signature: for opu
+        // (x, wr, wi, br, bi); for gauss (x, w, b). `params` holds
+        // [mats.., biases..] which is exactly (wr, wi, br, bi) / (w, b).
+        match self.variant {
+            Variant::Opu => {
+                args.push(&self.params[0]);
+                args.push(&self.params[1]);
+                args.push(&self.params[2]);
+                args.push(&self.params[3]);
+            }
+            _ => {
+                args.push(&self.params[0]);
+                args.push(&self.params[1]);
+            }
+        }
+        let out = self.artifact.execute_buffers(&args)?;
+        let HostTensor::F32(mut y) = out.into_iter().next().context("no output")? else {
+            bail!("expected f32 output");
+        };
+        y.truncate(rows * self.m);
+        Ok(y)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::features::CpuFeatureMap;
+    use crate::runtime::artifacts_dir;
+    use crate::util::Rng;
+
+    fn engine() -> Option<Engine> {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.txt").exists() {
+            return None;
+        }
+        Some(Engine::new(&dir).unwrap())
+    }
+
+    #[test]
+    fn rf_executor_matches_cpu_map_full_batch() {
+        let Some(engine) = engine() else { return };
+        let mut rng = Rng::new(1);
+        let params = RfParams::generate(Variant::Opu, 9, 64, 1.0, &mut rng);
+        let exec = RfExecutor::new(&engine, "xla", &params, 32).unwrap();
+        let mut x = vec![0.0f32; 32 * 9];
+        for v in x.iter_mut() {
+            *v = rng.bool(0.3) as u8 as f32;
+        }
+        let y = exec.map(&engine, &x, 32).unwrap();
+        let mut want = vec![0.0f32; 32 * 64];
+        CpuFeatureMap::new(params).map_batch(&x, 32, &mut want);
+        crate::util::check::assert_allclose(&y, &want, 1e-4, 1e-4);
+    }
+
+    #[test]
+    fn rf_executor_partial_batch_padding() {
+        let Some(engine) = engine() else { return };
+        let mut rng = Rng::new(2);
+        let params = RfParams::generate(Variant::Gauss, 9, 64, 1.0, &mut rng);
+        let exec = RfExecutor::new(&engine, "xla", &params, 32).unwrap();
+        let rows = 7;
+        let mut x = vec![0.0f32; rows * 9];
+        rng.fill_gaussian(&mut x, 1.0);
+        let y = exec.map(&engine, &x, rows).unwrap();
+        assert_eq!(y.len(), rows * 64);
+        let mut want = vec![0.0f32; rows * 64];
+        CpuFeatureMap::new(params).map_batch(&x, rows, &mut want);
+        crate::util::check::assert_allclose(&y, &want, 1e-4, 1e-4);
+    }
+
+    #[test]
+    fn artifact_name_matches_python_configs() {
+        assert_eq!(
+            rf_artifact_name(Variant::Opu, "xla", 36, 5000, 256),
+            "rf_opu_xla_d36_m5000_b256"
+        );
+        assert_eq!(
+            rf_artifact_name(Variant::GaussEig, "xla", 6, 500, 256),
+            "rf_gauss_xla_d6_m500_b256"
+        );
+    }
+}

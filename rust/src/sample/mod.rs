@@ -1,0 +1,235 @@
+//! Graphlet samplers: the `S_k(G)` distributions of the paper (§2.2).
+//!
+//! A sampler draws a size-k node subset from a host graph and returns the
+//! induced [`Graphlet`]. Two strategies from the paper:
+//!
+//! - [`UniformSampler`] (`S^unif`): k nodes uniformly without replacement.
+//!   Its expectation over `phi_match` IS the classical graphlet kernel
+//!   k-spectrum (eq. 1). On sparse graphs most draws are nearly empty
+//!   graphlets, which is why…
+//! - [`RwSampler`]: a random walk collects k distinct nodes (restarting on
+//!   dead ends), biasing towards *connected* subgraphs — the better
+//!   performing sampler in Fig. 1 (right).
+
+use crate::graph::{AnyGraph, Graphlet};
+use crate::util::Rng;
+
+/// A subgraph sampling process `S_k(G)`.
+pub trait GraphletSampler {
+    /// Draw one induced size-k subgraph. `scratch` avoids re-allocating
+    /// the node buffer in the hot loop.
+    fn sample(&self, g: &AnyGraph, k: usize, rng: &mut Rng, scratch: &mut Vec<usize>) -> Graphlet;
+
+    /// Human-readable name (logs, manifests, result files).
+    fn name(&self) -> &'static str;
+}
+
+/// Uniform k-subset sampling (the classical graphlet-kernel sampler).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct UniformSampler;
+
+impl GraphletSampler for UniformSampler {
+    fn sample(&self, g: &AnyGraph, k: usize, rng: &mut Rng, scratch: &mut Vec<usize>) -> Graphlet {
+        debug_assert!(k <= g.v(), "k={k} > v={}", g.v());
+        rng.sample_distinct(g.v(), k, scratch);
+        // Sorted node-id order: a deterministic, id-consistent node order
+        // gives non-permutation-invariant feature maps (phi_Gs, phi_OPU)
+        // a stable frame — without it every sample is an arbitrary
+        // relabelling and the maps lose most class signal. phi_match is
+        // unaffected (it canonicalizes anyway).
+        scratch.sort_unstable();
+        g.induced_graphlet(scratch)
+    }
+
+    fn name(&self) -> &'static str {
+        "uniform"
+    }
+}
+
+/// Random-walk sampling: walk from a uniform start node, collecting
+/// distinct visited nodes until k are found. Dead ends (or slow mixing)
+/// trigger a jump to a fresh uniform node, so the sampler terminates on
+/// any graph, including disconnected ones.
+#[derive(Clone, Copy, Debug)]
+pub struct RwSampler {
+    /// Walk steps allowed per collected node before jumping ( * k total).
+    pub patience: usize,
+}
+
+impl Default for RwSampler {
+    fn default() -> Self {
+        RwSampler { patience: 16 }
+    }
+}
+
+impl GraphletSampler for RwSampler {
+    fn sample(&self, g: &AnyGraph, k: usize, rng: &mut Rng, scratch: &mut Vec<usize>) -> Graphlet {
+        debug_assert!(k <= g.v());
+        scratch.clear();
+        let mut cur = rng.usize(g.v());
+        scratch.push(cur);
+        let mut budget = self.patience * k;
+        while scratch.len() < k {
+            let deg = g.degree(cur);
+            if deg == 0 || budget == 0 {
+                // Jump: uniform fresh node not yet collected.
+                loop {
+                    cur = rng.usize(g.v());
+                    if !scratch.contains(&cur) {
+                        break;
+                    }
+                }
+                scratch.push(cur);
+                budget = self.patience * k;
+                continue;
+            }
+            budget -= 1;
+            cur = g.nth_neighbor(cur, rng.usize(deg));
+            if !scratch.contains(&cur) {
+                scratch.push(cur);
+            }
+        }
+        // Same sorted-frame convention as UniformSampler: the walk decides
+        // WHICH nodes are sampled (connected subgraphs), sorted ids decide
+        // the adjacency ordering the feature maps see.
+        scratch.sort_unstable();
+        g.induced_graphlet(scratch)
+    }
+
+    fn name(&self) -> &'static str {
+        "rw"
+    }
+}
+
+/// Sampler selection by name (CLI / config layer).
+pub fn sampler_by_name(name: &str) -> Box<dyn GraphletSampler + Send + Sync> {
+    match name {
+        "uniform" => Box::new(UniformSampler),
+        "rw" => Box::new(RwSampler::default()),
+        other => panic!("unknown sampler {other:?} (expected uniform|rw)"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{CsrGraph, DenseGraph};
+    use crate::util::check;
+
+    fn ring(v: usize) -> AnyGraph {
+        let edges: Vec<(usize, usize)> = (0..v).map(|i| (i, (i + 1) % v)).collect();
+        AnyGraph::Csr(CsrGraph::from_edges(v, &edges))
+    }
+
+    fn dense_er(v: usize, p: f64, seed: u64) -> AnyGraph {
+        let mut rng = Rng::new(seed);
+        let mut g = DenseGraph::new(v);
+        for a in 0..v {
+            for b in (a + 1)..v {
+                if rng.bool(p) {
+                    g.add_edge(a, b);
+                }
+            }
+        }
+        AnyGraph::Dense(g)
+    }
+
+    #[test]
+    fn uniform_sampler_induces_consistent_graphlets() {
+        check::check("uniform-induce", 0xC1, 100, |rng| {
+            let g = dense_er(30, 0.3, rng.next_u64());
+            let k = 3 + rng.usize(5);
+            let mut scratch = Vec::new();
+            let gl = UniformSampler.sample(&g, k, rng, &mut scratch);
+            assert_eq!(gl.k(), k);
+            assert_eq!(scratch.len(), k);
+            for i in 0..k {
+                for j in (i + 1)..k {
+                    assert_eq!(gl.has_edge(i, j), g.has_edge(scratch[i], scratch[j]));
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn uniform_sampler_unbiased_on_edge_count() {
+        // On ER(p), expected edges of a k-graphlet = C(k,2) * p.
+        let g = dense_er(40, 0.25, 7);
+        // Measure actual density first (the realized graph, not p).
+        let dens = g.num_edges() as f64 / (40.0 * 39.0 / 2.0);
+        let mut rng = Rng::new(8);
+        let mut scratch = Vec::new();
+        let k = 5;
+        let trials = 20_000;
+        let mean_edges: f64 = (0..trials)
+            .map(|_| UniformSampler.sample(&g, k, &mut rng, &mut scratch).num_edges() as f64)
+            .sum::<f64>()
+            / trials as f64;
+        let expect = (k * (k - 1) / 2) as f64 * dens;
+        assert!((mean_edges - expect).abs() < 0.1, "{mean_edges} vs {expect}");
+    }
+
+    #[test]
+    fn rw_sampler_prefers_connected_subgraphs() {
+        let g = ring(60);
+        let mut rng = Rng::new(3);
+        let mut scratch = Vec::new();
+        let k = 4;
+        let trials = 2_000;
+        let conn_rw = (0..trials)
+            .filter(|_| RwSampler::default().sample(&g, k, &mut rng, &mut scratch).is_connected())
+            .count() as f64
+            / trials as f64;
+        let conn_unif = (0..trials)
+            .filter(|_| UniformSampler.sample(&g, k, &mut rng, &mut scratch).is_connected())
+            .count() as f64
+            / trials as f64;
+        // On a sparse ring, uniform almost never draws connected 4-sets.
+        assert!(conn_rw > 0.9, "rw connectivity {conn_rw}");
+        assert!(conn_unif < 0.05, "uniform connectivity {conn_unif}");
+    }
+
+    #[test]
+    fn rw_sampler_terminates_on_disconnected_graphs() {
+        // Two components + isolated nodes; the jump logic must kick in.
+        let edges = vec![(0, 1), (1, 2), (3, 4)];
+        let g = AnyGraph::Csr(CsrGraph::from_edges(8, &edges));
+        let mut rng = Rng::new(4);
+        let mut scratch = Vec::new();
+        for _ in 0..200 {
+            let gl = RwSampler::default().sample(&g, 5, &mut rng, &mut scratch);
+            assert_eq!(gl.k(), 5);
+            let mut sorted = scratch.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            assert_eq!(sorted.len(), 5, "distinct nodes");
+        }
+    }
+
+    #[test]
+    fn rw_sampler_covers_whole_graph() {
+        let g = ring(20);
+        let mut rng = Rng::new(5);
+        let mut scratch = Vec::new();
+        let mut seen = vec![false; 20];
+        for _ in 0..2_000 {
+            RwSampler::default().sample(&g, 3, &mut rng, &mut scratch);
+            for &n in scratch.iter() {
+                seen[n] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "all nodes reachable by sampling");
+    }
+
+    #[test]
+    fn sampler_by_name_resolves() {
+        assert_eq!(sampler_by_name("uniform").name(), "uniform");
+        assert_eq!(sampler_by_name("rw").name(), "rw");
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown sampler")]
+    fn sampler_by_name_rejects_unknown() {
+        sampler_by_name("bogus");
+    }
+}

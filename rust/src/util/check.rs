@@ -1,0 +1,79 @@
+//! Minimal property-testing harness (the offline environment has no
+//! `proptest`). A property is a closure over a seeded [`Rng`]; `check`
+//! runs it for `cases` random seeds and reports the failing seed so a
+//! failure is reproducible with `check_one`.
+//!
+//! No shrinking: properties here are over small structured inputs
+//! (graphlets, small matrices) where the failing seed is directly
+//! debuggable. Used by the property tests across all rust modules.
+
+use super::rng::Rng;
+
+/// Run `prop` for `cases` deterministic seeds derived from `base_seed`.
+/// Panics with the failing seed embedded in the message.
+pub fn check<F: FnMut(&mut Rng)>(name: &str, base_seed: u64, cases: u32, mut prop: F) {
+    for case in 0..cases {
+        let seed = base_seed
+            .wrapping_mul(0x9E3779B97F4A7C15)
+            .wrapping_add(case as u64);
+        let mut rng = Rng::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut rng)));
+        if let Err(err) = result {
+            let msg = err
+                .downcast_ref::<String>()
+                .map(|s| s.as_str())
+                .or_else(|| err.downcast_ref::<&str>().copied())
+                .unwrap_or("<non-string panic>");
+            panic!("property {name:?} failed at case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Re-run a single failing case by seed (for debugging).
+pub fn check_one<F: FnMut(&mut Rng)>(seed: u64, mut prop: F) {
+    let mut rng = Rng::new(seed);
+    prop(&mut rng);
+}
+
+/// Assert two f32 slices are elementwise close.
+pub fn assert_allclose(got: &[f32], want: &[f32], rtol: f32, atol: f32) {
+    assert_eq!(got.len(), want.len(), "length mismatch");
+    for (i, (&g, &w)) in got.iter().zip(want).enumerate() {
+        let tol = atol + rtol * w.abs();
+        assert!(
+            (g - w).abs() <= tol,
+            "mismatch at {i}: got {g}, want {w} (tol {tol})"
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_runs_all_cases() {
+        let mut n = 0;
+        check("counting", 1, 25, |_| n += 1);
+        assert_eq!(n, 25);
+    }
+
+    #[test]
+    #[should_panic(expected = "property")]
+    fn check_reports_failing_seed() {
+        check("fails", 2, 10, |rng| {
+            assert!(rng.f64() < 0.5, "too big");
+        });
+    }
+
+    #[test]
+    fn allclose_accepts_equal() {
+        assert_allclose(&[1.0, 2.0], &[1.0, 2.0], 1e-6, 1e-6);
+    }
+
+    #[test]
+    #[should_panic(expected = "mismatch")]
+    fn allclose_rejects_distant() {
+        assert_allclose(&[1.0], &[2.0], 1e-3, 1e-3);
+    }
+}

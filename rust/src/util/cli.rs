@@ -1,0 +1,139 @@
+//! Hand-rolled CLI argument parser (no `clap` offline).
+//!
+//! Supports `--key value`, `--key=value`, bare `--flag`, and positional
+//! arguments. Typed getters parse on access and produce readable errors.
+
+use std::collections::BTreeMap;
+
+/// Parsed command-line arguments.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Self {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(rest) = arg.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.opts.insert(rest.to_string(), v);
+                } else {
+                    out.flags.push(rest.to_string());
+                }
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        out
+    }
+
+    /// Parse the process arguments.
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn parse_or<T: std::str::FromStr>(&self, name: &str, default: T) -> T
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(name) {
+            None => default,
+            Some(raw) => raw
+                .parse()
+                .unwrap_or_else(|e| panic!("--{name} {raw:?}: {e}")),
+        }
+    }
+
+    /// Comma-separated list of T, e.g. `--ms 500,1000,5000`.
+    pub fn parse_list<T: std::str::FromStr>(&self, name: &str, default: &[T]) -> Vec<T>
+    where
+        T: Clone,
+        T::Err: std::fmt::Display,
+    {
+        match self.get(name) {
+            None => default.to_vec(),
+            Some(raw) => raw
+                .split(',')
+                .filter(|s| !s.is_empty())
+                .map(|s| {
+                    s.parse()
+                        .unwrap_or_else(|e| panic!("--{name} item {s:?}: {e}"))
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str]) -> Args {
+        Args::parse(args.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn key_value_both_styles() {
+        let a = parse(&["--k", "6", "--m=5000"]);
+        assert_eq!(a.parse_or("k", 0usize), 6);
+        assert_eq!(a.parse_or("m", 0usize), 5000);
+    }
+
+    #[test]
+    fn flags_and_positional() {
+        let a = parse(&["quickstart", "--verbose", "--seed", "3"]);
+        assert_eq!(a.positional(), &["quickstart".to_string()]);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+        assert_eq!(a.parse_or("seed", 0u64), 3);
+    }
+
+    #[test]
+    fn defaults_used_when_missing() {
+        let a = parse(&[]);
+        assert_eq!(a.parse_or("s", 2000usize), 2000);
+        assert_eq!(a.str_or("dataset", "sbm"), "sbm");
+    }
+
+    #[test]
+    fn list_parsing() {
+        let a = parse(&["--ms", "100,500,1000"]);
+        assert_eq!(a.parse_list("ms", &[5000usize]), vec![100, 500, 1000]);
+        assert_eq!(a.parse_list("ks", &[6usize]), vec![6]);
+    }
+
+    #[test]
+    fn flag_followed_by_flag_is_flag() {
+        let a = parse(&["--fast", "--k", "7"]);
+        assert!(a.flag("fast"));
+        assert_eq!(a.parse_or("k", 0usize), 7);
+    }
+}

@@ -1,0 +1,16 @@
+//! Shared infrastructure: PRNG, property-test harness, CLI parsing,
+//! timing/stats, and a tiny JSON writer. All hand-rolled: the offline
+//! build environment only ships the `xla` crate's dependency closure
+//! (DESIGN.md §6), so `rand` / `clap` / `proptest` / `serde` are replaced
+//! by these modules.
+
+pub mod check;
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod timer;
+
+pub use cli::Args;
+pub use json::Json;
+pub use rng::Rng;
+pub use timer::{bench, Stats, Timer};

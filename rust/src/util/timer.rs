@@ -1,0 +1,157 @@
+//! Timing helpers for the bench harness and pipeline metrics.
+
+use std::time::{Duration, Instant};
+
+/// A simple scoped stopwatch.
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Timer { start: Instant::now() }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+}
+
+/// Online accumulator for latency statistics (count / mean / min / max /
+/// simple percentiles from a bounded reservoir).
+#[derive(Debug, Clone)]
+pub struct Stats {
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+    reservoir: Vec<f64>,
+    cap: usize,
+    seen: u64,
+}
+
+impl Stats {
+    pub fn new() -> Self {
+        Stats {
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+            reservoir: Vec::new(),
+            cap: 4096,
+            seen: 0,
+        }
+    }
+
+    pub fn record(&mut self, secs: f64) {
+        self.count += 1;
+        self.sum += secs;
+        self.min = self.min.min(secs);
+        self.max = self.max.max(secs);
+        self.seen += 1;
+        if self.reservoir.len() < self.cap {
+            self.reservoir.push(secs);
+        } else {
+            // Vitter's algorithm R with a cheap deterministic hash of seen.
+            let mut h = self.seen.wrapping_mul(0x9E3779B97F4A7C15);
+            h ^= h >> 29;
+            let j = (h % self.seen) as usize;
+            if j < self.cap {
+                self.reservoir[j] = secs;
+            }
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 { 0.0 } else { self.sum / self.count as f64 }
+    }
+
+    pub fn min(&self) -> f64 {
+        if self.count == 0 { 0.0 } else { self.min }
+    }
+
+    pub fn max(&self) -> f64 {
+        if self.count == 0 { 0.0 } else { self.max }
+    }
+
+    pub fn total(&self) -> f64 {
+        self.sum
+    }
+
+    /// Approximate percentile in [0, 100] from the reservoir.
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.reservoir.is_empty() {
+            return 0.0;
+        }
+        let mut xs = self.reservoir.clone();
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let idx = ((p / 100.0) * (xs.len() - 1) as f64).round() as usize;
+        xs[idx.min(xs.len() - 1)]
+    }
+}
+
+impl Default for Stats {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Measure `f` with warmup, returning per-iteration seconds (median of
+/// `runs`). This is the core of the offline bench harness (no criterion).
+pub fn bench<F: FnMut()>(warmup: u32, runs: u32, mut f: F) -> f64 {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times: Vec<f64> = (0..runs)
+        .map(|_| {
+            let t = Instant::now();
+            f();
+            t.elapsed().as_secs_f64()
+        })
+        .collect();
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    times[times.len() / 2]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_basic() {
+        let mut s = Stats::new();
+        for x in [1.0, 2.0, 3.0] {
+            s.record(x);
+        }
+        assert_eq!(s.count(), 3);
+        assert!((s.mean() - 2.0).abs() < 1e-12);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 3.0);
+    }
+
+    #[test]
+    fn stats_percentile_ordering() {
+        let mut s = Stats::new();
+        for i in 0..100 {
+            s.record(i as f64);
+        }
+        assert!(s.percentile(10.0) <= s.percentile(50.0));
+        assert!(s.percentile(50.0) <= s.percentile(90.0));
+    }
+
+    #[test]
+    fn bench_returns_positive() {
+        let t = bench(1, 3, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(t >= 0.0);
+    }
+}

@@ -1,0 +1,218 @@
+//! Integration tests: the full system composed end to end.
+//!
+//! These exercise real multi-module flows (dataset -> pipeline ->
+//! classifier; runtime + gnn over real artifacts; experiments harness)
+//! rather than per-module units. PJRT-dependent tests skip cleanly when
+//! `make artifacts` has not run.
+
+use graphlet_rf::classify::{train_and_eval, TrainConfig};
+use graphlet_rf::coordinator::{embed_dataset, EngineMode, GsaConfig};
+use graphlet_rf::data::Dataset;
+use graphlet_rf::features::Variant;
+use graphlet_rf::gen::{DdLikeConfig, RedditLikeConfig, SbmConfig};
+use graphlet_rf::iso::GraphletRegistry;
+use graphlet_rf::mmd::{embedding_sq_distance, theorem1_bound};
+use graphlet_rf::runtime::{artifacts_dir, Engine};
+use graphlet_rf::sample::sampler_by_name;
+use graphlet_rf::util::Rng;
+
+fn engine() -> Option<Engine> {
+    let dir = artifacts_dir();
+    if dir.join("manifest.txt").exists() {
+        Some(Engine::new(&dir).expect("engine"))
+    } else {
+        eprintln!("skipping PJRT-dependent integration test (no artifacts)");
+        None
+    }
+}
+
+/// Full GSA-phi_OPU flow on an easy SBM task must reach high accuracy —
+/// through the real PJRT artifact path when available.
+#[test]
+fn end_to_end_sbm_classification() {
+    let engine = engine();
+    let ds = SbmConfig { per_class: 25, r: 2.5, ..Default::default() }
+        .generate(&mut Rng::new(42));
+    let cfg = GsaConfig {
+        k: 6,
+        s: 500,
+        m: 1000,
+        batch: 256,
+        engine: if engine.is_some() { EngineMode::Pjrt } else { EngineMode::CpuInline },
+        seed: 7,
+        ..Default::default()
+    };
+    let (emb, metrics) = embed_dataset(&ds, &cfg, engine.as_ref()).unwrap();
+    assert_eq!(metrics.samples, ds.len() * cfg.s);
+    let split = ds.split(0.8, &mut Rng::new(1));
+    let acc = train_and_eval(&emb, &ds.labels, cfg.m, &split.train, &split.test,
+                             &TrainConfig::default());
+    assert!(acc >= 0.9, "end-to-end accuracy {acc}");
+}
+
+/// The three engine modes must agree numerically on the same seed.
+#[test]
+fn engine_modes_numerically_consistent() {
+    let ds = SbmConfig { per_class: 4, r: 1.5, ..Default::default() }
+        .generate(&mut Rng::new(9));
+    let mk = |mode| GsaConfig {
+        k: 3,
+        s: 200,
+        m: 64,
+        batch: 32,
+        engine: mode,
+        seed: 3,
+        ..Default::default()
+    };
+    let (cpu, _) = embed_dataset(&ds, &mk(EngineMode::Cpu), None).unwrap();
+    let (inline, _) = embed_dataset(&ds, &mk(EngineMode::CpuInline), None).unwrap();
+    for (a, b) in cpu.iter().zip(&inline) {
+        assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+    }
+    if let Some(engine) = engine() {
+        let (pjrt, _) = embed_dataset(&ds, &mk(EngineMode::Pjrt), Some(&engine)).unwrap();
+        for (a, b) in cpu.iter().zip(&pjrt) {
+            assert!((a - b).abs() < 2e-3, "{a} vs {b}");
+        }
+    }
+}
+
+/// GSA with the Gs+eig variant composes the Jacobi eigensolver with the
+/// gaussian artifact (d = k) end to end.
+#[test]
+fn gauss_eig_end_to_end() {
+    let engine = engine();
+    let ds = SbmConfig { per_class: 5, r: 2.0, ..Default::default() }
+        .generate(&mut Rng::new(10));
+    let cfg = GsaConfig {
+        k: 6,
+        s: 300,
+        m: 500,
+        batch: 256,
+        variant: Variant::GaussEig,
+        sigma: 0.5,
+        engine: if engine.is_some() { EngineMode::Pjrt } else { EngineMode::CpuInline },
+        seed: 11,
+        ..Default::default()
+    };
+    let (emb, _) = embed_dataset(&ds, &cfg, engine.as_ref()).unwrap();
+    assert_eq!(emb.len(), ds.len() * cfg.m);
+    assert!(emb.iter().all(|v| v.is_finite()));
+}
+
+/// Synthetic real-data substitutes run through the whole pipeline with
+/// variable graph sizes (CSR path).
+#[test]
+fn real_data_substitutes_pipeline() {
+    for ds in [
+        DdLikeConfig { per_class: 8, ..Default::default() }.generate(&mut Rng::new(2)),
+        RedditLikeConfig { per_class: 8, ..Default::default() }.generate(&mut Rng::new(3)),
+    ] {
+        let cfg = GsaConfig {
+            k: 7,
+            s: 200,
+            m: 100,
+            batch: 64,
+            engine: EngineMode::CpuInline,
+            seed: 4,
+            ..Default::default()
+        };
+        let (emb, metrics) = embed_dataset(&ds, &cfg, None).unwrap();
+        assert_eq!(metrics.graphs, 16);
+        assert!(emb.iter().all(|v| v.is_finite()), "{}", ds.name);
+    }
+}
+
+/// phi_match and phi_OPU must see the SAME subgraph distribution: the
+/// sampled graphlet edge-count histogram matches between the kernelgk
+/// path and a manual sampler run with the same seed discipline.
+#[test]
+fn samplers_shared_across_paths() {
+    let ds = Dataset::new(
+        "one",
+        vec![SbmConfig::default().sample_graph(1, &mut Rng::new(5))],
+        vec![1],
+    );
+    let sampler = sampler_by_name("rw");
+    let mut reg = GraphletRegistry::new();
+    let mut rng = Rng::new(77);
+    let spec = graphlet_rf::kernelgk::k_spectrum(
+        &ds.graphs[0], 5, 400, sampler.as_ref(), &mut reg, &mut rng,
+    );
+    let total: f32 = spec.iter().map(|&(_, v)| v).sum();
+    assert!((total - 1.0).abs() < 1e-6);
+    // Same seed -> same sample stream -> identical spectrum.
+    let mut reg2 = GraphletRegistry::new();
+    let mut rng2 = Rng::new(77);
+    let spec2 = graphlet_rf::kernelgk::k_spectrum(
+        &ds.graphs[0], 5, 400, sampler.as_ref(), &mut reg2, &mut rng2,
+    );
+    assert_eq!(spec, spec2);
+}
+
+/// Theorem 1, integrated: embedding distances from the REAL pipeline
+/// concentrate within the bound (single trial at a forgiving operating
+/// point; the statistical sweep lives in examples/thm1_concentration.rs).
+#[test]
+fn theorem1_bound_holds_through_pipeline() {
+    let cfg = SbmConfig { r: 2.0, ..Default::default() };
+    let mut rng = Rng::new(21);
+    let ga = cfg.sample_graph(0, &mut rng);
+    let gb = cfg.sample_graph(1, &mut rng);
+    let ds = Dataset::new("pair", vec![ga, gb], vec![0, 1]);
+    let emb_cfg = |m: usize, s: usize, seed: u64| GsaConfig {
+        k: 3,
+        s,
+        m,
+        batch: 256,
+        variant: Variant::Gauss,
+        sigma: 1.0,
+        sampler: "uniform".into(),
+        engine: EngineMode::CpuInline,
+        seed,
+        ..Default::default()
+    };
+    // Reference at large (m, s).
+    let (big, _) = embed_dataset(&ds, &emb_cfg(8000, 20000, 1), None).unwrap();
+    let mmd_ref = embedding_sq_distance(&big[..8000], &big[8000..]);
+    // Operating point.
+    let (emb, _) = embed_dataset(&ds, &emb_cfg(1000, 2000, 2), None).unwrap();
+    let d = embedding_sq_distance(&emb[..1000], &emb[1000..]);
+    let bound = theorem1_bound(1000, 2000, 0.05);
+    assert!(
+        (d - mmd_ref).abs() <= bound,
+        "deviation {} exceeds bound {bound}",
+        (d - mmd_ref).abs()
+    );
+}
+
+/// GIN baseline trains through the artifact and beats chance on a
+/// degree-separable task (pins rust<->L2 wiring end to end).
+#[test]
+fn gin_end_to_end() {
+    let Some(engine) = engine() else { return };
+    let mut rng = Rng::new(6);
+    let mut graphs = Vec::new();
+    let mut labels = Vec::new();
+    for i in 0..40usize {
+        let class = (i % 2) as u8;
+        let p = if class == 0 { 0.05 } else { 0.4 };
+        let mut g = graphlet_rf::graph::DenseGraph::new(60);
+        for a in 0..60 {
+            for b in (a + 1)..60 {
+                if rng.bool(p) {
+                    g.add_edge(a, b);
+                }
+            }
+        }
+        graphs.push(graphlet_rf::graph::AnyGraph::Dense(g));
+        labels.push(class);
+    }
+    let ds = Dataset::new("density", graphs, labels);
+    let split = ds.split(0.8, &mut Rng::new(7));
+    let cfg = graphlet_rf::gnn::GinConfig { steps: 300, seed: 1, log_every: 30 };
+    let (acc, curve) = graphlet_rf::gnn::GinModel::train_and_eval(&engine, &ds, &split, &cfg)
+        .unwrap();
+    assert!(curve.last().unwrap().1 < curve.first().unwrap().1);
+    assert!(acc > 0.75, "acc={acc}");
+}

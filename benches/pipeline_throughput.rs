@@ -1,7 +1,10 @@
 //! Bench: end-to-end coordinator throughput (samples/second through the
 //! full sample -> batch -> feature -> accumulate pipeline), across engine
-//! modes and batch sizes. This is the L3 §Perf driver — EXPERIMENTS.md
-//! quotes its numbers.
+//! modes, batch sizes, and — the scaling axis — feature-engine shard
+//! counts. This is the L3 §Perf driver — EXPERIMENTS.md quotes its
+//! numbers; the shard sweep is the headline: with enough sampler
+//! workers, `shards=4` must out-run `shards=1` on the CPU engine because
+//! the single feature thread is the unsharded pipeline's bottleneck.
 
 mod bench_harness;
 
@@ -72,6 +75,46 @@ fn bench_fused_vs_streaming(engine: &Engine) {
     }
 }
 
+/// The shard-sweep axis: same workload, growing feature-shard counts.
+/// Prints the speedup of each shard count over shards=1.
+fn bench_shard_sweep(ds: &graphlet_rf::data::Dataset, engine: Option<&Engine>) {
+    println!("# shard sweep (m=2000, s=1000, workers=8)");
+    for (mode, name) in [(EngineMode::Cpu, "cpu"), (EngineMode::Pjrt, "pjrt")] {
+        if mode == EngineMode::Pjrt && engine.is_none() {
+            eprintln!("skipping pjrt shard sweep (no artifacts)");
+            continue;
+        }
+        let mut t1 = None;
+        for shards in [1usize, 2, 4] {
+            let cfg = GsaConfig {
+                k: 6,
+                s: 1000,
+                m: 2000,
+                batch: 256,
+                variant: Variant::Opu,
+                engine: mode,
+                workers: 8,
+                shards,
+                seed: 1,
+                ..Default::default()
+            };
+            let samples = ds.len() * cfg.s;
+            let t = bench_case("pipeline", &format!("{name}_shards{shards}"), 1, 3, || {
+                let (emb, _) = embed_dataset(ds, &cfg, engine).unwrap();
+                std::hint::black_box(emb);
+            });
+            if shards == 1 {
+                t1 = Some(t);
+            }
+            println!(
+                "  -> {name} shards={shards}: {:.0} samples/s ({:.2}x vs shards=1)",
+                samples as f64 / t,
+                t1.unwrap_or(t) / t
+            );
+        }
+    }
+}
+
 fn main() {
     let ds = SbmConfig { per_class: 10, r: 1.2, ..Default::default() }
         .generate(&mut Rng::new(3));
@@ -79,6 +122,7 @@ fn main() {
     if let Some(e) = &engine {
         bench_fused_vs_streaming(e);
     }
+    bench_shard_sweep(&ds, engine.as_ref());
     let s = 1000usize;
 
     for (mode, name) in [

@@ -47,13 +47,14 @@ fn main() -> Result<()> {
         k: args.parse_or("k", 6usize),
         s: args.parse_or("s", 2000usize),
         m: args.parse_or("m", 5000usize),
+        shards: args.parse_or("shards", 1usize).max(1),
         engine: if engine.is_some() { EngineMode::Pjrt } else { EngineMode::CpuInline },
         seed,
         ..Default::default()
     };
     println!(
-        "GSA-phi_OPU: k={} s={} m={} sampler={} batch={}",
-        cfg.k, cfg.s, cfg.m, cfg.sampler, cfg.batch
+        "GSA-phi_OPU: k={} s={} m={} sampler={} batch={} shards={}",
+        cfg.k, cfg.s, cfg.m, cfg.sampler, cfg.batch, cfg.shards
     );
     let (emb, metrics) = embed_dataset(&ds, &cfg, engine.as_ref())?;
     println!("pipeline: {}", metrics.report());

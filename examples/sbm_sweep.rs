@@ -23,7 +23,7 @@ fn main() -> Result<()> {
 
     let engine = Engine::new(&artifacts_dir()).ok();
     let mut ctx = ExpContext::new(engine, std::path::PathBuf::from(args.str_or("out", "results")));
-    if let Some(mode) = args.get("engine").map(EngineMode::parse) {
+    if let Some(mode) = args.get("engine").map(EngineMode::parse).transpose()? {
         ctx.engine_mode = Some(mode);
     }
 

@@ -1,4 +1,12 @@
 //! Pipeline metrics: what the coordinator reports after an embedding run.
+//!
+//! With the sharded executor each feature shard accumulates its own
+//! [`PipelineMetrics`] locally (no cross-thread contention on the hot
+//! path); the coordinator folds them together with [`merge_shard`] at
+//! join time and keeps the per-shard feature busy-times around so load
+//! imbalance is visible in the report.
+//!
+//! [`merge_shard`]: PipelineMetrics::merge_shard
 
 use crate::util::Stats;
 
@@ -9,18 +17,22 @@ pub struct PipelineMetrics {
     pub graphs: usize,
     /// Total subgraph samples drawn.
     pub samples: usize,
-    /// Batches executed by the feature engine.
+    /// Batches executed by the feature engines.
     pub batches: usize,
-    /// Rows that were padding (partial final batch).
+    /// Rows that were padding (partial final batches).
     pub padded_rows: usize,
     /// Wall-clock of the whole run (seconds).
     pub wall_secs: f64,
     /// Cumulative sampler-thread busy time (seconds, summed over workers).
     pub sample_secs: f64,
-    /// Feature-engine execution time (seconds).
+    /// Feature-engine execution time (seconds, summed over shards).
     pub feature_secs: f64,
-    /// Per-batch feature latency.
+    /// Per-batch feature latency (merged over shards).
     pub batch_latency: Stats,
+    /// Feature-engine shard count of the run (1 = unsharded).
+    pub shards: usize,
+    /// Per-shard feature busy time, indexed by shard id (merge order).
+    pub shard_feature_secs: Vec<f64>,
 }
 
 impl PipelineMetrics {
@@ -33,11 +45,40 @@ impl PipelineMetrics {
         }
     }
 
+    /// Fold one shard's locally-accumulated metrics into the run total.
+    /// Counter fields add; `shard_feature_secs` records the shard's own
+    /// feature time so imbalance stays observable after the merge.
+    pub fn merge_shard(&mut self, shard: PipelineMetrics) {
+        self.samples += shard.samples;
+        self.batches += shard.batches;
+        self.padded_rows += shard.padded_rows;
+        self.sample_secs += shard.sample_secs;
+        self.feature_secs += shard.feature_secs;
+        self.batch_latency.merge(&shard.batch_latency);
+        self.shard_feature_secs.push(shard.feature_secs);
+    }
+
+    /// Max/mean ratio of per-shard feature busy time (1.0 = perfectly
+    /// balanced; meaningful only when `shards > 1`).
+    pub fn shard_imbalance(&self) -> f64 {
+        if self.shard_feature_secs.len() < 2 {
+            return 1.0;
+        }
+        let max = self.shard_feature_secs.iter().cloned().fold(0.0f64, f64::max);
+        let mean = self.shard_feature_secs.iter().sum::<f64>()
+            / self.shard_feature_secs.len() as f64;
+        if mean > 0.0 {
+            max / mean
+        } else {
+            1.0
+        }
+    }
+
     pub fn report(&self) -> String {
-        format!(
+        let mut out = format!(
             "graphs={} samples={} batches={} padded_rows={} wall={:.2}s \
              sample_busy={:.2}s feature={:.2}s throughput={:.0} samples/s \
-             batch_p50={:.2}ms p95={:.2}ms",
+             batch_p50={:.2}ms p95={:.2}ms shards={}",
             self.graphs,
             self.samples,
             self.batches,
@@ -48,7 +89,12 @@ impl PipelineMetrics {
             self.samples_per_sec(),
             self.batch_latency.percentile(50.0) * 1e3,
             self.batch_latency.percentile(95.0) * 1e3,
-        )
+            self.shards.max(1),
+        );
+        if self.shard_feature_secs.len() > 1 {
+            out.push_str(&format!(" shard_imbalance={:.2}", self.shard_imbalance()));
+        }
+        out
     }
 }
 
@@ -67,11 +113,37 @@ mod tests {
         let r = m.report();
         assert!(r.contains("graphs=10"), "{r}");
         assert!(r.contains("500 samples/s"), "{r}");
+        assert!(r.contains("shards=1"), "{r}");
     }
 
     #[test]
     fn zero_wall_clock_safe() {
         let m = PipelineMetrics::default();
         assert_eq!(m.samples_per_sec(), 0.0);
+    }
+
+    #[test]
+    fn merge_shard_adds_counters_and_tracks_imbalance() {
+        let mut total = PipelineMetrics::default();
+        total.shards = 2;
+        let mut a = PipelineMetrics::default();
+        a.samples = 300;
+        a.batches = 3;
+        a.feature_secs = 1.0;
+        a.batch_latency.record(0.01);
+        let mut b = PipelineMetrics::default();
+        b.samples = 200;
+        b.batches = 2;
+        b.feature_secs = 3.0;
+        total.merge_shard(a);
+        total.merge_shard(b);
+        assert_eq!(total.samples, 500);
+        assert_eq!(total.batches, 5);
+        assert_eq!(total.feature_secs, 4.0);
+        assert_eq!(total.shard_feature_secs, vec![1.0, 3.0]);
+        assert!((total.shard_imbalance() - 1.5).abs() < 1e-12);
+        let r = total.report();
+        assert!(r.contains("shards=2"), "{r}");
+        assert!(r.contains("shard_imbalance=1.50"), "{r}");
     }
 }

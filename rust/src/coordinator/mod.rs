@@ -1,14 +1,21 @@
-//! The GSA-phi coordinator: dataset -> sampler workers -> dynamic batcher
-//! -> feature engine -> per-graph averaging -> embeddings.
+//! The GSA-phi coordinator: dataset -> sampler workers -> per-shard
+//! batchers -> N feature-engine shards -> merge -> per-graph averaging
+//! -> embeddings.
 //!
 //! This is the L3 "system" of the reproduction (DESIGN.md §3): a
 //! multi-threaded dataflow with bounded channels for backpressure.
-//! Sampler workers (std::thread, seeded independently via `Rng::fork`)
-//! draw subgraphs and pack their feature-map inputs into *cross-graph*
-//! batches of exactly the artifact's batch size; the feature engine —
-//! which owns the PJRT handles, confined to one thread because they are
-//! not `Sync` — executes batches as they arrive and scatters feature rows
-//! into per-graph accumulators. Python never runs here.
+//! Sampler workers (std::thread, seeded per *graph* so scheduling never
+//! changes results) draw subgraphs and pack their feature-map inputs
+//! into cross-graph batches of exactly the artifact's batch size — one
+//! open batch per feature shard, routed by the deterministic assignment
+//! `graph g -> shard g % shards`. Each shard owns its own executor (a
+//! PJRT engine + [`crate::runtime::RfExecutor`], or a CPU map clone) and
+//! its own per-graph accumulators; the merge stage copies the disjoint
+//! per-shard results into the output matrix, so embeddings are **bitwise
+//! identical for every shard and worker count**. PJRT handles are not
+//! `Sync`, which is why each shard thread constructs its own engine
+//! (from a shared parsed manifest) rather than sharing one. Python never
+//! runs here.
 
 pub mod metrics;
 pub mod pipeline;

@@ -1,30 +1,44 @@
-//! The embedding pipeline (Alg. 1 of the paper, as a dataflow system).
+//! The embedding pipeline (Alg. 1 of the paper, as a sharded dataflow
+//! system).
 //!
 //! ```text
-//!   graphs ──► sampler workers ──► bounded channel ──► feature engine
-//!              (std::thread x W)    (backpressure)      (PJRT or CPU,
-//!               sample s subgraphs                       single thread)
-//!               pack cross-graph                              │
-//!               batches of B rows                             ▼
-//!                                                   per-graph accumulators
-//!                                                    mean over s  ──► (n, m)
+//!   graphs ──► sampler workers ──► per-shard bounded channels ──► feature shards
+//!              (std::thread x W)    (graph g → shard g mod N)      (N x RfExecutor
+//!               sample s subgraphs   (backpressure per shard)       or CPU map, one
+//!               pack per-shard                                      thread each)
+//!               batches of B rows                                        │
+//!                                                                        ▼
+//!                                                          per-shard partial sums
+//!                                                                        │ merge
+//!                                                                        ▼ (copy)
+//!                                                     per-graph mean over s ──► (n, m)
 //! ```
 //!
 //! Design notes:
-//! - **Cross-graph batching**: a batch carries `(graph, rows)` segments so
-//!   every executed batch is exactly the artifact's compiled size B
-//!   (except the final flush). Padding only ever happens once per run.
-//! - **Backpressure**: the channel holds at most `queue_cap` batches;
-//!   samplers block when the feature engine falls behind, bounding memory
-//!   at O(queue_cap * B * d).
-//! - **Determinism**: workers fork seeded RNG streams per *graph* (not per
-//!   worker), so results are independent of thread scheduling.
+//! - **Sharding**: `cfg.shards` feature engines run in parallel, each
+//!   owning its own executor ([`RfExecutor`] + its own PJRT engine, or a
+//!   [`CpuFeatureMap`] clone). Graph `g` is assigned to shard
+//!   `g % shards` — a pure function of the graph index — so each graph's
+//!   accumulator lives in exactly one shard and the merge is a plain
+//!   copy into the output matrix, never a float re-reduction.
+//! - **Determinism**: workers fork seeded RNG streams per *graph* (not
+//!   per worker), every graph is sampled by exactly one worker in sample
+//!   order, and each shard accumulates its graphs' rows in that same
+//!   order. Embeddings are therefore **bitwise identical** for any
+//!   worker count and any shard count (tests pin this).
+//! - **Cross-graph batching**: a batch carries `(graph, rows)` segments
+//!   so executed batches have exactly the artifact's compiled size B.
+//!   Workers keep one open batch per shard; padding happens at most
+//!   `workers x shards` times per run (the final flushes).
+//! - **Backpressure**: each shard channel holds at most `queue_cap`
+//!   batches; samplers block when a feature shard falls behind, bounding
+//!   memory at O(shards * queue_cap * B * d).
 
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::mpsc::sync_channel;
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::sync::Arc;
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use super::metrics::PipelineMetrics;
 use crate::data::Dataset;
@@ -38,7 +52,7 @@ use crate::util::{Rng, Timer};
 pub enum EngineMode {
     /// AOT artifacts over PJRT (the paper's OPU stand-in; default).
     Pjrt,
-    /// Rust CPU fallback on the feature-engine thread.
+    /// Rust CPU fallback on the feature-engine thread(s).
     Cpu,
     /// CPU features computed inside the sampler workers; only per-graph
     /// sums cross the channel. Perf ablation (EXPERIMENTS.md §Perf).
@@ -46,13 +60,15 @@ pub enum EngineMode {
 }
 
 impl EngineMode {
-    pub fn parse(s: &str) -> EngineMode {
-        match s {
+    /// Parse an engine name; bad input is an `Err`, not a panic, so CLI
+    /// callers can fail gracefully.
+    pub fn parse(s: &str) -> Result<EngineMode> {
+        Ok(match s {
             "pjrt" => EngineMode::Pjrt,
             "cpu" => EngineMode::Cpu,
             "cpu-inline" => EngineMode::CpuInline,
-            other => panic!("unknown engine {other:?} (pjrt|cpu|cpu-inline)"),
-        }
+            other => bail!("unknown engine {other:?} (expected pjrt|cpu|cpu-inline)"),
+        })
     }
 }
 
@@ -76,8 +92,12 @@ pub struct GsaConfig {
     pub batch: usize,
     /// Sampler worker threads.
     pub workers: usize,
-    /// Bounded queue capacity (batches in flight).
+    /// Bounded queue capacity per shard (batches in flight).
     pub queue_cap: usize,
+    /// Feature-engine shards. Graph `g` maps to shard `g % shards`;
+    /// results are bitwise independent of the count. In PJRT mode each
+    /// shard constructs its own engine over the same artifacts.
+    pub shards: usize,
     pub engine: EngineMode,
     pub seed: u64,
 }
@@ -95,6 +115,7 @@ impl Default for GsaConfig {
             batch: 256,
             workers: std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4).min(8),
             queue_cap: 8,
+            shards: 1,
             engine: EngineMode::Pjrt,
             seed: 0,
         }
@@ -108,7 +129,7 @@ impl GsaConfig {
 }
 
 /// A batch in flight: row-major input rows + the (graph, rows) segments
-/// they belong to.
+/// they belong to. All segments of one batch target the same shard.
 struct Batch {
     data: Vec<f32>,
     segments: Vec<(usize, usize)>,
@@ -130,8 +151,112 @@ enum Msg {
     Sum(GraphSum),
 }
 
+/// One open cross-graph batch a worker is filling for one shard.
+struct Packer {
+    data: Vec<f32>,
+    rows: usize,
+    segments: Vec<(usize, usize)>,
+    sample_secs: f64,
+}
+
+impl Packer {
+    fn new(batch: usize, d: usize) -> Packer {
+        Packer { data: vec![0.0f32; batch * d], rows: 0, segments: Vec::new(), sample_secs: 0.0 }
+    }
+}
+
+/// What one feature shard hands back at join time.
+struct ShardResult {
+    /// Row-major (n_local, m) partial sums; local slot `l` holds graph
+    /// `l * shards + shard`.
+    sums: Vec<f32>,
+    counts: Vec<usize>,
+    metrics: PipelineMetrics,
+}
+
+/// Number of graphs owned by `shard` out of `n` under round-robin.
+fn shard_len(n: usize, shard: usize, shards: usize) -> usize {
+    n / shards + usize::from(shard < n % shards)
+}
+
+/// Drain one shard's channel: execute batches on this shard's engine,
+/// accumulate per-graph sums (local slot = graph / shards).
+fn run_feature_shard(
+    rx: Receiver<Msg>,
+    pjrt: Option<(&Engine, &RfExecutor)>,
+    cpu_map: Option<&CpuFeatureMap>,
+    cfg: &GsaConfig,
+    n: usize,
+    shard: usize,
+    shards: usize,
+) -> Result<ShardResult> {
+    let m = cfg.m;
+    let n_local = shard_len(n, shard, shards);
+    let mut sums = vec![0.0f32; n_local * m];
+    let mut counts = vec![0usize; n_local];
+    let mut metrics = PipelineMetrics::default();
+    let mut cpu_out = vec![0.0f32; cfg.batch * m];
+    for msg in rx {
+        match msg {
+            Msg::Sum(gs) => {
+                debug_assert_eq!(gs.graph % shards, shard);
+                let local = gs.graph / shards;
+                metrics.samples += gs.samples;
+                metrics.sample_secs += gs.sample_secs;
+                metrics.batches += 1;
+                counts[local] += gs.samples;
+                let row = &mut sums[local * m..(local + 1) * m];
+                for (acc, v) in row.iter_mut().zip(gs.sum) {
+                    *acc += v;
+                }
+            }
+            Msg::Batch(b) => {
+                let t = Timer::start();
+                let feats: &[f32] = match (pjrt, cpu_map) {
+                    (Some((engine, exec)), _) => {
+                        metrics.padded_rows += cfg.batch - b.rows.min(cfg.batch);
+                        cpu_out = exec.map(engine, &b.data, b.rows)?;
+                        &cpu_out
+                    }
+                    (None, Some(map)) => {
+                        cpu_out.resize(b.rows * m, 0.0);
+                        map.map_batch(&b.data, b.rows, &mut cpu_out[..b.rows * m]);
+                        &cpu_out[..b.rows * m]
+                    }
+                    _ => unreachable!("batch message in inline mode"),
+                };
+                let dt = t.elapsed_secs();
+                metrics.feature_secs += dt;
+                metrics.batch_latency.record(dt);
+                metrics.batches += 1;
+                metrics.samples += b.rows;
+                metrics.sample_secs += b.sample_secs;
+                // Scatter rows into per-graph accumulators (sample order
+                // within each graph — the determinism invariant).
+                let mut row0 = 0usize;
+                for (g_idx, rows) in b.segments {
+                    debug_assert_eq!(g_idx % shards, shard);
+                    let local = g_idx / shards;
+                    counts[local] += rows;
+                    let acc = &mut sums[local * m..(local + 1) * m];
+                    for r in row0..row0 + rows {
+                        let frow = &feats[r * m..(r + 1) * m];
+                        for (a, &v) in acc.iter_mut().zip(frow) {
+                            *a += v;
+                        }
+                    }
+                    row0 += rows;
+                }
+            }
+        }
+    }
+    Ok(ShardResult { sums, counts, metrics })
+}
+
 /// Embed every graph of `ds`: returns row-major (n, m) embeddings and the
-/// run metrics. `engine` must be Some for [`EngineMode::Pjrt`].
+/// run metrics. `engine` must be Some for [`EngineMode::Pjrt`]; with
+/// `shards > 1` it additionally serves as the template (artifacts dir +
+/// parsed manifest) from which each shard builds its own engine.
 pub fn embed_dataset(
     ds: &Dataset,
     cfg: &GsaConfig,
@@ -139,25 +264,46 @@ pub fn embed_dataset(
 ) -> Result<(Vec<f32>, PipelineMetrics)> {
     let n = ds.len();
     let d = cfg.input_dim();
+    let shards = cfg.shards.max(1);
     let wall = Timer::start();
 
     // Shared feature parameters: one draw for the whole run (the paper's
-    // W is fixed across all graphs — it's the same "device").
+    // W is fixed across all graphs — it's the same "device"). Every shard
+    // uses the same draw, so shard count cannot change the math.
     let mut seed_rng = Rng::new(cfg.seed);
     let params = RfParams::generate(cfg.variant, d, cfg.m, cfg.sigma, &mut seed_rng);
-    // Per-graph RNG seeds, independent of scheduling.
-    let graph_seeds: Vec<u64> = (0..n).map(|_| seed_rng.next_u64()).collect();
+    // Per-graph RNG seeds, independent of scheduling AND of shard count.
+    let graph_seeds: Vec<u64> = seed_rng.seed_stream(n);
+
+    if cfg.engine == EngineMode::Pjrt && engine.is_none() {
+        bail!("PJRT mode requires an Engine");
+    }
+    // Send-able spec from which spawned shards rebuild a PJRT engine:
+    // artifacts dir + the already-parsed manifest (shared artifact load).
+    let pjrt_spawn = if cfg.engine == EngineMode::Pjrt && shards > 1 {
+        let e = engine.unwrap();
+        Some((e.dir().to_path_buf(), e.manifest().clone(), cfg.impl_.clone()))
+    } else {
+        None
+    };
 
     let next_graph = Arc::new(AtomicUsize::new(0));
-    let (tx, rx) = sync_channel::<Msg>(cfg.queue_cap.max(1));
+    let mut txs: Vec<SyncSender<Msg>> = Vec::with_capacity(shards);
+    let mut rxs: Vec<Receiver<Msg>> = Vec::with_capacity(shards);
+    for _ in 0..shards {
+        let (tx, rx) = sync_channel::<Msg>(cfg.queue_cap.max(1));
+        txs.push(tx);
+        rxs.push(rx);
+    }
 
     let mut metrics = PipelineMetrics::default();
     metrics.graphs = n;
+    metrics.shards = shards;
 
     let sums = std::thread::scope(|scope| -> Result<Vec<f32>> {
         // ---- sampler workers ------------------------------------------
         for _w in 0..cfg.workers.max(1) {
-            let tx = tx.clone();
+            let worker_txs = txs.clone();
             let next = next_graph.clone();
             let params_ref = &params;
             let graph_seeds = &graph_seeds;
@@ -171,18 +317,23 @@ pub fn embed_dataset(
                 };
                 let d = cfg.input_dim();
                 let mut scratch: Vec<usize> = Vec::with_capacity(cfg.k);
-                let mut batch_data = vec![0.0f32; cfg.batch * d];
-                let mut batch_rows = 0usize;
-                let mut segments: Vec<(usize, usize)> = Vec::new();
-                let mut batch_sample_secs = 0.0f64;
-                // Inline mode scratch: feature rows for one chunk.
-                let mut feat_chunk = vec![0.0f32; if inline_map.is_some() { cfg.batch * cfg.m } else { 0 }];
+                // One open batch per shard (batch mode only).
+                let mut packers: Vec<Packer> = match inline_map {
+                    None => (0..shards).map(|_| Packer::new(cfg.batch, d)).collect(),
+                    Some(_) => Vec::new(),
+                };
+                // Inline-mode scratch: inputs + feature rows for one chunk.
+                let (mut inline_x, mut inline_feat) = match inline_map {
+                    Some(_) => (vec![0.0f32; cfg.batch * d], vec![0.0f32; cfg.batch * cfg.m]),
+                    None => (Vec::new(), Vec::new()),
+                };
                 loop {
                     let g_idx = next.fetch_add(1, Ordering::Relaxed);
                     if g_idx >= ds_ref.len() {
                         break;
                     }
                     let g = &ds_ref.graphs[g_idx];
+                    let q = g_idx % shards;
                     let mut rng = Rng::new(graph_seeds[g_idx]);
                     let mut t = Timer::start();
                     match &inline_map {
@@ -195,16 +346,17 @@ pub fn embed_dataset(
                                 for r in 0..chunk {
                                     let gl = sampler.sample(g, cfg.k, &mut rng, &mut scratch);
                                     cfg.variant
-                                        .write_input(&gl, &mut batch_data[r * d..(r + 1) * d]);
+                                        .write_input(&gl, &mut inline_x[r * d..(r + 1) * d]);
                                 }
                                 map.map_batch(
-                                    &batch_data[..chunk * d],
+                                    &inline_x[..chunk * d],
                                     chunk,
-                                    &mut feat_chunk[..chunk * cfg.m],
+                                    &mut inline_feat[..chunk * cfg.m],
                                 );
                                 for r in 0..chunk {
-                                    for (acc, &v) in
-                                        sum.iter_mut().zip(&feat_chunk[r * cfg.m..(r + 1) * cfg.m])
+                                    for (acc, &v) in sum
+                                        .iter_mut()
+                                        .zip(&inline_feat[r * cfg.m..(r + 1) * cfg.m])
                                     {
                                         *acc += v;
                                     }
@@ -217,131 +369,144 @@ pub fn embed_dataset(
                                 samples: cfg.s,
                                 sample_secs: t.elapsed_secs(),
                             };
-                            if tx.send(Msg::Sum(msg)).is_err() {
+                            if worker_txs[q].send(Msg::Sum(msg)).is_err() {
                                 return;
                             }
                         }
                         None => {
-                            // Fill cross-graph batches of exactly cfg.batch.
+                            // Fill this shard's cross-graph batch.
                             let mut remaining = cfg.s;
                             while remaining > 0 {
-                                let take = remaining.min(cfg.batch - batch_rows);
+                                let p = &mut packers[q];
+                                let take = remaining.min(cfg.batch - p.rows);
                                 for r in 0..take {
                                     let gl = sampler.sample(g, cfg.k, &mut rng, &mut scratch);
-                                    let row = batch_rows + r;
+                                    let row = p.rows + r;
                                     cfg.variant
-                                        .write_input(&gl, &mut batch_data[row * d..(row + 1) * d]);
+                                        .write_input(&gl, &mut p.data[row * d..(row + 1) * d]);
                                 }
-                                segments.push((g_idx, take));
-                                batch_rows += take;
+                                p.segments.push((g_idx, take));
+                                p.rows += take;
                                 remaining -= take;
-                                if batch_rows == cfg.batch {
-                                    batch_sample_secs += t.elapsed_secs();
-                                    t = Timer::start();
+                                if p.rows == cfg.batch {
+                                    p.sample_secs += t.elapsed_secs();
                                     let msg = Batch {
                                         data: std::mem::replace(
-                                            &mut batch_data,
+                                            &mut p.data,
                                             vec![0.0f32; cfg.batch * d],
                                         ),
-                                        segments: std::mem::take(&mut segments),
+                                        segments: std::mem::take(&mut p.segments),
                                         rows: cfg.batch,
-                                        sample_secs: std::mem::take(&mut batch_sample_secs),
+                                        sample_secs: std::mem::take(&mut p.sample_secs),
                                     };
-                                    batch_rows = 0;
-                                    if tx.send(Msg::Batch(msg)).is_err() {
+                                    p.rows = 0;
+                                    if worker_txs[q].send(Msg::Batch(msg)).is_err() {
                                         return;
                                     }
+                                    t = Timer::start();
                                 }
                             }
+                            packers[q].sample_secs += t.elapsed_secs();
                         }
                     }
                 }
-                // Flush the partial batch.
-                if batch_rows > 0 {
-                    let mut data = std::mem::take(&mut batch_data);
-                    data.truncate(batch_rows * d);
-                    let _ = tx.send(Msg::Batch(Batch {
-                        data,
-                        segments: std::mem::take(&mut segments),
-                        rows: batch_rows,
-                        sample_secs: batch_sample_secs,
-                    }));
+                // Flush the partial batches (one per shard at most).
+                for (q, p) in packers.iter_mut().enumerate() {
+                    if p.rows > 0 {
+                        let mut data = std::mem::take(&mut p.data);
+                        data.truncate(p.rows * d);
+                        let _ = worker_txs[q].send(Msg::Batch(Batch {
+                            data,
+                            segments: std::mem::take(&mut p.segments),
+                            rows: p.rows,
+                            sample_secs: p.sample_secs,
+                        }));
+                    }
                 }
             });
         }
-        drop(tx);
+        drop(txs);
 
-        // ---- feature engine (this thread; owns any PJRT handles) ------
-        let rf_exec = match cfg.engine {
-            EngineMode::Pjrt => {
-                let engine =
-                    engine.ok_or_else(|| anyhow::anyhow!("PJRT mode requires an Engine"))?;
-                Some(RfExecutor::new(engine, &cfg.impl_, &params, cfg.batch)?)
+        // ---- feature shards -------------------------------------------
+        let mut rx_iter = rxs.into_iter();
+        let (mut sums, counts) = if shards == 1 {
+            // Single shard runs on this thread: required for a borrowed
+            // PJRT engine (PJRT handles are not Sync), and it keeps the
+            // unsharded hot path identical to the pre-sharding pipeline.
+            let rx = rx_iter.next().expect("one channel");
+            let rf_exec = match cfg.engine {
+                EngineMode::Pjrt => {
+                    Some(RfExecutor::new(engine.unwrap(), &cfg.impl_, &params, cfg.batch)?)
+                }
+                _ => None,
+            };
+            let cpu_map = match cfg.engine {
+                EngineMode::Cpu => Some(CpuFeatureMap::new(params.clone())),
+                _ => None,
+            };
+            let pjrt = rf_exec.as_ref().map(|exec| (engine.unwrap(), exec));
+            let r = run_feature_shard(rx, pjrt, cpu_map.as_ref(), cfg, n, 0, 1)?;
+            metrics.merge_shard(r.metrics);
+            (r.sums, r.counts)
+        } else {
+            // One engine thread per shard; each builds its own executor.
+            let mut handles = Vec::with_capacity(shards);
+            for (q, rx) in rx_iter.enumerate() {
+                let spawn_spec = pjrt_spawn.clone();
+                let params_ref = &params;
+                let cfg_ref = cfg;
+                handles.push(scope.spawn(move || -> Result<ShardResult> {
+                    match (cfg_ref.engine, spawn_spec) {
+                        (EngineMode::Pjrt, Some((dir, manifest, impl_))) => {
+                            let shard_engine = Engine::with_manifest(&dir, manifest)?;
+                            let exec = RfExecutor::new(
+                                &shard_engine,
+                                &impl_,
+                                params_ref,
+                                cfg_ref.batch,
+                            )?;
+                            run_feature_shard(
+                                rx,
+                                Some((&shard_engine, &exec)),
+                                None,
+                                cfg_ref,
+                                n,
+                                q,
+                                shards,
+                            )
+                        }
+                        (EngineMode::Cpu, _) => {
+                            let map = CpuFeatureMap::new(params_ref.clone());
+                            run_feature_shard(rx, None, Some(&map), cfg_ref, n, q, shards)
+                        }
+                        _ => run_feature_shard(rx, None, None, cfg_ref, n, q, shards),
+                    }
+                }));
             }
-            _ => None,
-        };
-        let cpu_map = match cfg.engine {
-            EngineMode::Cpu => Some(CpuFeatureMap::new(params.clone())),
-            _ => None,
+            // ---- merge (copy: per-graph rows are disjoint) ------------
+            let mut sums = vec![0.0f32; n * cfg.m];
+            let mut counts = vec![0usize; n];
+            for (q, h) in handles.into_iter().enumerate() {
+                let r = h
+                    .join()
+                    .map_err(|_| anyhow::anyhow!("feature shard {q} panicked"))??;
+                metrics.merge_shard(r.metrics);
+                for (local, row) in r.sums.chunks_exact(cfg.m).enumerate() {
+                    let g_idx = local * shards + q;
+                    sums[g_idx * cfg.m..(g_idx + 1) * cfg.m].copy_from_slice(row);
+                    counts[g_idx] = r.counts[local];
+                }
+            }
+            (sums, counts)
         };
 
-        let mut sums = vec![0.0f32; n * cfg.m];
-        let mut counts = vec![0usize; n];
-        let mut cpu_out = vec![0.0f32; cfg.batch * cfg.m];
-        for msg in rx {
-            match msg {
-                Msg::Sum(gs) => {
-                    metrics.samples += gs.samples;
-                    metrics.sample_secs += gs.sample_secs;
-                    metrics.batches += 1;
-                    counts[gs.graph] += gs.samples;
-                    let row = &mut sums[gs.graph * cfg.m..(gs.graph + 1) * cfg.m];
-                    for (acc, v) in row.iter_mut().zip(gs.sum) {
-                        *acc += v;
-                    }
-                }
-                Msg::Batch(b) => {
-                    let t = Timer::start();
-                    let feats: &[f32] = match (&rf_exec, &cpu_map) {
-                        (Some(exec), _) => {
-                            let engine = engine.unwrap();
-                            metrics.padded_rows += cfg.batch - b.rows.min(cfg.batch);
-                            cpu_out.clear();
-                            cpu_out = exec.map(engine, &b.data, b.rows)?;
-                            &cpu_out
-                        }
-                        (None, Some(map)) => {
-                            cpu_out.resize(b.rows * cfg.m, 0.0);
-                            map.map_batch(&b.data, b.rows, &mut cpu_out[..b.rows * cfg.m]);
-                            &cpu_out[..b.rows * cfg.m]
-                        }
-                        _ => unreachable!("batch message in inline mode"),
-                    };
-                    let dt = t.elapsed_secs();
-                    metrics.feature_secs += dt;
-                    metrics.batch_latency.record(dt);
-                    metrics.batches += 1;
-                    metrics.samples += b.rows;
-                    metrics.sample_secs += b.sample_secs;
-                    // Scatter rows into per-graph accumulators.
-                    let mut row0 = 0usize;
-                    for (g_idx, rows) in b.segments {
-                        counts[g_idx] += rows;
-                        let acc = &mut sums[g_idx * cfg.m..(g_idx + 1) * cfg.m];
-                        for r in row0..row0 + rows {
-                            let frow = &feats[r * cfg.m..(r + 1) * cfg.m];
-                            for (a, &v) in acc.iter_mut().zip(frow) {
-                                *a += v;
-                            }
-                        }
-                        row0 += rows;
-                    }
-                }
-            }
-        }
-        // Mean over samples.
+        // Mean over samples (identical post-pass for every shard count).
         for g_idx in 0..n {
-            anyhow::ensure!(counts[g_idx] == cfg.s, "graph {g_idx} got {} samples", counts[g_idx]);
+            anyhow::ensure!(
+                counts[g_idx] == cfg.s,
+                "graph {g_idx} got {} samples",
+                counts[g_idx]
+            );
             let inv = 1.0 / cfg.s as f32;
             for v in &mut sums[g_idx * cfg.m..(g_idx + 1) * cfg.m] {
                 *v *= inv;
@@ -404,19 +569,98 @@ mod tests {
     }
 
     #[test]
-    fn pjrt_matches_cpu_when_artifacts_present() {
-        let dir = artifacts_dir();
-        if !dir.join("manifest.txt").exists() {
-            eprintln!("skipping: no artifacts");
-            return;
+    fn sharded_embeddings_bitwise_identical() {
+        // The tentpole invariant: embeddings are a pure function of
+        // (dataset, cfg.seed, feature math) — shard count and worker
+        // count must not move a single bit.
+        let ds = small_ds();
+        for mode in [EngineMode::Cpu, EngineMode::CpuInline] {
+            let mut ref_cfg = small_cfg(mode);
+            ref_cfg.shards = 1;
+            ref_cfg.workers = 1;
+            let (reference, _) = embed_dataset(&ds, &ref_cfg, None).unwrap();
+            for shards in [1usize, 2, 4] {
+                for workers in [1usize, 4] {
+                    let mut cfg = small_cfg(mode);
+                    cfg.shards = shards;
+                    cfg.workers = workers;
+                    let (e, m) = embed_dataset(&ds, &cfg, None).unwrap();
+                    assert_eq!(
+                        e, reference,
+                        "bitwise drift: mode={mode:?} shards={shards} workers={workers}"
+                    );
+                    assert_eq!(m.samples, 6 * 100);
+                    assert_eq!(m.shards, shards);
+                }
+            }
         }
-        let engine = Engine::new(&dir).unwrap();
+    }
+
+    #[test]
+    fn more_shards_than_graphs_is_fine() {
+        let ds = small_ds(); // 6 graphs
+        let mut cfg = small_cfg(EngineMode::Cpu);
+        cfg.shards = 8;
+        let mut ref_cfg = small_cfg(EngineMode::Cpu);
+        ref_cfg.shards = 1;
+        let (e, m) = embed_dataset(&ds, &cfg, None).unwrap();
+        let (reference, _) = embed_dataset(&ds, &ref_cfg, None).unwrap();
+        assert_eq!(e, reference);
+        assert_eq!(m.shards, 8);
+        assert_eq!(m.shard_feature_secs.len(), 8);
+    }
+
+    #[test]
+    fn shard_metrics_cover_all_samples() {
+        let ds = small_ds();
+        let mut cfg = small_cfg(EngineMode::Cpu);
+        cfg.shards = 3;
+        let (_, m) = embed_dataset(&ds, &cfg, None).unwrap();
+        assert_eq!(m.samples, 6 * 100);
+        assert_eq!(m.graphs, 6);
+        assert_eq!(m.shards, 3);
+        assert_eq!(m.shard_feature_secs.len(), 3);
+        assert!(m.batches >= 3, "each shard executes at least one batch");
+        let report = m.report();
+        assert!(report.contains("shards=3"), "{report}");
+    }
+
+    #[test]
+    fn shard_len_partitions_exactly() {
+        for n in [0usize, 1, 5, 6, 17] {
+            for shards in [1usize, 2, 3, 4, 8] {
+                let total: usize = (0..shards).map(|q| shard_len(n, q, shards)).sum();
+                assert_eq!(total, n, "n={n} shards={shards}");
+            }
+        }
+    }
+
+    #[test]
+    fn engine_mode_parse_roundtrip_and_errors() {
+        assert_eq!(EngineMode::parse("pjrt").unwrap(), EngineMode::Pjrt);
+        assert_eq!(EngineMode::parse("cpu").unwrap(), EngineMode::Cpu);
+        assert_eq!(EngineMode::parse("cpu-inline").unwrap(), EngineMode::CpuInline);
+        let err = EngineMode::parse("opu").unwrap_err().to_string();
+        assert!(err.contains("unknown engine") && err.contains("pjrt|cpu|cpu-inline"), "{err}");
+    }
+
+    #[test]
+    fn pjrt_matches_cpu_when_artifacts_present() {
+        let Some(engine) = crate::runtime::try_engine(&artifacts_dir()) else {
+            return;
+        };
         let ds = small_ds();
         let cfg = small_cfg(EngineMode::Pjrt);
         let (e_pjrt, m) = embed_dataset(&ds, &cfg, Some(&engine)).unwrap();
         let (e_cpu, _) = embed_dataset(&ds, &small_cfg(EngineMode::Cpu), None).unwrap();
         check::assert_allclose(&e_pjrt, &e_cpu, 1e-3, 1e-4);
         assert!(m.batches > 0 && m.samples == 600);
+        // Sharded PJRT: each shard builds its own engine from the shared
+        // manifest; results must still match.
+        let mut cfg_sharded = small_cfg(EngineMode::Pjrt);
+        cfg_sharded.shards = 2;
+        let (e_sharded, _) = embed_dataset(&ds, &cfg_sharded, Some(&engine)).unwrap();
+        check::assert_allclose(&e_sharded, &e_pjrt, 1e-6, 1e-6);
     }
 
     #[test]
@@ -433,13 +677,15 @@ mod tests {
     #[test]
     fn embeddings_separate_easy_classes() {
         // End-to-end sanity: r = 3 SBM should be separable from OPU
-        // embeddings with a linear classifier trained on the spot.
+        // embeddings with a linear classifier trained on the spot — and
+        // sharding must not change that.
         let ds = SbmConfig { per_class: 20, r: 3.0, ..Default::default() }
             .generate(&mut Rng::new(5));
         let mut cfg = small_cfg(EngineMode::CpuInline);
         cfg.k = 4;
         cfg.s = 300;
         cfg.m = 128;
+        cfg.shards = 2;
         let (emb, _) = embed_dataset(&ds, &cfg, None).unwrap();
         let mut rng = Rng::new(1);
         let split = ds.split(0.75, &mut rng);

@@ -13,6 +13,8 @@
 
 pub mod eig;
 
+use anyhow::{bail, Result};
+
 use crate::graph::Graphlet;
 use crate::util::Rng;
 
@@ -30,14 +32,16 @@ pub enum Variant {
 }
 
 impl Variant {
-    pub fn parse(s: &str) -> Variant {
-        match s {
+    /// Parse a variant name; bad input is an `Err`, not a panic, so CLI
+    /// callers can fail gracefully.
+    pub fn parse(s: &str) -> Result<Variant> {
+        Ok(match s {
             "opu" => Variant::Opu,
             "gauss" | "gaussian" => Variant::Gauss,
             "gauss-eig" | "eig" => Variant::GaussEig,
             "match" => Variant::Match,
-            other => panic!("unknown variant {other:?} (opu|gauss|gauss-eig|match)"),
-        }
+            other => bail!("unknown variant {other:?} (expected opu|gauss|gauss-eig|match)"),
+        })
     }
 
     pub fn name(&self) -> &'static str {
@@ -119,9 +123,24 @@ impl RfParams {
 
 /// CPU implementation of the feature maps — same math as
 /// `python/compile/kernels/ref.py`.
+///
+/// `Clone + Send + Sync` by construction (plain owned buffers): the
+/// sharded coordinator hands one clone to every feature shard (and to
+/// every sampler worker in inline mode), so the map must be free of
+/// interior mutability and thread affinity. A compile-time assertion
+/// below pins this.
+#[derive(Clone, Debug)]
 pub struct CpuFeatureMap {
     pub params: RfParams,
 }
+
+// The sharded pipeline moves CpuFeatureMap clones across threads; fail
+// the build (not the run) if that ever stops being possible.
+const _: () = {
+    const fn assert_shardable<T: Clone + Send + Sync>() {}
+    assert_shardable::<CpuFeatureMap>();
+    assert_shardable::<RfParams>();
+};
 
 impl CpuFeatureMap {
     pub fn new(params: RfParams) -> Self {
@@ -292,6 +311,96 @@ mod tests {
             .sum();
         let exact = (-dist2 / (2.0 * sigma as f64 * sigma as f64)).exp();
         assert!((dot - exact).abs() < 0.03, "{dot} vs {exact}");
+    }
+
+    #[test]
+    fn variant_parse_roundtrip_and_errors() {
+        assert_eq!(Variant::parse("opu").unwrap(), Variant::Opu);
+        assert_eq!(Variant::parse("gauss").unwrap(), Variant::Gauss);
+        assert_eq!(Variant::parse("gaussian").unwrap(), Variant::Gauss);
+        assert_eq!(Variant::parse("gauss-eig").unwrap(), Variant::GaussEig);
+        assert_eq!(Variant::parse("eig").unwrap(), Variant::GaussEig);
+        assert_eq!(Variant::parse("match").unwrap(), Variant::Match);
+        for v in [Variant::Opu, Variant::Gauss, Variant::GaussEig, Variant::Match] {
+            assert_eq!(Variant::parse(v.name()).unwrap(), v);
+        }
+        let err = Variant::parse("laser").unwrap_err().to_string();
+        assert!(err.contains("unknown variant") && err.contains("laser"), "{err}");
+        assert!(Variant::parse("").is_err());
+        assert!(Variant::parse("OPU").is_err(), "names are case-sensitive");
+    }
+
+    /// phi_OPU on a hand-computed graphlet with hand-picked parameters.
+    /// Path 0-1-2 at k=3: flat adjacency x has exactly 4 ones (entries
+    /// (0,1),(1,0),(1,2),(2,1)). With Wr = 1, Wi = 0.5 everywhere:
+    ///   Re_j = 4 + br_j,  Im_j = 2 + bi_j,
+    ///   phi_j = (Re_j^2 + Im_j^2) / sqrt(m).
+    #[test]
+    fn opu_map_matches_hand_computation_on_path_graphlet() {
+        let mut g = Graphlet::empty(3);
+        g.set_edge(0, 1);
+        g.set_edge(1, 2);
+        let (d, m) = (9usize, 2usize);
+        let params = RfParams {
+            variant: Variant::Opu,
+            d,
+            m,
+            mats: vec![vec![1.0; d * m], vec![0.5; d * m]],
+            biases: vec![vec![1.0, 0.0], vec![0.0, 2.0]],
+        };
+        let mut x = vec![0.0f32; d];
+        Variant::Opu.write_input(&g, &mut x);
+        assert_eq!(x.iter().filter(|&&v| v == 1.0).count(), 4);
+        let mut out = vec![0.0f32; m];
+        CpuFeatureMap::new(params).map_batch(&x, 1, &mut out);
+        let scale = 1.0 / (m as f32).sqrt();
+        // Feature 0: Re = 4 + 1 = 5, Im = 2 + 0 = 2 -> 29 / sqrt(2).
+        // Feature 1: Re = 4 + 0 = 4, Im = 2 + 2 = 4 -> 32 / sqrt(2).
+        check::assert_allclose(&out, &[29.0 * scale, 32.0 * scale], 1e-6, 1e-6);
+    }
+
+    /// phi_Gs on a hand-computed graphlet: the triangle at k=3 flattens
+    /// to 6 ones, so with W = 0.25 and b = 0.5 every feature is
+    /// sqrt(2/m) * cos(6 * 0.25 + 0.5) = sqrt(2/m) * cos(2).
+    #[test]
+    fn gauss_map_matches_hand_computation_on_triangle_graphlet() {
+        let mut g = Graphlet::empty(3);
+        g.set_edge(0, 1);
+        g.set_edge(1, 2);
+        g.set_edge(0, 2);
+        let (d, m) = (9usize, 3usize);
+        let params = RfParams {
+            variant: Variant::Gauss,
+            d,
+            m,
+            mats: vec![vec![0.25; d * m]],
+            biases: vec![vec![0.5; m]],
+        };
+        let mut x = vec![0.0f32; d];
+        Variant::Gauss.write_input(&g, &mut x);
+        assert_eq!(x.iter().filter(|&&v| v == 1.0).count(), 6);
+        let mut out = vec![0.0f32; m];
+        CpuFeatureMap::new(params).map_batch(&x, 1, &mut out);
+        let want = (2.0f32 / m as f32).sqrt() * 2.0f32.cos();
+        check::assert_allclose(&out, &[want, want, want], 1e-6, 1e-6);
+    }
+
+    #[test]
+    fn cpu_map_clones_compute_identical_features() {
+        // The sharded pipeline relies on clones being interchangeable.
+        let mut rng = Rng::new(12);
+        let params = RfParams::generate(Variant::Opu, 9, 32, 1.0, &mut rng);
+        let map = CpuFeatureMap::new(params);
+        let clone = map.clone();
+        let mut x = vec![0.0f32; 4 * 9];
+        for v in x.iter_mut() {
+            *v = rng.bool(0.4) as u8 as f32;
+        }
+        let mut a = vec![0.0f32; 4 * 32];
+        let mut b = vec![0.0f32; 4 * 32];
+        map.map_batch(&x, 4, &mut a);
+        clone.map_batch(&x, 4, &mut b);
+        assert_eq!(a, b);
     }
 
     #[test]

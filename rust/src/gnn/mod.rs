@@ -211,11 +211,7 @@ mod tests {
     use crate::runtime::artifacts_dir;
 
     fn engine() -> Option<Engine> {
-        let dir = artifacts_dir();
-        if !dir.join("manifest.txt").exists() {
-            return None;
-        }
-        Some(Engine::new(&dir).unwrap())
+        crate::runtime::try_engine(&artifacts_dir())
     }
 
     #[test]

@@ -8,18 +8,29 @@
 //!
 //! Layering (DESIGN.md §3):
 //! - **L3 (this crate)**: datasets, samplers, the exact graphlet-kernel
-//!   baseline, the batching pipeline, classifier, benches and the CLI.
+//!   baseline, the sharded batching pipeline, classifier, benches and
+//!   the CLI.
 //! - **L2/L1 (python, build-time only)**: jax feature models and Pallas
 //!   kernels lowered to `artifacts/*.hlo.txt` by `make artifacts`.
 //! - **runtime**: loads those artifacts over PJRT (`xla` crate) and
 //!   executes them from the request path — python is never loaded at
-//!   runtime.
+//!   runtime. (The offline build vendors an `xla` stub; the runtime then
+//!   reports PJRT as unavailable and everything falls back to the CPU
+//!   feature engines.)
+//!
+//! The embedding hot path is a **sharded dataflow**: W sampler workers
+//! feed N feature-engine shards over bounded per-shard channels, with
+//! the deterministic assignment `graph g -> shard g % N`. Each shard
+//! owns its own executor (PJRT engine or CPU map clone) and per-graph
+//! accumulators; a copy-merge folds the disjoint shard results, so the
+//! produced embeddings are bitwise identical for every (W, N) — see
+//! [`coordinator`] for the stage diagram and invariants.
 //!
 //! Quick tour: generate a dataset ([`gen`]), sample graphlets
 //! ([`sample`]), embed them with a feature map ([`features`] on CPU or
-//! [`runtime`] + [`coordinator`] for the batched PJRT pipeline), train
-//! the linear tail ([`classify`]), or reproduce a paper figure
-//! ([`experiments`]).
+//! [`runtime`] + [`coordinator`] for the batched, sharded PJRT
+//! pipeline), train the linear tail ([`classify`]), or reproduce a paper
+//! figure ([`experiments`]).
 
 pub mod classify;
 pub mod coordinator;

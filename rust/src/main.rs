@@ -15,11 +15,13 @@
 //! ```
 //!
 //! Common flags: `--seed N`, `--engine pjrt|cpu|cpu-inline`,
-//! `--artifacts DIR`, `--out DIR`, `--scale quick|full`.
+//! `--shards N`, `--workers N`, `--artifacts DIR`, `--out DIR`,
+//! `--scale quick|full`.
 
 use anyhow::Result;
 use graphlet_rf::coordinator::EngineMode;
 use graphlet_rf::experiments::{figures, thm1, timing, ExpContext, Scale};
+use graphlet_rf::features::Variant;
 use graphlet_rf::gen::SbmConfig;
 use graphlet_rf::gnn::{GinConfig, GinModel};
 use graphlet_rf::runtime::{artifacts_dir, Engine};
@@ -36,7 +38,7 @@ fn main() -> Result<()> {
         .get("artifacts")
         .map(std::path::PathBuf::from)
         .unwrap_or_else(artifacts_dir);
-    let engine_flag = args.get("engine").map(EngineMode::parse);
+    let engine_flag = args.get("engine").map(EngineMode::parse).transpose()?;
     let engine = match engine_flag {
         Some(EngineMode::Cpu) | Some(EngineMode::CpuInline) => None,
         _ => match Engine::new(&dir) {
@@ -97,7 +99,11 @@ const HELP: &str = "graphlet-rf — Fast Graph Kernel with Optical Random Featur
 
 USAGE: graphlet-rf <quickstart|fig1-left|fig1-right|fig2-left|fig2-right|fig3|thm1|gnn|info>
              [--scale quick|mid|full] [--seed N] [--engine pjrt|cpu|cpu-inline]
+             [--shards N] [--workers N] [--variant opu|gauss|gauss-eig]
              [--artifacts DIR] [--out DIR] [--dataset dd|reddit] [--tu-dir DIR]
+
+--shards N runs N parallel feature-engine shards (graph g -> shard g mod N);
+embeddings are bitwise identical for every shard/worker count.
 
 Run `make artifacts` first to build the AOT XLA artifacts (PJRT engine);
 without them the CPU fallback engine is used automatically.";
@@ -110,21 +116,44 @@ fn quickstart(ctx: &ExpContext, args: &Args, seed: u64) -> Result<()> {
 
     let r = args.parse_or("r", 1.2f64);
     let per_class = args.parse_or("per-class", 60usize);
-    let cfg = GsaConfig {
+    let shards = args
+        .try_parse::<usize>("shards")
+        .map_err(|e| anyhow::anyhow!(e))?
+        .unwrap_or(1)
+        .max(1);
+    let mut cfg = GsaConfig {
         k: args.parse_or("k", 6usize),
         s: args.parse_or("s", 1000usize),
         m: args.parse_or("m", 5000usize),
+        variant: Variant::parse(args.str_or("variant", "opu"))?,
         batch: 256,
+        shards,
         engine: ctx.mode(),
         seed,
         ..Default::default()
     };
+    if let Some(workers) = args.try_parse::<usize>("workers").map_err(|e| anyhow::anyhow!(e))? {
+        cfg.workers = workers.max(1);
+    }
+    if cfg.variant == Variant::Match {
+        anyhow::bail!(
+            "quickstart embeds with dense feature maps; use --variant opu|gauss|gauss-eig \
+             (phi_match is the fig1-right / fig2-right baseline)"
+        );
+    }
     println!("generating SBM dataset: r={r}, {} graphs", 2 * per_class);
     let ds = SbmConfig { r, per_class, ..Default::default() }.generate(&mut Rng::new(seed));
     println!("{}", ds.summary());
     println!(
-        "embedding: k={} s={} m={} sampler={} engine={:?}",
-        cfg.k, cfg.s, cfg.m, cfg.sampler, cfg.engine
+        "embedding: k={} s={} m={} variant={} sampler={} engine={:?} shards={} workers={}",
+        cfg.k,
+        cfg.s,
+        cfg.m,
+        cfg.variant.name(),
+        cfg.sampler,
+        cfg.engine,
+        cfg.shards,
+        cfg.workers
     );
     let (emb, metrics) = embed_dataset(&ds, &cfg, ctx.engine.as_ref())?;
     println!("pipeline: {}", metrics.report());

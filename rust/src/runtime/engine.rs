@@ -10,6 +10,10 @@
 //! Threading note: PJRT handles are raw pointers without `Sync`; the
 //! coordinator therefore confines one [`Engine`] to one feature-engine
 //! thread and communicates through channels (coordinator/pipeline.rs).
+//! The sharded pipeline runs N feature shards by giving each shard
+//! thread its **own** engine, built via [`Engine::with_manifest`] from
+//! the artifacts dir plus an already-parsed [`Manifest`] clone — the
+//! manifest is read and parsed once per run, not once per shard.
 //! XLA-CPU itself multithreads the heavy dots internally.
 
 use std::collections::HashMap;
@@ -66,6 +70,26 @@ pub fn artifacts_dir() -> PathBuf {
         return manifest_rel;
     }
     PathBuf::from("artifacts")
+}
+
+/// Best-effort engine over `dir`: `Some` when the artifacts manifest
+/// exists and the PJRT runtime starts, `None` otherwise (with a skip
+/// note on stderr). The standard "PJRT or skip" gate shared by tests,
+/// benches, and examples — with the vendored xla stub this always
+/// returns `None`, which is what routes everything onto the CPU
+/// engines.
+pub fn try_engine(dir: &Path) -> Option<Engine> {
+    if !dir.join("manifest.txt").exists() {
+        eprintln!("skipping PJRT: no artifacts at {}", dir.display());
+        return None;
+    }
+    match Engine::new(dir) {
+        Ok(e) => Some(e),
+        Err(err) => {
+            eprintln!("skipping PJRT: engine unavailable ({err})");
+            None
+        }
+    }
 }
 
 /// A compiled artifact plus its spec (shape checking on every call).
@@ -179,6 +203,16 @@ impl Engine {
     /// [`artifacts_dir`] for the default).
     pub fn new(dir: &Path) -> Result<Engine> {
         let manifest = Manifest::load(dir)?;
+        Self::with_manifest(dir, manifest)
+    }
+
+    /// Create an engine from an already-parsed manifest — the per-shard
+    /// construction path of the sharded pipeline. `Manifest` is `Clone +
+    /// Send` while the engine itself is neither, so the coordinator
+    /// parses the artifact index once on the caller's engine and ships
+    /// (dir, manifest) clones to the shard threads, which each pay only
+    /// for their own PJRT client and compile cache.
+    pub fn with_manifest(dir: &Path, manifest: Manifest) -> Result<Engine> {
         let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
         Ok(Engine {
             client,
@@ -194,6 +228,12 @@ impl Engine {
 
     pub fn manifest(&self) -> &Manifest {
         &self.manifest
+    }
+
+    /// The artifacts directory this engine loads from (shard threads
+    /// combine it with a manifest clone to replicate the engine).
+    pub fn dir(&self) -> &Path {
+        &self.dir
     }
 
     pub fn platform(&self) -> String {
@@ -240,16 +280,12 @@ impl Engine {
 mod tests {
     use super::*;
 
-    /// These tests require `make artifacts`; they are skipped (cleanly)
-    /// when the artifacts directory is absent so `cargo test` works in a
-    /// fresh checkout too.
+    /// These tests require `make artifacts` and a real PJRT runtime;
+    /// they are skipped (cleanly) when the artifacts directory is absent
+    /// or the engine cannot start (e.g. the vendored xla stub), so
+    /// `cargo test` works in a fresh offline checkout too.
     fn engine() -> Option<Engine> {
-        let dir = artifacts_dir();
-        if !dir.join("manifest.txt").exists() {
-            eprintln!("skipping runtime test: no artifacts at {}", dir.display());
-            return None;
-        }
-        Some(Engine::new(&dir).expect("engine"))
+        try_engine(&artifacts_dir())
     }
 
     #[test]

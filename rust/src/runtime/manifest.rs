@@ -68,8 +68,11 @@ impl ArtifactSpec {
     }
 }
 
-/// The parsed manifest: artifact specs by name.
-#[derive(Debug, Default)]
+/// The parsed manifest: artifact specs by name. `Clone + Send` so the
+/// sharded coordinator can parse it once and hand copies to shard
+/// threads, which rebuild their own engines from it
+/// (`Engine::with_manifest`) without re-reading the file.
+#[derive(Debug, Default, Clone)]
 pub struct Manifest {
     pub artifacts: BTreeMap<String, ArtifactSpec>,
 }
@@ -224,6 +227,20 @@ end
         let m = Manifest::parse(SAMPLE).unwrap();
         let err = m.get("nope").unwrap_err().to_string();
         assert!(err.contains("make artifacts"), "{err}");
+    }
+
+    #[test]
+    fn manifest_clones_are_independent_and_complete() {
+        // The sharded pipeline ships manifest clones across threads.
+        fn assert_send_clone<T: Clone + Send>() {}
+        assert_send_clone::<Manifest>();
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let c = m.clone();
+        assert_eq!(c.artifacts.len(), m.artifacts.len());
+        assert_eq!(
+            c.get("rf_opu_xla_d9_m64_b32").unwrap().inputs.len(),
+            m.get("rf_opu_xla_d9_m64_b32").unwrap().inputs.len()
+        );
     }
 
     #[test]

@@ -9,6 +9,6 @@ pub mod engine;
 pub mod manifest;
 pub mod rf;
 
-pub use engine::{artifacts_dir, Engine, HostTensor, LoadedArtifact};
+pub use engine::{artifacts_dir, try_engine, Engine, HostTensor, LoadedArtifact};
 pub use manifest::{ArtifactSpec, DType, Manifest, TensorSpec};
 pub use rf::RfExecutor;

@@ -5,6 +5,12 @@
 //! (batch, d) input crosses the host/device boundary. This mirrors the
 //! physical OPU, whose transmission matrix is literally baked into the
 //! scattering medium.
+//!
+//! Shard usage: the sharded coordinator constructs one [`RfExecutor`]
+//! per feature shard, each over that shard's own [`Engine`]
+//! (`Engine::with_manifest`). The executor holds no thread affinity of
+//! its own beyond the engine's PJRT handles, and all shards upload the
+//! **same** parameter draw, so shard count never changes the math.
 
 use anyhow::{bail, Context, Result};
 
@@ -121,11 +127,7 @@ mod tests {
     use crate::util::Rng;
 
     fn engine() -> Option<Engine> {
-        let dir = artifacts_dir();
-        if !dir.join("manifest.txt").exists() {
-            return None;
-        }
-        Some(Engine::new(&dir).unwrap())
+        crate::runtime::try_engine(&artifacts_dir())
     }
 
     #[test]

@@ -222,6 +222,102 @@ mod tests {
     }
 
     #[test]
+    fn samplers_deterministic_under_fixed_seed() {
+        // Same seed -> identical graphlet stream, for both strategies.
+        // This is the invariant the pipeline's per-graph seeding (and
+        // therefore its bitwise shard/worker independence) rests on.
+        let g = dense_er(40, 0.2, 17);
+        for name in ["uniform", "rw"] {
+            let sampler = sampler_by_name(name);
+            let mut rng_a = Rng::new(0xDECADE);
+            let mut rng_b = Rng::new(0xDECADE);
+            let mut scratch_a = Vec::new();
+            let mut scratch_b = Vec::new();
+            for i in 0..200 {
+                let ga = sampler.sample(&g, 5, &mut rng_a, &mut scratch_a);
+                let gb = sampler.sample(&g, 5, &mut rng_b, &mut scratch_b);
+                assert_eq!(ga, gb, "{name} diverged at draw {i}");
+                assert_eq!(scratch_a, scratch_b, "{name} node sets diverged at draw {i}");
+            }
+            // And a different seed must give a different stream.
+            let mut rng_c = Rng::new(0xDEC0DE);
+            let mut scratch_c = Vec::new();
+            let diverged = (0..50).any(|_| {
+                let gc = sampler.sample(&g, 5, &mut rng_c, &mut scratch_c);
+                let ga = sampler.sample(&g, 5, &mut rng_a, &mut scratch_a);
+                gc != ga
+            });
+            assert!(diverged, "{name}: different seeds produced identical streams");
+        }
+    }
+
+    #[test]
+    fn samplers_handle_k_equals_v() {
+        // k == v is the boundary the samplers advertise (`k <= v`): both
+        // must return the full graph as the induced graphlet.
+        let g = dense_er(7, 0.35, 5);
+        for name in ["uniform", "rw"] {
+            let sampler = sampler_by_name(name);
+            let mut rng = Rng::new(3);
+            let mut scratch = Vec::new();
+            for _ in 0..50 {
+                let gl = sampler.sample(&g, 7, &mut rng, &mut scratch);
+                assert_eq!(gl.k(), 7);
+                let mut nodes = scratch.clone();
+                nodes.sort_unstable();
+                nodes.dedup();
+                assert_eq!(nodes, (0..7).collect::<Vec<_>>(), "{name} must use every node");
+                assert_eq!(gl.num_edges() as usize, g.num_edges(), "{name}");
+            }
+        }
+    }
+
+    #[test]
+    fn samplers_handle_k_equals_one() {
+        let g = ring(9);
+        for name in ["uniform", "rw"] {
+            let sampler = sampler_by_name(name);
+            let mut rng = Rng::new(4);
+            let mut scratch = Vec::new();
+            let gl = sampler.sample(&g, 1, &mut rng, &mut scratch);
+            assert_eq!(gl.k(), 1);
+            assert_eq!(gl.num_edges(), 0);
+            assert_eq!(scratch.len(), 1);
+        }
+    }
+
+    #[test]
+    fn rw_beats_uniform_connectivity_on_sparse_sbm() {
+        // Fig 1 (right)'s motivation, on the paper's own generator: at
+        // low expected degree a uniform k-subset of an SBM graph is
+        // almost never connected, while the random walk's draws mostly
+        // are — that connectivity bias is why RW sampling wins.
+        let cfg = crate::gen::SbmConfig {
+            expected_degree: 3.0,
+            p_in_1: 0.2,
+            per_class: 1,
+            ..Default::default()
+        };
+        let g = cfg.sample_graph(1, &mut Rng::new(9));
+        let mut rng = Rng::new(10);
+        let mut scratch = Vec::new();
+        let (k, trials) = (5usize, 2_000);
+        let conn_rw = (0..trials)
+            .filter(|_| RwSampler::default().sample(&g, k, &mut rng, &mut scratch).is_connected())
+            .count() as f64
+            / trials as f64;
+        let conn_unif = (0..trials)
+            .filter(|_| UniformSampler.sample(&g, k, &mut rng, &mut scratch).is_connected())
+            .count() as f64
+            / trials as f64;
+        assert!(
+            conn_rw > conn_unif + 0.3,
+            "rw connectivity bias too weak on sparse SBM: rw={conn_rw} vs uniform={conn_unif}"
+        );
+        assert!(conn_unif < 0.35, "uniform unexpectedly connected: {conn_unif}");
+    }
+
+    #[test]
     fn sampler_by_name_resolves() {
         assert_eq!(sampler_by_name("uniform").name(), "uniform");
         assert_eq!(sampler_by_name("rw").name(), "rw");

@@ -64,11 +64,24 @@ impl Args {
     where
         T::Err: std::fmt::Display,
     {
+        self.try_parse(name)
+            .unwrap_or_else(|e| panic!("{e}"))
+            .unwrap_or(default)
+    }
+
+    /// Typed getter that surfaces parse failures as `Err` instead of
+    /// panicking, for callers that want graceful CLI errors (`Ok(None)`
+    /// when the flag is absent).
+    pub fn try_parse<T: std::str::FromStr>(&self, name: &str) -> Result<Option<T>, String>
+    where
+        T::Err: std::fmt::Display,
+    {
         match self.get(name) {
-            None => default,
+            None => Ok(None),
             Some(raw) => raw
                 .parse()
-                .unwrap_or_else(|e| panic!("--{name} {raw:?}: {e}")),
+                .map(Some)
+                .map_err(|e| format!("--{name} {raw:?}: {e}")),
         }
     }
 
@@ -128,6 +141,15 @@ mod tests {
         let a = parse(&["--ms", "100,500,1000"]);
         assert_eq!(a.parse_list("ms", &[5000usize]), vec![100, 500, 1000]);
         assert_eq!(a.parse_list("ks", &[6usize]), vec![6]);
+    }
+
+    #[test]
+    fn try_parse_reports_errors_gracefully() {
+        let a = parse(&["--shards", "4", "--k", "banana"]);
+        assert_eq!(a.try_parse::<usize>("shards").unwrap(), Some(4));
+        assert_eq!(a.try_parse::<usize>("absent").unwrap(), None);
+        let err = a.try_parse::<usize>("k").unwrap_err();
+        assert!(err.contains("--k") && err.contains("banana"), "{err}");
     }
 
     #[test]

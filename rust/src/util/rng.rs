@@ -168,6 +168,16 @@ impl Rng {
     pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
         &xs[self.usize(xs.len())]
     }
+
+    /// Draw a block of `n` sequential 64-bit seeds from this stream —
+    /// the pipeline's per-graph seed table. Equivalent to `n` calls to
+    /// [`Rng::next_u64`]; the block is a pure function of (seed state,
+    /// n), which is the determinism contract the sharded coordinator
+    /// relies on: per-graph streams never depend on worker or shard
+    /// counts.
+    pub fn seed_stream(&mut self, n: usize) -> Vec<u64> {
+        (0..n).map(|_| self.next_u64()).collect()
+    }
 }
 
 #[cfg(test)]
@@ -274,6 +284,17 @@ mod tests {
         let mut b = base.fork(1);
         let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
         assert!(same < 2);
+    }
+
+    #[test]
+    fn seed_stream_matches_sequential_draws() {
+        let mut a = Rng::new(31);
+        let mut b = Rng::new(31);
+        let block = a.seed_stream(16);
+        let manual: Vec<u64> = (0..16).map(|_| b.next_u64()).collect();
+        assert_eq!(block, manual);
+        // The generator advances: the next draw differs from the block.
+        assert_ne!(a.next_u64(), block[0]);
     }
 
     #[test]

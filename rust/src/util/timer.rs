@@ -86,6 +86,25 @@ impl Stats {
         self.sum
     }
 
+    /// Fold another accumulator into this one (used when merging
+    /// per-shard pipeline metrics). Exact for count/sum/min/max; the
+    /// percentile reservoir is topped up from `other` until this
+    /// reservoir's capacity is reached, which keeps percentiles
+    /// representative as long as shards see similar batch counts.
+    pub fn merge(&mut self, other: &Stats) {
+        self.count += other.count;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+        self.seen += other.seen;
+        for &x in &other.reservoir {
+            if self.reservoir.len() >= self.cap {
+                break;
+            }
+            self.reservoir.push(x);
+        }
+    }
+
     /// Approximate percentile in [0, 100] from the reservoir.
     pub fn percentile(&self, p: f64) -> f64 {
         if self.reservoir.is_empty() {
@@ -145,6 +164,29 @@ mod tests {
         }
         assert!(s.percentile(10.0) <= s.percentile(50.0));
         assert!(s.percentile(50.0) <= s.percentile(90.0));
+    }
+
+    #[test]
+    fn stats_merge_combines_accumulators() {
+        let mut a = Stats::new();
+        let mut b = Stats::new();
+        for x in [1.0, 2.0] {
+            a.record(x);
+        }
+        for x in [0.5, 4.0] {
+            b.record(x);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), 4);
+        assert_eq!(a.min(), 0.5);
+        assert_eq!(a.max(), 4.0);
+        assert!((a.mean() - 1.875).abs() < 1e-12);
+        assert!(a.percentile(100.0) >= 4.0 - 1e-12);
+        // Merging into an empty accumulator copies the other side.
+        let mut empty = Stats::new();
+        empty.merge(&a);
+        assert_eq!(empty.count(), 4);
+        assert_eq!(empty.min(), 0.5);
     }
 
     #[test]

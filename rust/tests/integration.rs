@@ -17,13 +17,7 @@ use graphlet_rf::sample::sampler_by_name;
 use graphlet_rf::util::Rng;
 
 fn engine() -> Option<Engine> {
-    let dir = artifacts_dir();
-    if dir.join("manifest.txt").exists() {
-        Some(Engine::new(&dir).expect("engine"))
-    } else {
-        eprintln!("skipping PJRT-dependent integration test (no artifacts)");
-        None
-    }
+    graphlet_rf::runtime::try_engine(&artifacts_dir())
 }
 
 /// Full GSA-phi_OPU flow on an easy SBM task must reach high accuracy —
@@ -120,6 +114,42 @@ fn real_data_substitutes_pipeline() {
         let (emb, metrics) = embed_dataset(&ds, &cfg, None).unwrap();
         assert_eq!(metrics.graphs, 16);
         assert!(emb.iter().all(|v| v.is_finite()), "{}", ds.name);
+    }
+}
+
+/// The sharded executor is a pure refactor of the dataflow: on a
+/// variable-size CSR dataset (the hardest layout: graphs of different
+/// sizes interleaved round-robin over shards), embeddings must be
+/// bitwise identical for every (shards, workers) combination, in both
+/// CPU engine modes.
+#[test]
+fn sharded_pipeline_bitwise_stable_on_variable_size_graphs() {
+    let ds = DdLikeConfig { per_class: 6, ..Default::default() }.generate(&mut Rng::new(8));
+    for mode in [EngineMode::Cpu, EngineMode::CpuInline] {
+        let mk = |shards: usize, workers: usize| GsaConfig {
+            k: 5,
+            s: 120,
+            m: 48,
+            batch: 32,
+            shards,
+            workers,
+            engine: mode,
+            seed: 21,
+            ..Default::default()
+        };
+        let (reference, _) = embed_dataset(&ds, &mk(1, 1), None).unwrap();
+        assert!(reference.iter().all(|v| v.is_finite()));
+        for shards in [2usize, 4] {
+            for workers in [1usize, 4] {
+                let (e, m) = embed_dataset(&ds, &mk(shards, workers), None).unwrap();
+                assert_eq!(
+                    e, reference,
+                    "bitwise drift: mode={mode:?} shards={shards} workers={workers}"
+                );
+                assert_eq!(m.samples, ds.len() * 120);
+                assert_eq!(m.shard_feature_secs.len(), shards);
+            }
+        }
     }
 }
 

@@ -1,0 +1,251 @@
+//! Offline stand-in for the `anyhow` crate (API-compatible subset).
+//!
+//! Provides exactly the surface the workspace uses:
+//!
+//! - [`Error`]: an opaque error value carrying a context chain and an
+//!   optional source error. Like upstream, it deliberately does **not**
+//!   implement `std::error::Error` — that is what makes the blanket
+//!   `From<E: std::error::Error>` conversion (and therefore `?` on any
+//!   std error) coherent.
+//! - [`Result<T>`]: alias with `Error` as the default error type.
+//! - [`Context`]: `.context(..)` / `.with_context(..)` on `Result` (both
+//!   std-error and `anyhow::Error` variants) and on `Option`.
+//! - [`anyhow!`], [`bail!`], [`ensure!`] macros with `format!`-style
+//!   arguments.
+//!
+//! `Debug` prints the full chain on one line (`outer: inner: root`),
+//! matching how the repo's binaries surface errors from `main`.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// An opaque error: a stack of context messages plus an optional
+/// underlying source error.
+pub struct Error {
+    /// Context messages, outermost (most recently attached) first. The
+    /// last entry is the original message.
+    chain: Vec<String>,
+    source: Option<Box<dyn StdError + Send + Sync + 'static>>,
+}
+
+impl Error {
+    /// Create an error from a printable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { chain: vec![message.to_string()], source: None }
+    }
+
+    /// Attach an outer context message (most recent shown first).
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The outermost message (what `Display` shows).
+    fn head(&self) -> &str {
+        self.chain.first().map(String::as_str).unwrap_or("unknown error")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            return write!(f, "{:?}", self);
+        }
+        f.write_str(self.head())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.chain.join(": "))?;
+        // The last chain entry already rendered the source's Display;
+        // append anything deeper in the std source chain.
+        let mut cause = self.source.as_deref().and_then(|e| e.source());
+        while let Some(c) = cause {
+            write!(f, ": {c}")?;
+            cause = c.source();
+        }
+        Ok(())
+    }
+}
+
+// Blanket conversion: lets `?` lift any std error into `Error`. Coherent
+// because `Error` itself never implements `std::error::Error`.
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(err: E) -> Error {
+        Error { chain: vec![err.to_string()], source: Some(Box::new(err)) }
+    }
+}
+
+/// `Result` with [`Error`] as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context(..)` / `.with_context(..)`.
+pub trait Context<T> {
+    /// Wrap the error value with an additional message.
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static;
+
+    /// Wrap the error value with a lazily evaluated message.
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E> Context<T> for Result<T, E>
+where
+    E: StdError + Send + Sync + 'static,
+{
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.map_err(|e| Error::from(e).context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| Error::from(e).context(f()))
+    }
+}
+
+// Same extension for results that already carry an `anyhow::Error`
+// (coherent with the impl above because `Error: !StdError`).
+impl<T> Context<T> for Result<T, Error> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.map_err(|e| e.context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from `format!`-style arguments.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an error built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::anyhow!(concat!("condition failed: ", stringify!($cond))));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing file")
+    }
+
+    #[test]
+    fn display_shows_outermost_context() {
+        let e: Error = Error::from(io_err()).context("opening manifest");
+        assert_eq!(e.to_string(), "opening manifest");
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("opening manifest") && dbg.contains("missing file"), "{dbg}");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert!(f().is_err());
+    }
+
+    #[test]
+    fn context_on_result_option_and_error() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("layer one").unwrap_err();
+        let e2 = Err::<(), Error>(e).with_context(|| "layer two").unwrap_err();
+        assert_eq!(e2.to_string(), "layer two");
+        assert!(format!("{e2:?}").starts_with("layer two: layer one"));
+        let n: Option<u32> = None;
+        assert_eq!(n.context("was none").unwrap_err().to_string(), "was none");
+        assert_eq!(Some(3u32).context("unused").unwrap(), 3);
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        fn b() -> Result<()> {
+            bail!("bad value {}", 7);
+        }
+        assert_eq!(b().unwrap_err().to_string(), "bad value 7");
+
+        fn e(x: u32) -> Result<u32> {
+            ensure!(x < 10, "x too big: {x}");
+            ensure!(x != 5);
+            Ok(x)
+        }
+        assert_eq!(e(3).unwrap(), 3);
+        assert_eq!(e(12).unwrap_err().to_string(), "x too big: 12");
+        assert!(e(5).unwrap_err().to_string().contains("x != 5"));
+        let msg = anyhow!("plain");
+        assert_eq!(msg.to_string(), "plain");
+    }
+
+    #[test]
+    fn error_is_send_and_sync() {
+        fn assert_bounds<T: Send + Sync>() {}
+        assert_bounds::<Error>();
+    }
+}

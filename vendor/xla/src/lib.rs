@@ -1,0 +1,168 @@
+//! Offline stub of the `xla` PJRT bindings.
+//!
+//! Exposes the exact type/method surface `rust/src/runtime/` compiles
+//! against. There is no PJRT runtime behind it: [`PjRtClient::cpu`]
+//! returns an error, so `Engine::new` fails cleanly at runtime, every
+//! caller falls back to the rust CPU feature engines, and the
+//! PJRT-dependent tests skip. Replacing this path dependency with the
+//! real `xla` crate re-enables PJRT with no source changes.
+//!
+//! Methods that are only reachable *after* a client exists (execution,
+//! transfers) still return honest `Err` values rather than panicking, so
+//! any future partial implementation degrades gracefully.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// Error type of the stub; converts into `anyhow::Error` via the
+/// standard-error blanket conversion.
+#[derive(Debug)]
+pub struct Error(String);
+
+impl Error {
+    fn stub(what: &str) -> Error {
+        Error(format!(
+            "{what}: the vendored xla stub provides no PJRT runtime \
+             (swap vendor/xla for the real crate to enable it)"
+        ))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl StdError for Error {}
+
+/// Result alias matching the real crate's signatures.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Element types accepted by literals and host buffers.
+pub trait NativeType: Copy {}
+impl NativeType for f32 {}
+impl NativeType for i32 {}
+
+/// Host-side literal value (opaque in the stub).
+#[derive(Debug, Clone)]
+pub struct Literal {
+    elements: usize,
+}
+
+impl Literal {
+    /// Build a rank-1 literal from a host slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        Literal { elements: data.len() }
+    }
+
+    /// Reshape to the given dimensions (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let count: i64 = dims.iter().product();
+        if count < 0 || count as usize != self.elements {
+            return Err(Error(format!(
+                "reshape: {} elements into shape {dims:?}",
+                self.elements
+            )));
+        }
+        Ok(self.clone())
+    }
+
+    /// Decompose a tuple literal (unreachable without a runtime).
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        Err(Error::stub("Literal::to_tuple"))
+    }
+
+    /// Copy out as a host vector (unreachable without a runtime).
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        Err(Error::stub("Literal::to_vec"))
+    }
+}
+
+/// Parsed HLO module (opaque in the stub).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        Err(Error(format!(
+            "parsing HLO text {path}: the vendored xla stub has no HLO parser"
+        )))
+    }
+}
+
+/// An XLA computation built from a parsed module.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Device-resident buffer handle (never constructible in the stub).
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::stub("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// Compiled executable handle (never constructible in the stub).
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::stub("PjRtLoadedExecutable::execute"))
+    }
+
+    pub fn execute_b<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::stub("PjRtLoadedExecutable::execute_b"))
+    }
+}
+
+/// PJRT client handle. The stub's constructor always fails — this is the
+/// single choke point that routes the whole system onto the CPU engines.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::stub("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::stub("PjRtClient::compile"))
+    }
+
+    pub fn buffer_from_host_buffer<T: NativeType>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        Err(Error::stub("PjRtClient::buffer_from_host_buffer"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_constructor_fails_cleanly() {
+        let err = PjRtClient::cpu().err().expect("stub must fail");
+        assert!(err.to_string().contains("no PJRT runtime"), "{err}");
+    }
+
+    #[test]
+    fn literal_reshape_checks_element_count() {
+        let lit = Literal::vec1(&[0.0f32; 6]);
+        assert!(lit.reshape(&[2, 3]).is_ok());
+        assert!(lit.reshape(&[4, 2]).is_err());
+        assert!(lit.to_vec::<f32>().is_err());
+    }
+}

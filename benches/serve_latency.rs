@@ -1,0 +1,48 @@
+//! Bench: serving-path latency and throughput baseline.
+//!
+//! Spins the serve daemon on an ephemeral loopback port with a fixed
+//! seed and workload, drives it with the serve-bench client (4
+//! connections x 32 requests, cold pass then warm/cached pass), and
+//! prints throughput plus p50/p99 latency per pass. Future PRs compare
+//! against these numbers before touching the serve or streaming path.
+//!
+//! PJRT artifacts are used when present (`make artifacts`); otherwise
+//! the CPU feature engine serves, which is still the same wire path and
+//! cache — only the feature math moves off the artifact.
+
+use graphlet_rf::coordinator::{EngineMode, GsaConfig};
+use graphlet_rf::runtime::{artifacts_dir, Engine};
+use graphlet_rf::serve::{run_bench, send_shutdown, ServeConfig, Server};
+
+fn main() {
+    let engine = Engine::new(&artifacts_dir()).ok();
+    let gsa = GsaConfig {
+        k: 6,
+        s: 500,
+        m: 1000,
+        batch: 256,
+        shards: 2,
+        workers: 4,
+        engine: if engine.is_some() { EngineMode::Pjrt } else { EngineMode::Cpu },
+        seed: 7,
+        ..Default::default()
+    };
+    println!(
+        "# serve_latency (engine={:?}, k={}, s={}, m={}, shards={}, workers={})",
+        gsa.engine, gsa.k, gsa.s, gsa.m, gsa.shards, gsa.workers
+    );
+    let server = Server::bind("127.0.0.1:0", ServeConfig { gsa, ..Default::default() },
+                              engine.as_ref())
+        .expect("bind serve daemon");
+    let addr = server.local_addr().to_string();
+    let handle = std::thread::spawn(move || server.run().expect("serve run"));
+
+    let pair = run_bench(&addr, 4, 32, 7).expect("bench run");
+    println!("serve_latency/cold  {}", pair.cold.line());
+    println!("serve_latency/warm  {}", pair.warm.line());
+    assert_eq!(pair.cold.errors, 0, "cold pass must be error-free");
+    assert_eq!(pair.warm.errors, 0, "warm pass must be error-free");
+
+    send_shutdown(&addr).expect("shutdown");
+    handle.join().expect("server thread");
+}

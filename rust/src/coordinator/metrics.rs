@@ -49,6 +49,7 @@ impl PipelineMetrics {
     /// Counter fields add; `shard_feature_secs` records the shard's own
     /// feature time so imbalance stays observable after the merge.
     pub fn merge_shard(&mut self, shard: PipelineMetrics) {
+        self.graphs += shard.graphs;
         self.samples += shard.samples;
         self.batches += shard.batches;
         self.padded_rows += shard.padded_rows;
@@ -104,10 +105,12 @@ mod tests {
 
     #[test]
     fn throughput_and_report() {
-        let mut m = PipelineMetrics::default();
-        m.samples = 1000;
-        m.wall_secs = 2.0;
-        m.graphs = 10;
+        let mut m = PipelineMetrics {
+            samples: 1000,
+            wall_secs: 2.0,
+            graphs: 10,
+            ..Default::default()
+        };
         m.batch_latency.record(0.01);
         assert_eq!(m.samples_per_sec(), 500.0);
         let r = m.report();
@@ -124,17 +127,20 @@ mod tests {
 
     #[test]
     fn merge_shard_adds_counters_and_tracks_imbalance() {
-        let mut total = PipelineMetrics::default();
-        total.shards = 2;
-        let mut a = PipelineMetrics::default();
-        a.samples = 300;
-        a.batches = 3;
-        a.feature_secs = 1.0;
+        let mut total = PipelineMetrics { shards: 2, ..Default::default() };
+        let mut a = PipelineMetrics {
+            samples: 300,
+            batches: 3,
+            feature_secs: 1.0,
+            ..Default::default()
+        };
         a.batch_latency.record(0.01);
-        let mut b = PipelineMetrics::default();
-        b.samples = 200;
-        b.batches = 2;
-        b.feature_secs = 3.0;
+        let b = PipelineMetrics {
+            samples: 200,
+            batches: 2,
+            feature_secs: 3.0,
+            ..Default::default()
+        };
         total.merge_shard(a);
         total.merge_shard(b);
         assert_eq!(total.samples, 500);

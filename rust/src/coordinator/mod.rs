@@ -1,24 +1,29 @@
-//! The GSA-phi coordinator: dataset -> sampler workers -> per-shard
-//! batchers -> N feature-engine shards -> merge -> per-graph averaging
-//! -> embeddings.
+//! The GSA-phi coordinator: a persistent streaming dataflow — sampler
+//! workers -> per-shard batchers -> N feature-engine shards -> per-job
+//! accumulators -> embeddings — plus the one-shot dataset adapter on
+//! top.
 //!
 //! This is the L3 "system" of the reproduction (DESIGN.md §3): a
 //! multi-threaded dataflow with bounded channels for backpressure.
-//! Sampler workers (std::thread, seeded per *graph* so scheduling never
-//! changes results) draw subgraphs and pack their feature-map inputs
-//! into cross-graph batches of exactly the artifact's batch size — one
-//! open batch per feature shard, routed by the deterministic assignment
-//! `graph g -> shard g % shards`. Each shard owns its own executor (a
-//! PJRT engine + [`crate::runtime::RfExecutor`], or a CPU map clone) and
-//! its own per-graph accumulators; the merge stage copies the disjoint
-//! per-shard results into the output matrix, so embeddings are **bitwise
-//! identical for every shard and worker count**. PJRT handles are not
-//! `Sync`, which is why each shard thread constructs its own engine
-//! (from a shared parsed manifest) rather than sharing one. Python never
-//! runs here.
+//! Since the serve subsystem landed, the dataflow is a long-lived
+//! [`StreamingPipeline`]: graphs enter as tagged jobs (from a one-shot
+//! `embed_dataset` call *or* from concurrent network requests), sampler
+//! workers pack rows from different jobs into cross-request batches of
+//! exactly the artifact's batch size, and finished per-graph embeddings
+//! stream back out on each job's own completion channel. Each feature
+//! shard owns its own executor (a PJRT engine +
+//! [`crate::runtime::RfExecutor`], or a CPU map clone) and its own
+//! per-job accumulators, so embeddings are **bitwise identical for
+//! every shard and worker count** — see [`streaming`] for the stage
+//! diagram and invariants, [`pipeline`] for the batch adapter. PJRT
+//! handles are not `Sync`, which is why each shard thread constructs
+//! its own engine (from a shared parsed manifest) rather than sharing
+//! one. Python never runs here.
 
 pub mod metrics;
 pub mod pipeline;
+pub mod streaming;
 
 pub use metrics::PipelineMetrics;
 pub use pipeline::{embed_dataset, EngineMode, GsaConfig};
+pub use streaming::{Completed, GraphJob, StreamingPipeline, SubmitOutcome};

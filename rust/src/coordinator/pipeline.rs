@@ -1,51 +1,35 @@
-//! The embedding pipeline (Alg. 1 of the paper, as a sharded dataflow
-//! system).
+//! The batch embedding entrypoint (Alg. 1 of the paper) as a thin
+//! adapter over the persistent streaming core.
 //!
 //! ```text
-//!   graphs ──► sampler workers ──► per-shard bounded channels ──► feature shards
-//!              (std::thread x W)    (graph g → shard g mod N)      (N x RfExecutor
-//!               sample s subgraphs   (backpressure per shard)       or CPU map, one
-//!               pack per-shard                                      thread each)
-//!               batches of B rows                                        │
-//!                                                                        ▼
-//!                                                          per-shard partial sums
-//!                                                                        │ merge
-//!                                                                        ▼ (copy)
-//!                                                     per-graph mean over s ──► (n, m)
+//!   embed_dataset(ds, cfg, engine)
+//!       │  build StreamingPipeline (workers + shards, one param draw)
+//!       │  submit one GraphJob per graph (seed = per-graph seed stream)
+//!       │  collect n Completed rows (order-independent: tagged by index)
+//!       │  shutdown → merged PipelineMetrics
+//!       ▼
+//!   row-major (n, m) embeddings — bitwise identical to the historical
+//!   batch pipeline for every worker/shard count (pinned by the tests
+//!   below and in tests/integration.rs).
 //! ```
 //!
-//! Design notes:
-//! - **Sharding**: `cfg.shards` feature engines run in parallel, each
-//!   owning its own executor ([`RfExecutor`] + its own PJRT engine, or a
-//!   [`CpuFeatureMap`] clone). Graph `g` is assigned to shard
-//!   `g % shards` — a pure function of the graph index — so each graph's
-//!   accumulator lives in exactly one shard and the merge is a plain
-//!   copy into the output matrix, never a float re-reduction.
-//! - **Determinism**: workers fork seeded RNG streams per *graph* (not
-//!   per worker), every graph is sampled by exactly one worker in sample
-//!   order, and each shard accumulates its graphs' rows in that same
-//!   order. Embeddings are therefore **bitwise identical** for any
-//!   worker count and any shard count (tests pin this).
-//! - **Cross-graph batching**: a batch carries `(graph, rows)` segments
-//!   so executed batches have exactly the artifact's compiled size B.
-//!   Workers keep one open batch per shard; padding happens at most
-//!   `workers x shards` times per run (the final flushes).
-//! - **Backpressure**: each shard channel holds at most `queue_cap`
-//!   batches; samplers block when a feature shard falls behind, bounding
-//!   memory at O(shards * queue_cap * B * d).
+//! The dataflow itself — sampler workers, per-shard bounded channels,
+//! cross-request batching, per-job accumulators — lives in
+//! [`super::streaming`]; see its module docs for the stage diagram and
+//! invariants. This module owns the run *configuration* ([`GsaConfig`],
+//! [`EngineMode`]) and the one-shot dataset adapter.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::mpsc::channel;
 use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
 use super::metrics::PipelineMetrics;
+use super::streaming::{GraphJob, StreamingPipeline};
 use crate::data::Dataset;
-use crate::features::{CpuFeatureMap, RfParams, Variant};
-use crate::runtime::{Engine, RfExecutor};
-use crate::sample::sampler_by_name;
-use crate::util::{Rng, Timer};
+use crate::features::Variant;
+use crate::runtime::Engine;
+use crate::util::Timer;
 
 /// Which feature engine executes batches.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -94,9 +78,9 @@ pub struct GsaConfig {
     pub workers: usize,
     /// Bounded queue capacity per shard (batches in flight).
     pub queue_cap: usize,
-    /// Feature-engine shards. Graph `g` maps to shard `g % shards`;
-    /// results are bitwise independent of the count. In PJRT mode each
-    /// shard constructs its own engine over the same artifacts.
+    /// Feature-engine shards. Jobs round-robin over shards; results are
+    /// bitwise independent of the count. In PJRT mode each shard
+    /// constructs its own engine over the same artifacts.
     pub shards: usize,
     pub engine: EngineMode,
     pub seed: u64,
@@ -128,393 +112,59 @@ impl GsaConfig {
     }
 }
 
-/// A batch in flight: row-major input rows + the (graph, rows) segments
-/// they belong to. All segments of one batch target the same shard.
-struct Batch {
-    data: Vec<f32>,
-    segments: Vec<(usize, usize)>,
-    rows: usize,
-    /// Sampler busy-time attributed to this batch (metrics).
-    sample_secs: f64,
-}
-
-/// Message from CpuInline workers: a finished per-graph feature sum.
-struct GraphSum {
-    graph: usize,
-    sum: Vec<f32>,
-    samples: usize,
-    sample_secs: f64,
-}
-
-enum Msg {
-    Batch(Batch),
-    Sum(GraphSum),
-}
-
-/// One open cross-graph batch a worker is filling for one shard.
-struct Packer {
-    data: Vec<f32>,
-    rows: usize,
-    segments: Vec<(usize, usize)>,
-    sample_secs: f64,
-}
-
-impl Packer {
-    fn new(batch: usize, d: usize) -> Packer {
-        Packer { data: vec![0.0f32; batch * d], rows: 0, segments: Vec::new(), sample_secs: 0.0 }
-    }
-}
-
-/// What one feature shard hands back at join time.
-struct ShardResult {
-    /// Row-major (n_local, m) partial sums; local slot `l` holds graph
-    /// `l * shards + shard`.
-    sums: Vec<f32>,
-    counts: Vec<usize>,
-    metrics: PipelineMetrics,
-}
-
-/// Number of graphs owned by `shard` out of `n` under round-robin.
-fn shard_len(n: usize, shard: usize, shards: usize) -> usize {
-    n / shards + usize::from(shard < n % shards)
-}
-
-/// Drain one shard's channel: execute batches on this shard's engine,
-/// accumulate per-graph sums (local slot = graph / shards).
-fn run_feature_shard(
-    rx: Receiver<Msg>,
-    pjrt: Option<(&Engine, &RfExecutor)>,
-    cpu_map: Option<&CpuFeatureMap>,
-    cfg: &GsaConfig,
-    n: usize,
-    shard: usize,
-    shards: usize,
-) -> Result<ShardResult> {
-    let m = cfg.m;
-    let n_local = shard_len(n, shard, shards);
-    let mut sums = vec![0.0f32; n_local * m];
-    let mut counts = vec![0usize; n_local];
-    let mut metrics = PipelineMetrics::default();
-    let mut cpu_out = vec![0.0f32; cfg.batch * m];
-    for msg in rx {
-        match msg {
-            Msg::Sum(gs) => {
-                debug_assert_eq!(gs.graph % shards, shard);
-                let local = gs.graph / shards;
-                metrics.samples += gs.samples;
-                metrics.sample_secs += gs.sample_secs;
-                metrics.batches += 1;
-                counts[local] += gs.samples;
-                let row = &mut sums[local * m..(local + 1) * m];
-                for (acc, v) in row.iter_mut().zip(gs.sum) {
-                    *acc += v;
-                }
-            }
-            Msg::Batch(b) => {
-                let t = Timer::start();
-                let feats: &[f32] = match (pjrt, cpu_map) {
-                    (Some((engine, exec)), _) => {
-                        metrics.padded_rows += cfg.batch - b.rows.min(cfg.batch);
-                        cpu_out = exec.map(engine, &b.data, b.rows)?;
-                        &cpu_out
-                    }
-                    (None, Some(map)) => {
-                        cpu_out.resize(b.rows * m, 0.0);
-                        map.map_batch(&b.data, b.rows, &mut cpu_out[..b.rows * m]);
-                        &cpu_out[..b.rows * m]
-                    }
-                    _ => unreachable!("batch message in inline mode"),
-                };
-                let dt = t.elapsed_secs();
-                metrics.feature_secs += dt;
-                metrics.batch_latency.record(dt);
-                metrics.batches += 1;
-                metrics.samples += b.rows;
-                metrics.sample_secs += b.sample_secs;
-                // Scatter rows into per-graph accumulators (sample order
-                // within each graph — the determinism invariant).
-                let mut row0 = 0usize;
-                for (g_idx, rows) in b.segments {
-                    debug_assert_eq!(g_idx % shards, shard);
-                    let local = g_idx / shards;
-                    counts[local] += rows;
-                    let acc = &mut sums[local * m..(local + 1) * m];
-                    for r in row0..row0 + rows {
-                        let frow = &feats[r * m..(r + 1) * m];
-                        for (a, &v) in acc.iter_mut().zip(frow) {
-                            *a += v;
-                        }
-                    }
-                    row0 += rows;
-                }
-            }
-        }
-    }
-    Ok(ShardResult { sums, counts, metrics })
-}
-
 /// Embed every graph of `ds`: returns row-major (n, m) embeddings and the
-/// run metrics. `engine` must be Some for [`EngineMode::Pjrt`]; with
-/// `shards > 1` it additionally serves as the template (artifacts dir +
-/// parsed manifest) from which each shard builds its own engine.
+/// run metrics. `engine` must be Some for [`EngineMode::Pjrt`]; it serves
+/// as the template (artifacts dir + parsed manifest) from which each
+/// feature shard builds its own engine.
+///
+/// This is a batch adapter over [`StreamingPipeline`]: the pipeline is
+/// built for this call, every graph is submitted as one job seeded from
+/// the per-graph seed stream, and rows are collected by graph index. The
+/// embeddings are a pure function of (dataset, cfg.seed, feature math) —
+/// worker count, shard count, and batching schedule never move a bit.
 pub fn embed_dataset(
     ds: &Dataset,
     cfg: &GsaConfig,
     engine: Option<&Engine>,
 ) -> Result<(Vec<f32>, PipelineMetrics)> {
     let n = ds.len();
-    let d = cfg.input_dim();
-    let shards = cfg.shards.max(1);
     let wall = Timer::start();
+    let pipeline = StreamingPipeline::new(cfg, engine)?;
+    let seeds = pipeline.graph_seeds(n);
 
-    // Shared feature parameters: one draw for the whole run (the paper's
-    // W is fixed across all graphs — it's the same "device"). Every shard
-    // uses the same draw, so shard count cannot change the math.
-    let mut seed_rng = Rng::new(cfg.seed);
-    let params = RfParams::generate(cfg.variant, d, cfg.m, cfg.sigma, &mut seed_rng);
-    // Per-graph RNG seeds, independent of scheduling AND of shard count.
-    let graph_seeds: Vec<u64> = seed_rng.seed_stream(n);
-
-    if cfg.engine == EngineMode::Pjrt && engine.is_none() {
-        bail!("PJRT mode requires an Engine");
+    // Completed rows park in this unbounded channel, so the bounded job
+    // queue (admission control in serve) can never deadlock submission
+    // against collection.
+    let (done_tx, done_rx) = channel();
+    for (g_idx, g) in ds.graphs.iter().enumerate() {
+        // One O(edges) clone per graph: GraphJob owns its graph so the
+        // pipeline can outlive any caller. Negligible next to the
+        // s x (sample + feature-map) work per graph; if Dataset ever
+        // holds Arc<AnyGraph> this becomes a refcount bump.
+        pipeline.submit(GraphJob {
+            graph: Arc::new(g.clone()),
+            seed: seeds[g_idx],
+            tag: g_idx as u64,
+            done: done_tx.clone(),
+        })?;
     }
-    // Send-able spec from which spawned shards rebuild a PJRT engine:
-    // artifacts dir + the already-parsed manifest (shared artifact load).
-    let pjrt_spawn = if cfg.engine == EngineMode::Pjrt && shards > 1 {
-        let e = engine.unwrap();
-        Some((e.dir().to_path_buf(), e.manifest().clone(), cfg.impl_.clone()))
-    } else {
-        None
-    };
+    drop(done_tx);
 
-    let next_graph = Arc::new(AtomicUsize::new(0));
-    let mut txs: Vec<SyncSender<Msg>> = Vec::with_capacity(shards);
-    let mut rxs: Vec<Receiver<Msg>> = Vec::with_capacity(shards);
-    for _ in 0..shards {
-        let (tx, rx) = sync_channel::<Msg>(cfg.queue_cap.max(1));
-        txs.push(tx);
-        rxs.push(rx);
+    let mut sums = vec![0.0f32; n * cfg.m];
+    for _ in 0..n {
+        let c = done_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("pipeline dropped a job without completing it"))?;
+        if let Some(e) = c.error {
+            bail!("graph {} failed: {e}", c.tag);
+        }
+        anyhow::ensure!(c.samples == cfg.s, "graph {} got {} samples", c.tag, c.samples);
+        let g_idx = c.tag as usize;
+        sums[g_idx * cfg.m..(g_idx + 1) * cfg.m].copy_from_slice(&c.row);
     }
 
-    let mut metrics = PipelineMetrics::default();
+    let mut metrics = pipeline.shutdown()?;
     metrics.graphs = n;
-    metrics.shards = shards;
-
-    let sums = std::thread::scope(|scope| -> Result<Vec<f32>> {
-        // ---- sampler workers ------------------------------------------
-        for _w in 0..cfg.workers.max(1) {
-            let worker_txs = txs.clone();
-            let next = next_graph.clone();
-            let params_ref = &params;
-            let graph_seeds = &graph_seeds;
-            let cfg = cfg.clone();
-            let ds_ref = ds;
-            scope.spawn(move || {
-                let sampler = sampler_by_name(&cfg.sampler);
-                let inline_map = match cfg.engine {
-                    EngineMode::CpuInline => Some(CpuFeatureMap::new(params_ref.clone())),
-                    _ => None,
-                };
-                let d = cfg.input_dim();
-                let mut scratch: Vec<usize> = Vec::with_capacity(cfg.k);
-                // One open batch per shard (batch mode only).
-                let mut packers: Vec<Packer> = match inline_map {
-                    None => (0..shards).map(|_| Packer::new(cfg.batch, d)).collect(),
-                    Some(_) => Vec::new(),
-                };
-                // Inline-mode scratch: inputs + feature rows for one chunk.
-                let (mut inline_x, mut inline_feat) = match inline_map {
-                    Some(_) => (vec![0.0f32; cfg.batch * d], vec![0.0f32; cfg.batch * cfg.m]),
-                    None => (Vec::new(), Vec::new()),
-                };
-                loop {
-                    let g_idx = next.fetch_add(1, Ordering::Relaxed);
-                    if g_idx >= ds_ref.len() {
-                        break;
-                    }
-                    let g = &ds_ref.graphs[g_idx];
-                    let q = g_idx % shards;
-                    let mut rng = Rng::new(graph_seeds[g_idx]);
-                    let mut t = Timer::start();
-                    match &inline_map {
-                        Some(map) => {
-                            // Compute features locally; ship only the sum.
-                            let mut sum = vec![0.0f32; cfg.m];
-                            let mut done = 0usize;
-                            while done < cfg.s {
-                                let chunk = (cfg.s - done).min(cfg.batch);
-                                for r in 0..chunk {
-                                    let gl = sampler.sample(g, cfg.k, &mut rng, &mut scratch);
-                                    cfg.variant
-                                        .write_input(&gl, &mut inline_x[r * d..(r + 1) * d]);
-                                }
-                                map.map_batch(
-                                    &inline_x[..chunk * d],
-                                    chunk,
-                                    &mut inline_feat[..chunk * cfg.m],
-                                );
-                                for r in 0..chunk {
-                                    for (acc, &v) in sum
-                                        .iter_mut()
-                                        .zip(&inline_feat[r * cfg.m..(r + 1) * cfg.m])
-                                    {
-                                        *acc += v;
-                                    }
-                                }
-                                done += chunk;
-                            }
-                            let msg = GraphSum {
-                                graph: g_idx,
-                                sum,
-                                samples: cfg.s,
-                                sample_secs: t.elapsed_secs(),
-                            };
-                            if worker_txs[q].send(Msg::Sum(msg)).is_err() {
-                                return;
-                            }
-                        }
-                        None => {
-                            // Fill this shard's cross-graph batch.
-                            let mut remaining = cfg.s;
-                            while remaining > 0 {
-                                let p = &mut packers[q];
-                                let take = remaining.min(cfg.batch - p.rows);
-                                for r in 0..take {
-                                    let gl = sampler.sample(g, cfg.k, &mut rng, &mut scratch);
-                                    let row = p.rows + r;
-                                    cfg.variant
-                                        .write_input(&gl, &mut p.data[row * d..(row + 1) * d]);
-                                }
-                                p.segments.push((g_idx, take));
-                                p.rows += take;
-                                remaining -= take;
-                                if p.rows == cfg.batch {
-                                    p.sample_secs += t.elapsed_secs();
-                                    let msg = Batch {
-                                        data: std::mem::replace(
-                                            &mut p.data,
-                                            vec![0.0f32; cfg.batch * d],
-                                        ),
-                                        segments: std::mem::take(&mut p.segments),
-                                        rows: cfg.batch,
-                                        sample_secs: std::mem::take(&mut p.sample_secs),
-                                    };
-                                    p.rows = 0;
-                                    if worker_txs[q].send(Msg::Batch(msg)).is_err() {
-                                        return;
-                                    }
-                                    t = Timer::start();
-                                }
-                            }
-                            packers[q].sample_secs += t.elapsed_secs();
-                        }
-                    }
-                }
-                // Flush the partial batches (one per shard at most).
-                for (q, p) in packers.iter_mut().enumerate() {
-                    if p.rows > 0 {
-                        let mut data = std::mem::take(&mut p.data);
-                        data.truncate(p.rows * d);
-                        let _ = worker_txs[q].send(Msg::Batch(Batch {
-                            data,
-                            segments: std::mem::take(&mut p.segments),
-                            rows: p.rows,
-                            sample_secs: p.sample_secs,
-                        }));
-                    }
-                }
-            });
-        }
-        drop(txs);
-
-        // ---- feature shards -------------------------------------------
-        let mut rx_iter = rxs.into_iter();
-        let (mut sums, counts) = if shards == 1 {
-            // Single shard runs on this thread: required for a borrowed
-            // PJRT engine (PJRT handles are not Sync), and it keeps the
-            // unsharded hot path identical to the pre-sharding pipeline.
-            let rx = rx_iter.next().expect("one channel");
-            let rf_exec = match cfg.engine {
-                EngineMode::Pjrt => {
-                    Some(RfExecutor::new(engine.unwrap(), &cfg.impl_, &params, cfg.batch)?)
-                }
-                _ => None,
-            };
-            let cpu_map = match cfg.engine {
-                EngineMode::Cpu => Some(CpuFeatureMap::new(params.clone())),
-                _ => None,
-            };
-            let pjrt = rf_exec.as_ref().map(|exec| (engine.unwrap(), exec));
-            let r = run_feature_shard(rx, pjrt, cpu_map.as_ref(), cfg, n, 0, 1)?;
-            metrics.merge_shard(r.metrics);
-            (r.sums, r.counts)
-        } else {
-            // One engine thread per shard; each builds its own executor.
-            let mut handles = Vec::with_capacity(shards);
-            for (q, rx) in rx_iter.enumerate() {
-                let spawn_spec = pjrt_spawn.clone();
-                let params_ref = &params;
-                let cfg_ref = cfg;
-                handles.push(scope.spawn(move || -> Result<ShardResult> {
-                    match (cfg_ref.engine, spawn_spec) {
-                        (EngineMode::Pjrt, Some((dir, manifest, impl_))) => {
-                            let shard_engine = Engine::with_manifest(&dir, manifest)?;
-                            let exec = RfExecutor::new(
-                                &shard_engine,
-                                &impl_,
-                                params_ref,
-                                cfg_ref.batch,
-                            )?;
-                            run_feature_shard(
-                                rx,
-                                Some((&shard_engine, &exec)),
-                                None,
-                                cfg_ref,
-                                n,
-                                q,
-                                shards,
-                            )
-                        }
-                        (EngineMode::Cpu, _) => {
-                            let map = CpuFeatureMap::new(params_ref.clone());
-                            run_feature_shard(rx, None, Some(&map), cfg_ref, n, q, shards)
-                        }
-                        _ => run_feature_shard(rx, None, None, cfg_ref, n, q, shards),
-                    }
-                }));
-            }
-            // ---- merge (copy: per-graph rows are disjoint) ------------
-            let mut sums = vec![0.0f32; n * cfg.m];
-            let mut counts = vec![0usize; n];
-            for (q, h) in handles.into_iter().enumerate() {
-                let r = h
-                    .join()
-                    .map_err(|_| anyhow::anyhow!("feature shard {q} panicked"))??;
-                metrics.merge_shard(r.metrics);
-                for (local, row) in r.sums.chunks_exact(cfg.m).enumerate() {
-                    let g_idx = local * shards + q;
-                    sums[g_idx * cfg.m..(g_idx + 1) * cfg.m].copy_from_slice(row);
-                    counts[g_idx] = r.counts[local];
-                }
-            }
-            (sums, counts)
-        };
-
-        // Mean over samples (identical post-pass for every shard count).
-        for g_idx in 0..n {
-            anyhow::ensure!(
-                counts[g_idx] == cfg.s,
-                "graph {g_idx} got {} samples",
-                counts[g_idx]
-            );
-            let inv = 1.0 / cfg.s as f32;
-            for v in &mut sums[g_idx * cfg.m..(g_idx + 1) * cfg.m] {
-                *v *= inv;
-            }
-        }
-        Ok(sums)
-    })?;
-
     metrics.wall_secs = wall.elapsed_secs();
     Ok((sums, metrics))
 }
@@ -524,7 +174,7 @@ mod tests {
     use super::*;
     use crate::gen::SbmConfig;
     use crate::runtime::artifacts_dir;
-    use crate::util::check;
+    use crate::util::{check, Rng};
 
     fn small_ds() -> Dataset {
         SbmConfig { per_class: 3, r: 1.5, ..Default::default() }.generate(&mut Rng::new(11))
@@ -570,9 +220,10 @@ mod tests {
 
     #[test]
     fn sharded_embeddings_bitwise_identical() {
-        // The tentpole invariant: embeddings are a pure function of
+        // The core invariant: embeddings are a pure function of
         // (dataset, cfg.seed, feature math) — shard count and worker
-        // count must not move a single bit.
+        // count must not move a single bit, including through the
+        // streaming core's idle-flush partial batches.
         let ds = small_ds();
         for mode in [EngineMode::Cpu, EngineMode::CpuInline] {
             let mut ref_cfg = small_cfg(mode);
@@ -623,16 +274,6 @@ mod tests {
         assert!(m.batches >= 3, "each shard executes at least one batch");
         let report = m.report();
         assert!(report.contains("shards=3"), "{report}");
-    }
-
-    #[test]
-    fn shard_len_partitions_exactly() {
-        for n in [0usize, 1, 5, 6, 17] {
-            for shards in [1usize, 2, 3, 4, 8] {
-                let total: usize = (0..shards).map(|q| shard_len(n, q, shards)).sum();
-                assert_eq!(total, n, "n={n} shards={shards}");
-            }
-        }
     }
 
     #[test]

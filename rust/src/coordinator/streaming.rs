@@ -1,0 +1,940 @@
+//! The persistent streaming pipeline: sampler workers + feature shards
+//! that outlive any one dataset.
+//!
+//! ```text
+//!   GraphJob (graph, seed, tag, done) ──► bounded job queue
+//!                                              │ (admission control:
+//!                                              │  try_submit → Overloaded)
+//!                    sampler workers ◄─────────┘
+//!                    (std::thread x W, shared queue)
+//!                         │ sample s subgraphs per job, pack rows into
+//!                         │ per-shard cross-REQUEST batches of B rows;
+//!                         │ partial batches flush when the queue idles
+//!                         ▼
+//!            per-shard bounded channels (job ticket → shard ticket mod N)
+//!                         │
+//!                         ▼
+//!              N feature shards (own RfExecutor/CpuFeatureMap each)
+//!                         │ scatter rows into per-job accumulators;
+//!                         │ a job completes when its s rows arrived
+//!                         ▼
+//!              Completed { tag, row } ──► the job's own `done` channel
+//! ```
+//!
+//! Invariants carried over from the batch pipeline (and pinned by its
+//! tests, which now run through this core via [`embed_dataset`]):
+//!
+//! - **Determinism**: every job owns a seeded RNG stream; one worker
+//!   samples the whole job in order, and its rows reach exactly one
+//!   shard in FIFO order, so each job's accumulator sees its rows in
+//!   sample order. Embeddings are bitwise identical for every worker
+//!   count, shard count, and batching/flush schedule.
+//! - **Cross-request batching**: workers keep one open batch per shard
+//!   shared across *all* jobs they process, so rows from concurrent
+//!   requests pack into full compiled-size batches. A worker flushes its
+//!   partial batches only when the job queue momentarily idles — full
+//!   batches under load, low latency when drained.
+//! - **Backpressure**: the job queue and per-shard channels are bounded;
+//!   [`StreamingPipeline::try_submit`] surfaces a full queue to callers
+//!   (the serve layer's admission control) instead of blocking.
+//!
+//! [`embed_dataset`]: super::pipeline::embed_dataset
+
+use std::collections::{HashMap, VecDeque};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+use anyhow::{bail, Result};
+
+use super::metrics::PipelineMetrics;
+use super::pipeline::{EngineMode, GsaConfig};
+use crate::features::{CpuFeatureMap, RfParams};
+use crate::graph::AnyGraph;
+use crate::runtime::{Engine, Manifest, RfExecutor};
+use crate::sample::sampler_by_name;
+use crate::util::{Rng, Timer};
+
+/// One graph to embed through the persistent pipeline.
+pub struct GraphJob {
+    /// The graph (shared so jobs stay cheap to move between threads).
+    pub graph: Arc<AnyGraph>,
+    /// Seed of this job's private sampling RNG stream; with the same
+    /// seed/config a job's embedding is a pure function of the graph.
+    pub seed: u64,
+    /// Caller-defined correlation id, echoed back in [`Completed`].
+    pub tag: u64,
+    /// Where the finished embedding is delivered.
+    pub done: Sender<Completed>,
+}
+
+/// A finished (or failed) job, delivered on the job's `done` channel.
+pub struct Completed {
+    /// The submitting caller's correlation id.
+    pub tag: u64,
+    /// The (m,) embedding: mean feature vector over the job's s samples.
+    /// Empty when `error` is set.
+    pub row: Vec<f32>,
+    /// Samples that contributed to `row`.
+    pub samples: usize,
+    /// Per-job failure (executor error, graph too small, …); the
+    /// pipeline itself keeps running.
+    pub error: Option<String>,
+}
+
+/// Outcome of a non-blocking submit (the admission-control path).
+#[derive(Debug, PartialEq, Eq)]
+pub enum SubmitOutcome {
+    Accepted,
+    /// The bounded job queue is full; the job was dropped — callers
+    /// should surface an overload error to the requester.
+    Overloaded,
+}
+
+/// Per-job bookkeeping shared between the worker that samples it and the
+/// shard that accumulates it.
+struct JobState {
+    ticket: u64,
+    tag: u64,
+    done: Sender<Completed>,
+}
+
+impl JobState {
+    fn fail(&self, msg: String) {
+        let _ = self.done.send(Completed {
+            tag: self.tag,
+            row: Vec::new(),
+            samples: 0,
+            error: Some(msg),
+        });
+    }
+}
+
+/// Internal job as routed to workers (shard chosen at submit time).
+struct Job {
+    graph: Arc<AnyGraph>,
+    seed: u64,
+    shard: usize,
+    state: Arc<JobState>,
+}
+
+/// A batch in flight: row-major input rows + the (job, rows) segments
+/// they belong to. All segments of one batch target the same shard.
+struct Batch {
+    data: Vec<f32>,
+    segments: Vec<(Arc<JobState>, usize)>,
+    rows: usize,
+    /// Sampler busy-time attributed to this batch (metrics).
+    sample_secs: f64,
+}
+
+/// Message from CpuInline workers: a finished per-job feature sum.
+struct JobSum {
+    state: Arc<JobState>,
+    sum: Vec<f32>,
+    samples: usize,
+    sample_secs: f64,
+}
+
+enum Msg {
+    Batch(Batch),
+    Sum(JobSum),
+}
+
+/// One open cross-request batch a worker is filling for one shard.
+struct Packer {
+    data: Vec<f32>,
+    rows: usize,
+    segments: Vec<(Arc<JobState>, usize)>,
+    sample_secs: f64,
+}
+
+impl Packer {
+    fn new(batch: usize, d: usize) -> Packer {
+        Packer { data: vec![0.0f32; batch * d], rows: 0, segments: Vec::new(), sample_secs: 0.0 }
+    }
+}
+
+/// Spec from which a spawned shard thread rebuilds its own PJRT engine
+/// (PJRT handles are not Sync, so each shard owns one).
+type PjrtSpawn = (PathBuf, Manifest, String);
+
+/// The bounded multi-producer multi-consumer job queue feeding the
+/// sampler workers.
+///
+/// Hand-rolled on Mutex + Condvar rather than `mpsc` because workers
+/// need two properties a shared `Mutex<Receiver>` cannot give:
+/// 1. a waiting worker must NOT hold the queue lock (with `recv` under
+///    a mutex, one blocked worker would pin every other worker — and
+///    their unflushed batches — behind the lock);
+/// 2. a worker must run its partial-batch flush *between* "queue looks
+///    empty" and "go to sleep", with the lock released, so in-flight
+///    jobs whose rows it still holds can complete.
+struct JobQueue {
+    inner: Mutex<JobQueueInner>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    cap: usize,
+}
+
+struct JobQueueInner {
+    jobs: VecDeque<Job>,
+    closed: bool,
+}
+
+/// Outcome of a non-blocking push.
+enum TryPush {
+    Pushed,
+    Full,
+    Closed,
+}
+
+impl JobQueue {
+    fn new(cap: usize) -> JobQueue {
+        JobQueue {
+            inner: Mutex::new(JobQueueInner { jobs: VecDeque::new(), closed: false }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            cap: cap.max(1),
+        }
+    }
+
+    /// Blocking push; `false` if the queue is closed.
+    fn push(&self, job: Job) -> bool {
+        let mut g = self.inner.lock().expect("job queue lock");
+        loop {
+            if g.closed {
+                return false;
+            }
+            if g.jobs.len() < self.cap {
+                g.jobs.push_back(job);
+                self.not_empty.notify_one();
+                return true;
+            }
+            g = self.not_full.wait(g).expect("job queue lock");
+        }
+    }
+
+    fn try_push(&self, job: Job) -> TryPush {
+        let mut g = self.inner.lock().expect("job queue lock");
+        if g.closed {
+            TryPush::Closed
+        } else if g.jobs.len() >= self.cap {
+            TryPush::Full
+        } else {
+            g.jobs.push_back(job);
+            self.not_empty.notify_one();
+            TryPush::Pushed
+        }
+    }
+
+    /// Blocking pop; `None` once the queue is closed and drained.
+    /// `before_wait` runs — with the lock released — every time the
+    /// queue turns out to be empty, before this worker goes to sleep:
+    /// that is the partial-batch flush hook.
+    fn pop<F: FnMut()>(&self, mut before_wait: F) -> Option<Job> {
+        let mut g = self.inner.lock().expect("job queue lock");
+        loop {
+            if let Some(j) = g.jobs.pop_front() {
+                self.not_full.notify_one();
+                return Some(j);
+            }
+            if g.closed {
+                return None;
+            }
+            drop(g);
+            before_wait();
+            g = self.inner.lock().expect("job queue lock");
+            // Re-check under the lock: a job may have landed while we
+            // flushed; only wait when the queue is still empty (the
+            // condvar atomically releases the lock).
+            if g.jobs.is_empty() && !g.closed {
+                g = self.not_empty.wait(g).expect("job queue lock");
+            }
+        }
+    }
+
+    fn close(&self) {
+        let mut g = self.inner.lock().expect("job queue lock");
+        g.closed = true;
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+}
+
+/// A long-running embedding pipeline: W sampler workers and N feature
+/// shards built once, fed by [`submit`](StreamingPipeline::submit) /
+/// [`try_submit`](StreamingPipeline::try_submit), torn down by
+/// [`shutdown`](StreamingPipeline::shutdown) (or by dropping it — the
+/// threads then drain and exit on their own).
+pub struct StreamingPipeline {
+    jobs: Arc<JobQueue>,
+    workers: Vec<JoinHandle<()>>,
+    shard_handles: Vec<JoinHandle<PipelineMetrics>>,
+    /// Live per-shard metric snapshots, refreshed by the shard threads.
+    shard_slots: Vec<Arc<Mutex<PipelineMetrics>>>,
+    next_ticket: AtomicU64,
+    cfg: GsaConfig,
+    /// RNG state positioned right after the parameter draw — exactly
+    /// where the per-graph seed stream historically started, so
+    /// [`graph_seeds`](Self::graph_seeds) reproduces `embed_dataset`'s
+    /// seeding bit for bit.
+    seed_rng: Rng,
+}
+
+impl StreamingPipeline {
+    /// Build the persistent pipeline: draw the shared feature parameters
+    /// (one draw per pipeline — the paper's W is fixed, it is the same
+    /// "device"), then spawn `cfg.workers` sampler workers and
+    /// `cfg.shards` feature shards. `engine` must be Some for
+    /// [`EngineMode::Pjrt`]; it serves as the template (artifacts dir +
+    /// parsed manifest) from which each shard builds its own engine.
+    ///
+    /// PJRT note: every shard — including `shards == 1` — constructs its
+    /// own engine inside its thread (PJRT handles are neither Send nor
+    /// Sync, and shard threads outlive the caller), so a caller holding
+    /// a borrowed engine pays one extra engine construction per
+    /// *pipeline* (not per job). Long-lived pipelines (serve) amortize
+    /// it to zero; `embed_dataset` pays it once per call.
+    pub fn new(cfg: &GsaConfig, engine: Option<&Engine>) -> Result<StreamingPipeline> {
+        let mut cfg = cfg.clone();
+        cfg.shards = cfg.shards.max(1);
+        cfg.workers = cfg.workers.max(1);
+        cfg.queue_cap = cfg.queue_cap.max(1);
+        // Degenerate values would hang jobs (s = 0 never completes, a
+        // 0-row batch never fills) or panic a shared worker thread
+        // (graphlet size out of the u32-mask range) — reject up front.
+        anyhow::ensure!(
+            (1..=crate::graph::MAX_K).contains(&cfg.k),
+            "graphlet size k={} out of range 1..={}",
+            cfg.k,
+            crate::graph::MAX_K
+        );
+        anyhow::ensure!(cfg.s >= 1, "samples per graph must be >= 1");
+        anyhow::ensure!(cfg.m >= 1, "feature count m must be >= 1");
+        anyhow::ensure!(cfg.batch >= 1, "batch size must be >= 1");
+        let d = cfg.input_dim();
+
+        let mut seed_rng = Rng::new(cfg.seed);
+        let params =
+            Arc::new(RfParams::generate(cfg.variant, d, cfg.m, cfg.sigma, &mut seed_rng));
+
+        if cfg.engine == EngineMode::Pjrt && engine.is_none() {
+            bail!("PJRT mode requires an Engine");
+        }
+        let pjrt_spawn: Option<PjrtSpawn> = match cfg.engine {
+            EngineMode::Pjrt => {
+                let e = engine.unwrap();
+                Some((e.dir().to_path_buf(), e.manifest().clone(), cfg.impl_.clone()))
+            }
+            _ => None,
+        };
+
+        // ---- feature shards -------------------------------------------
+        let mut txs: Vec<SyncSender<Msg>> = Vec::with_capacity(cfg.shards);
+        let mut shard_handles = Vec::with_capacity(cfg.shards);
+        let mut shard_slots = Vec::with_capacity(cfg.shards);
+        for _q in 0..cfg.shards {
+            let (tx, rx) = sync_channel::<Msg>(cfg.queue_cap);
+            let slot = Arc::new(Mutex::new(PipelineMetrics::default()));
+            let spawn_spec = pjrt_spawn.clone();
+            let params = params.clone();
+            let cfg_cl = cfg.clone();
+            let slot_cl = slot.clone();
+            shard_handles.push(std::thread::spawn(move || {
+                shard_loop(rx, spawn_spec, &params, &cfg_cl, &slot_cl)
+            }));
+            txs.push(tx);
+            shard_slots.push(slot);
+        }
+
+        // ---- sampler workers ------------------------------------------
+        // The job queue bounds admitted-but-unsampled work; together with
+        // the per-shard channels it caps pipeline memory.
+        let jobs = Arc::new(JobQueue::new(cfg.queue_cap * cfg.workers));
+        let mut workers = Vec::with_capacity(cfg.workers);
+        for _w in 0..cfg.workers {
+            let queue = jobs.clone();
+            let txs = txs.clone();
+            let params = params.clone();
+            let cfg_cl = cfg.clone();
+            workers.push(std::thread::spawn(move || worker_loop(&queue, &txs, &params, &cfg_cl)));
+        }
+        // `txs` originals drop here: shard channels close exactly when the
+        // last worker exits.
+
+        Ok(StreamingPipeline {
+            jobs,
+            workers,
+            shard_handles,
+            shard_slots,
+            next_ticket: AtomicU64::new(0),
+            cfg,
+            seed_rng,
+        })
+    }
+
+    /// The pipeline's (normalized) configuration.
+    pub fn cfg(&self) -> &GsaConfig {
+        &self.cfg
+    }
+
+    /// The first `n` seeds of the pipeline's per-graph seed stream —
+    /// identical to what `embed_dataset` assigns graphs `0..n` for the
+    /// same `cfg.seed`.
+    pub fn graph_seeds(&self, n: usize) -> Vec<u64> {
+        self.seed_rng.clone().seed_stream(n)
+    }
+
+    /// Seed of stream position `index` (O(index); request paths use
+    /// small indices).
+    pub fn graph_seed(&self, index: usize) -> u64 {
+        let mut rng = self.seed_rng.clone();
+        let mut seed = 0u64;
+        for _ in 0..=index {
+            seed = rng.next_u64();
+        }
+        seed
+    }
+
+    fn make_job(&self, job: GraphJob) -> Job {
+        let ticket = self.next_ticket.fetch_add(1, Ordering::Relaxed);
+        Job {
+            graph: job.graph,
+            seed: job.seed,
+            shard: (ticket % self.cfg.shards as u64) as usize,
+            state: Arc::new(JobState { ticket, tag: job.tag, done: job.done }),
+        }
+    }
+
+    /// Blocking submit: waits while the job queue is full. Errors only
+    /// if the pipeline has shut down.
+    pub fn submit(&self, job: GraphJob) -> Result<()> {
+        let j = self.make_job(job);
+        if self.jobs.push(j) {
+            Ok(())
+        } else {
+            bail!("pipeline is shut down")
+        }
+    }
+
+    /// Non-blocking submit for the serve path: a full queue is reported
+    /// as [`SubmitOutcome::Overloaded`] (the job is dropped) instead of
+    /// blocking the acceptor.
+    pub fn try_submit(&self, job: GraphJob) -> Result<SubmitOutcome> {
+        let j = self.make_job(job);
+        match self.jobs.try_push(j) {
+            TryPush::Pushed => Ok(SubmitOutcome::Accepted),
+            TryPush::Full => Ok(SubmitOutcome::Overloaded),
+            TryPush::Closed => bail!("pipeline is shut down"),
+        }
+    }
+
+    /// Live metrics: the merge of every shard's latest snapshot (the
+    /// serve `stats` op). Totals lag the hot path by at most one batch.
+    pub fn metrics_snapshot(&self) -> PipelineMetrics {
+        let mut total = PipelineMetrics { shards: self.cfg.shards, ..Default::default() };
+        for slot in &self.shard_slots {
+            let snap = slot.lock().map(|g| g.clone()).unwrap_or_default();
+            total.merge_shard(snap);
+        }
+        total
+    }
+
+    /// Close the job queue, join every worker and shard, and return the
+    /// merged run metrics.
+    pub fn shutdown(mut self) -> Result<PipelineMetrics> {
+        self.jobs.close();
+        for w in self.workers.drain(..) {
+            w.join().map_err(|_| anyhow::anyhow!("sampler worker panicked"))?;
+        }
+        let mut total = PipelineMetrics { shards: self.cfg.shards, ..Default::default() };
+        for (q, h) in self.shard_handles.drain(..).enumerate() {
+            let m = h.join().map_err(|_| anyhow::anyhow!("feature shard {q} panicked"))?;
+            total.merge_shard(m);
+        }
+        Ok(total)
+    }
+}
+
+impl Drop for StreamingPipeline {
+    fn drop(&mut self) {
+        // Dropping without `shutdown` (e.g. the serve daemon exiting):
+        // close the queue so workers and shards drain and exit on their
+        // own instead of waiting for jobs that will never come.
+        self.jobs.close();
+    }
+}
+
+/// Send every open partial batch and reset the packers for reuse.
+fn flush_packers(packers: &mut [Packer], txs: &[SyncSender<Msg>], batch: usize, d: usize) {
+    for (q, p) in packers.iter_mut().enumerate() {
+        if p.rows == 0 {
+            continue;
+        }
+        let mut data = std::mem::replace(&mut p.data, vec![0.0f32; batch * d]);
+        data.truncate(p.rows * d);
+        let msg = Batch {
+            data,
+            segments: std::mem::take(&mut p.segments),
+            rows: p.rows,
+            sample_secs: std::mem::take(&mut p.sample_secs),
+        };
+        p.rows = 0;
+        let _ = txs[q].send(Msg::Batch(msg));
+    }
+}
+
+/// Sampler worker: pull jobs off the shared queue, sample each job's s
+/// subgraphs in seed order, and pack rows into per-shard cross-request
+/// batches. Partial batches flush when the queue idles, so a lone
+/// request is never stranded behind an unfilled batch.
+fn worker_loop(queue: &JobQueue, txs: &[SyncSender<Msg>], params: &RfParams, cfg: &GsaConfig) {
+    let sampler = sampler_by_name(&cfg.sampler);
+    let inline_map = match cfg.engine {
+        EngineMode::CpuInline => Some(CpuFeatureMap::new(params.clone())),
+        _ => None,
+    };
+    let d = cfg.input_dim();
+    let shards = cfg.shards;
+    let mut scratch: Vec<usize> = Vec::with_capacity(cfg.k);
+    // One open batch per shard (batch mode only).
+    let mut packers: Vec<Packer> = match inline_map {
+        None => (0..shards).map(|_| Packer::new(cfg.batch, d)).collect(),
+        Some(_) => Vec::new(),
+    };
+    // Inline-mode scratch: inputs + feature rows for one chunk.
+    let (mut inline_x, mut inline_feat) = match inline_map {
+        Some(_) => (vec![0.0f32; cfg.batch * d], vec![0.0f32; cfg.batch * cfg.m]),
+        None => (Vec::new(), Vec::new()),
+    };
+    loop {
+        // Take the next job; whenever the queue turns out to be empty,
+        // `pop` runs the flush hook (lock released) before sleeping, so
+        // in-flight requests complete instead of waiting on future
+        // traffic — and a sleeping worker never pins the queue lock.
+        let job = queue.pop(|| flush_packers(&mut packers, txs, cfg.batch, d));
+        let Some(job) = job else { break };
+
+        let g = &*job.graph;
+        if cfg.k > g.v() {
+            // Guard here as well as in the serve layer: a too-small graph
+            // must fail its own request, never a shared worker thread.
+            job.state.fail(format!(
+                "graph has {} nodes but graphlet size k={} requires at least k",
+                g.v(),
+                cfg.k
+            ));
+            continue;
+        }
+        let q = job.shard;
+        let mut rng = Rng::new(job.seed);
+        let mut t = Timer::start();
+        match &inline_map {
+            Some(map) => {
+                // Compute features locally; ship only the sum.
+                let mut sum = vec![0.0f32; cfg.m];
+                let mut done = 0usize;
+                while done < cfg.s {
+                    let chunk = (cfg.s - done).min(cfg.batch);
+                    for r in 0..chunk {
+                        let gl = sampler.sample(g, cfg.k, &mut rng, &mut scratch);
+                        cfg.variant.write_input(&gl, &mut inline_x[r * d..(r + 1) * d]);
+                    }
+                    map.map_batch(&inline_x[..chunk * d], chunk, &mut inline_feat[..chunk * cfg.m]);
+                    for r in 0..chunk {
+                        for (acc, &v) in
+                            sum.iter_mut().zip(&inline_feat[r * cfg.m..(r + 1) * cfg.m])
+                        {
+                            *acc += v;
+                        }
+                    }
+                    done += chunk;
+                }
+                let msg = JobSum {
+                    state: job.state.clone(),
+                    sum,
+                    samples: cfg.s,
+                    sample_secs: t.elapsed_secs(),
+                };
+                let _ = txs[q].send(Msg::Sum(msg));
+            }
+            None => {
+                // Fill this shard's cross-request batch.
+                let mut remaining = cfg.s;
+                while remaining > 0 {
+                    let p = &mut packers[q];
+                    let take = remaining.min(cfg.batch - p.rows);
+                    for r in 0..take {
+                        let gl = sampler.sample(g, cfg.k, &mut rng, &mut scratch);
+                        let row = p.rows + r;
+                        cfg.variant.write_input(&gl, &mut p.data[row * d..(row + 1) * d]);
+                    }
+                    p.segments.push((job.state.clone(), take));
+                    p.rows += take;
+                    remaining -= take;
+                    if p.rows == cfg.batch {
+                        p.sample_secs += t.elapsed_secs();
+                        let msg = Batch {
+                            data: std::mem::replace(&mut p.data, vec![0.0f32; cfg.batch * d]),
+                            segments: std::mem::take(&mut p.segments),
+                            rows: cfg.batch,
+                            sample_secs: std::mem::take(&mut p.sample_secs),
+                        };
+                        p.rows = 0;
+                        let _ = txs[q].send(Msg::Batch(msg));
+                        t = Timer::start();
+                    }
+                }
+                packers[q].sample_secs += t.elapsed_secs();
+            }
+        }
+    }
+    // Queue closed: flush whatever is still open before exiting.
+    flush_packers(&mut packers, txs, cfg.batch, d);
+}
+
+/// This shard's executor, built inside the shard thread (PJRT handles
+/// are neither Send nor Sync).
+enum ShardExec {
+    Pjrt { engine: Box<Engine>, exec: RfExecutor },
+    Cpu(CpuFeatureMap),
+    /// CpuInline: workers computed the features; only sums arrive here.
+    Inline,
+}
+
+fn build_exec(
+    spawn_spec: Option<PjrtSpawn>,
+    params: &RfParams,
+    cfg: &GsaConfig,
+) -> Result<ShardExec> {
+    match cfg.engine {
+        EngineMode::Pjrt => {
+            let (dir, manifest, impl_) = spawn_spec.expect("pjrt spawn spec");
+            let engine = Box::new(Engine::with_manifest(&dir, manifest)?);
+            let exec = RfExecutor::new(&engine, &impl_, params, cfg.batch)?;
+            Ok(ShardExec::Pjrt { engine, exec })
+        }
+        EngineMode::Cpu => Ok(ShardExec::Cpu(CpuFeatureMap::new(params.clone()))),
+        EngineMode::CpuInline => Ok(ShardExec::Inline),
+    }
+}
+
+/// Per-job accumulator living in exactly one shard.
+struct Accum {
+    sum: Vec<f32>,
+    count: usize,
+}
+
+fn publish(slot: &Mutex<PipelineMetrics>, metrics: &PipelineMetrics) {
+    if let Ok(mut g) = slot.lock() {
+        *g = metrics.clone();
+    }
+}
+
+/// Drain one shard's channel: execute batches on this shard's executor,
+/// scatter rows into per-job accumulators (arrival order == sample
+/// order, the determinism invariant), and deliver each job's mean row on
+/// its `done` channel the moment its s-th sample lands.
+fn shard_loop(
+    rx: Receiver<Msg>,
+    spawn_spec: Option<PjrtSpawn>,
+    params: &RfParams,
+    cfg: &GsaConfig,
+    slot: &Mutex<PipelineMetrics>,
+) -> PipelineMetrics {
+    let exec = match build_exec(spawn_spec, params, cfg) {
+        Ok(exec) => exec,
+        Err(e) => {
+            // Setup failed (e.g. PJRT engine build): fail every job that
+            // reaches this shard instead of hanging its requesters. A
+            // job's rows total exactly cfg.s, so tracking seen rows lets
+            // the book-keeping drop each ticket once it drained — the
+            // map stays bounded by in-flight jobs even if the daemon
+            // keeps serving errors for days.
+            let msg = format!("feature shard setup failed: {e}");
+            let mut seen_rows: HashMap<u64, usize> = HashMap::new();
+            for m in rx {
+                match m {
+                    // A Sum is the job's entire payload: fail and forget.
+                    Msg::Sum(s) => s.state.fail(msg.clone()),
+                    Msg::Batch(b) => {
+                        for (state, rows) in b.segments {
+                            let seen = seen_rows.entry(state.ticket).or_insert(0);
+                            if *seen == 0 {
+                                state.fail(msg.clone());
+                            }
+                            *seen += rows;
+                            if *seen >= cfg.s {
+                                seen_rows.remove(&state.ticket);
+                            }
+                        }
+                    }
+                }
+            }
+            return PipelineMetrics::default();
+        }
+    };
+
+    let m = cfg.m;
+    let inv = 1.0 / cfg.s as f32;
+    let mut metrics = PipelineMetrics::default();
+    let mut accums: HashMap<u64, Accum> = HashMap::new();
+    // Tickets whose batch failed mid-run -> rows seen so far. Later
+    // segments are skipped (still counted), and the entry is dropped
+    // once all cfg.s rows drained, so the map stays bounded by
+    // in-flight jobs in a long-lived pipeline.
+    let mut failed: HashMap<u64, usize> = HashMap::new();
+    let mut cpu_out = vec![0.0f32; cfg.batch * m];
+    for msg in rx {
+        match msg {
+            Msg::Sum(js) => {
+                metrics.samples += js.samples;
+                metrics.sample_secs += js.sample_secs;
+                metrics.batches += 1;
+                metrics.graphs += 1;
+                // Publish BEFORE delivering: once the Completed is
+                // visible to a client, a stats snapshot must already
+                // account for it.
+                publish(slot, &metrics);
+                let mut row = js.sum;
+                for v in &mut row {
+                    *v *= inv;
+                }
+                let _ = js.state.done.send(Completed {
+                    tag: js.state.tag,
+                    row,
+                    samples: js.samples,
+                    error: None,
+                });
+            }
+            Msg::Batch(b) => {
+                let t = Timer::start();
+                let mut exec_err: Option<String> = None;
+                match &exec {
+                    ShardExec::Pjrt { engine, exec } => {
+                        metrics.padded_rows += cfg.batch - b.rows.min(cfg.batch);
+                        match exec.map(engine, &b.data, b.rows) {
+                            Ok(y) => cpu_out = y,
+                            Err(e) => exec_err = Some(e.to_string()),
+                        }
+                    }
+                    ShardExec::Cpu(map) => {
+                        cpu_out.resize(b.rows * m, 0.0);
+                        map.map_batch(&b.data, b.rows, &mut cpu_out[..b.rows * m]);
+                    }
+                    ShardExec::Inline => unreachable!("batch message in inline mode"),
+                }
+                if let Some(e) = exec_err {
+                    for (state, rows) in &b.segments {
+                        match failed.get_mut(&state.ticket) {
+                            Some(seen) => *seen += rows,
+                            None => {
+                                // First failure for this job: count any
+                                // rows already accumulated plus this
+                                // segment's, then notify the requester.
+                                let prior =
+                                    accums.remove(&state.ticket).map_or(0, |a| a.count);
+                                failed.insert(state.ticket, prior + rows);
+                                state.fail(format!("feature execution failed: {e}"));
+                            }
+                        }
+                        if failed.get(&state.ticket).is_some_and(|&seen| seen >= cfg.s) {
+                            failed.remove(&state.ticket);
+                        }
+                    }
+                    publish(slot, &metrics);
+                    continue;
+                }
+                let dt = t.elapsed_secs();
+                metrics.feature_secs += dt;
+                metrics.batch_latency.record(dt);
+                metrics.batches += 1;
+                metrics.samples += b.rows;
+                metrics.sample_secs += b.sample_secs;
+                // Scatter rows into per-job accumulators (sample order
+                // within each job — the determinism invariant).
+                let mut row0 = 0usize;
+                for (state, rows) in &b.segments {
+                    if let Some(seen) = failed.get_mut(&state.ticket) {
+                        *seen += rows;
+                        if *seen >= cfg.s {
+                            failed.remove(&state.ticket);
+                        }
+                        row0 += rows;
+                        continue;
+                    }
+                    let acc = accums
+                        .entry(state.ticket)
+                        .or_insert_with(|| Accum { sum: vec![0.0f32; m], count: 0 });
+                    for r in row0..row0 + rows {
+                        let frow = &cpu_out[r * m..(r + 1) * m];
+                        for (a, &v) in acc.sum.iter_mut().zip(frow) {
+                            *a += v;
+                        }
+                    }
+                    acc.count += rows;
+                    row0 += rows;
+                    if acc.count >= cfg.s {
+                        let mut done = accums.remove(&state.ticket).expect("accumulator");
+                        for v in &mut done.sum {
+                            *v *= inv;
+                        }
+                        metrics.graphs += 1;
+                        // Publish BEFORE delivering (stats must never
+                        // lag a reply a client already holds).
+                        publish(slot, &metrics);
+                        let _ = state.done.send(Completed {
+                            tag: state.tag,
+                            row: done.sum,
+                            samples: done.count,
+                            error: None,
+                        });
+                    }
+                }
+                publish(slot, &metrics);
+            }
+        }
+    }
+    publish(slot, &metrics);
+    metrics
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::SbmConfig;
+    use crate::graph::{CsrGraph, DenseGraph};
+    use crate::util::Rng;
+
+    fn cfg(engine: EngineMode) -> GsaConfig {
+        GsaConfig {
+            k: 3,
+            s: 100,
+            m: 32,
+            batch: 16,
+            workers: 2,
+            shards: 2,
+            variant: crate::features::Variant::Opu,
+            engine,
+            seed: 9,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn streaming_matches_batch_adapter() {
+        // Jobs submitted one-by-one through the persistent pipeline must
+        // reproduce embed_dataset exactly (same seeds, same math) —
+        // including when submitted out of index order.
+        let ds = SbmConfig { per_class: 3, r: 1.5, ..Default::default() }
+            .generate(&mut Rng::new(4));
+        let c = cfg(EngineMode::Cpu);
+        let (want, _) = super::super::pipeline::embed_dataset(&ds, &c, None).unwrap();
+        let pipe = StreamingPipeline::new(&c, None).unwrap();
+        let seeds = pipe.graph_seeds(ds.len());
+        let (tx, rx) = std::sync::mpsc::channel();
+        let mut order: Vec<usize> = (0..ds.len()).collect();
+        order.reverse();
+        for g_idx in order {
+            pipe.submit(GraphJob {
+                graph: Arc::new(ds.graphs[g_idx].clone()),
+                seed: seeds[g_idx],
+                tag: g_idx as u64,
+                done: tx.clone(),
+            })
+            .unwrap();
+        }
+        drop(tx);
+        let mut got = vec![0.0f32; want.len()];
+        for _ in 0..ds.len() {
+            let done = rx.recv().unwrap();
+            assert!(done.error.is_none(), "{:?}", done.error);
+            let g = done.tag as usize;
+            got[g * 32..(g + 1) * 32].copy_from_slice(&done.row);
+        }
+        let metrics = pipe.shutdown().unwrap();
+        assert_eq!(got, want);
+        assert_eq!(metrics.samples, ds.len() * 100);
+        assert_eq!(metrics.graphs, ds.len());
+    }
+
+    #[test]
+    fn graph_smaller_than_k_fails_its_own_job_only() {
+        let c = cfg(EngineMode::Cpu);
+        let pipe = StreamingPipeline::new(&c, None).unwrap();
+        let (tx, rx) = std::sync::mpsc::channel();
+        let tiny = {
+            let mut g = DenseGraph::new(2);
+            g.add_edge(0, 1);
+            AnyGraph::Dense(g)
+        };
+        pipe.submit(GraphJob { graph: Arc::new(tiny), seed: 1, tag: 7, done: tx.clone() })
+            .unwrap();
+        let c1 = rx.recv().unwrap();
+        assert_eq!(c1.tag, 7);
+        let err = c1.error.expect("too-small graph must fail");
+        assert!(err.contains("graphlet size"), "{err}");
+        // The pipeline is still healthy: a valid job completes.
+        let ok_graph = AnyGraph::Csr(CsrGraph::from_edges(
+            6,
+            &[(0, 1), (1, 2), (2, 3), (3, 4), (4, 5), (5, 0)],
+        ));
+        pipe.submit(GraphJob { graph: Arc::new(ok_graph), seed: 2, tag: 8, done: tx })
+            .unwrap();
+        let c2 = rx.recv().unwrap();
+        assert!(c2.error.is_none());
+        assert_eq!(c2.tag, 8);
+        assert_eq!(c2.samples, 100);
+        assert!(c2.row.iter().all(|v| v.is_finite()));
+        pipe.shutdown().unwrap();
+    }
+
+    #[test]
+    fn try_submit_reports_overload_on_full_queue() {
+        // One slow worker + minimal queue: a burst of non-blocking
+        // submits must hit the admission-control bound.
+        let mut c = cfg(EngineMode::Cpu);
+        c.workers = 1;
+        c.shards = 1;
+        c.queue_cap = 1;
+        c.s = 4000; // keep the single worker busy during the burst
+        let pipe = StreamingPipeline::new(&c, None).unwrap();
+        let ds = SbmConfig { per_class: 1, r: 1.5, ..Default::default() }
+            .generate(&mut Rng::new(2));
+        let g = Arc::new(ds.graphs[0].clone());
+        let (tx, rx) = std::sync::mpsc::channel();
+        let mut accepted = 0usize;
+        let mut overloaded = 0usize;
+        for i in 0..32u64 {
+            match pipe
+                .try_submit(GraphJob { graph: g.clone(), seed: i, tag: i, done: tx.clone() })
+                .unwrap()
+            {
+                SubmitOutcome::Accepted => accepted += 1,
+                SubmitOutcome::Overloaded => overloaded += 1,
+            }
+        }
+        drop(tx);
+        assert!(overloaded > 0, "queue of capacity 1 absorbed 32 instant submits");
+        assert!(accepted > 0);
+        for _ in 0..accepted {
+            let done = rx.recv().unwrap();
+            assert!(done.error.is_none());
+        }
+        pipe.shutdown().unwrap();
+    }
+
+    #[test]
+    fn graph_seed_matches_seed_stream() {
+        let c = cfg(EngineMode::Cpu);
+        let pipe = StreamingPipeline::new(&c, None).unwrap();
+        let seeds = pipe.graph_seeds(8);
+        for (i, &s) in seeds.iter().enumerate() {
+            assert_eq!(pipe.graph_seed(i), s);
+        }
+        pipe.shutdown().unwrap();
+    }
+}

@@ -18,19 +18,26 @@
 //!   reports PJRT as unavailable and everything falls back to the CPU
 //!   feature engines.)
 //!
-//! The embedding hot path is a **sharded dataflow**: W sampler workers
-//! feed N feature-engine shards over bounded per-shard channels, with
-//! the deterministic assignment `graph g -> shard g % N`. Each shard
-//! owns its own executor (PJRT engine or CPU map clone) and per-graph
-//! accumulators; a copy-merge folds the disjoint shard results, so the
-//! produced embeddings are bitwise identical for every (W, N) — see
-//! [`coordinator`] for the stage diagram and invariants.
+//! The embedding hot path is a **persistent sharded dataflow**
+//! ([`coordinator::StreamingPipeline`]): W sampler workers feed N
+//! feature-engine shards over bounded per-shard channels; jobs are
+//! round-robined over shards and rows from concurrent jobs pack into
+//! cross-request batches of the compiled batch size. Each shard owns
+//! its own executor (PJRT engine or CPU map clone) and per-job
+//! accumulators, so the produced embeddings are bitwise identical for
+//! every (W, N) and for every batching schedule — see [`coordinator`]
+//! for the stage diagrams and invariants. One-shot experiments use the
+//! [`coordinator::embed_dataset`] batch adapter; heavy traffic uses the
+//! [`serve`] daemon (`graphlet-rf serve`), which keeps the pipeline and
+//! artifacts warm across requests, batches rows from concurrent TCP
+//! clients together, and fronts it all with a content-addressed
+//! embedding cache.
 //!
 //! Quick tour: generate a dataset ([`gen`]), sample graphlets
 //! ([`sample`]), embed them with a feature map ([`features`] on CPU or
 //! [`runtime`] + [`coordinator`] for the batched, sharded PJRT
-//! pipeline), train the linear tail ([`classify`]), or reproduce a paper
-//! figure ([`experiments`]).
+//! pipeline), train the linear tail ([`classify`]), reproduce a paper
+//! figure ([`experiments`]), or run the embedding service ([`serve`]).
 
 pub mod classify;
 pub mod coordinator;
@@ -45,4 +52,5 @@ pub mod kernelgk;
 pub mod mmd;
 pub mod runtime;
 pub mod sample;
+pub mod serve;
 pub mod util;

@@ -12,14 +12,30 @@
 //! graphlet-rf thm1                      Theorem 1 concentration check
 //! graphlet-rf gnn                       GIN baseline training run
 //! graphlet-rf info                      platform + artifact inventory
+//! graphlet-rf serve --port N            persistent embedding daemon
+//! graphlet-rf serve-bench --addr A      loopback load generator (p50/p99)
 //! ```
 //!
 //! Common flags: `--seed N`, `--engine pjrt|cpu|cpu-inline`,
 //! `--shards N`, `--workers N`, `--artifacts DIR`, `--out DIR`,
 //! `--scale quick|full`.
+//!
+//! Serve path (one warm pipeline + cache behind a TCP line-JSON
+//! protocol; see `graphlet_rf::serve` for the full diagram):
+//!
+//! ```text
+//! clients ──TCP──► per-conn reader ──┬─ cache hit ───► per-conn writer
+//!                                    └─ miss: GraphJob ──► shared
+//!                  StreamingPipeline (workers ► shards) ──► Completed
+//!                                    └──────────────────► per-conn writer
+//! ```
+//!
+//! Unknown subcommands print the usage text to **stderr** and exit
+//! nonzero; `graphlet-rf help` (or no arguments) prints it to stdout
+//! and exits 0.
 
 use anyhow::Result;
-use graphlet_rf::coordinator::EngineMode;
+use graphlet_rf::coordinator::{EngineMode, GsaConfig};
 use graphlet_rf::experiments::{figures, thm1, timing, ExpContext, Scale};
 use graphlet_rf::features::Variant;
 use graphlet_rf::gen::SbmConfig;
@@ -88,8 +104,12 @@ fn main() -> Result<()> {
         }
         "gnn" => gnn_cmd(&ctx, &args, seed)?,
         "info" => info(&ctx)?,
-        "help" | _ => {
-            println!("{}", HELP);
+        "serve" => serve_cmd(&ctx, &args, seed)?,
+        "serve-bench" => serve_bench_cmd(&args, seed)?,
+        "help" => println!("{HELP}"),
+        other => {
+            eprintln!("unknown subcommand {other:?}\n\n{HELP}");
+            std::process::exit(2);
         }
     }
     Ok(())
@@ -97,13 +117,22 @@ fn main() -> Result<()> {
 
 const HELP: &str = "graphlet-rf — Fast Graph Kernel with Optical Random Features
 
-USAGE: graphlet-rf <quickstart|fig1-left|fig1-right|fig2-left|fig2-right|fig3|thm1|gnn|info>
+USAGE: graphlet-rf <quickstart|fig1-left|fig1-right|fig2-left|fig2-right|fig3|thm1|gnn|info|serve|serve-bench>
              [--scale quick|mid|full] [--seed N] [--engine pjrt|cpu|cpu-inline]
              [--shards N] [--workers N] [--variant opu|gauss|gauss-eig]
              [--artifacts DIR] [--out DIR] [--dataset dd|reddit] [--tu-dir DIR]
 
---shards N runs N parallel feature-engine shards (graph g -> shard g mod N);
-embeddings are bitwise identical for every shard/worker count.
+--shards N runs N parallel feature-engine shards (jobs round-robin over
+shards); embeddings are bitwise identical for every shard/worker count.
+
+serve       long-running embedding daemon: line-delimited JSON over TCP,
+            one persistent pipeline, cross-request batching, embedding
+            cache. Flags: --port N (default 7878), --addr HOST:PORT,
+            --cache-cap N, --max-nodes N, --max-edges N, plus the usual
+            embedding flags (--k --s --m --variant --shards --workers).
+serve-bench loopback load generator: --addr HOST:PORT (default
+            127.0.0.1:7878), --clients C, --requests N per client;
+            reports cold/warm throughput and p50/p99 latency.
 
 Run `make artifacts` first to build the AOT XLA artifacts (PJRT engine);
 without them the CPU fallback engine is used automatically.";
@@ -112,35 +141,11 @@ without them the CPU fallback engine is used automatically.";
 /// (PJRT if available) -> SVM -> accuracy + throughput.
 fn quickstart(ctx: &ExpContext, args: &Args, seed: u64) -> Result<()> {
     use graphlet_rf::classify::{train_and_eval, TrainConfig};
-    use graphlet_rf::coordinator::{embed_dataset, GsaConfig};
+    use graphlet_rf::coordinator::embed_dataset;
 
     let r = args.parse_or("r", 1.2f64);
     let per_class = args.parse_or("per-class", 60usize);
-    let shards = args
-        .try_parse::<usize>("shards")
-        .map_err(|e| anyhow::anyhow!(e))?
-        .unwrap_or(1)
-        .max(1);
-    let mut cfg = GsaConfig {
-        k: args.parse_or("k", 6usize),
-        s: args.parse_or("s", 1000usize),
-        m: args.parse_or("m", 5000usize),
-        variant: Variant::parse(args.str_or("variant", "opu"))?,
-        batch: 256,
-        shards,
-        engine: ctx.mode(),
-        seed,
-        ..Default::default()
-    };
-    if let Some(workers) = args.try_parse::<usize>("workers").map_err(|e| anyhow::anyhow!(e))? {
-        cfg.workers = workers.max(1);
-    }
-    if cfg.variant == Variant::Match {
-        anyhow::bail!(
-            "quickstart embeds with dense feature maps; use --variant opu|gauss|gauss-eig \
-             (phi_match is the fig1-right / fig2-right baseline)"
-        );
-    }
+    let cfg = gsa_from_args(ctx, args, seed)?;
     println!("generating SBM dataset: r={r}, {} graphs", 2 * per_class);
     let ds = SbmConfig { r, per_class, ..Default::default() }.generate(&mut Rng::new(seed));
     println!("{}", ds.summary());
@@ -168,6 +173,88 @@ fn quickstart(ctx: &ExpContext, args: &Args, seed: u64) -> Result<()> {
         &TrainConfig::default(),
     );
     println!("test accuracy: {acc:.3}");
+    Ok(())
+}
+
+/// Shared GsaConfig construction for the serve subcommand (the serving
+/// analogue of quickstart's flag handling).
+fn gsa_from_args(ctx: &ExpContext, args: &Args, seed: u64) -> Result<GsaConfig> {
+    let shards = args
+        .try_parse::<usize>("shards")
+        .map_err(|e| anyhow::anyhow!(e))?
+        .unwrap_or(1)
+        .max(1);
+    let mut cfg = GsaConfig {
+        k: args.parse_or("k", 6usize),
+        s: args.parse_or("s", 1000usize),
+        m: args.parse_or("m", 5000usize),
+        variant: Variant::parse(args.str_or("variant", "opu"))?,
+        batch: args.parse_or("batch", 256usize),
+        shards,
+        engine: ctx.mode(),
+        seed,
+        ..Default::default()
+    };
+    if let Some(workers) = args.try_parse::<usize>("workers").map_err(|e| anyhow::anyhow!(e))? {
+        cfg.workers = workers.max(1);
+    }
+    if cfg.variant == Variant::Match {
+        anyhow::bail!(
+            "this command embeds with dense feature maps; use --variant opu|gauss|gauss-eig \
+             (phi_match is the fig1-right / fig2-right baseline)"
+        );
+    }
+    Ok(cfg)
+}
+
+/// `graphlet-rf serve`: bind the daemon and block in the accept loop.
+fn serve_cmd(ctx: &ExpContext, args: &Args, seed: u64) -> Result<()> {
+    use graphlet_rf::serve::{ServeConfig, Server};
+
+    let gsa = gsa_from_args(ctx, args, seed)?;
+    let addr = match args.get("addr") {
+        Some(a) => a.to_string(),
+        None => format!("127.0.0.1:{}", args.parse_or("port", 7878u16)),
+    };
+    let defaults = ServeConfig::default();
+    let cfg = ServeConfig {
+        gsa,
+        max_nodes: args.parse_or("max-nodes", defaults.max_nodes),
+        max_edges: args.parse_or("max-edges", defaults.max_edges),
+        cache_capacity: args.parse_or("cache-cap", defaults.cache_capacity),
+        ..defaults
+    };
+    println!(
+        "serve: k={} s={} m={} variant={} engine={:?} shards={} workers={} cache_cap={}",
+        cfg.gsa.k,
+        cfg.gsa.s,
+        cfg.gsa.m,
+        cfg.gsa.variant.name(),
+        cfg.gsa.engine,
+        cfg.gsa.shards,
+        cfg.gsa.workers,
+        cfg.cache_capacity
+    );
+    let server = Server::bind(&addr, cfg, ctx.engine.as_ref())?;
+    println!("serving on {} (line-delimited JSON; send {{\"op\":\"shutdown\"}} to stop)",
+             server.local_addr());
+    server.run()
+}
+
+/// `graphlet-rf serve-bench`: drive a running daemon over loopback and
+/// print cold/warm throughput + latency percentiles.
+fn serve_bench_cmd(args: &Args, seed: u64) -> Result<()> {
+    let addr = args.str_or("addr", "127.0.0.1:7878").to_string();
+    let clients = args.parse_or("clients", 4usize).max(1);
+    let per_client = args.parse_or("requests", 32usize).max(1);
+    println!("serve-bench: {addr}, {clients} clients x {per_client} requests, seed {seed}");
+    let pair = graphlet_rf::serve::run_bench(&addr, clients, per_client, seed)?;
+    println!("cold: {}", pair.cold.line());
+    println!("warm: {}", pair.warm.line());
+    if args.flag("shutdown") {
+        graphlet_rf::serve::send_shutdown(&addr)?;
+        println!("sent shutdown to {addr}");
+    }
     Ok(())
 }
 

@@ -1,0 +1,164 @@
+//! serve-bench: a loopback load-generation client for the serve daemon.
+//!
+//! C client threads each run a synchronous request/reply loop over one
+//! TCP connection (pipeline concurrency comes from the C parallel
+//! connections — that is exactly the traffic shape cross-request
+//! batching exists for). Two passes:
+//!
+//! - **cold**: every request uses a fresh `graph_index`, so every
+//!   embedding is computed by the pipeline;
+//! - **warm**: the identical requests replayed, so every reply should
+//!   come from the embedding cache.
+//!
+//! Reported per pass: throughput (requests/s) and p50/p99 latency from
+//! a merged per-request latency reservoir. Fixed seed → fixed workload,
+//! so numbers are comparable across PRs (the serving-perf baseline).
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+
+use anyhow::{Context, Result};
+
+use crate::gen::SbmConfig;
+use crate::graph::AnyGraph;
+use crate::util::{Rng, Stats, Timer};
+
+use super::protocol::{embed_request, parse_embed_reply};
+
+/// One pass's aggregate numbers.
+#[derive(Clone, Debug)]
+pub struct BenchReport {
+    pub requests: usize,
+    pub errors: usize,
+    pub cached_replies: usize,
+    pub wall_secs: f64,
+    pub requests_per_sec: f64,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+}
+
+impl BenchReport {
+    pub fn line(&self) -> String {
+        format!(
+            "requests={} errors={} cached={} wall={:.2}s throughput={:.0} req/s \
+             p50={:.2}ms p99={:.2}ms",
+            self.requests,
+            self.errors,
+            self.cached_replies,
+            self.wall_secs,
+            self.requests_per_sec,
+            self.p50_ms,
+            self.p99_ms
+        )
+    }
+}
+
+/// Cold + warm pass results.
+#[derive(Clone, Debug)]
+pub struct BenchPair {
+    pub cold: BenchReport,
+    pub warm: BenchReport,
+}
+
+/// Drive `addr` with `clients` threads of `per_client` requests each,
+/// twice (cold then warm). The workload is `seed`-deterministic SBM
+/// graphs, so two runs against equally-configured servers measure the
+/// same thing. NOTE: "cold" assumes a fresh server cache; replaying
+/// against a warm long-lived server shifts cold-pass numbers toward
+/// warm ones.
+pub fn run_bench(addr: &str, clients: usize, per_client: usize, seed: u64) -> Result<BenchPair> {
+    let ds = SbmConfig { per_class: 4, ..Default::default() }.generate(&mut Rng::new(seed));
+    let graphs: Vec<AnyGraph> = ds.graphs;
+    let cold = run_pass(addr, clients, per_client, &graphs)?;
+    let warm = run_pass(addr, clients, per_client, &graphs)?;
+    Ok(BenchPair { cold, warm })
+}
+
+fn run_pass(
+    addr: &str,
+    clients: usize,
+    per_client: usize,
+    graphs: &[AnyGraph],
+) -> Result<BenchReport> {
+    let clients = clients.max(1);
+    let per_client = per_client.max(1);
+    let wall = Timer::start();
+    let results = std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(clients);
+        for c in 0..clients {
+            handles.push(scope.spawn(move || client_loop(addr, c, per_client, graphs)));
+        }
+        handles
+            .into_iter()
+            .map(|h| h.join().map_err(|_| anyhow::anyhow!("bench client panicked"))?)
+            .collect::<Result<Vec<_>>>()
+    })?;
+    let wall_secs = wall.elapsed_secs();
+    let mut lat = Stats::new();
+    let (mut errors, mut cached) = (0usize, 0usize);
+    for (s, e, h) in results {
+        lat.merge(&s);
+        errors += e;
+        cached += h;
+    }
+    let requests = clients * per_client;
+    Ok(BenchReport {
+        requests,
+        errors,
+        cached_replies: cached,
+        wall_secs,
+        requests_per_sec: if wall_secs > 0.0 { requests as f64 / wall_secs } else { 0.0 },
+        p50_ms: lat.percentile(50.0) * 1e3,
+        p99_ms: lat.percentile(99.0) * 1e3,
+    })
+}
+
+/// One client: a synchronous send/recv loop. `graph_index` is globally
+/// unique per (client, i) pair so the cold pass never self-collides,
+/// while a replayed pass re-uses exactly the same indices (cache hits).
+fn client_loop(
+    addr: &str,
+    client: usize,
+    per_client: usize,
+    graphs: &[AnyGraph],
+) -> Result<(Stats, usize, usize)> {
+    let stream =
+        TcpStream::connect(addr).with_context(|| format!("connecting bench client to {addr}"))?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = stream;
+    let mut lat = Stats::new();
+    let mut errors = 0usize;
+    let mut cached = 0usize;
+    let mut reply = String::new();
+    for i in 0..per_client {
+        let g = &graphs[i % graphs.len()];
+        let graph_index = client * per_client + i;
+        let line = embed_request(i as u64, graph_index, g);
+        let t = Timer::start();
+        writer.write_all(line.as_bytes())?;
+        writer.write_all(b"\n")?;
+        writer.flush()?;
+        reply.clear();
+        reader.read_line(&mut reply)?;
+        lat.record(t.elapsed_secs());
+        match parse_embed_reply(&reply) {
+            Ok((_, _, was_cached)) => {
+                if was_cached {
+                    cached += 1;
+                }
+            }
+            Err(_) => errors += 1,
+        }
+    }
+    Ok((lat, errors, cached))
+}
+
+/// Ask a server to stop (used by benches/tests for clean teardown).
+pub fn send_shutdown(addr: &str) -> Result<()> {
+    let mut stream = TcpStream::connect(addr)?;
+    stream.write_all(b"{\"op\":\"shutdown\"}\n")?;
+    stream.flush()?;
+    let mut reply = String::new();
+    let _ = BufReader::new(stream).read_line(&mut reply);
+    Ok(())
+}

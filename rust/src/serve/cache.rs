@@ -1,0 +1,214 @@
+//! Content-addressed embedding cache.
+//!
+//! Key = (canonical graph hash, config fingerprint, per-job sampling
+//! seed): with all three fixed an embedding is a pure function of its
+//! inputs, so cached rows are bitwise identical to recomputed ones.
+//! The fingerprint covers every [`GsaConfig`] field that changes the
+//! math (k, s, m, variant, impl, sampler, sigma, engine mode, seed) —
+//! deliberately *not* the scheduling knobs (workers, shards, queue_cap,
+//! batch in CPU modes would be safe too, but batch selects the PJRT
+//! artifact, so it is included).
+//!
+//! Eviction is FIFO at a fixed capacity: embeddings are all the same
+//! size (m floats), so the cache's memory is `capacity * m * 4` bytes
+//! and insertion order is a reasonable proxy for age under serving
+//! traffic. Hit/miss counters feed the serve `stats` op.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::Mutex;
+
+use crate::coordinator::GsaConfig;
+
+/// The content address of one embedding row.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct CacheKey {
+    pub graph_hash: u64,
+    pub config_fp: u64,
+    pub seed: u64,
+}
+
+/// Counters + size snapshot for the `stats` op.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub len: usize,
+    pub capacity: usize,
+}
+
+struct CacheInner {
+    map: HashMap<CacheKey, Vec<f32>>,
+    order: VecDeque<CacheKey>,
+    hits: u64,
+    misses: u64,
+}
+
+/// Thread-safe FIFO-evicting embedding cache.
+pub struct EmbeddingCache {
+    inner: Mutex<CacheInner>,
+    capacity: usize,
+}
+
+impl EmbeddingCache {
+    /// `capacity` = maximum cached rows; 0 disables caching entirely
+    /// (every lookup is a miss, inserts are dropped).
+    pub fn new(capacity: usize) -> EmbeddingCache {
+        EmbeddingCache {
+            inner: Mutex::new(CacheInner {
+                map: HashMap::new(),
+                order: VecDeque::new(),
+                hits: 0,
+                misses: 0,
+            }),
+            capacity,
+        }
+    }
+
+    /// Look up a row, counting the hit or miss.
+    pub fn get(&self, key: &CacheKey) -> Option<Vec<f32>> {
+        let mut g = self.inner.lock().expect("cache lock");
+        match g.map.get(key).cloned() {
+            Some(row) => {
+                g.hits += 1;
+                Some(row)
+            }
+            None => {
+                g.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Insert a freshly computed row (first write wins; FIFO eviction at
+    /// capacity).
+    pub fn insert(&self, key: CacheKey, row: Vec<f32>) {
+        if self.capacity == 0 {
+            return;
+        }
+        let mut g = self.inner.lock().expect("cache lock");
+        if g.map.contains_key(&key) {
+            return;
+        }
+        while g.map.len() >= self.capacity {
+            match g.order.pop_front() {
+                Some(old) => {
+                    g.map.remove(&old);
+                }
+                None => break,
+            }
+        }
+        g.order.push_back(key);
+        g.map.insert(key, row);
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        let g = self.inner.lock().expect("cache lock");
+        CacheStats { hits: g.hits, misses: g.misses, len: g.map.len(), capacity: self.capacity }
+    }
+}
+
+/// Hash the math-relevant parts of a [`GsaConfig`] into the cache key's
+/// `config_fp` component (FNV-1a, mirroring `graph::canonical_hash`).
+pub fn config_fingerprint(cfg: &GsaConfig) -> u64 {
+    use crate::util::fnv;
+    fn mix_bytes(h: u64, bytes: &[u8]) -> u64 {
+        // Field separator byte so adjacent fields cannot alias.
+        fnv::mix_bytes(fnv::mix_bytes(h, bytes), &[0xff])
+    }
+    let mut h = fnv::OFFSET;
+    h = mix_bytes(h, &(cfg.k as u64).to_le_bytes());
+    h = mix_bytes(h, &(cfg.s as u64).to_le_bytes());
+    h = mix_bytes(h, &(cfg.m as u64).to_le_bytes());
+    h = mix_bytes(h, cfg.variant.name().as_bytes());
+    h = mix_bytes(h, cfg.impl_.as_bytes());
+    h = mix_bytes(h, cfg.sampler.as_bytes());
+    h = mix_bytes(h, &cfg.sigma.to_bits().to_le_bytes());
+    h = mix_bytes(h, &(cfg.batch as u64).to_le_bytes());
+    h = mix_bytes(h, format!("{:?}", cfg.engine).as_bytes());
+    h = mix_bytes(h, &cfg.seed.to_le_bytes());
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::EngineMode;
+
+    fn key(n: u64) -> CacheKey {
+        CacheKey { graph_hash: n, config_fp: 1, seed: 2 }
+    }
+
+    #[test]
+    fn hit_miss_counting_and_roundtrip() {
+        let c = EmbeddingCache::new(4);
+        assert!(c.get(&key(1)).is_none());
+        c.insert(key(1), vec![1.0, 2.0]);
+        assert_eq!(c.get(&key(1)), Some(vec![1.0, 2.0]));
+        assert!(c.get(&key(2)).is_none());
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses, s.len, s.capacity), (1, 2, 1, 4));
+    }
+
+    #[test]
+    fn fifo_eviction_at_capacity() {
+        let c = EmbeddingCache::new(2);
+        c.insert(key(1), vec![1.0]);
+        c.insert(key(2), vec![2.0]);
+        c.insert(key(3), vec![3.0]); // evicts key(1)
+        assert!(c.get(&key(1)).is_none());
+        assert_eq!(c.get(&key(2)), Some(vec![2.0]));
+        assert_eq!(c.get(&key(3)), Some(vec![3.0]));
+        assert_eq!(c.stats().len, 2);
+    }
+
+    #[test]
+    fn duplicate_insert_keeps_first_row() {
+        let c = EmbeddingCache::new(2);
+        c.insert(key(1), vec![1.0]);
+        c.insert(key(1), vec![9.0]);
+        assert_eq!(c.get(&key(1)), Some(vec![1.0]));
+        assert_eq!(c.stats().len, 1);
+    }
+
+    #[test]
+    fn zero_capacity_disables() {
+        let c = EmbeddingCache::new(0);
+        c.insert(key(1), vec![1.0]);
+        assert!(c.get(&key(1)).is_none());
+        assert_eq!(c.stats().len, 0);
+    }
+
+    #[test]
+    fn fingerprint_separates_math_configs() {
+        let base = GsaConfig {
+            k: 3,
+            s: 100,
+            m: 64,
+            engine: EngineMode::Cpu,
+            seed: 42,
+            ..Default::default()
+        };
+        let fp = config_fingerprint(&base);
+        assert_eq!(fp, config_fingerprint(&base.clone()), "deterministic");
+        for (name, changed) in [
+            ("k", GsaConfig { k: 4, ..base.clone() }),
+            ("s", GsaConfig { s: 101, ..base.clone() }),
+            ("m", GsaConfig { m: 65, ..base.clone() }),
+            ("sigma", GsaConfig { sigma: 0.7, ..base.clone() }),
+            ("seed", GsaConfig { seed: 43, ..base.clone() }),
+            ("engine", GsaConfig { engine: EngineMode::CpuInline, ..base.clone() }),
+            ("sampler", GsaConfig { sampler: "uniform".into(), ..base.clone() }),
+        ] {
+            assert_ne!(fp, config_fingerprint(&changed), "{name} must change the fingerprint");
+        }
+        // Scheduling knobs must NOT change the key (the embeddings are
+        // bitwise identical across them).
+        for same in [
+            GsaConfig { workers: 7, ..base.clone() },
+            GsaConfig { shards: 3, ..base.clone() },
+            GsaConfig { queue_cap: 99, ..base.clone() },
+        ] {
+            assert_eq!(fp, config_fingerprint(&same));
+        }
+    }
+}

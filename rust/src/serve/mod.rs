@@ -1,0 +1,50 @@
+//! `serve`: a persistent graph-embedding service with cross-request
+//! batching and an embedding cache.
+//!
+//! The daemon (`graphlet-rf serve --port N`) keeps one
+//! [`StreamingPipeline`] warm — sampler workers, feature shards, and
+//! (in PJRT mode) compiled artifacts live for the process, not for one
+//! dataset — and serves embedding requests over a line-delimited JSON
+//! protocol on plain TCP (no new dependencies; the build stays
+//! hermetic/offline).
+//!
+//! ```text
+//!                        ┌──────────────── serve daemon ────────────────────┐
+//!  client A ──TCP──► reader thread A ──┬─ cache hit ──► writer A ──► client A
+//!  client B ──TCP──► reader thread B … │   (graph hash + config fp + seed)
+//!                        │ parse / validate / admission control
+//!                        │ miss: GraphJob{graph, seed, tag, done=writer chan}
+//!                        ▼
+//!            shared StreamingPipeline (one per daemon)
+//!               sampler workers ──► per-shard bounded channels
+//!                  │  rows from jobs of *different requests* pack into
+//!                  │  one compiled-size batch (cross-request batching)
+//!                  ▼
+//!               N feature shards ──► per-job accumulators
+//!                        │ job's s-th sample lands → mean row
+//!                        ▼
+//!            Completed{tag, row} ──► that request's writer ──► its client
+//!                        └── fresh rows also land in the embedding cache ──┘
+//! ```
+//!
+//! Request/reply format and per-request error semantics live in
+//! [`protocol`]; the cache key discipline in [`cache`]; the
+//! load-generator (`graphlet-rf serve-bench`, throughput + p50/p99) in
+//! [`bench`].
+//!
+//! Robustness contract (pinned by `tests/serve.rs`): malformed JSON
+//! lines, oversized graphs, unknown ops, and mid-request disconnects
+//! fail *that request* (or that connection) only — the daemon and its
+//! pipeline keep serving everyone else.
+//!
+//! [`StreamingPipeline`]: crate::coordinator::StreamingPipeline
+
+pub mod bench;
+pub mod cache;
+pub mod protocol;
+pub mod server;
+
+pub use bench::{run_bench, send_shutdown, BenchPair, BenchReport};
+pub use cache::{config_fingerprint, CacheKey, CacheStats, EmbeddingCache};
+pub use protocol::{embed_request, parse_embed_reply, parse_request, Request};
+pub use server::{ServeConfig, Server};

@@ -1,0 +1,235 @@
+//! The serve wire protocol: one JSON object per line, both directions.
+//!
+//! Requests (`op` selects the operation; `id` is an arbitrary client
+//! correlation number echoed in the reply, default 0):
+//!
+//! ```text
+//! {"op":"embed","id":7,"v":60,"edges":[[0,1],[1,2],...],"graph_index":0}
+//! {"op":"ping","id":1}
+//! {"op":"stats","id":2}
+//! {"op":"shutdown","id":3}
+//! ```
+//!
+//! `graph_index` selects the position in the server's per-graph seed
+//! stream (default 0); submitting graph i of a dataset with
+//! `graph_index = i` reproduces `embed_dataset` output bit for bit.
+//!
+//! Replies (order is NOT guaranteed to match request order — replies
+//! stream out as cross-request batches complete; match on `id`):
+//!
+//! ```text
+//! {"id":7,"ok":true,"cached":false,"m":5000,"embedding":[...]}
+//! {"id":9,"ok":false,"error":"..."}
+//! ```
+//!
+//! Every malformed line produces an `ok:false` reply for that request
+//! only; the connection and the daemon keep running.
+
+use crate::graph::AnyGraph;
+use crate::util::Json;
+
+/// A parsed client request.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    Embed { id: u64, v: usize, edges: Vec<(usize, usize)>, graph_index: usize },
+    Ping { id: u64 },
+    Stats { id: u64 },
+    Shutdown { id: u64 },
+}
+
+/// Parse failure: the request id when one was recoverable (so the error
+/// reply can still be correlated), plus the message.
+#[derive(Debug)]
+pub struct ProtoError {
+    pub id: Option<u64>,
+    pub msg: String,
+}
+
+impl ProtoError {
+    fn new(id: Option<u64>, msg: impl Into<String>) -> ProtoError {
+        ProtoError { id, msg: msg.into() }
+    }
+}
+
+/// Parse one request line.
+pub fn parse_request(line: &str) -> Result<Request, ProtoError> {
+    let j = Json::parse(line).map_err(|e| ProtoError::new(None, format!("bad json: {e}")))?;
+    let id = match j.get("id") {
+        None => 0,
+        Some(v) => v
+            .as_u64()
+            .ok_or_else(|| ProtoError::new(None, "\"id\" must be a non-negative integer"))?,
+    };
+    let op = j
+        .get("op")
+        .and_then(Json::as_str)
+        .ok_or_else(|| ProtoError::new(Some(id), "missing \"op\" string"))?;
+    match op {
+        "ping" => Ok(Request::Ping { id }),
+        "stats" => Ok(Request::Stats { id }),
+        "shutdown" => Ok(Request::Shutdown { id }),
+        "embed" => {
+            let v = j
+                .get("v")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| ProtoError::new(Some(id), "embed: missing node count \"v\""))?;
+            let raw_edges = j
+                .get("edges")
+                .and_then(Json::as_array)
+                .ok_or_else(|| ProtoError::new(Some(id), "embed: missing \"edges\" array"))?;
+            let mut edges = Vec::with_capacity(raw_edges.len());
+            for e in raw_edges {
+                let pair = e.as_array().filter(|p| p.len() == 2).ok_or_else(|| {
+                    ProtoError::new(Some(id), "embed: each edge must be a [a, b] pair")
+                })?;
+                let a = pair[0].as_usize();
+                let b = pair[1].as_usize();
+                match (a, b) {
+                    (Some(a), Some(b)) => edges.push((a, b)),
+                    _ => {
+                        return Err(ProtoError::new(
+                            Some(id),
+                            "embed: edge endpoints must be non-negative integers",
+                        ))
+                    }
+                }
+            }
+            let graph_index = match j.get("graph_index") {
+                None => 0,
+                Some(v) => v.as_usize().ok_or_else(|| {
+                    ProtoError::new(Some(id), "\"graph_index\" must be a non-negative integer")
+                })?,
+            };
+            Ok(Request::Embed { id, v, edges, graph_index })
+        }
+        other => Err(ProtoError::new(Some(id), format!("unknown op {other:?}"))),
+    }
+}
+
+/// Format a successful embed reply.
+pub fn embed_reply(id: u64, row: &[f32], cached: bool) -> String {
+    Json::obj()
+        .set("id", id)
+        .set("ok", true)
+        .set("cached", cached)
+        .set("m", row.len())
+        .set("embedding", row)
+        .to_string()
+}
+
+/// Format a per-request error reply.
+pub fn error_reply(id: Option<u64>, msg: &str) -> String {
+    Json::obj().set("id", id.unwrap_or(0)).set("ok", false).set("error", msg).to_string()
+}
+
+/// Serialize an embed request for a graph (client side: serve-bench and
+/// the integration tests).
+pub fn embed_request(id: u64, graph_index: usize, g: &AnyGraph) -> String {
+    let mut edges = Json::arr();
+    for u in 0..g.v() {
+        for w in g.neighbors(u) {
+            if u < w {
+                edges.push(vec![u, w]);
+            }
+        }
+    }
+    Json::obj()
+        .set("op", "embed")
+        .set("id", id)
+        .set("graph_index", graph_index)
+        .set("v", g.v())
+        .set("edges", edges)
+        .to_string()
+}
+
+/// Parse an embed reply into (id, row, cached) — client side.
+pub fn parse_embed_reply(line: &str) -> Result<(u64, Vec<f32>, bool), String> {
+    let j = Json::parse(line)?;
+    let id = j.get("id").and_then(Json::as_u64).ok_or("reply missing id")?;
+    if j.get("ok").and_then(Json::as_bool) != Some(true) {
+        let msg = j.get("error").and_then(Json::as_str).unwrap_or("unknown server error");
+        return Err(format!("request {id} failed: {msg}"));
+    }
+    let cached = j.get("cached").and_then(Json::as_bool).unwrap_or(false);
+    let arr = j.get("embedding").and_then(Json::as_array).ok_or("reply missing embedding")?;
+    let mut row = Vec::with_capacity(arr.len());
+    for x in arr {
+        row.push(x.as_f64().ok_or("non-numeric embedding entry")? as f32);
+    }
+    Ok((id, row, cached))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::CsrGraph;
+
+    #[test]
+    fn embed_request_roundtrip() {
+        let g = AnyGraph::Csr(CsrGraph::from_edges(4, &[(0, 1), (2, 3), (1, 2)]));
+        let line = embed_request(9, 3, &g);
+        match parse_request(&line).unwrap() {
+            Request::Embed { id, v, edges, graph_index } => {
+                assert_eq!(id, 9);
+                assert_eq!(v, 4);
+                assert_eq!(graph_index, 3);
+                assert_eq!(edges, vec![(0, 1), (1, 2), (2, 3)]);
+            }
+            other => panic!("wrong request: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn simple_ops_parse() {
+        assert_eq!(parse_request(r#"{"op":"ping"}"#).unwrap(), Request::Ping { id: 0 });
+        assert_eq!(parse_request(r#"{"op":"stats","id":5}"#).unwrap(), Request::Stats { id: 5 });
+        assert_eq!(
+            parse_request(r#"{"id":1,"op":"shutdown"}"#).unwrap(),
+            Request::Shutdown { id: 1 }
+        );
+    }
+
+    #[test]
+    fn malformed_requests_error_with_best_effort_id() {
+        let e = parse_request("not json at all").unwrap_err();
+        assert!(e.id.is_none());
+        assert!(e.msg.contains("bad json"), "{}", e.msg);
+
+        let e = parse_request(r#"{"id":4,"op":"warp"}"#).unwrap_err();
+        assert_eq!(e.id, Some(4));
+        assert!(e.msg.contains("unknown op"), "{}", e.msg);
+
+        let e = parse_request(r#"{"id":4,"op":"embed","v":3,"edges":[[0]]}"#).unwrap_err();
+        assert_eq!(e.id, Some(4));
+        assert!(e.msg.contains("pair"), "{}", e.msg);
+
+        let e = parse_request(r#"{"id":4,"op":"embed","edges":[]}"#).unwrap_err();
+        assert!(e.msg.contains("\"v\""), "{}", e.msg);
+
+        let e = parse_request(r#"{"id":4,"op":"embed","v":3,"edges":[[0,-1]]}"#).unwrap_err();
+        assert!(e.msg.contains("non-negative"), "{}", e.msg);
+
+        let e = parse_request(r#"{"id":-3,"op":"ping"}"#).unwrap_err();
+        assert!(e.id.is_none());
+    }
+
+    #[test]
+    fn reply_roundtrip_is_bitwise() {
+        let row = vec![1.0f32, -0.37, 3.25e-7, 42.0, f32::MIN_POSITIVE];
+        let line = embed_reply(6, &row, true);
+        let (id, back, cached) = parse_embed_reply(&line).unwrap();
+        assert_eq!(id, 6);
+        assert!(cached);
+        assert_eq!(back.len(), row.len());
+        for (a, b) in back.iter().zip(&row) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn error_reply_parses_as_failure() {
+        let line = error_reply(Some(3), "boom");
+        let err = parse_embed_reply(&line).unwrap_err();
+        assert!(err.contains("boom") && err.contains('3'), "{err}");
+    }
+}

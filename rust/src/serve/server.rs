@@ -1,0 +1,461 @@
+//! The serve daemon: TCP listener, per-connection reader/writer threads,
+//! cache lookups, and admission control in front of the shared
+//! [`StreamingPipeline`].
+//!
+//! See [`super`] (the module docs) for the dataflow diagram and
+//! [`super::protocol`] for the wire format.
+
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, BufWriter, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::{Completed, GraphJob, GsaConfig, StreamingPipeline, SubmitOutcome};
+use crate::graph::{canonical_hash, AnyGraph, CsrGraph};
+use crate::runtime::Engine;
+use crate::util::Json;
+
+use super::cache::{config_fingerprint, CacheKey, EmbeddingCache};
+use super::protocol::{embed_reply, error_reply, parse_request, ProtoError, Request};
+
+/// Serve-layer configuration wrapping the embedding [`GsaConfig`].
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// The embedding configuration the pipeline is built with; requests
+    /// cannot change it (it selects compiled artifacts and the cache
+    /// fingerprint).
+    pub gsa: GsaConfig,
+    /// Per-request guard: reject graphs with more nodes than this.
+    pub max_nodes: usize,
+    /// Per-request guard: reject graphs with more edges than this.
+    pub max_edges: usize,
+    /// Reject request lines longer than this many bytes (the connection
+    /// is closed afterwards — the stream is no longer line-synchronized).
+    /// This also bounds per-request parse memory: every JSON node
+    /// consumes at least one input byte, so the parsed tree is O(line
+    /// length) nodes. The default (8 MiB, roughly a 400k-edge graph)
+    /// keeps worst-case transient parse memory per connection in the
+    /// low hundreds of MB; raise it only alongside `max_edges`.
+    pub max_line_bytes: usize,
+    /// Highest accepted `graph_index`: deriving the seed at stream
+    /// position i costs O(i) RNG draws, so an unbounded client-supplied
+    /// index would let one request pin a reader thread.
+    pub max_graph_index: usize,
+    /// Per-connection cap on registered-but-unwritten replies. A client
+    /// that sends requests without reading replies hits this bound and
+    /// simply stops being read (TCP backpressure) instead of growing
+    /// server memory.
+    pub max_pending_replies: usize,
+    /// Embedding cache capacity in rows (0 disables caching).
+    pub cache_capacity: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            gsa: GsaConfig::default(),
+            max_nodes: 100_000,
+            max_edges: 400_000,
+            max_line_bytes: 8 << 20,
+            max_graph_index: 1 << 20,
+            max_pending_replies: 1024,
+            cache_capacity: 4096,
+        }
+    }
+}
+
+/// Shared server state: the pipeline, the cache, and counters.
+struct ServeCtx {
+    cfg: ServeConfig,
+    pipeline: StreamingPipeline,
+    cache: EmbeddingCache,
+    config_fp: u64,
+    addr: SocketAddr,
+    stop: AtomicBool,
+    connections: AtomicU64,
+    requests: AtomicU64,
+    errors: AtomicU64,
+}
+
+/// A bound, not-yet-running server (bind early so callers learn the
+/// ephemeral port before spawning `run`).
+pub struct Server {
+    listener: TcpListener,
+    ctx: Arc<ServeCtx>,
+}
+
+impl Server {
+    /// Build the persistent pipeline and bind the listener. `engine` is
+    /// the PJRT template when `cfg.gsa.engine` is PJRT (same contract as
+    /// `embed_dataset`).
+    pub fn bind(addr: &str, cfg: ServeConfig, engine: Option<&Engine>) -> Result<Server> {
+        let pipeline = StreamingPipeline::new(&cfg.gsa, engine)?;
+        let listener =
+            TcpListener::bind(addr).with_context(|| format!("binding serve socket {addr}"))?;
+        let local = listener.local_addr()?;
+        let config_fp = config_fingerprint(pipeline.cfg());
+        let cache = EmbeddingCache::new(cfg.cache_capacity);
+        Ok(Server {
+            listener,
+            ctx: Arc::new(ServeCtx {
+                cfg,
+                pipeline,
+                cache,
+                config_fp,
+                addr: local,
+                stop: AtomicBool::new(false),
+                connections: AtomicU64::new(0),
+                requests: AtomicU64::new(0),
+                errors: AtomicU64::new(0),
+            }),
+        })
+    }
+
+    /// The bound address (resolves ephemeral ports).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.ctx.addr
+    }
+
+    /// Accept loop: one reader + one writer thread per connection. Runs
+    /// until a client sends the `shutdown` op.
+    pub fn run(self) -> Result<()> {
+        for stream in self.listener.incoming() {
+            if self.ctx.stop.load(Ordering::SeqCst) {
+                break;
+            }
+            match stream {
+                Ok(s) => {
+                    self.ctx.connections.fetch_add(1, Ordering::Relaxed);
+                    let ctx = self.ctx.clone();
+                    std::thread::spawn(move || handle_conn(s, &ctx));
+                }
+                Err(e) => eprintln!("serve: accept error: {e}"),
+            }
+        }
+        Ok(())
+    }
+}
+
+/// How the writer thread should render a completed tag.
+enum PendingReply {
+    /// A fully formatted reply line (errors, ping, stats, cache hits).
+    Raw(String),
+    /// A pipeline-computed embedding; `key` = Some means "insert into
+    /// the cache on arrival".
+    Embed { id: u64, key: Option<CacheKey> },
+}
+
+/// Per-connection state shared between the reader and writer threads:
+/// the tag → reply registry plus the backpressure machinery (the reader
+/// sleeps on `drained` while `pending` is at the configured cap, and
+/// the writer wakes it per written reply — or permanently via
+/// `writer_gone` when the client stops reading and the write half dies).
+struct ConnShared {
+    pending: Mutex<HashMap<u64, PendingReply>>,
+    drained: Condvar,
+    writer_gone: AtomicBool,
+}
+
+/// Synthetic completion for replies that never enter the pipeline.
+fn synthetic(tag: u64) -> Completed {
+    Completed { tag, row: Vec::new(), samples: 0, error: None }
+}
+
+/// Block until the pending-reply registry has room (or the writer is
+/// gone). Returns false when the connection is no longer writable —
+/// the reader should stop consuming requests.
+fn wait_for_capacity(shared: &ConnShared, cap: usize) -> bool {
+    let cap = cap.max(1);
+    let mut g = shared.pending.lock().expect("pending lock");
+    while g.len() >= cap {
+        if shared.writer_gone.load(Ordering::Acquire) {
+            return false;
+        }
+        g = shared.drained.wait(g).expect("pending lock");
+    }
+    !shared.writer_gone.load(Ordering::Acquire)
+}
+
+fn handle_conn(stream: TcpStream, ctx: &Arc<ServeCtx>) {
+    let read_half = match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    };
+    let (reply_tx, reply_rx) = channel::<Completed>();
+    let shared = Arc::new(ConnShared {
+        pending: Mutex::new(HashMap::new()),
+        drained: Condvar::new(),
+        writer_gone: AtomicBool::new(false),
+    });
+    let writer = {
+        let shared = shared.clone();
+        let ctx = ctx.clone();
+        std::thread::spawn(move || writer_loop(stream, &reply_rx, &shared, &ctx))
+    };
+
+    let mut reader = BufReader::new(read_half);
+    let mut line = String::new();
+    let mut next_tag: u64 = 0;
+    loop {
+        line.clear();
+        // Cap line length so one hostile request cannot exhaust memory.
+        let n = match (&mut reader)
+            .take(ctx.cfg.max_line_bytes as u64 + 1)
+            .read_line(&mut line)
+        {
+            Ok(n) => n,
+            Err(_) => break,
+        };
+        if n == 0 {
+            break; // EOF: client closed the connection.
+        }
+        if line.len() > ctx.cfg.max_line_bytes {
+            // The rest of the oversized line is unread: the stream is no
+            // longer line-synchronized, so reply and drop the connection.
+            ctx.errors.fetch_add(1, Ordering::Relaxed);
+            send_raw(&shared, &reply_tx, next_tag, error_reply(None, "request line too long"));
+            break;
+        }
+        if line.trim().is_empty() {
+            continue;
+        }
+        // Backpressure: never hold more than max_pending_replies
+        // unwritten replies for one connection.
+        if !wait_for_capacity(&shared, ctx.cfg.max_pending_replies) {
+            break;
+        }
+        ctx.requests.fetch_add(1, Ordering::Relaxed);
+        let tag = next_tag;
+        next_tag += 1;
+        if handle_request(&line, tag, ctx, &shared, &reply_tx) == Flow::Shutdown {
+            break;
+        }
+    }
+    // Dropping reply_tx lets the writer drain in-flight pipeline
+    // completions for this connection and then exit.
+    drop(reply_tx);
+    let _ = writer.join();
+}
+
+/// Register a pre-rendered reply and wake the writer.
+fn send_raw(shared: &ConnShared, reply_tx: &Sender<Completed>, tag: u64, line: String) {
+    shared
+        .pending
+        .lock()
+        .expect("pending lock")
+        .insert(tag, PendingReply::Raw(line));
+    let _ = reply_tx.send(synthetic(tag));
+}
+
+#[derive(PartialEq, Eq)]
+enum Flow {
+    Continue,
+    Shutdown,
+}
+
+fn handle_request(
+    line: &str,
+    tag: u64,
+    ctx: &Arc<ServeCtx>,
+    shared: &ConnShared,
+    reply_tx: &Sender<Completed>,
+) -> Flow {
+    let req = match parse_request(line) {
+        Ok(r) => r,
+        Err(ProtoError { id, msg }) => {
+            ctx.errors.fetch_add(1, Ordering::Relaxed);
+            send_raw(shared, reply_tx, tag, error_reply(id, &msg));
+            return Flow::Continue;
+        }
+    };
+    match req {
+        Request::Ping { id } => {
+            let line = Json::obj().set("id", id).set("ok", true).set("op", "ping").to_string();
+            send_raw(shared, reply_tx, tag, line);
+            Flow::Continue
+        }
+        Request::Stats { id } => {
+            send_raw(shared, reply_tx, tag, stats_reply(id, ctx));
+            Flow::Continue
+        }
+        Request::Shutdown { id } => {
+            let line =
+                Json::obj().set("id", id).set("ok", true).set("op", "shutdown").to_string();
+            send_raw(shared, reply_tx, tag, line);
+            ctx.stop.store(true, Ordering::SeqCst);
+            // Self-connect to unblock the accept loop.
+            let _ = TcpStream::connect(ctx.addr);
+            Flow::Shutdown
+        }
+        Request::Embed { id, v, edges, graph_index } => {
+            if let Err(msg) = validate_graph(ctx, v, &edges) {
+                ctx.errors.fetch_add(1, Ordering::Relaxed);
+                send_raw(shared, reply_tx, tag, error_reply(Some(id), &msg));
+                return Flow::Continue;
+            }
+            if graph_index > ctx.cfg.max_graph_index {
+                // Seed derivation walks the stream to position i; an
+                // unbounded index would be an O(i) CPU hole.
+                ctx.errors.fetch_add(1, Ordering::Relaxed);
+                let msg = format!(
+                    "graph_index {graph_index} exceeds limit {}",
+                    ctx.cfg.max_graph_index
+                );
+                send_raw(shared, reply_tx, tag, error_reply(Some(id), &msg));
+                return Flow::Continue;
+            }
+            let graph = AnyGraph::Csr(CsrGraph::from_edges(v, &edges));
+            let seed = ctx.pipeline.graph_seed(graph_index);
+            let key =
+                CacheKey { graph_hash: canonical_hash(&graph), config_fp: ctx.config_fp, seed };
+            if let Some(row) = ctx.cache.get(&key) {
+                send_raw(shared, reply_tx, tag, embed_reply(id, &row, true));
+                return Flow::Continue;
+            }
+            // Register BEFORE submitting: the completion may race ahead.
+            shared
+                .pending
+                .lock()
+                .expect("pending lock")
+                .insert(tag, PendingReply::Embed { id, key: Some(key) });
+            let job =
+                GraphJob { graph: Arc::new(graph), seed, tag, done: reply_tx.clone() };
+            match ctx.pipeline.try_submit(job) {
+                Ok(SubmitOutcome::Accepted) => {}
+                Ok(SubmitOutcome::Overloaded) => {
+                    ctx.errors.fetch_add(1, Ordering::Relaxed);
+                    send_raw(
+                        shared,
+                        reply_tx,
+                        tag,
+                        error_reply(Some(id), "server overloaded: job queue full, retry later"),
+                    );
+                }
+                Err(e) => {
+                    ctx.errors.fetch_add(1, Ordering::Relaxed);
+                    send_raw(shared, reply_tx, tag, error_reply(Some(id), &e.to_string()));
+                }
+            }
+            Flow::Continue
+        }
+    }
+}
+
+fn validate_graph(ctx: &ServeCtx, v: usize, edges: &[(usize, usize)]) -> Result<(), String> {
+    let cfg = &ctx.cfg;
+    if v == 0 {
+        return Err("graph must have at least one node".to_string());
+    }
+    if v > cfg.max_nodes {
+        return Err(format!("graph too large: {v} nodes > limit {}", cfg.max_nodes));
+    }
+    if edges.len() > cfg.max_edges {
+        return Err(format!("graph too large: {} edges > limit {}", edges.len(), cfg.max_edges));
+    }
+    if v < cfg.gsa.k {
+        return Err(format!(
+            "graph has {v} nodes but graphlet size k={} requires at least k",
+            cfg.gsa.k
+        ));
+    }
+    for &(a, b) in edges {
+        if a >= v || b >= v {
+            return Err(format!("edge ({a}, {b}) out of range for v={v}"));
+        }
+    }
+    Ok(())
+}
+
+fn stats_reply(id: u64, ctx: &ServeCtx) -> String {
+    let cache = ctx.cache.stats();
+    let pipe = ctx.pipeline.metrics_snapshot();
+    Json::obj()
+        .set("id", id)
+        .set("ok", true)
+        .set("op", "stats")
+        .set(
+            "cache",
+            Json::obj()
+                .set("hits", cache.hits)
+                .set("misses", cache.misses)
+                .set("len", cache.len)
+                .set("capacity", cache.capacity),
+        )
+        .set(
+            "pipeline",
+            Json::obj()
+                .set("graphs", pipe.graphs)
+                .set("samples", pipe.samples)
+                .set("batches", pipe.batches)
+                .set("padded_rows", pipe.padded_rows)
+                .set("feature_secs", pipe.feature_secs)
+                .set("shards", ctx.cfg.gsa.shards.max(1))
+                .set("workers", ctx.cfg.gsa.workers.max(1)),
+        )
+        .set(
+            "server",
+            Json::obj()
+                .set("connections", ctx.connections.load(Ordering::Relaxed))
+                .set("requests", ctx.requests.load(Ordering::Relaxed))
+                .set("errors", ctx.errors.load(Ordering::Relaxed)),
+        )
+        .to_string()
+}
+
+/// Writer: the single owner of the connection's write half. Receives
+/// both synthetic completions (registered raw lines) and pipeline
+/// completions, renders them, and inserts fresh rows into the cache.
+/// Exits when every sender (reader + in-flight jobs) is gone, or on the
+/// first failed write (client disconnected mid-request — pending jobs
+/// then complete into a closed channel and are dropped harmlessly).
+fn writer_loop(
+    stream: TcpStream,
+    rx: &Receiver<Completed>,
+    shared: &ConnShared,
+    ctx: &ServeCtx,
+) {
+    let mut w = BufWriter::new(stream);
+    for done in rx.iter() {
+        let Some(p) = shared.pending.lock().expect("pending lock").remove(&done.tag) else {
+            continue;
+        };
+        let line = match p {
+            PendingReply::Raw(s) => s,
+            PendingReply::Embed { id, key } => match done.error {
+                Some(e) => {
+                    ctx.errors.fetch_add(1, Ordering::Relaxed);
+                    error_reply(Some(id), &e)
+                }
+                None => {
+                    if let Some(k) = key {
+                        ctx.cache.insert(k, done.row.clone());
+                    }
+                    embed_reply(id, &done.row, false)
+                }
+            },
+        };
+        let wrote = w
+            .write_all(line.as_bytes())
+            .and_then(|()| w.write_all(b"\n"))
+            .and_then(|()| w.flush());
+        if wrote.is_err() {
+            break;
+        }
+        // One reply drained: admit one more request past backpressure.
+        shared.drained.notify_one();
+    }
+    // Whether the channel drained (connection done) or a write failed
+    // (client stopped reading / disconnected): release a reader that
+    // may be parked on the capacity gate. The store happens under the
+    // pending lock so a reader cannot check the flag and then sleep
+    // through this very notification (lost wakeup).
+    {
+        let _g = shared.pending.lock().expect("pending lock");
+        shared.writer_gone.store(true, Ordering::Release);
+    }
+    shared.drained.notify_all();
+}

@@ -1,0 +1,38 @@
+//! FNV-1a 64-bit mixing — the one definition shared by
+//! [`crate::graph::canonical_hash`] and the serve cache's config
+//! fingerprint, so the two halves of a cache key can never drift onto
+//! different hash constants.
+
+/// The FNV-1a 64-bit offset basis.
+pub const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+
+const PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// Fold `bytes` into the running hash `h`.
+pub fn mix_bytes(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(PRIME);
+    }
+    h
+}
+
+/// Fold one little-endian u64 into the running hash.
+pub fn mix_u64(h: u64, x: u64) -> u64 {
+    mix_bytes(h, &x.to_le_bytes())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_order_sensitive() {
+        let a = mix_u64(mix_u64(OFFSET, 1), 2);
+        let b = mix_u64(mix_u64(OFFSET, 1), 2);
+        let c = mix_u64(mix_u64(OFFSET, 2), 1);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        assert_eq!(mix_bytes(OFFSET, &1u64.to_le_bytes()), mix_u64(OFFSET, 1));
+    }
+}

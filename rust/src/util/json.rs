@@ -1,7 +1,13 @@
-//! Tiny JSON *writer* for experiment result files (no serde offline).
+//! Tiny JSON writer *and parser* (no serde offline).
 //!
-//! Only what the bench/figure harnesses need: objects, arrays, numbers,
-//! strings, booleans. Output is deterministic (insertion order preserved).
+//! The writer covers what the bench/figure harnesses need: objects,
+//! arrays, numbers, strings, booleans; output is deterministic
+//! (insertion order preserved). The parser was added for the serve
+//! subsystem's line-delimited request protocol: a recursive-descent
+//! reader with a nesting-depth limit (malformed or adversarial input
+//! must error, never crash the daemon). Numbers are modelled as `f64`
+//! on both sides, so writer output round-trips through the parser
+//! exactly (Rust's shortest-round-trip float formatting).
 
 use std::fmt::Write as _;
 
@@ -42,11 +48,73 @@ impl Json {
         }
     }
 
-    /// Serialize to a compact string.
-    pub fn to_string(&self) -> String {
-        let mut out = String::new();
-        self.write(&mut out);
-        out
+    /// Parse a JSON document. Lenient where it is harmless (number
+    /// syntax is whatever `f64::from_str` accepts), strict where it
+    /// protects the serve daemon: depth-limited nesting, rejected lone
+    /// surrogates, no trailing garbage.
+    pub fn parse(s: &str) -> Result<Json, String> {
+        let mut p = Parser { b: s.as_bytes(), pos: 0 };
+        p.skip_ws();
+        let v = p.value(0)?;
+        p.skip_ws();
+        if p.pos != p.b.len() {
+            return Err(format!("trailing data at byte {}", p.pos));
+        }
+        Ok(v)
+    }
+
+    /// Object field lookup (first match; `None` on non-objects).
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(kvs) => kvs.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    /// Integer accessor: finite, integral, in-range numbers only. (Both
+    /// sides model numbers as `f64`, so values beyond 2^53 would lose
+    /// precision in transit anyway — protocol ids/sizes stay far below.)
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Json::Num(x)
+                if x.is_finite() && *x >= 0.0 && x.fract() == 0.0 && *x <= 2f64.powi(53) =>
+            {
+                Some(*x as u64)
+            }
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_u64().map(|v| v as usize)
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_array(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(xs) => Some(xs),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
     }
 
     fn write(&self, out: &mut String) {
@@ -102,6 +170,211 @@ impl Json {
                     v.write(out);
                 }
                 out.push('}');
+            }
+        }
+    }
+}
+
+impl std::fmt::Display for Json {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let mut out = String::new();
+        self.write(&mut out);
+        f.write_str(&out)
+    }
+}
+
+/// Maximum container nesting the parser accepts — recursive descent must
+/// not let a hostile request line overflow the daemon's stack.
+const MAX_DEPTH: usize = 64;
+
+struct Parser<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl Parser<'_> {
+    fn skip_ws(&mut self) {
+        while matches!(self.b.get(self.pos), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.pos += 1;
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.pos).copied()
+    }
+
+    fn value(&mut self, depth: usize) -> Result<Json, String> {
+        if depth > MAX_DEPTH {
+            return Err(format!("nesting deeper than {MAX_DEPTH}"));
+        }
+        match self.peek() {
+            None => Err("unexpected end of input".to_string()),
+            Some(b'{') => self.object(depth),
+            Some(b'[') => self.array(depth),
+            Some(b'"') => Ok(Json::Str(self.string()?)),
+            Some(b't') => self.literal("true", Json::Bool(true)),
+            Some(b'f') => self.literal("false", Json::Bool(false)),
+            Some(b'n') => self.literal("null", Json::Null),
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
+            Some(c) => Err(format!("unexpected byte {:?} at {}", c as char, self.pos)),
+        }
+    }
+
+    fn literal(&mut self, word: &str, v: Json) -> Result<Json, String> {
+        if self.b[self.pos..].starts_with(word.as_bytes()) {
+            self.pos += word.len();
+            Ok(v)
+        } else {
+            Err(format!("invalid literal at byte {}", self.pos))
+        }
+    }
+
+    fn number(&mut self) -> Result<Json, String> {
+        let start = self.pos;
+        while matches!(
+            self.peek(),
+            Some(c) if c.is_ascii_digit() || matches!(c, b'-' | b'+' | b'.' | b'e' | b'E')
+        ) {
+            self.pos += 1;
+        }
+        let text = std::str::from_utf8(&self.b[start..self.pos]).expect("ascii number bytes");
+        match text.parse::<f64>() {
+            Ok(x) if x.is_finite() => Ok(Json::Num(x)),
+            _ => Err(format!("invalid number {text:?} at byte {start}")),
+        }
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        self.pos += 1; // opening quote
+        let mut out = String::new();
+        loop {
+            let start = self.pos;
+            while let Some(c) = self.peek() {
+                if c == b'"' || c == b'\\' || c < 0x20 {
+                    break;
+                }
+                self.pos += 1;
+            }
+            // Boundaries are ASCII bytes, so the slice stays valid UTF-8.
+            out.push_str(
+                std::str::from_utf8(&self.b[start..self.pos]).map_err(|_| "invalid utf-8")?,
+            );
+            match self.peek() {
+                None => return Err("unterminated string".to_string()),
+                Some(c) if c < 0x20 => {
+                    return Err("raw control character in string".to_string());
+                }
+                Some(b'"') => {
+                    self.pos += 1;
+                    return Ok(out);
+                }
+                Some(_) => {
+                    // Backslash escape.
+                    self.pos += 1;
+                    let esc = self.peek().ok_or("unterminated escape")?;
+                    self.pos += 1;
+                    match esc {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'n' => out.push('\n'),
+                        b't' => out.push('\t'),
+                        b'r' => out.push('\r'),
+                        b'b' => out.push('\u{8}'),
+                        b'f' => out.push('\u{c}'),
+                        b'u' => {
+                            let hi = self.hex4()?;
+                            let cp = if (0xD800..0xDC00).contains(&hi) {
+                                if self.b.get(self.pos) == Some(&b'\\')
+                                    && self.b.get(self.pos + 1) == Some(&b'u')
+                                {
+                                    self.pos += 2;
+                                    let lo = self.hex4()?;
+                                    if !(0xDC00..0xE000).contains(&lo) {
+                                        return Err("invalid low surrogate".to_string());
+                                    }
+                                    0x10000 + ((hi - 0xD800) << 10) + (lo - 0xDC00)
+                                } else {
+                                    return Err("lone surrogate".to_string());
+                                }
+                            } else if (0xDC00..0xE000).contains(&hi) {
+                                return Err("lone surrogate".to_string());
+                            } else {
+                                hi
+                            };
+                            out.push(char::from_u32(cp).ok_or("invalid codepoint")?);
+                        }
+                        other => return Err(format!("bad escape \\{}", other as char)),
+                    }
+                }
+            }
+        }
+    }
+
+    fn hex4(&mut self) -> Result<u32, String> {
+        let bytes = self
+            .b
+            .get(self.pos..self.pos + 4)
+            .ok_or("truncated \\u escape")?;
+        let text = std::str::from_utf8(bytes).map_err(|_| "bad \\u escape")?;
+        let v = u32::from_str_radix(text, 16).map_err(|_| "bad \\u escape")?;
+        self.pos += 4;
+        Ok(v)
+    }
+
+    fn array(&mut self, depth: usize) -> Result<Json, String> {
+        self.pos += 1; // '['
+        let mut xs = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(Json::Arr(xs));
+        }
+        loop {
+            self.skip_ws();
+            xs.push(self.value(depth + 1)?);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b']') => {
+                    self.pos += 1;
+                    return Ok(Json::Arr(xs));
+                }
+                _ => return Err(format!("expected ',' or ']' at byte {}", self.pos)),
+            }
+        }
+    }
+
+    fn object(&mut self, depth: usize) -> Result<Json, String> {
+        self.pos += 1; // '{'
+        let mut kvs = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Ok(Json::Obj(kvs));
+        }
+        loop {
+            self.skip_ws();
+            if self.peek() != Some(b'"') {
+                return Err(format!("expected object key at byte {}", self.pos));
+            }
+            let k = self.string()?;
+            self.skip_ws();
+            if self.peek() != Some(b':') {
+                return Err(format!("expected ':' at byte {}", self.pos));
+            }
+            self.pos += 1;
+            self.skip_ws();
+            let v = self.value(depth + 1)?;
+            kvs.push((k, v));
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b'}') => {
+                    self.pos += 1;
+                    return Ok(Json::Obj(kvs));
+                }
+                _ => return Err(format!("expected ',' or '}}' at byte {}", self.pos)),
             }
         }
     }
@@ -185,5 +458,89 @@ mod tests {
     #[test]
     fn nan_becomes_null() {
         assert_eq!(Json::Num(f64::NAN).to_string(), "null");
+    }
+
+    #[test]
+    fn parse_roundtrips_writer_output() {
+        let j = Json::obj()
+            .set("op", "embed")
+            .set("id", 3usize)
+            .set("x", 0.25f64)
+            .set("neg", -1.5f64)
+            .set("flag", true)
+            .set("none", Json::Null)
+            .set("edges", vec![vec![0.0f64, 1.0], vec![1.0, 2.0]]);
+        let text = j.to_string();
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(back.to_string(), text);
+        assert_eq!(back.get("op").and_then(Json::as_str), Some("embed"));
+        assert_eq!(back.get("id").and_then(Json::as_u64), Some(3));
+        assert_eq!(back.get("x").and_then(Json::as_f64), Some(0.25));
+        assert_eq!(back.get("flag").and_then(Json::as_bool), Some(true));
+        let edges = back.get("edges").and_then(Json::as_array).unwrap();
+        assert_eq!(edges.len(), 2);
+        assert_eq!(edges[1].as_array().unwrap()[1].as_usize(), Some(2));
+    }
+
+    #[test]
+    fn parse_floats_roundtrip_f32_exactly() {
+        // The serve protocol ships f32 embeddings as JSON numbers; the
+        // f32 -> f64 -> shortest-display -> parse -> f32 cycle must be
+        // the identity (bitwise) for the integration tests to pin
+        // server output against embed_dataset.
+        let mut rng = crate::util::Rng::new(77);
+        for _ in 0..500 {
+            let x = (rng.f32() - 0.5) * 1e3;
+            let text = Json::Num(x as f64).to_string();
+            let back = Json::parse(&text).unwrap().as_f64().unwrap() as f32;
+            assert_eq!(back.to_bits(), x.to_bits(), "{x} via {text}");
+        }
+    }
+
+    #[test]
+    fn parse_string_escapes() {
+        let j = Json::parse(r#""a\"b\\c\ndAé😀""#).unwrap();
+        assert_eq!(j.as_str(), Some("a\"b\\c\ndA\u{e9}\u{1f600}"));
+    }
+
+    #[test]
+    fn parse_rejects_malformed_input() {
+        for bad in [
+            "",
+            "{",
+            "[1,",
+            "{\"a\":}",
+            "{\"a\" 1}",
+            "{a:1}",
+            "tru",
+            "1.2.3",
+            "\"unterminated",
+            "\"lone \\ud800 surrogate\"",
+            "\"bad \\x escape\"",
+            "[1] trailing",
+            "nullx",
+            "--3",
+        ] {
+            assert!(Json::parse(bad).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn parse_depth_limited() {
+        let deep = format!("{}1{}", "[".repeat(200), "]".repeat(200));
+        let err = Json::parse(&deep).unwrap_err();
+        assert!(err.contains("nesting"), "{err}");
+        let ok = format!("{}1{}", "[".repeat(20), "]".repeat(20));
+        assert!(Json::parse(&ok).is_ok());
+    }
+
+    #[test]
+    fn accessors_are_type_strict() {
+        let j = Json::parse(r#"{"n":1.5,"s":"x","i":-2}"#).unwrap();
+        assert_eq!(j.get("n").and_then(Json::as_u64), None, "non-integer");
+        assert_eq!(j.get("i").and_then(Json::as_u64), None, "negative");
+        assert_eq!(j.get("s").and_then(Json::as_f64), None);
+        assert!(j.get("missing").is_none());
+        assert_eq!(j.as_str(), None, "object is not a string");
     }
 }

@@ -6,6 +6,7 @@
 
 pub mod check;
 pub mod cli;
+pub mod fnv;
 pub mod json;
 pub mod rng;
 pub mod timer;

@@ -1,0 +1,35 @@
+//! CLI contract tests, run against the real binary
+//! (`CARGO_BIN_EXE_graphlet-rf`): `help` goes to stdout with exit 0,
+//! unrecognized subcommands go to stderr with a nonzero exit.
+
+use std::process::Command;
+
+fn run(args: &[&str]) -> std::process::Output {
+    Command::new(env!("CARGO_BIN_EXE_graphlet-rf"))
+        .args(args)
+        .output()
+        .expect("spawning graphlet-rf")
+}
+
+#[test]
+fn unknown_subcommand_exits_nonzero_with_usage_on_stderr() {
+    let out = run(&["frobnicate"]);
+    assert_eq!(out.status.code(), Some(2), "unknown subcommand must exit 2");
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("unknown subcommand"), "{stderr}");
+    assert!(stderr.contains("\"frobnicate\""), "{stderr}");
+    assert!(stderr.contains("USAGE"), "usage text must go to stderr: {stderr}");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(!stdout.contains("USAGE"), "usage must not leak to stdout: {stdout}");
+}
+
+#[test]
+fn help_prints_usage_to_stdout_and_exits_zero() {
+    for args in [&["help"][..], &[][..]] {
+        let out = run(args);
+        assert!(out.status.success(), "help must exit 0");
+        let stdout = String::from_utf8_lossy(&out.stdout);
+        assert!(stdout.contains("USAGE"), "{stdout}");
+        assert!(stdout.contains("serve"), "help must mention the serve subcommand: {stdout}");
+    }
+}

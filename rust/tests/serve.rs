@@ -1,0 +1,231 @@
+//! Integration tests for the serve subsystem: a real daemon on an
+//! ephemeral port, driven over loopback TCP.
+//!
+//! Pins the PR's acceptance contract:
+//! - concurrent clients get embeddings **bitwise identical** to
+//!   `embed_dataset` for the same seed/config;
+//! - repeated submissions hit the embedding cache (hit counter > 0);
+//! - malformed JSON, oversized graphs, and mid-request disconnects fail
+//!   per-request without killing the daemon.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::thread::JoinHandle;
+
+use graphlet_rf::coordinator::{embed_dataset, EngineMode, GsaConfig};
+use graphlet_rf::data::Dataset;
+use graphlet_rf::gen::SbmConfig;
+use graphlet_rf::serve::{
+    embed_request, parse_embed_reply, send_shutdown, ServeConfig, Server,
+};
+use graphlet_rf::util::{Json, Rng};
+
+fn quickstart_ds() -> Dataset {
+    // The quickstart generator at test scale (SBM, fixed seed).
+    SbmConfig { per_class: 3, r: 1.5, ..Default::default() }.generate(&mut Rng::new(11))
+}
+
+fn test_gsa() -> GsaConfig {
+    GsaConfig {
+        k: 3,
+        s: 100,
+        m: 64,
+        batch: 32,
+        workers: 3,
+        shards: 2,
+        engine: EngineMode::Cpu,
+        seed: 42,
+        ..Default::default()
+    }
+}
+
+fn start_server(cfg: ServeConfig) -> (SocketAddr, JoinHandle<()>) {
+    let server = Server::bind("127.0.0.1:0", cfg, None).unwrap();
+    let addr = server.local_addr();
+    let handle = std::thread::spawn(move || server.run().unwrap());
+    (addr, handle)
+}
+
+/// A tiny blocking request/reply client.
+struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    fn connect(addr: SocketAddr) -> Client {
+        let stream = TcpStream::connect(addr).unwrap();
+        Client { reader: BufReader::new(stream.try_clone().unwrap()), writer: stream }
+    }
+
+    fn send(&mut self, line: &str) {
+        self.writer.write_all(line.as_bytes()).unwrap();
+        self.writer.write_all(b"\n").unwrap();
+        self.writer.flush().unwrap();
+    }
+
+    fn recv(&mut self) -> String {
+        let mut reply = String::new();
+        self.reader.read_line(&mut reply).unwrap();
+        assert!(!reply.is_empty(), "server closed the connection");
+        reply
+    }
+
+    fn roundtrip(&mut self, line: &str) -> String {
+        self.send(line);
+        self.recv()
+    }
+}
+
+#[test]
+fn concurrent_clients_bitwise_match_embed_dataset_and_hit_cache() {
+    let gsa = test_gsa();
+    let ds = quickstart_ds();
+    let m = gsa.m;
+    let (want, _) = embed_dataset(&ds, &gsa, None).unwrap();
+    let (addr, server) = start_server(ServeConfig { gsa, ..Default::default() });
+
+    // Two concurrent clients submit interleaved halves of the dataset,
+    // pipelining all their requests before reading replies — this is
+    // what actually exercises cross-request batching.
+    let results: Vec<(usize, Vec<f32>)> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..2usize)
+            .map(|c| {
+                let ds = &ds;
+                scope.spawn(move || {
+                    let mut client = Client::connect(addr);
+                    let mine: Vec<usize> = (0..ds.len()).filter(|g| g % 2 == c).collect();
+                    for &g in &mine {
+                        client.send(&embed_request(g as u64, g, &ds.graphs[g]));
+                    }
+                    let mut out = Vec::new();
+                    for _ in &mine {
+                        let (id, row, _) = parse_embed_reply(&client.recv()).unwrap();
+                        out.push((id as usize, row));
+                    }
+                    out
+                })
+            })
+            .collect();
+        handles.into_iter().flat_map(|h| h.join().unwrap()).collect()
+    });
+
+    assert_eq!(results.len(), ds.len());
+    for (g, row) in &results {
+        assert_eq!(row.len(), m);
+        assert_eq!(&want[g * m..(g + 1) * m], &row[..], "graph {g} drifted vs embed_dataset");
+    }
+
+    // Resubmitting a graph must be served from the cache, bitwise equal.
+    let mut client = Client::connect(addr);
+    let (id, row, cached) =
+        parse_embed_reply(&client.roundtrip(&embed_request(99, 0, &ds.graphs[0]))).unwrap();
+    assert_eq!(id, 99);
+    assert!(cached, "second submission of graph 0 must hit the cache");
+    assert_eq!(&want[..m], &row[..]);
+
+    // And the hit shows up in the stats op.
+    let stats = Json::parse(client.roundtrip(r#"{"op":"stats","id":5}"#).trim()).unwrap();
+    assert_eq!(stats.get("ok").and_then(Json::as_bool), Some(true));
+    let hits = stats
+        .get("cache")
+        .and_then(|c| c.get("hits"))
+        .and_then(Json::as_u64)
+        .unwrap();
+    assert!(hits >= 1, "cache hits = {hits}");
+    let graphs = stats
+        .get("pipeline")
+        .and_then(|p| p.get("graphs"))
+        .and_then(Json::as_u64)
+        .unwrap();
+    assert_eq!(graphs as usize, ds.len(), "pipeline computed each graph exactly once");
+
+    drop(client);
+    send_shutdown(&addr.to_string()).unwrap();
+    server.join().unwrap();
+}
+
+#[test]
+fn protocol_errors_are_per_request_and_daemon_survives() {
+    let mut gsa = test_gsa();
+    gsa.s = 50;
+    gsa.m = 16;
+    let cfg = ServeConfig { gsa, max_nodes: 80, max_edges: 500, ..Default::default() };
+    let (addr, server) = start_server(cfg);
+    let mut client = Client::connect(addr);
+
+    // Malformed JSON line.
+    let reply = client.roundtrip("this is not json");
+    let err = parse_embed_reply(&reply).unwrap_err();
+    assert!(err.contains("bad json"), "{err}");
+
+    // Unknown op (id still echoed).
+    let reply = client.roundtrip(r#"{"op":"warp","id":3}"#);
+    assert!(reply.contains("unknown op"), "{reply}");
+    assert!(Json::parse(reply.trim()).unwrap().get("id").and_then(Json::as_u64) == Some(3));
+
+    // Oversized graph (node guard).
+    let reply = client.roundtrip(r#"{"op":"embed","id":4,"v":5000,"edges":[[0,1]]}"#);
+    assert!(reply.contains("too large"), "{reply}");
+
+    // Edge out of range.
+    let reply = client.roundtrip(r#"{"op":"embed","id":5,"v":5,"edges":[[0,9]]}"#);
+    assert!(reply.contains("out of range"), "{reply}");
+
+    // Graph smaller than the graphlet size.
+    let reply = client.roundtrip(r#"{"op":"embed","id":6,"v":2,"edges":[[0,1]]}"#);
+    assert!(reply.contains("requires at least k"), "{reply}");
+
+    // Absurd graph_index (seed derivation is O(index) — must be capped,
+    // not walked).
+    let reply = client.roundtrip(
+        r#"{"op":"embed","id":9,"v":5,"edges":[[0,1]],"graph_index":4503599627370496}"#,
+    );
+    assert!(reply.contains("graph_index"), "{reply}");
+
+    // After all those failures, the same connection still serves a
+    // valid request…
+    let ds = quickstart_ds();
+    let (id, row, _) =
+        parse_embed_reply(&client.roundtrip(&embed_request(7, 0, &ds.graphs[0]))).unwrap();
+    assert_eq!(id, 7);
+    assert_eq!(row.len(), 16);
+    assert!(row.iter().all(|v| v.is_finite()));
+
+    // …and so does a fresh connection.
+    let mut client2 = Client::connect(addr);
+    let pong = client2.roundtrip(r#"{"op":"ping","id":8}"#);
+    assert!(pong.contains("\"ok\":true"), "{pong}");
+
+    drop(client);
+    drop(client2);
+    send_shutdown(&addr.to_string()).unwrap();
+    server.join().unwrap();
+}
+
+#[test]
+fn mid_request_disconnect_keeps_daemon_serving() {
+    let mut gsa = test_gsa();
+    gsa.s = 2000; // slow enough that the job is still in flight on close
+    gsa.m = 16;
+    let (addr, server) = start_server(ServeConfig { gsa, ..Default::default() });
+    let ds = quickstart_ds();
+
+    // Fire a request and slam the connection shut without reading the
+    // reply: the in-flight job completes into a closed channel.
+    {
+        let mut doomed = Client::connect(addr);
+        doomed.send(&embed_request(1, 0, &ds.graphs[0]));
+    } // both halves dropped here
+
+    // The daemon must keep serving new connections and new work.
+    let mut client = Client::connect(addr);
+    let (id, row, _) =
+        parse_embed_reply(&client.roundtrip(&embed_request(2, 1, &ds.graphs[1]))).unwrap();
+    assert_eq!(id, 2);
+    assert_eq!(row.len(), 16);
+
+    drop(client);
+    send_shutdown(&addr.to_string()).unwrap();
+    server.join().unwrap();
+}

@@ -1,8 +1,18 @@
 //! Shared mini bench harness for the `harness = false` benches
 //! (criterion is unavailable in the offline build; this prints a
 //! criterion-like report: warmup, median and spread over runs).
+//!
+//! [`BenchLog`] additionally collects each case's median into a
+//! machine-readable `BENCH_<bench>.json` summary (median ns per
+//! measured call, one entry per config) so the perf trajectory can be
+//! compared across PRs instead of living only in scrollback. Baselines
+//! are committed under `benches/baselines/`; re-running a bench
+//! overwrites its file (override the directory with `BENCH_OUT_DIR`).
 
+use std::path::PathBuf;
 use std::time::Instant;
+
+use graphlet_rf::util::Json;
 
 /// Measure `f` and print a criterion-style line. Returns median seconds.
 pub fn bench_case<F: FnMut()>(group: &str, name: &str, warmup: u32, runs: u32, mut f: F) -> f64 {
@@ -27,6 +37,51 @@ pub fn bench_case<F: FnMut()>(group: &str, name: &str, warmup: u32, runs: u32, m
         fmt(max)
     );
     median
+}
+
+/// Collected medians for one bench binary, written as
+/// `BENCH_<bench>.json`.
+pub struct BenchLog {
+    bench: String,
+    cases: Vec<(String, String, f64)>,
+}
+
+impl BenchLog {
+    pub fn new(bench: &str) -> BenchLog {
+        BenchLog { bench: bench.to_string(), cases: Vec::new() }
+    }
+
+    /// Record one case's median wall-clock seconds (as returned by
+    /// [`bench_case`]).
+    pub fn record(&mut self, group: &str, name: &str, median_secs: f64) {
+        self.cases.push((group.to_string(), name.to_string(), median_secs));
+    }
+
+    /// Write `BENCH_<bench>.json` into `$BENCH_OUT_DIR` (default:
+    /// `benches/baselines/` in the repository) and return the path.
+    pub fn write(&self) -> std::io::Result<PathBuf> {
+        let dir = std::env::var("BENCH_OUT_DIR").map(PathBuf::from).unwrap_or_else(|_| {
+            PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../benches/baselines")
+        });
+        std::fs::create_dir_all(&dir)?;
+        let mut cases = Json::arr();
+        for (group, name, secs) in &self.cases {
+            cases.push(
+                Json::obj()
+                    .set("group", group.as_str())
+                    .set("name", name.as_str())
+                    .set("median_ns", (secs * 1e9).round()),
+            );
+        }
+        let doc = Json::obj()
+            .set("bench", self.bench.as_str())
+            .set("unit", "median nanoseconds per measured call")
+            .set("status", "measured")
+            .set("cases", cases);
+        let path = dir.join(format!("BENCH_{}.json", self.bench));
+        std::fs::write(&path, format!("{doc}\n"))?;
+        Ok(path)
+    }
 }
 
 pub fn fmt(secs: f64) -> String {

@@ -1,0 +1,65 @@
+//! Bench: structured (SORF/FWHT) vs dense random features across the
+//! (d, m) grid.
+//!
+//! The dense baseline is the cache-blocked kernel in
+//! `graphlet_rf::fastrf::DenseMap` — `O(d·m)` per batch no matter how
+//! well it is tiled. The SORF map costs `O(⌈m/p⌉ · p log p)` with
+//! `p = 2^⌈log₂ d⌉`, so its advantage grows with d; the acceptance
+//! point for this subsystem is d = 25 (k = 5 graphlets), m ≥ 2048,
+//! where SORF must beat dense.
+//!
+//! Inputs are dense Gaussian vectors: the dense kernel's sparse-input
+//! fast path (zero skipping on 0/1 adjacency rows) is a separate axis,
+//! measured by `table1_complexity` — here both kernels do their full
+//! nominal work.
+//!
+//! Emits `BENCH_fastrf_scaling.json` (median ns per batch call of 256
+//! rows, per config) next to the other committed baselines; run with
+//! `cargo bench --bench fastrf_scaling`.
+
+mod bench_harness;
+
+use bench_harness::{bench_case, BenchLog};
+use graphlet_rf::fastrf::{DenseMap, SorfMap, SorfParams};
+use graphlet_rf::features::{RfParams, Variant};
+use graphlet_rf::util::Rng;
+
+fn main() {
+    let batch = 256usize;
+    let mut rng = Rng::new(42);
+    let mut log = BenchLog::new("fastrf_scaling");
+    println!("# fastrf scaling: dense (cache-blocked) vs SORF (FWHT), batch = {batch}");
+    for &(k, d) in &[(3usize, 9usize), (5, 25), (6, 36)] {
+        for &m in &[512usize, 2048, 8192] {
+            let mut x = vec![0.0f32; batch * d];
+            rng.fill_gaussian(&mut x, 1.0);
+            for variant in [Variant::Gauss, Variant::Opu] {
+                let dense = DenseMap::new(RfParams::generate(variant, d, m, 0.1, &mut rng));
+                let sorf = SorfMap::new(SorfParams::generate(variant, d, m, 0.1, &mut rng));
+                let mut y = vec![0.0f32; batch * m];
+                let name = format!("{}_k{k}_d{d}_m{m}", variant.name());
+                let t_dense = bench_case("fastrf_dense", &name, 2, 7, || {
+                    dense.map_batch(&x, batch, &mut y);
+                });
+                log.record("dense", &name, t_dense);
+                let t_sorf = bench_case("fastrf_sorf", &name, 2, 7, || {
+                    sorf.map_batch(&x, batch, &mut y);
+                });
+                log.record("sorf", &name, t_sorf);
+                println!(
+                    "  -> {name}: dense/sorf = {:.2}x {}",
+                    t_dense / t_sorf.max(1e-12),
+                    if t_sorf < t_dense { "(sorf wins)" } else { "(dense wins)" }
+                );
+            }
+        }
+    }
+    println!(
+        "\nacceptance point: opu/gauss at k=5 (d=25), m >= 2048 — sorf must win \
+         (blocks of p=32, 3·log2(32) butterflies/element vs 25 madds/element)."
+    );
+    match log.write() {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write bench summary: {e}"),
+    }
+}

@@ -6,6 +6,7 @@
 //! workers, `shards=4` must out-run `shards=1` on the CPU engine because
 //! the single feature thread is the unsharded pipeline's bottleneck.
 
+#[allow(dead_code)] // BenchLog is used by the table1/fastrf benches.
 mod bench_harness;
 
 use bench_harness::bench_case;

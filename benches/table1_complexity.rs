@@ -11,7 +11,7 @@
 
 mod bench_harness;
 
-use bench_harness::bench_case;
+use bench_harness::{bench_case, BenchLog};
 use graphlet_rf::features::{CpuFeatureMap, RfParams, Variant};
 use graphlet_rf::gen::SbmConfig;
 use graphlet_rf::iso::GraphletRegistry;
@@ -37,6 +37,7 @@ fn fit_slope(xs: &[f64], ys: &[f64]) -> f64 {
 fn main() {
     let n = 256usize;
     let mut rng = Rng::new(7);
+    let mut log = BenchLog::new("table1_complexity");
 
     // --- scaling in m at fixed k (phi_Gs and phi_OPU are O(m)) ---------
     println!("# Table 1: scaling in m (k = 6 fixed)");
@@ -53,9 +54,11 @@ fn main() {
             let params = RfParams::generate(variant, d, m, 0.1, &mut rng);
             let map = CpuFeatureMap::new(params);
             let mut y = vec![0.0f32; n * m];
-            let t = bench_case("table1_m", &format!("{}_m{m}", variant.name()), 1, 5, || {
+            let name = format!("{}_m{m}", variant.name());
+            let t = bench_case("table1_m", &name, 1, 5, || {
                 map.map_batch(&x, n, &mut y);
             });
+            log.record("table1_m", &name, t);
             lms.push((m as f64).ln());
             lts.push(t.max(1e-12).ln());
         }
@@ -70,11 +73,13 @@ fn main() {
     for k in [4usize, 5, 6, 7, 8] {
         let graphlets = pool(k, n, 23 + k as u64);
         let mut reg = GraphletRegistry::new();
-        let t = bench_case("table1_k", &format!("match_k{k}"), 1, 3, || {
+        let name = format!("match_k{k}");
+        let t = bench_case("table1_k", &name, 1, 3, || {
             for g in &graphlets {
                 std::hint::black_box(reg.classify(g));
             }
         });
+        log.record("table1_k", &name, t);
         ks_f.push(k as f64);
         lt_match.push((t / n as f64).max(1e-12).ln());
     }
@@ -92,9 +97,11 @@ fn main() {
             let params = RfParams::generate(variant, d, m, 0.1, &mut rng);
             let map = CpuFeatureMap::new(params);
             let mut y = vec![0.0f32; n * m];
-            let t = bench_case("table1_k", &format!("{}_k{k}", variant.name()), 1, 5, || {
+            let name = format!("{}_k{k}", variant.name());
+            let t = bench_case("table1_k", &name, 1, 5, || {
                 map.map_batch(&x, n, &mut y);
             });
+            log.record("table1_k", &name, t);
             lks.push((k as f64).ln());
             lts.push(t.max(1e-12).ln());
         }
@@ -110,4 +117,9 @@ fn main() {
         "\nphysical OPU model: {} per projection for ANY k, m (constant)",
         bench_harness::fmt(graphlet_rf::features::OPU_SECONDS_PER_PROJECTION)
     );
+
+    match log.write() {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write bench summary: {e}"),
+    }
 }

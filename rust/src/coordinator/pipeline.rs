@@ -41,6 +41,12 @@ pub enum EngineMode {
     /// CPU features computed inside the sampler workers; only per-graph
     /// sums cross the channel. Perf ablation (EXPERIMENTS.md §Perf).
     CpuInline,
+    /// Structured random features (SORF) on the feature shards:
+    /// `HD`-product blocks via the in-place FWHT, `O(p log p)` per
+    /// block instead of the dense `O(d·m)` — see [`crate::fastrf`].
+    /// A different random-feature *family* than `cpu` (statistically
+    /// equivalent, not bitwise), still deterministic per seed.
+    CpuSorf,
 }
 
 impl EngineMode {
@@ -51,8 +57,21 @@ impl EngineMode {
             "pjrt" => EngineMode::Pjrt,
             "cpu" => EngineMode::Cpu,
             "cpu-inline" => EngineMode::CpuInline,
-            other => bail!("unknown engine {other:?} (expected pjrt|cpu|cpu-inline)"),
+            "cpu-sorf" => EngineMode::CpuSorf,
+            other => bail!("unknown engine {other:?} (expected pjrt|cpu|cpu-inline|cpu-sorf)"),
         })
+    }
+
+    /// Engine for engine-agnostic tests: the `GRAPHLET_RF_TEST_ENGINE`
+    /// env var when set (the CI engine-matrix job runs the tier-1 suite
+    /// once per CPU engine), else `default`. Panics on an unparsable
+    /// value — a broken matrix entry must fail loudly, not silently
+    /// fall back.
+    pub fn from_env_or(default: EngineMode) -> EngineMode {
+        match std::env::var("GRAPHLET_RF_TEST_ENGINE") {
+            Ok(s) => EngineMode::parse(&s).expect("GRAPHLET_RF_TEST_ENGINE"),
+            Err(_) => default,
+        }
     }
 }
 
@@ -225,7 +244,7 @@ mod tests {
         // count must not move a single bit, including through the
         // streaming core's idle-flush partial batches.
         let ds = small_ds();
-        for mode in [EngineMode::Cpu, EngineMode::CpuInline] {
+        for mode in [EngineMode::Cpu, EngineMode::CpuInline, EngineMode::CpuSorf] {
             let mut ref_cfg = small_cfg(mode);
             ref_cfg.shards = 1;
             ref_cfg.workers = 1;
@@ -281,8 +300,12 @@ mod tests {
         assert_eq!(EngineMode::parse("pjrt").unwrap(), EngineMode::Pjrt);
         assert_eq!(EngineMode::parse("cpu").unwrap(), EngineMode::Cpu);
         assert_eq!(EngineMode::parse("cpu-inline").unwrap(), EngineMode::CpuInline);
+        assert_eq!(EngineMode::parse("cpu-sorf").unwrap(), EngineMode::CpuSorf);
         let err = EngineMode::parse("opu").unwrap_err().to_string();
-        assert!(err.contains("unknown engine") && err.contains("pjrt|cpu|cpu-inline"), "{err}");
+        assert!(
+            err.contains("unknown engine") && err.contains("pjrt|cpu|cpu-inline|cpu-sorf"),
+            "{err}"
+        );
     }
 
     #[test]
@@ -307,12 +330,16 @@ mod tests {
     #[test]
     fn gauss_eig_variant_runs() {
         let ds = small_ds();
-        let mut cfg = small_cfg(EngineMode::Cpu);
-        cfg.variant = Variant::GaussEig;
-        cfg.sigma = 0.5;
-        let (emb, _) = embed_dataset(&ds, &cfg, None).unwrap();
-        assert_eq!(emb.len(), 6 * 64);
-        assert!(emb.iter().all(|v| v.is_finite()));
+        // Both dense shards and SORF shards must handle the d = k
+        // eigenvalue inputs (SORF pads k up to the next power of two).
+        for engine in [EngineMode::Cpu, EngineMode::CpuSorf] {
+            let mut cfg = small_cfg(engine);
+            cfg.variant = Variant::GaussEig;
+            cfg.sigma = 0.5;
+            let (emb, _) = embed_dataset(&ds, &cfg, None).unwrap();
+            assert_eq!(emb.len(), 6 * 64);
+            assert!(emb.iter().all(|v| v.is_finite()), "{engine:?}");
+        }
     }
 
     #[test]

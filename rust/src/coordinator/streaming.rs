@@ -14,7 +14,7 @@
 //!            per-shard bounded channels (job ticket → shard ticket mod N)
 //!                         │
 //!                         ▼
-//!              N feature shards (own RfExecutor/CpuFeatureMap each)
+//!       N feature shards (own RfExecutor/CpuFeatureMap/SorfMap each)
 //!                         │ scatter rows into per-job accumulators;
 //!                         │ a job completes when its s rows arrived
 //!                         ▼
@@ -51,6 +51,7 @@ use anyhow::{bail, Result};
 
 use super::metrics::PipelineMetrics;
 use super::pipeline::{EngineMode, GsaConfig};
+use crate::fastrf::{SorfMap, SorfParams};
 use crate::features::{CpuFeatureMap, RfParams};
 use crate::graph::AnyGraph;
 use crate::runtime::{Engine, Manifest, RfExecutor};
@@ -160,6 +161,17 @@ impl Packer {
 /// Spec from which a spawned shard thread rebuilds its own PJRT engine
 /// (PJRT handles are not Sync, so each shard owns one).
 type PjrtSpawn = (PathBuf, Manifest, String);
+
+/// The one shared random-parameter draw, in whichever family the
+/// engine mode uses: dense Gaussian matrices for `pjrt`/`cpu`/
+/// `cpu-inline`, structured SORF diagonals for `cpu-sorf`. Every
+/// worker and shard clones the same `Arc`, so shard count never
+/// changes the math — the same invariant the dense path pins.
+#[derive(Clone)]
+enum ParamSet {
+    Dense(Arc<RfParams>),
+    Sorf(Arc<SorfParams>),
+}
 
 /// The bounded multi-producer multi-consumer job queue feeding the
 /// sampler workers.
@@ -318,8 +330,27 @@ impl StreamingPipeline {
         let d = cfg.input_dim();
 
         let mut seed_rng = Rng::new(cfg.seed);
-        let params =
-            Arc::new(RfParams::generate(cfg.variant, d, cfg.m, cfg.sigma, &mut seed_rng));
+        // One draw per pipeline, in the engine's parameter family. The
+        // per-graph seed stream starts right after this draw either
+        // way; `cpu-sorf` embeddings are a different (structured)
+        // random-feature family, so they differ numerically from the
+        // dense engines but are equally deterministic per seed.
+        let params = match cfg.engine {
+            EngineMode::CpuSorf => ParamSet::Sorf(Arc::new(SorfParams::generate(
+                cfg.variant,
+                d,
+                cfg.m,
+                cfg.sigma,
+                &mut seed_rng,
+            ))),
+            _ => ParamSet::Dense(Arc::new(RfParams::generate(
+                cfg.variant,
+                d,
+                cfg.m,
+                cfg.sigma,
+                &mut seed_rng,
+            ))),
+        };
 
         if cfg.engine == EngineMode::Pjrt && engine.is_none() {
             bail!("PJRT mode requires an Engine");
@@ -491,10 +522,10 @@ fn flush_packers(packers: &mut [Packer], txs: &[SyncSender<Msg>], batch: usize, 
 /// subgraphs in seed order, and pack rows into per-shard cross-request
 /// batches. Partial batches flush when the queue idles, so a lone
 /// request is never stranded behind an unfilled batch.
-fn worker_loop(queue: &JobQueue, txs: &[SyncSender<Msg>], params: &RfParams, cfg: &GsaConfig) {
+fn worker_loop(queue: &JobQueue, txs: &[SyncSender<Msg>], params: &ParamSet, cfg: &GsaConfig) {
     let sampler = sampler_by_name(&cfg.sampler);
-    let inline_map = match cfg.engine {
-        EngineMode::CpuInline => Some(CpuFeatureMap::new(params.clone())),
+    let inline_map = match (cfg.engine, params) {
+        (EngineMode::CpuInline, ParamSet::Dense(p)) => Some(CpuFeatureMap::new((**p).clone())),
         _ => None,
     };
     let d = cfg.input_dim();
@@ -601,23 +632,40 @@ fn worker_loop(queue: &JobQueue, txs: &[SyncSender<Msg>], params: &RfParams, cfg
 enum ShardExec {
     Pjrt { engine: Box<Engine>, exec: RfExecutor },
     Cpu(CpuFeatureMap),
+    /// Structured SORF features (`cpu-sorf`): same batch contract as
+    /// the dense CPU map, `O(p log p)` projection per block.
+    Sorf(SorfMap),
     /// CpuInline: workers computed the features; only sums arrive here.
     Inline,
 }
 
 fn build_exec(
     spawn_spec: Option<PjrtSpawn>,
-    params: &RfParams,
+    params: &ParamSet,
     cfg: &GsaConfig,
 ) -> Result<ShardExec> {
     match cfg.engine {
         EngineMode::Pjrt => {
+            let ParamSet::Dense(params) = params else {
+                bail!("pjrt engine requires dense parameters");
+            };
             let (dir, manifest, impl_) = spawn_spec.expect("pjrt spawn spec");
             let engine = Box::new(Engine::with_manifest(&dir, manifest)?);
             let exec = RfExecutor::new(&engine, &impl_, params, cfg.batch)?;
             Ok(ShardExec::Pjrt { engine, exec })
         }
-        EngineMode::Cpu => Ok(ShardExec::Cpu(CpuFeatureMap::new(params.clone()))),
+        EngineMode::Cpu => {
+            let ParamSet::Dense(params) = params else {
+                bail!("cpu engine requires dense parameters");
+            };
+            Ok(ShardExec::Cpu(CpuFeatureMap::new((**params).clone())))
+        }
+        EngineMode::CpuSorf => {
+            let ParamSet::Sorf(params) = params else {
+                bail!("cpu-sorf engine requires structured parameters");
+            };
+            Ok(ShardExec::Sorf(SorfMap::new((**params).clone())))
+        }
         EngineMode::CpuInline => Ok(ShardExec::Inline),
     }
 }
@@ -641,7 +689,7 @@ fn publish(slot: &Mutex<PipelineMetrics>, metrics: &PipelineMetrics) {
 fn shard_loop(
     rx: Receiver<Msg>,
     spawn_spec: Option<PjrtSpawn>,
-    params: &RfParams,
+    params: &ParamSet,
     cfg: &GsaConfig,
     slot: &Mutex<PipelineMetrics>,
 ) -> PipelineMetrics {
@@ -722,6 +770,10 @@ fn shard_loop(
                         }
                     }
                     ShardExec::Cpu(map) => {
+                        cpu_out.resize(b.rows * m, 0.0);
+                        map.map_batch(&b.data, b.rows, &mut cpu_out[..b.rows * m]);
+                    }
+                    ShardExec::Sorf(map) => {
                         cpu_out.resize(b.rows * m, 0.0);
                         map.map_batch(&b.data, b.rows, &mut cpu_out[..b.rows * m]);
                     }
@@ -828,37 +880,40 @@ mod tests {
     fn streaming_matches_batch_adapter() {
         // Jobs submitted one-by-one through the persistent pipeline must
         // reproduce embed_dataset exactly (same seeds, same math) —
-        // including when submitted out of index order.
+        // including when submitted out of index order, and for the
+        // structured engine as well as the dense one.
         let ds = SbmConfig { per_class: 3, r: 1.5, ..Default::default() }
             .generate(&mut Rng::new(4));
-        let c = cfg(EngineMode::Cpu);
-        let (want, _) = super::super::pipeline::embed_dataset(&ds, &c, None).unwrap();
-        let pipe = StreamingPipeline::new(&c, None).unwrap();
-        let seeds = pipe.graph_seeds(ds.len());
-        let (tx, rx) = std::sync::mpsc::channel();
-        let mut order: Vec<usize> = (0..ds.len()).collect();
-        order.reverse();
-        for g_idx in order {
-            pipe.submit(GraphJob {
-                graph: Arc::new(ds.graphs[g_idx].clone()),
-                seed: seeds[g_idx],
-                tag: g_idx as u64,
-                done: tx.clone(),
-            })
-            .unwrap();
+        for mode in [EngineMode::Cpu, EngineMode::CpuSorf] {
+            let c = cfg(mode);
+            let (want, _) = super::super::pipeline::embed_dataset(&ds, &c, None).unwrap();
+            let pipe = StreamingPipeline::new(&c, None).unwrap();
+            let seeds = pipe.graph_seeds(ds.len());
+            let (tx, rx) = std::sync::mpsc::channel();
+            let mut order: Vec<usize> = (0..ds.len()).collect();
+            order.reverse();
+            for g_idx in order {
+                pipe.submit(GraphJob {
+                    graph: Arc::new(ds.graphs[g_idx].clone()),
+                    seed: seeds[g_idx],
+                    tag: g_idx as u64,
+                    done: tx.clone(),
+                })
+                .unwrap();
+            }
+            drop(tx);
+            let mut got = vec![0.0f32; want.len()];
+            for _ in 0..ds.len() {
+                let done = rx.recv().unwrap();
+                assert!(done.error.is_none(), "{:?}", done.error);
+                let g = done.tag as usize;
+                got[g * 32..(g + 1) * 32].copy_from_slice(&done.row);
+            }
+            let metrics = pipe.shutdown().unwrap();
+            assert_eq!(got, want, "{mode:?}");
+            assert_eq!(metrics.samples, ds.len() * 100);
+            assert_eq!(metrics.graphs, ds.len());
         }
-        drop(tx);
-        let mut got = vec![0.0f32; want.len()];
-        for _ in 0..ds.len() {
-            let done = rx.recv().unwrap();
-            assert!(done.error.is_none(), "{:?}", done.error);
-            let g = done.tag as usize;
-            got[g * 32..(g + 1) * 32].copy_from_slice(&done.row);
-        }
-        let metrics = pipe.shutdown().unwrap();
-        assert_eq!(got, want);
-        assert_eq!(metrics.samples, ds.len() * 100);
-        assert_eq!(metrics.graphs, ds.len());
     }
 
     #[test]

@@ -84,6 +84,12 @@ impl Dataset {
 /// 1-based node ids), `<name>_graph_indicator.txt` (node -> graph id),
 /// `<name>_graph_labels.txt` (graph -> class). Binary labels are
 /// normalized to {0, 1} by mapping the smallest label to 0.
+///
+/// Malformed input — non-numeric lines, 0-based ids (the format is
+/// 1-based), label/graph count mismatches, out-of-range edge
+/// endpoints, graph ids with no nodes — returns an `Err` with context
+/// naming the offending file/line; it never panics, so a bad dataset
+/// drop-in fails the CLI gracefully.
 pub fn load_tu_dataset(dir: &Path, name: &str) -> Result<Dataset> {
     let read_lines = |suffix: &str| -> Result<Vec<String>> {
         let path = dir.join(format!("{name}_{suffix}.txt"));
@@ -97,17 +103,41 @@ pub fn load_tu_dataset(dir: &Path, name: &str) -> Result<Dataset> {
     let indicator: Vec<usize> = read_lines("graph_indicator")?
         .iter()
         .filter(|l| !l.trim().is_empty())
-        .map(|l| l.trim().parse::<usize>().context("graph_indicator"))
+        .enumerate()
+        .map(|(i, l)| {
+            l.trim()
+                .parse::<usize>()
+                .with_context(|| format!("graph_indicator line {}: {:?}", i + 1, l.trim()))
+        })
         .collect::<Result<_>>()?;
     if indicator.is_empty() {
         bail!("empty graph_indicator");
     }
+    let n_nodes = indicator.len();
     let n_graphs = *indicator.iter().max().unwrap();
+    if indicator.contains(&0) {
+        bail!("graph_indicator contains graph id 0: TU graph ids are 1-based");
+    }
+    if n_graphs > n_nodes {
+        bail!("graph_indicator names graph {n_graphs} but the file has only {n_nodes} nodes");
+    }
+    // TU node blocks are contiguous per graph (the format lists each
+    // graph's nodes consecutively). An interleaved indicator would make
+    // the per-graph (first_node, count) ranges below silently wrong —
+    // edges would map to bogus local indices — so reject it up front.
+    if indicator.windows(2).any(|w| w[1] < w[0]) {
+        bail!("graph_indicator is not sorted: TU node blocks must be contiguous per graph");
+    }
 
     let raw_labels: Vec<i64> = read_lines("graph_labels")?
         .iter()
         .filter(|l| !l.trim().is_empty())
-        .map(|l| l.trim().parse::<i64>().context("graph_labels"))
+        .enumerate()
+        .map(|(i, l)| {
+            l.trim()
+                .parse::<i64>()
+                .with_context(|| format!("graph_labels line {}: {:?}", i + 1, l.trim()))
+        })
         .collect::<Result<_>>()?;
     if raw_labels.len() != n_graphs {
         bail!("label count {} != graph count {}", raw_labels.len(), n_graphs);
@@ -126,7 +156,7 @@ pub fn load_tu_dataset(dir: &Path, name: &str) -> Result<Dataset> {
         .collect();
 
     // Per-graph node ranges (TU node ids are 1-based and contiguous).
-    let mut node_graph = vec![0usize; indicator.len()];
+    let mut node_graph = vec![0usize; n_nodes];
     let mut first_node = vec![usize::MAX; n_graphs];
     let mut node_counts = vec![0usize; n_graphs];
     for (node, &gid) in indicator.iter().enumerate() {
@@ -134,6 +164,15 @@ pub fn load_tu_dataset(dir: &Path, name: &str) -> Result<Dataset> {
         node_graph[node] = g;
         first_node[g] = first_node[g].min(node);
         node_counts[g] += 1;
+    }
+    // Every graph id in 1..=n_graphs must own at least one node: an
+    // empty-graph row has no node range, cannot carry edges, and makes
+    // the label column ambiguous — reject rather than fabricate a
+    // 0-node graph.
+    for (g, &count) in node_counts.iter().enumerate() {
+        if count == 0 {
+            bail!("graph {} has no nodes in graph_indicator", g + 1);
+        }
     }
 
     let mut edge_lists: Vec<Vec<(usize, usize)>> = vec![Vec::new(); n_graphs];
@@ -145,8 +184,20 @@ pub fn load_tu_dataset(dir: &Path, name: &str) -> Result<Dataset> {
         let (a, b) = line
             .split_once(',')
             .with_context(|| format!("bad edge line {line:?}"))?;
-        let a: usize = a.trim().parse().context("edge endpoint")?;
-        let b: usize = b.trim().parse().context("edge endpoint")?;
+        let a: usize = a
+            .trim()
+            .parse()
+            .with_context(|| format!("edge endpoint in line {line:?}"))?;
+        let b: usize = b
+            .trim()
+            .parse()
+            .with_context(|| format!("edge endpoint in line {line:?}"))?;
+        if a == 0 || b == 0 {
+            bail!("edge line {line:?} uses node id 0: TU node ids are 1-based (0-based input?)");
+        }
+        if a > n_nodes || b > n_nodes {
+            bail!("edge line {line:?} references node beyond the {n_nodes} in graph_indicator");
+        }
         let (a, b) = (a - 1, b - 1);
         let g = node_graph[a];
         if node_graph[b] != g {
@@ -229,6 +280,104 @@ mod tests {
         std::fs::write(dir.join("bad_graph_indicator.txt"), "1\n1\n2\n").unwrap();
         std::fs::write(dir.join("bad_graph_labels.txt"), "0\n1\n").unwrap();
         assert!(load_tu_dataset(&dir, "bad").is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Write a TU triplet into a fresh temp dir, parse it, return the
+    /// error string (the malformed-input tests all expect `Err`).
+    fn tu_error(tag: &str, a: &str, indicator: &str, labels: &str) -> String {
+        let dir = std::env::temp_dir().join(format!("tu_{tag}_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("t_A.txt"), a).unwrap();
+        std::fs::write(dir.join("t_graph_indicator.txt"), indicator).unwrap();
+        std::fs::write(dir.join("t_graph_labels.txt"), labels).unwrap();
+        let err = match load_tu_dataset(&dir, "t") {
+            Ok(_) => panic!("malformed TU input {tag:?} parsed successfully"),
+            // Render the whole context chain so asserts can match any
+            // level of it.
+            Err(e) => format!("{e:#}"),
+        };
+        std::fs::remove_dir_all(&dir).ok();
+        err
+    }
+
+    #[test]
+    fn tu_parser_rejects_non_numeric_indicator() {
+        let err = tu_error("nonnum", "1, 2\n2, 1\n", "1\nbanana\n", "0\n");
+        assert!(err.contains("graph_indicator"), "{err}");
+        assert!(err.contains("banana"), "{err}");
+    }
+
+    #[test]
+    fn tu_parser_rejects_zero_based_graph_ids() {
+        // A 0 graph id means the file is 0-based; subtracting 1 must
+        // not underflow-panic.
+        let err = tu_error("gid0", "1, 2\n2, 1\n", "0\n0\n1\n", "0\n1\n");
+        assert!(err.contains("1-based"), "{err}");
+    }
+
+    #[test]
+    fn tu_parser_rejects_label_count_mismatch() {
+        let err = tu_error("labels", "1, 2\n2, 1\n", "1\n1\n2\n2\n", "0\n1\n1\n");
+        assert!(err.contains("label count 3 != graph count 2"), "{err}");
+    }
+
+    #[test]
+    fn tu_parser_rejects_zero_based_edges() {
+        // 0-based edge endpoints: must be a contextual error, not an
+        // index underflow/out-of-bounds panic.
+        let err = tu_error("edge0", "0, 1\n", "1\n1\n", "0\n");
+        assert!(err.contains("1-based"), "{err}");
+    }
+
+    #[test]
+    fn tu_parser_rejects_edge_beyond_node_count() {
+        let err = tu_error("edgebig", "1, 99\n", "1\n1\n", "0\n");
+        assert!(err.contains("beyond"), "{err}");
+    }
+
+    #[test]
+    fn tu_parser_rejects_non_numeric_edges_and_labels() {
+        let err = tu_error("edgetxt", "1, two\n", "1\n1\n", "0\n");
+        assert!(err.contains("edge endpoint"), "{err}");
+        let err = tu_error("edgecomma", "1 2\n", "1\n1\n", "0\n");
+        assert!(err.contains("bad edge line"), "{err}");
+        let err = tu_error("labeltxt", "1, 2\n2, 1\n", "1\n1\n", "x\n");
+        assert!(err.contains("graph_labels"), "{err}");
+    }
+
+    #[test]
+    fn tu_parser_rejects_empty_graph_rows() {
+        // Graph 2 is named by graph_labels/indicator max (graph 3) but
+        // owns no nodes: an empty-graph row must be an error, not a
+        // fabricated 0-node graph.
+        let err = tu_error("gap", "1, 2\n2, 1\n", "1\n1\n3\n", "0\n1\n1\n");
+        assert!(err.contains("graph 2 has no nodes"), "{err}");
+    }
+
+    #[test]
+    fn tu_parser_rejects_interleaved_graph_blocks() {
+        // Graph 1 owns nodes 1 and 3 with graph 2's node between them:
+        // the per-graph contiguous ranges would be wrong, so this must
+        // be an Err — not an Ok with silently mis-mapped edges.
+        let err = tu_error("interleave", "1, 3\n3, 1\n", "1\n2\n1\n", "0\n1\n");
+        assert!(err.contains("contiguous"), "{err}");
+    }
+
+    #[test]
+    fn tu_parser_rejects_indicator_graph_id_beyond_node_count() {
+        // A wild graph id (e.g. a stray huge number) must error before
+        // any per-graph allocation happens.
+        let err = tu_error("wildgid", "1, 2\n2, 1\n", "1\n999999\n", "0\n1\n");
+        assert!(err.contains("only"), "{err}");
+    }
+
+    #[test]
+    fn tu_parser_rejects_missing_file() {
+        let dir = std::env::temp_dir().join(format!("tu_missing_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let err = format!("{:#}", load_tu_dataset(&dir, "ghost").unwrap_err());
+        assert!(err.contains("opening"), "{err}");
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -1,0 +1,153 @@
+//! Cache-blocked batched dense feature kernel: the comparison baseline
+//! for the SORF map.
+//!
+//! Same math as [`crate::features::CpuFeatureMap`] (bit-for-bit — the
+//! per-output accumulation order over `j` is identical, only the loop
+//! *grouping* changes), but tiled so each `W` row segment is streamed
+//! once per block of input rows instead of once per row:
+//!
+//! ```text
+//!   for row block (R rows)           R·d·m madds total, but each
+//!     for column tile (C outputs)    W tile (d × C floats) is read
+//!       out tile = bias tile         once per R rows, and the out
+//!       for j in 0..d:               tile (R × C) stays in L1/L2
+//!         out[r, tile] += x[r,j] · W[j, tile]
+//! ```
+//!
+//! Per-graphlet cost is still `O(d·m)` — that is the point: the
+//! `fastrf_scaling` bench races this best-effort dense kernel against
+//! [`super::SorfMap`]'s `O(p log p)` blocks.
+
+use crate::features::{RfParams, Variant};
+
+/// Rows per tile: how many input rows reuse one streamed `W` tile.
+const ROW_BLOCK: usize = 8;
+/// Output columns per tile: `ROW_BLOCK · COL_BLOCK` accumulators stay
+/// resident while a `d × COL_BLOCK` slab of `W` streams through.
+const COL_BLOCK: usize = 256;
+
+/// `out[r, c] = bias[c] + Σ_j x[r, j] · w[j, c]`, tiled. `w` is
+/// row-major `d × m`; `x` row-major `batch × d`; zero inputs are
+/// skipped (adjacency rows are sparse 0/1, same fast path as the
+/// unblocked map).
+pub fn affine_blocked(
+    x: &[f32],
+    batch: usize,
+    d: usize,
+    m: usize,
+    w: &[f32],
+    bias: &[f32],
+    out: &mut [f32],
+) {
+    assert_eq!(x.len(), batch * d);
+    assert_eq!(w.len(), d * m);
+    assert_eq!(bias.len(), m);
+    assert_eq!(out.len(), batch * m);
+    for r0 in (0..batch).step_by(ROW_BLOCK) {
+        let r1 = (r0 + ROW_BLOCK).min(batch);
+        for c0 in (0..m).step_by(COL_BLOCK) {
+            let c1 = (c0 + COL_BLOCK).min(m);
+            for r in r0..r1 {
+                out[r * m + c0..r * m + c1].copy_from_slice(&bias[c0..c1]);
+            }
+            for j in 0..d {
+                let wrow = &w[j * m + c0..j * m + c1];
+                for r in r0..r1 {
+                    let xj = x[r * d + j];
+                    if xj == 0.0 {
+                        continue;
+                    }
+                    let or = &mut out[r * m + c0..r * m + c1];
+                    for (o, &wv) in or.iter_mut().zip(wrow) {
+                        *o += xj * wv;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Blocked drop-in for [`crate::features::CpuFeatureMap`]: identical
+/// parameters and phi formulas, tiled projection. Outputs are
+/// bit-for-bit equal to the unblocked map (pinned by the test below),
+/// so this is purely a memory-locality baseline.
+#[derive(Clone, Debug)]
+pub struct DenseMap {
+    pub params: RfParams,
+}
+
+impl DenseMap {
+    pub fn new(params: RfParams) -> Self {
+        DenseMap { params }
+    }
+
+    /// Map a row-major batch `x` of shape (batch, d) into `out` of
+    /// shape (batch, m).
+    pub fn map_batch(&self, x: &[f32], batch: usize, out: &mut [f32]) {
+        let p = &self.params;
+        assert_eq!(x.len(), batch * p.d);
+        assert_eq!(out.len(), batch * p.m);
+        match p.variant {
+            Variant::Gauss | Variant::GaussEig => {
+                let scale = (2.0 / p.m as f32).sqrt();
+                affine_blocked(x, batch, p.d, p.m, &p.mats[0], &p.biases[0], out);
+                for o in out.iter_mut() {
+                    *o = scale * o.cos();
+                }
+            }
+            Variant::Opu => {
+                let scale = 1.0 / (p.m as f32).sqrt();
+                let mut im = vec![0.0f32; batch * p.m];
+                affine_blocked(x, batch, p.d, p.m, &p.mats[0], &p.biases[0], out);
+                affine_blocked(x, batch, p.d, p.m, &p.mats[1], &p.biases[1], &mut im);
+                for (o, &iv) in out.iter_mut().zip(&im) {
+                    *o = scale * (*o * *o + iv * iv);
+                }
+            }
+            Variant::Match => panic!("phi_match is not a dense feature map"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::features::CpuFeatureMap;
+    use crate::util::check;
+
+    /// Tiling must not move a bit: the per-output accumulation order
+    /// over j is unchanged, so blocked and unblocked maps agree
+    /// exactly, across sizes that exercise partial tiles.
+    #[test]
+    fn blocked_map_bit_for_bit_matches_unblocked() {
+        check::check("dense-blocked", 0xDB, 20, |rng| {
+            let d = 1 + rng.usize(40);
+            let m = 1 + rng.usize(600);
+            let batch = 1 + rng.usize(20);
+            for variant in [Variant::Gauss, Variant::Opu] {
+                let params = RfParams::generate(variant, d, m, 0.7, rng);
+                let mut x = vec![0.0f32; batch * d];
+                for v in x.iter_mut() {
+                    // Mix of zeros (sparse fast path) and dense values.
+                    *v = if rng.bool(0.4) { rng.f32() * 2.0 - 1.0 } else { 0.0 };
+                }
+                let mut blocked = vec![0.0f32; batch * m];
+                DenseMap::new(params.clone()).map_batch(&x, batch, &mut blocked);
+                let mut reference = vec![0.0f32; batch * m];
+                CpuFeatureMap::new(params).map_batch(&x, batch, &mut reference);
+                assert_eq!(blocked, reference, "variant {variant:?} d={d} m={m} batch={batch}");
+            }
+        });
+    }
+
+    #[test]
+    fn affine_blocked_tiny_hand_case() {
+        // batch=1, d=2, m=3: out = b + x0·w[0,:] + x1·w[1,:].
+        let x = [2.0f32, -1.0];
+        let w = [1.0f32, 2.0, 3.0, 10.0, 20.0, 30.0];
+        let bias = [0.5f32, 0.5, 0.5];
+        let mut out = [0.0f32; 3];
+        affine_blocked(&x, 1, 2, 3, &w, &bias, &mut out);
+        assert_eq!(out, [2.0 * 1.0 - 10.0 + 0.5, 2.0 * 2.0 - 20.0 + 0.5, 2.0 * 3.0 - 30.0 + 0.5]);
+    }
+}

@@ -1,0 +1,147 @@
+//! In-place fast Walsh–Hadamard transform (FWHT) on power-of-two
+//! lengths.
+//!
+//! The transform computes `H_p x` for the **unnormalized** Hadamard
+//! matrix `H_p` (entries ±1, `H_p H_pᵀ = p·I`) in `O(p log p)`
+//! butterflies instead of the naive `O(p²)` multiply. Normalization is
+//! the caller's job: [`super::SorfMap`] folds the `p^{-3/2}` factor of
+//! its three normalized Hadamard applications into one final scale.
+//!
+//! Butterfly order note: each stage combines pairs `(a, b) -> (a+b,
+//! a-b)` at stride `h`, doubling `h` per stage. On integer-valued
+//! inputs every intermediate is exact in f32 (sums of ≤ p inputs of
+//! magnitude ≤ 2²³⁻ˡᵒᵍᵖ), so the result is bit-for-bit equal to the
+//! naive sign-sum — the property the correctness test pins.
+
+/// Apply the unnormalized Walsh–Hadamard transform to `data` in place.
+///
+/// # Panics
+/// Panics if `data.len()` is not a power of two (zero included): the
+/// butterfly network is only defined on 2ᵏ points. [`super::SorfMap`]
+/// zero-pads inputs to the next power of two before calling this.
+pub fn fwht_inplace(data: &mut [f32]) {
+    let n = data.len();
+    assert!(n.is_power_of_two(), "FWHT length {n} is not a power of two");
+    let mut h = 1;
+    while h < n {
+        let mut i = 0;
+        while i < n {
+            for j in i..i + h {
+                let a = data[j];
+                let b = data[j + h];
+                data[j] = a + b;
+                data[j + h] = a - b;
+            }
+            i += h * 2;
+        }
+        h *= 2;
+    }
+}
+
+/// Naive `O(p²)` Hadamard multiply: `out[i] = Σ_j (-1)^{popcount(i&j)}
+/// x[j]`. The reference implementation the FWHT is tested against; also
+/// used by the parameter-matrix expansion test in [`super::sorf`].
+pub fn naive_hadamard(x: &[f32]) -> Vec<f32> {
+    let n = x.len();
+    assert!(n.is_power_of_two(), "Hadamard length {n} is not a power of two");
+    (0..n)
+        .map(|i| {
+            let mut acc = 0.0f32;
+            for (j, &v) in x.iter().enumerate() {
+                if (i & j).count_ones() % 2 == 0 {
+                    acc += v;
+                } else {
+                    acc -= v;
+                }
+            }
+            acc
+        })
+        .collect()
+}
+
+/// Smallest power of two ≥ `n` (and ≥ 1). The SORF padding rule.
+pub fn next_pow2(n: usize) -> usize {
+    n.max(1).next_power_of_two()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check;
+    use crate::util::Rng;
+
+    #[test]
+    fn fwht_matches_naive_bit_for_bit_on_integer_inputs() {
+        // Integer-valued inputs keep every intermediate sum exact in
+        // f32, so the butterfly network and the naive sign-sum must
+        // agree to the last bit — not just within a tolerance.
+        check::check("fwht-exact", 0xF1, 40, |rng| {
+            let p = 1usize << rng.usize(9); // 1..=256
+            let mut x = vec![0.0f32; p];
+            for v in x.iter_mut() {
+                *v = rng.usize(17) as f32 - 8.0;
+            }
+            let want = naive_hadamard(&x);
+            let mut got = x.clone();
+            fwht_inplace(&mut got);
+            assert_eq!(got, want, "p={p}");
+        });
+    }
+
+    #[test]
+    fn fwht_close_on_gaussian_inputs() {
+        check::check("fwht-gauss", 0xF2, 20, |rng| {
+            let p = 1usize << (1 + rng.usize(7));
+            let mut x = vec![0.0f32; p];
+            rng.fill_gaussian(&mut x, 1.0);
+            let want = naive_hadamard(&x);
+            let mut got = x.clone();
+            fwht_inplace(&mut got);
+            check::assert_allclose(&got, &want, 1e-4, 1e-4);
+        });
+    }
+
+    #[test]
+    fn fwht_is_self_inverse_up_to_p() {
+        // H² = p·I for the unnormalized transform.
+        let mut rng = Rng::new(3);
+        let p = 64;
+        let mut x = vec![0.0f32; p];
+        rng.fill_gaussian(&mut x, 1.0);
+        let orig = x.clone();
+        fwht_inplace(&mut x);
+        fwht_inplace(&mut x);
+        let scaled: Vec<f32> = orig.iter().map(|&v| v * p as f32).collect();
+        check::assert_allclose(&x, &scaled, 1e-3, 1e-4);
+    }
+
+    #[test]
+    fn fwht_length_one_is_identity() {
+        let mut x = [3.5f32];
+        fwht_inplace(&mut x);
+        assert_eq!(x, [3.5]);
+    }
+
+    #[test]
+    #[should_panic(expected = "power of two")]
+    fn fwht_rejects_non_pow2() {
+        fwht_inplace(&mut [0.0; 3]);
+    }
+
+    #[test]
+    #[should_panic(expected = "power of two")]
+    fn fwht_rejects_empty() {
+        fwht_inplace(&mut []);
+    }
+
+    #[test]
+    fn next_pow2_padding_rule() {
+        assert_eq!(next_pow2(0), 1);
+        assert_eq!(next_pow2(1), 1);
+        assert_eq!(next_pow2(2), 2);
+        assert_eq!(next_pow2(9), 16);
+        assert_eq!(next_pow2(25), 32);
+        assert_eq!(next_pow2(32), 32);
+        assert_eq!(next_pow2(36), 64);
+    }
+}

@@ -1,0 +1,66 @@
+//! Structured random features: SORF/Fastfood-style `HD` products
+//! computed with an in-place fast Walsh–Hadamard transform.
+//!
+//! The paper's argument is that *dense* random features are the
+//! bottleneck — `O(m·d)` per graphlet — and that the OPU replaces them
+//! with a constant-time physical transform. The software analogue of
+//! that speedup is a **structured** transform: replace the dense
+//! Gaussian matrix `W` with a product of Rademacher diagonals `Dᵢ` and
+//! Hadamard transforms `H`, each block computed in `O(p log p)` by the
+//! FWHT (Kriege et al.'s survey of explicit feature maps; Choromanski's
+//! "Taming graph kernels with random features"):
+//!
+//! ```text
+//!        x ∈ ℝᵈ ── zero-pad ──► x̂ ∈ ℝᵖ,  p = 2^⌈log₂ d⌉
+//!
+//!   block b = 0 .. ⌈m/p⌉-1   (independent diagonal draws per block)
+//!   ┌─────────────────────────────────────────────────────────┐
+//!   │  x̂ ──► D₃ᵇ ──► H ──► D₂ᵇ ──► H ──► D₁ᵇ ──► H ──► ·α     │──► z_b ∈ ℝᵖ
+//!   └─────────────────────────────────────────────────────────┘
+//!        z = concat(z_0, z_1, …)[..m]        (last block truncated)
+//!
+//!   phi_Gs  :  √(2/m) · cos(z + b)            α = 1/(σ·p)
+//!   phi_OPU :  m^{-1/2}·((z_re+b_re)² + (z_im+b_im)²)   α = 1/p
+//! ```
+//!
+//! Each `H` above is the *unnormalized* FWHT; the three `p^{-1/2}`
+//! normalizations plus the `√p` row-norm calibration (SORF rows are
+//! exactly orthogonal with norm `√p` — tested) fold into the single
+//! scale `α`. With `α = 1/(σ·p)` the effective projection entries have
+//! variance `1/σ²`, matching the dense `RfParams` draw, so `cpu-sorf`
+//! approximates the same kernels as the dense `cpu` engine — in
+//! `O(p log p)` per block instead of `O(d·m)` total.
+//!
+//! Module map:
+//! - [`fwht`] — the in-place butterfly transform + naive reference;
+//! - [`sorf`] — [`SorfParams`] (seeded Rademacher draws) and
+//!   [`SorfMap`] (the batched feature map, a drop-in for
+//!   [`crate::features::CpuFeatureMap`]);
+//! - [`dense`] — [`DenseMap`], the cache-blocked `O(d·m)` baseline the
+//!   `fastrf_scaling` bench races against.
+//!
+//! Engine wiring: `--engine cpu-sorf`
+//! ([`crate::coordinator::EngineMode::CpuSorf`]) runs this map on every
+//! feature shard of the streaming pipeline; embeddings are
+//! deterministic per seed and bitwise identical across shard/worker
+//! counts, exactly like the dense engines (same accumulation dataflow,
+//! different projection). The serve cache fingerprint includes the
+//! engine mode, so `cpu` and `cpu-sorf` rows never mix.
+
+pub mod dense;
+pub mod fwht;
+pub mod sorf;
+
+pub use dense::{affine_blocked, DenseMap};
+pub use fwht::{fwht_inplace, naive_hadamard, next_pow2};
+pub use sorf::{SorfMap, SorfParams, SORF_ROUNDS};
+
+// The sharded pipeline moves SorfMap clones across threads; fail the
+// build (not the run) if that ever stops being possible — same pin as
+// features::CpuFeatureMap.
+const _: () = {
+    const fn assert_shardable<T: Clone + Send + Sync>() {}
+    assert_shardable::<SorfMap>();
+    assert_shardable::<SorfParams>();
+    assert_shardable::<DenseMap>();
+};

@@ -1,0 +1,411 @@
+//! Structured Orthogonal Random Features: the `HD` product map.
+//!
+//! Replaces the dense random matrix `W` of [`crate::features::RfParams`]
+//! with a product of Hadamard transforms and Rademacher diagonals,
+//! computed by the in-place FWHT in `O(p log p)` per block instead of
+//! `O(d·m)` — see [`super`] (the module docs) for the dataflow diagram
+//! and the scaling derivation.
+//!
+//! Parameter draws share the project's [`Rng`] seeding discipline: a
+//! [`SorfParams`] is a pure function of `(variant, d, m, sigma, rng
+//! state)`, so `cpu-sorf` embeddings are deterministic per seed exactly
+//! like the dense engines' (pinned by tests below and by the sharded
+//! pipeline's bitwise tests running under `cpu-sorf`).
+
+use crate::features::Variant;
+use crate::util::Rng;
+
+use super::fwht::{fwht_inplace, next_pow2};
+
+/// Number of (diagonal, Hadamard) rounds per block. Three is the
+/// standard SORF depth: enough mixing that the rows behave like
+/// Gaussian directions (Yu et al. 2016), still `O(p log p)`.
+pub const SORF_ROUNDS: usize = 3;
+
+/// The random parameters of a structured feature map: Rademacher sign
+/// diagonals per block plus the same bias draws as the dense map.
+///
+/// `m > p` is handled by `⌈m/p⌉` *independent* stacked blocks (fresh
+/// diagonals per block); the last block is truncated to reach exactly
+/// `m` features.
+#[derive(Clone, Debug)]
+pub struct SorfParams {
+    pub variant: Variant,
+    /// Input dimension (pre-padding).
+    pub d: usize,
+    /// Number of output features.
+    pub m: usize,
+    /// FWHT length: the next power of two ≥ d.
+    pub padded: usize,
+    /// Independent `HD` blocks stacked to cover m outputs.
+    pub blocks: usize,
+    /// One sign stack per projection — gauss/gauss-eig: `[signs]`;
+    /// opu: `[signs_re, signs_im]`. Each stack stores ±1.0 entries,
+    /// flat-indexed as `(block * SORF_ROUNDS + round) * padded + i`.
+    pub signs: Vec<Vec<f32>>,
+    /// gauss / gauss-eig: phase offsets `b` (m). opu: `br, bi` (m each).
+    pub biases: Vec<Vec<f32>>,
+    /// Gaussian kernel bandwidth (gauss variants only; opu is
+    /// unit-variance like the dense transmission matrix).
+    pub sigma: f32,
+}
+
+impl SorfParams {
+    /// Draw structured parameters. Mirrors
+    /// [`crate::features::RfParams::generate`]: same variants, same rng
+    /// discipline (signs first, then biases), different — structured —
+    /// projection family.
+    pub fn generate(variant: Variant, d: usize, m: usize, sigma: f32, rng: &mut Rng) -> Self {
+        let padded = next_pow2(d);
+        let blocks = m.div_ceil(padded).max(1);
+        let stacks = match variant {
+            Variant::Opu => 2,
+            Variant::Gauss | Variant::GaussEig => 1,
+            Variant::Match => 0,
+        };
+        let mut signs = Vec::with_capacity(stacks);
+        for _ in 0..stacks {
+            let mut s = vec![0.0f32; blocks * SORF_ROUNDS * padded];
+            for v in s.iter_mut() {
+                *v = if rng.bool(0.5) { 1.0 } else { -1.0 };
+            }
+            signs.push(s);
+        }
+        let biases = match variant {
+            Variant::Opu => {
+                let mut br = vec![0.0f32; m];
+                let mut bi = vec![0.0f32; m];
+                rng.fill_gaussian(&mut br, 1.0);
+                rng.fill_gaussian(&mut bi, 1.0);
+                vec![br, bi]
+            }
+            Variant::Gauss | Variant::GaussEig => {
+                let mut b = vec![0.0f32; m];
+                rng.fill_uniform(&mut b, 0.0, 2.0 * std::f32::consts::PI);
+                vec![b]
+            }
+            Variant::Match => Vec::new(),
+        };
+        SorfParams { variant, d, m, padded, blocks, signs, biases, sigma }
+    }
+}
+
+/// One `HD` block applied to one input row: zero-pad `xr` into `buf`
+/// (length `pad`), then run `SORF_ROUNDS` (sign diagonal, unnormalized
+/// FWHT) rounds in place. Normalization is deferred to the caller's
+/// single output scale.
+fn project_block(xr: &[f32], signs: &[f32], block: usize, pad: usize, buf: &mut [f32]) {
+    buf[..xr.len()].copy_from_slice(xr);
+    buf[xr.len()..].fill(0.0);
+    for round in 0..SORF_ROUNDS {
+        let base = (block * SORF_ROUNDS + round) * pad;
+        let s = &signs[base..base + pad];
+        for (v, &sg) in buf.iter_mut().zip(s) {
+            *v *= sg;
+        }
+        fwht_inplace(buf);
+    }
+}
+
+/// Structured drop-in for [`crate::features::CpuFeatureMap`]: same
+/// `map_batch` contract (row-major `(batch, d)` in, `(batch, m)` out),
+/// same phi formulas, `O(p log p)` projection per block instead of
+/// `O(d·m)` total.
+///
+/// `Clone + Send + Sync` by construction (plain owned buffers), so the
+/// sharded coordinator can hand one clone to every feature shard —
+/// pinned by the compile-time assertion in [`super`].
+#[derive(Clone, Debug)]
+pub struct SorfMap {
+    pub params: SorfParams,
+}
+
+impl SorfMap {
+    pub fn new(params: SorfParams) -> Self {
+        SorfMap { params }
+    }
+
+    /// Map a row-major batch `x` of shape (batch, d) into `out` of
+    /// shape (batch, m).
+    pub fn map_batch(&self, x: &[f32], batch: usize, out: &mut [f32]) {
+        let p = &self.params;
+        assert_eq!(x.len(), batch * p.d);
+        assert_eq!(out.len(), batch * p.m);
+        let pad = p.padded;
+        let mut buf = vec![0.0f32; pad];
+        match p.variant {
+            Variant::Gauss | Variant::GaussEig => {
+                let scale = (2.0 / p.m as f32).sqrt();
+                // Three normalized Hadamards contribute p^{-3/2}; the
+                // √p row-norm calibration and the 1/σ bandwidth fold in
+                // to a single 1/(σ·p) — see the module docs.
+                let inv_sp = 1.0 / (p.sigma * pad as f32);
+                let signs = &p.signs[0];
+                let b = &p.biases[0];
+                // Block-major loop order: one block's sign diagonals
+                // stay hot across the whole batch.
+                for block in 0..p.blocks {
+                    let lo = block * pad;
+                    let hi = ((block + 1) * pad).min(p.m);
+                    for r in 0..batch {
+                        let xr = &x[r * p.d..(r + 1) * p.d];
+                        project_block(xr, signs, block, pad, &mut buf);
+                        let or = &mut out[r * p.m + lo..r * p.m + hi];
+                        for ((o, &z), &bj) in or.iter_mut().zip(buf.iter()).zip(&b[lo..hi]) {
+                            *o = scale * (z * inv_sp + bj).cos();
+                        }
+                    }
+                }
+            }
+            Variant::Opu => {
+                let scale = 1.0 / (p.m as f32).sqrt();
+                // Unit-variance calibration (σ = 1): 1/p per stack.
+                let inv_p = 1.0 / pad as f32;
+                let (sr, si) = (&p.signs[0], &p.signs[1]);
+                let (br, bi) = (&p.biases[0], &p.biases[1]);
+                let mut ibuf = vec![0.0f32; pad];
+                for block in 0..p.blocks {
+                    let lo = block * pad;
+                    let hi = ((block + 1) * pad).min(p.m);
+                    for r in 0..batch {
+                        let xr = &x[r * p.d..(r + 1) * p.d];
+                        project_block(xr, sr, block, pad, &mut buf);
+                        project_block(xr, si, block, pad, &mut ibuf);
+                        let or = &mut out[r * p.m + lo..r * p.m + hi];
+                        let it = or
+                            .iter_mut()
+                            .zip(buf.iter())
+                            .zip(ibuf.iter())
+                            .zip(&br[lo..hi])
+                            .zip(&bi[lo..hi]);
+                        for ((((o, &zr), &zi), &brj), &bij) in it {
+                            let re = zr * inv_p + brj;
+                            let im = zi * inv_p + bij;
+                            *o = scale * (re * re + im * im);
+                        }
+                    }
+                }
+            }
+            Variant::Match => panic!("phi_match is not a dense feature map"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::fwht::naive_hadamard;
+    use super::*;
+    use crate::util::check;
+
+    /// The O(p²) reference: the same block projection with each FWHT
+    /// replaced by the naive Hadamard multiply.
+    fn naive_block_project(xr: &[f32], signs: &[f32], block: usize, pad: usize) -> Vec<f32> {
+        let mut buf = vec![0.0f32; pad];
+        buf[..xr.len()].copy_from_slice(xr);
+        for round in 0..SORF_ROUNDS {
+            let base = (block * SORF_ROUNDS + round) * pad;
+            for (v, &sg) in buf.iter_mut().zip(&signs[base..base + pad]) {
+                *v *= sg;
+            }
+            buf = naive_hadamard(&buf);
+        }
+        buf
+    }
+
+    /// On integer-valued inputs the FWHT and the naive Hadamard agree
+    /// bit-for-bit (every intermediate is exact in f32), and the phi
+    /// formulas are evaluated identically — so the whole map must match
+    /// the naive expansion exactly, for both variants.
+    #[test]
+    fn sorf_map_matches_naive_expansion_bit_for_bit() {
+        check::check("sorf-naive", 0x5F, 15, |rng| {
+            let d = 1 + rng.usize(20);
+            let m = 1 + rng.usize(50);
+            let batch = 1 + rng.usize(4);
+            let sigma = 0.5f32;
+            for variant in [Variant::Gauss, Variant::Opu] {
+                let params = SorfParams::generate(variant, d, m, sigma, rng);
+                let pad = params.padded;
+                let mut x = vec![0.0f32; batch * d];
+                for v in x.iter_mut() {
+                    *v = rng.usize(9) as f32 - 4.0;
+                }
+                let mut out = vec![0.0f32; batch * m];
+                SorfMap::new(params.clone()).map_batch(&x, batch, &mut out);
+
+                let mut want = vec![0.0f32; batch * m];
+                for r in 0..batch {
+                    let xr = &x[r * d..(r + 1) * d];
+                    for block in 0..params.blocks {
+                        let lo = block * pad;
+                        let hi = ((block + 1) * pad).min(m);
+                        match variant {
+                            Variant::Gauss => {
+                                let z = naive_block_project(xr, &params.signs[0], block, pad);
+                                let scale = (2.0 / m as f32).sqrt();
+                                let inv_sp = 1.0 / (sigma * pad as f32);
+                                for j in lo..hi {
+                                    want[r * m + j] = scale
+                                        * (z[j - lo] * inv_sp + params.biases[0][j]).cos();
+                                }
+                            }
+                            Variant::Opu => {
+                                let zr = naive_block_project(xr, &params.signs[0], block, pad);
+                                let zi = naive_block_project(xr, &params.signs[1], block, pad);
+                                let scale = 1.0 / (m as f32).sqrt();
+                                let inv_p = 1.0 / pad as f32;
+                                for j in lo..hi {
+                                    let re = zr[j - lo] * inv_p + params.biases[0][j];
+                                    let im = zi[j - lo] * inv_p + params.biases[1][j];
+                                    want[r * m + j] = scale * (re * re + im * im);
+                                }
+                            }
+                            _ => unreachable!(),
+                        }
+                    }
+                }
+                assert_eq!(out, want, "variant {variant:?} d={d} m={m}");
+            }
+        });
+    }
+
+    /// The unnormalized `H D₁ H D₂ H D₃` stack is exactly orthogonal:
+    /// its row Gram matrix is `p³·I`, bit-exact (all-integer
+    /// arithmetic). This is the structural property that makes SORF
+    /// rows behave like calibrated Gaussian directions.
+    #[test]
+    fn sorf_block_is_exactly_orthogonal() {
+        let mut rng = Rng::new(11);
+        let pad = 8usize;
+        let params = SorfParams::generate(Variant::Gauss, pad, pad, 1.0, &mut rng);
+        assert_eq!(params.padded, pad);
+        // Column k of the block matrix = block applied to basis vector k.
+        let mut cols = vec![vec![0.0f32; pad]; pad];
+        let mut buf = vec![0.0f32; pad];
+        for (k, col) in cols.iter_mut().enumerate() {
+            let mut e = vec![0.0f32; pad];
+            e[k] = 1.0;
+            project_block(&e, &params.signs[0], 0, pad, &mut buf);
+            col.copy_from_slice(&buf);
+        }
+        for i in 0..pad {
+            for j in 0..pad {
+                let g: f64 = (0..pad)
+                    .map(|k| cols[k][i] as f64 * cols[k][j] as f64)
+                    .sum();
+                let want = if i == j { (pad as f64).powi(3) } else { 0.0 };
+                assert_eq!(g, want, "row Gram ({i},{j})");
+            }
+        }
+    }
+
+    /// Deterministic per seed, and different seeds give different maps.
+    #[test]
+    fn sorf_deterministic_per_seed() {
+        let draw = |seed: u64| {
+            let mut rng = Rng::new(seed);
+            SorfParams::generate(Variant::Opu, 9, 40, 1.0, &mut rng)
+        };
+        let (a, b, c) = (draw(7), draw(7), draw(8));
+        assert_eq!(a.signs, b.signs);
+        assert_eq!(a.biases, b.biases);
+        assert_ne!(a.signs, c.signs, "different seeds must differ");
+        let mut x = vec![0.0f32; 3 * 9];
+        let mut rng = Rng::new(1);
+        rng.fill_gaussian(&mut x, 1.0);
+        let (mut ya, mut yb) = (vec![0.0f32; 3 * 40], vec![0.0f32; 3 * 40]);
+        SorfMap::new(a).map_batch(&x, 3, &mut ya);
+        SorfMap::new(b).map_batch(&x, 3, &mut yb);
+        assert_eq!(ya, yb);
+    }
+
+    /// Clones are interchangeable (the sharded pipeline's contract).
+    #[test]
+    fn sorf_map_clones_compute_identical_features() {
+        let mut rng = Rng::new(12);
+        let params = SorfParams::generate(Variant::Opu, 9, 32, 1.0, &mut rng);
+        let map = SorfMap::new(params);
+        let clone = map.clone();
+        let mut x = vec![0.0f32; 4 * 9];
+        for v in x.iter_mut() {
+            *v = rng.bool(0.4) as u8 as f32;
+        }
+        let mut a = vec![0.0f32; 4 * 32];
+        let mut b = vec![0.0f32; 4 * 32];
+        map.map_batch(&x, 4, &mut a);
+        clone.map_batch(&x, 4, &mut b);
+        assert_eq!(a, b);
+    }
+
+    /// Padding and stacking arithmetic: d pads to the next power of
+    /// two, m is covered by ⌈m/p⌉ blocks, outputs stay finite.
+    #[test]
+    fn sorf_padding_and_stacking_dims() {
+        let mut rng = Rng::new(5);
+        let params = SorfParams::generate(Variant::Gauss, 9, 20, 0.5, &mut rng);
+        assert_eq!(params.padded, 16);
+        assert_eq!(params.blocks, 2);
+        assert_eq!(params.signs[0].len(), 2 * SORF_ROUNDS * 16);
+        assert_eq!(params.biases[0].len(), 20);
+        let big = SorfParams::generate(Variant::Opu, 25, 2048, 1.0, &mut rng);
+        assert_eq!(big.padded, 32);
+        assert_eq!(big.blocks, 64);
+        let mut x = vec![0.0f32; 2 * 9];
+        rng.fill_gaussian(&mut x, 1.0);
+        let mut out = vec![0.0f32; 2 * 20];
+        SorfMap::new(params).map_batch(&x, 2, &mut out);
+        assert!(out.iter().all(|v| v.is_finite()));
+    }
+
+    /// phi_Gs via SORF approximates the Gaussian kernel, like the dense
+    /// map's `gauss_kernel_approximation` test: phi(x)·phi(y) ≈
+    /// exp(-||x-y||²/(2σ²)). m is large enough that the tolerance is
+    /// many standard deviations wide.
+    #[test]
+    fn sorf_gauss_kernel_approximation() {
+        let mut rng = Rng::new(5);
+        let (d, m, sigma) = (20usize, 16_384usize, 1.5f32);
+        let params = SorfParams::generate(Variant::Gauss, d, m, sigma, &mut rng);
+        let mut xy = vec![0.0f32; 2 * d];
+        rng.fill_gaussian(&mut xy, 0.4);
+        let mut out = vec![0.0f32; 2 * m];
+        SorfMap::new(params).map_batch(&xy, 2, &mut out);
+        let dot: f64 = (0..m).map(|i| out[i] as f64 * out[m + i] as f64).sum();
+        let dist2: f64 = (0..d)
+            .map(|j| ((xy[j] - xy[d + j]) as f64).powi(2))
+            .sum();
+        let exact = (-dist2 / (2.0 * sigma as f64 * sigma as f64)).exp();
+        assert!((dot - exact).abs() < 0.06, "{dot} vs {exact}");
+    }
+
+    /// phi_OPU via SORF follows the same kernel law as the dense map's
+    /// `opu_kernel_closed_form` test (generous tolerance: SORF fourth
+    /// moments deviate from Gaussian by O(1/p)).
+    #[test]
+    fn sorf_opu_kernel_close_to_closed_form() {
+        let mut rng = Rng::new(99);
+        let (d, m) = (20usize, 32_768usize);
+        let mut params = SorfParams::generate(Variant::Opu, d, m, 1.0, &mut rng);
+        params.biases[0].fill(0.0);
+        params.biases[1].fill(0.0);
+        let mut xy = vec![0.0f32; 2 * d];
+        rng.fill_gaussian(&mut xy, 0.8);
+        let (x, y) = xy.split_at(d);
+        let nx2: f64 = x.iter().map(|&v| (v * v) as f64).sum();
+        let ny2: f64 = y.iter().map(|&v| (v * v) as f64).sum();
+        let ip: f64 = x.iter().zip(y).map(|(&a, &b)| (a * b) as f64).sum();
+        let mut out = vec![0.0f32; 2 * m];
+        SorfMap::new(params).map_batch(&xy, 2, &mut out);
+        let dot: f64 = (0..m).map(|i| out[i] as f64 * out[m + i] as f64).sum();
+        let exact = 4.0 * (nx2 * ny2 + ip * ip);
+        assert!((dot - exact).abs() / exact < 0.15, "{dot} vs {exact}");
+    }
+
+    #[test]
+    #[should_panic(expected = "phi_match")]
+    fn sorf_match_variant_panics_like_dense() {
+        let mut rng = Rng::new(1);
+        let params = SorfParams::generate(Variant::Match, 4, 4, 1.0, &mut rng);
+        SorfMap::new(params).map_batch(&[0.0; 4], 1, &mut [0.0; 4]);
+    }
+}

@@ -33,16 +33,27 @@
 //! clients together, and fronts it all with a content-addressed
 //! embedding cache.
 //!
+//! Three CPU feature engines back the shards when PJRT is unavailable
+//! (and serve as baselines when it is): the dense maps in [`features`]
+//! (`--engine cpu` / `cpu-inline`) and the **structured** SORF map in
+//! [`fastrf`] (`--engine cpu-sorf`), which replaces the dense `O(d·m)`
+//! projection with `HD`-product blocks computed by an in-place fast
+//! Walsh–Hadamard transform in `O(p log p)` — the software analogue of
+//! the paper's constant-time optical transform. See [`fastrf`] for the
+//! dataflow diagram and calibration.
+//!
 //! Quick tour: generate a dataset ([`gen`]), sample graphlets
-//! ([`sample`]), embed them with a feature map ([`features`] on CPU or
-//! [`runtime`] + [`coordinator`] for the batched, sharded PJRT
-//! pipeline), train the linear tail ([`classify`]), reproduce a paper
-//! figure ([`experiments`]), or run the embedding service ([`serve`]).
+//! ([`sample`]), embed them with a feature map ([`features`] on CPU,
+//! [`fastrf`] for structured features, or [`runtime`] +
+//! [`coordinator`] for the batched, sharded PJRT pipeline), train the
+//! linear tail ([`classify`]), reproduce a paper figure
+//! ([`experiments`]), or run the embedding service ([`serve`]).
 
 pub mod classify;
 pub mod coordinator;
 pub mod data;
 pub mod experiments;
+pub mod fastrf;
 pub mod features;
 pub mod gen;
 pub mod gnn;

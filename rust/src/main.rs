@@ -16,9 +16,11 @@
 //! graphlet-rf serve-bench --addr A      loopback load generator (p50/p99)
 //! ```
 //!
-//! Common flags: `--seed N`, `--engine pjrt|cpu|cpu-inline`,
+//! Common flags: `--seed N`, `--engine pjrt|cpu|cpu-inline|cpu-sorf`,
 //! `--shards N`, `--workers N`, `--artifacts DIR`, `--out DIR`,
-//! `--scale quick|full`.
+//! `--scale quick|full`. The `cpu-sorf` engine swaps the dense random
+//! projection for structured SORF features (FWHT `HD` products, see
+//! `graphlet_rf::fastrf`) on every feature shard.
 //!
 //! Serve path (one warm pipeline + cache behind a TCP line-JSON
 //! protocol; see `graphlet_rf::serve` for the full diagram):
@@ -56,7 +58,7 @@ fn main() -> Result<()> {
         .unwrap_or_else(artifacts_dir);
     let engine_flag = args.get("engine").map(EngineMode::parse).transpose()?;
     let engine = match engine_flag {
-        Some(EngineMode::Cpu) | Some(EngineMode::CpuInline) => None,
+        Some(EngineMode::Cpu) | Some(EngineMode::CpuInline) | Some(EngineMode::CpuSorf) => None,
         _ => match Engine::new(&dir) {
             Ok(e) => {
                 eprintln!("PJRT engine up: platform={}, artifacts={}", e.platform(), dir.display());
@@ -118,12 +120,20 @@ fn main() -> Result<()> {
 const HELP: &str = "graphlet-rf — Fast Graph Kernel with Optical Random Features
 
 USAGE: graphlet-rf <quickstart|fig1-left|fig1-right|fig2-left|fig2-right|fig3|thm1|gnn|info|serve|serve-bench>
-             [--scale quick|mid|full] [--seed N] [--engine pjrt|cpu|cpu-inline]
+             [--scale quick|mid|full] [--seed N]
+             [--engine pjrt|cpu|cpu-inline|cpu-sorf]
              [--shards N] [--workers N] [--variant opu|gauss|gauss-eig]
              [--artifacts DIR] [--out DIR] [--dataset dd|reddit] [--tu-dir DIR]
 
 --shards N runs N parallel feature-engine shards (jobs round-robin over
 shards); embeddings are bitwise identical for every shard/worker count.
+
+--engine cpu-sorf replaces the dense random projection with structured
+SORF features: HD-product blocks computed by an in-place fast
+Walsh-Hadamard transform in O(p log p) per block instead of O(d*m) —
+the software analogue of the paper's constant-time optical transform.
+Deterministic per seed; a different random-feature family than cpu, so
+embeddings differ numerically but match statistically.
 
 serve       long-running embedding daemon: line-delimited JSON over TCP,
             one persistent pipeline, cross-request batching, embedding

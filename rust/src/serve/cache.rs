@@ -9,12 +9,18 @@
 //! batch in CPU modes would be safe too, but batch selects the PJRT
 //! artifact, so it is included).
 //!
-//! Eviction is FIFO at a fixed capacity: embeddings are all the same
-//! size (m floats), so the cache's memory is `capacity * m * 4` bytes
-//! and insertion order is a reasonable proxy for age under serving
-//! traffic. Hit/miss counters feed the serve `stats` op.
+//! Eviction is LRU at a fixed capacity: embeddings are all the same
+//! size (m floats), so the cache's memory is `capacity * m * 4` bytes,
+//! and under serving traffic with popular repeat graphs recency is a
+//! strictly better eviction signal than insertion order (a hot row
+//! inserted early must not be evicted before a cold row inserted
+//! late). Every hit bumps the row's recency; eviction removes the
+//! least-recently-*used* row. Implemented as a monotonic-stamp index
+//! (`BTreeMap<stamp, key>`, O(log n) per touch) — no unsafe, no
+//! hand-rolled linked list. Hit/miss counters feed the serve `stats`
+//! op.
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::{BTreeMap, HashMap};
 use std::sync::Mutex;
 
 use crate::coordinator::GsaConfig;
@@ -36,14 +42,37 @@ pub struct CacheStats {
     pub capacity: usize,
 }
 
+/// A cached row plus its recency stamp (the key into `order`).
+struct Entry {
+    row: Vec<f32>,
+    stamp: u64,
+}
+
 struct CacheInner {
-    map: HashMap<CacheKey, Vec<f32>>,
-    order: VecDeque<CacheKey>,
+    map: HashMap<CacheKey, Entry>,
+    /// Recency index: stamp → key, oldest stamp first. Stamps are drawn
+    /// from a monotonic counter, so the first entry is always the LRU
+    /// victim; a hit moves its key to a fresh stamp in O(log n).
+    order: BTreeMap<u64, CacheKey>,
+    next_stamp: u64,
     hits: u64,
     misses: u64,
 }
 
-/// Thread-safe FIFO-evicting embedding cache.
+impl CacheInner {
+    /// Move `key`'s entry (already in `map`) to the freshest stamp.
+    fn touch(&mut self, key: &CacheKey) {
+        let stamp = self.next_stamp;
+        self.next_stamp += 1;
+        if let Some(e) = self.map.get_mut(key) {
+            self.order.remove(&e.stamp);
+            e.stamp = stamp;
+            self.order.insert(stamp, *key);
+        }
+    }
+}
+
+/// Thread-safe LRU-evicting embedding cache.
 pub struct EmbeddingCache {
     inner: Mutex<CacheInner>,
     capacity: usize,
@@ -56,7 +85,8 @@ impl EmbeddingCache {
         EmbeddingCache {
             inner: Mutex::new(CacheInner {
                 map: HashMap::new(),
-                order: VecDeque::new(),
+                order: BTreeMap::new(),
+                next_stamp: 0,
                 hits: 0,
                 misses: 0,
             }),
@@ -64,12 +94,14 @@ impl EmbeddingCache {
         }
     }
 
-    /// Look up a row, counting the hit or miss.
+    /// Look up a row, counting the hit or miss. A hit bumps the row's
+    /// recency (that is what makes eviction LRU, not FIFO).
     pub fn get(&self, key: &CacheKey) -> Option<Vec<f32>> {
         let mut g = self.inner.lock().expect("cache lock");
-        match g.map.get(key).cloned() {
+        match g.map.get(key).map(|e| e.row.clone()) {
             Some(row) => {
                 g.hits += 1;
+                g.touch(key);
                 Some(row)
             }
             None => {
@@ -79,8 +111,8 @@ impl EmbeddingCache {
         }
     }
 
-    /// Insert a freshly computed row (first write wins; FIFO eviction at
-    /// capacity).
+    /// Insert a freshly computed row (first write wins; LRU eviction at
+    /// capacity — the least-recently-used row is dropped).
     pub fn insert(&self, key: CacheKey, row: Vec<f32>) {
         if self.capacity == 0 {
             return;
@@ -90,15 +122,19 @@ impl EmbeddingCache {
             return;
         }
         while g.map.len() >= self.capacity {
-            match g.order.pop_front() {
-                Some(old) => {
+            // First stamp in the recency index = least recently used.
+            match g.order.first_key_value().map(|(&stamp, &old)| (stamp, old)) {
+                Some((stamp, old)) => {
+                    g.order.remove(&stamp);
                     g.map.remove(&old);
                 }
                 None => break,
             }
         }
-        g.order.push_back(key);
-        g.map.insert(key, row);
+        let stamp = g.next_stamp;
+        g.next_stamp += 1;
+        g.order.insert(stamp, key);
+        g.map.insert(key, Entry { row, stamp });
     }
 
     pub fn stats(&self) -> CacheStats {
@@ -150,15 +186,49 @@ mod tests {
     }
 
     #[test]
-    fn fifo_eviction_at_capacity() {
+    fn lru_eviction_at_capacity() {
         let c = EmbeddingCache::new(2);
         c.insert(key(1), vec![1.0]);
         c.insert(key(2), vec![2.0]);
-        c.insert(key(3), vec![3.0]); // evicts key(1)
+        c.insert(key(3), vec![3.0]); // evicts key(1), the LRU
         assert!(c.get(&key(1)).is_none());
         assert_eq!(c.get(&key(2)), Some(vec![2.0]));
         assert_eq!(c.get(&key(3)), Some(vec![3.0]));
         assert_eq!(c.stats().len, 2);
+    }
+
+    #[test]
+    fn hit_bumps_recency_so_eviction_is_lru_not_fifo() {
+        let c = EmbeddingCache::new(2);
+        c.insert(key(1), vec![1.0]);
+        c.insert(key(2), vec![2.0]);
+        // Touch key(1): under FIFO it would still be evicted first;
+        // under LRU the victim becomes key(2).
+        assert_eq!(c.get(&key(1)), Some(vec![1.0]));
+        c.insert(key(3), vec![3.0]);
+        assert_eq!(c.get(&key(1)), Some(vec![1.0]), "recently used row must survive");
+        assert!(c.get(&key(2)).is_none(), "LRU row must be the victim");
+        assert_eq!(c.get(&key(3)), Some(vec![3.0]));
+        assert_eq!(c.stats().len, 2);
+    }
+
+    #[test]
+    fn eviction_chain_follows_usage_order() {
+        let c = EmbeddingCache::new(3);
+        for n in 1..=3 {
+            c.insert(key(n), vec![n as f32]);
+        }
+        // Usage order now: 2, 3, 1 (oldest → newest after touches).
+        assert!(c.get(&key(2)).is_some());
+        assert!(c.get(&key(3)).is_some());
+        assert!(c.get(&key(1)).is_some());
+        c.insert(key(4), vec![4.0]); // evicts 2
+        assert!(c.get(&key(2)).is_none());
+        c.insert(key(5), vec![5.0]); // evicts 3
+        assert!(c.get(&key(3)).is_none());
+        assert!(c.get(&key(1)).is_some());
+        assert!(c.get(&key(4)).is_some());
+        assert!(c.get(&key(5)).is_some());
     }
 
     #[test]
@@ -197,6 +267,9 @@ mod tests {
             ("sigma", GsaConfig { sigma: 0.7, ..base.clone() }),
             ("seed", GsaConfig { seed: 43, ..base.clone() }),
             ("engine", GsaConfig { engine: EngineMode::CpuInline, ..base.clone() }),
+            // cpu-sorf is a different random-feature family: its rows
+            // must never alias dense rows in the cache.
+            ("engine-sorf", GsaConfig { engine: EngineMode::CpuSorf, ..base.clone() }),
             ("sampler", GsaConfig { sampler: "uniform".into(), ..base.clone() }),
         ] {
             assert_ne!(fp, config_fingerprint(&changed), "{name} must change the fingerprint");

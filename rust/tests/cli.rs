@@ -31,5 +31,44 @@ fn help_prints_usage_to_stdout_and_exits_zero() {
         let stdout = String::from_utf8_lossy(&out.stdout);
         assert!(stdout.contains("USAGE"), "{stdout}");
         assert!(stdout.contains("serve"), "help must mention the serve subcommand: {stdout}");
+        assert!(stdout.contains("cpu-sorf"), "help must list the cpu-sorf engine: {stdout}");
     }
+}
+
+/// `--engine cpu-sorf` runs the full quickstart flow (SBM → sampling →
+/// SORF features → SVM) through the real binary.
+#[test]
+fn quickstart_runs_with_cpu_sorf_engine() {
+    let out = run(&[
+        "quickstart",
+        "--engine",
+        "cpu-sorf",
+        "--per-class",
+        "4",
+        "--k",
+        "3",
+        "--s",
+        "50",
+        "--m",
+        "32",
+        "--batch",
+        "16",
+    ]);
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(out.status.success(), "quickstart --engine cpu-sorf failed:\n{stdout}\n{stderr}");
+    assert!(stdout.contains("CpuSorf"), "run banner must show the engine: {stdout}");
+    assert!(stdout.contains("test accuracy"), "{stdout}");
+}
+
+/// A bogus engine name is a graceful CLI error naming the accepted
+/// engines (cpu-sorf included), not a panic.
+#[test]
+fn unknown_engine_is_graceful_error() {
+    let out = run(&["quickstart", "--engine", "warp-drive"]);
+    assert!(!out.status.success(), "bogus engine must fail");
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("unknown engine"), "{stderr}");
+    assert!(stderr.contains("cpu-sorf"), "error must list cpu-sorf: {stderr}");
+    assert!(!stderr.contains("panicked"), "must be an error, not a panic: {stderr}");
 }

@@ -33,7 +33,10 @@ fn test_gsa() -> GsaConfig {
         batch: 32,
         workers: 3,
         shards: 2,
-        engine: EngineMode::Cpu,
+        // Engine-agnostic tests: the CI engine matrix reruns this
+        // whole file per CPU engine via GRAPHLET_RF_TEST_ENGINE
+        // (cpu-sorf included) — the daemon contract is identical.
+        engine: EngineMode::from_env_or(EngineMode::Cpu),
         seed: 42,
         ..Default::default()
     }
@@ -199,6 +202,50 @@ fn protocol_errors_are_per_request_and_daemon_survives() {
 
     drop(client);
     drop(client2);
+    send_shutdown(&addr.to_string()).unwrap();
+    server.join().unwrap();
+}
+
+/// LRU eviction order through the real daemon: a row kept hot by cache
+/// hits must survive an insert at capacity; the least-recently-used
+/// row must be the victim. (Under the old FIFO policy the hot row —
+/// inserted first — would have been evicted instead.)
+#[test]
+fn cache_eviction_is_lru_through_the_daemon() {
+    let mut gsa = test_gsa();
+    gsa.s = 50;
+    gsa.m = 16;
+    let cfg = ServeConfig { gsa, cache_capacity: 2, ..Default::default() };
+    let (addr, server) = start_server(cfg);
+    let ds = quickstart_ds();
+    let mut client = Client::connect(addr);
+    // Sequential roundtrips make cache state deterministic: the writer
+    // inserts a fresh row before it writes the reply line.
+    let embed = |client: &mut Client, id: u64, g: usize| {
+        let (rid, row, cached) =
+            parse_embed_reply(&client.roundtrip(&embed_request(id, g, &ds.graphs[g]))).unwrap();
+        assert_eq!(rid, id);
+        assert_eq!(row.len(), 16);
+        cached
+    };
+    assert!(!embed(&mut client, 0, 0), "first sight of graph 0");
+    assert!(!embed(&mut client, 1, 1), "first sight of graph 1");
+    assert!(embed(&mut client, 2, 0), "graph 0 must hit — and be bumped to most-recent");
+    // Cache is full {0, 1} with 1 least-recently-used: inserting graph
+    // 2 must evict 1, not the FIFO victim 0.
+    assert!(!embed(&mut client, 3, 2), "first sight of graph 2");
+    assert!(embed(&mut client, 4, 0), "recently used graph 0 must survive the eviction");
+    assert!(!embed(&mut client, 5, 1), "LRU graph 1 must have been evicted");
+
+    // Capacity semantics are unchanged: never more than 2 rows.
+    let stats = Json::parse(client.roundtrip(r#"{"op":"stats","id":9}"#).trim()).unwrap();
+    let cache = stats.get("cache").unwrap();
+    assert_eq!(cache.get("len").and_then(Json::as_u64), Some(2));
+    assert_eq!(cache.get("capacity").and_then(Json::as_u64), Some(2));
+    let hits = cache.get("hits").and_then(Json::as_u64).unwrap();
+    assert!(hits >= 2, "hits = {hits}");
+
+    drop(client);
     send_shutdown(&addr.to_string()).unwrap();
     server.join().unwrap();
 }

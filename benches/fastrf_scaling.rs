@@ -1,5 +1,6 @@
 //! Bench: structured (SORF/FWHT) vs dense random features across the
-//! (d, m) grid.
+//! (d, m) grid, with a batch-size × thread-count axis on the
+//! batch-major SORF path.
 //!
 //! The dense baseline is the cache-blocked kernel in
 //! `graphlet_rf::fastrf::DenseMap` — `O(d·m)` per batch no matter how
@@ -8,55 +9,175 @@
 //! point for this subsystem is d = 25 (k = 5 graphlets), m ≥ 2048,
 //! where SORF must beat dense.
 //!
+//! Three SORF execution shapes race per config:
+//! - `sorf_scalar` — the pre-batch-major hot loop (block-outer,
+//!   row-inner, scalar FWHT on one shared buffer), reconstructed
+//!   faithfully in this file so the bar is the replaced code, not a
+//!   degraded stand-in;
+//! - `sorf_t1` — batch-major panels, serial (`map_batch`); the
+//!   acceptance bar is `sorf_t1 ≤ sorf_scalar` at every (d, m, batch)
+//!   point (the panel path must never lose to the row loop);
+//! - `sorf_t{2,4}` — `map_batch_threads` with a 2- and 4-worker budget
+//!   (independent blocks, or panel rows for single-block maps, split
+//!   across scoped threads).
+//!
+//! All shapes produce bitwise-identical outputs (pinned by
+//! `tests/fastrf_prop.rs`), so every ratio here is pure scheduling.
+//!
 //! Inputs are dense Gaussian vectors: the dense kernel's sparse-input
 //! fast path (zero skipping on 0/1 adjacency rows) is a separate axis,
 //! measured by `table1_complexity` — here both kernels do their full
 //! nominal work.
 //!
-//! Emits `BENCH_fastrf_scaling.json` (median ns per batch call of 256
-//! rows, per config) next to the other committed baselines; run with
+//! Emits `BENCH_fastrf_scaling.json` (median ns per batch call, per
+//! config) next to the other committed baselines; run with
 //! `cargo bench --bench fastrf_scaling`.
 
 mod bench_harness;
 
 use bench_harness::{bench_case, BenchLog};
-use graphlet_rf::fastrf::{DenseMap, SorfMap, SorfParams};
+use graphlet_rf::fastrf::{fwht_inplace, DenseMap, SorfMap, SorfParams, SORF_ROUNDS};
 use graphlet_rf::features::{RfParams, Variant};
 use graphlet_rf::util::Rng;
 
+/// The historical (pre-batch-major) SORF hot loop, reconstructed from
+/// the map's public parameters so the `sorf_scalar` bar measures the
+/// implementation the refactor actually replaced: block-outer,
+/// row-inner, one shared pad-size buffer, scalar in-place FWHT per
+/// (row, block). Bitwise identical to `map_batch` (same per-element
+/// arithmetic) — only the execution shape differs.
+fn sorf_row_at_a_time(map: &SorfMap, x: &[f32], batch: usize, out: &mut [f32]) {
+    fn project(xr: &[f32], signs: &[f32], block: usize, pad: usize, buf: &mut [f32]) {
+        buf[..xr.len()].copy_from_slice(xr);
+        buf[xr.len()..].fill(0.0);
+        for round in 0..SORF_ROUNDS {
+            let base = (block * SORF_ROUNDS + round) * pad;
+            for (v, &sg) in buf.iter_mut().zip(&signs[base..base + pad]) {
+                *v *= sg;
+            }
+            fwht_inplace(buf);
+        }
+    }
+    let p = &map.params;
+    let pad = p.padded;
+    let mut buf = vec![0.0f32; pad];
+    match p.variant {
+        Variant::Gauss | Variant::GaussEig => {
+            let scale = (2.0 / p.m as f32).sqrt();
+            let inv_sp = 1.0 / (p.sigma * pad as f32);
+            for block in 0..p.blocks {
+                let lo = block * pad;
+                let hi = ((block + 1) * pad).min(p.m);
+                for r in 0..batch {
+                    project(&x[r * p.d..(r + 1) * p.d], &p.signs[0], block, pad, &mut buf);
+                    let or = &mut out[r * p.m + lo..r * p.m + hi];
+                    for ((o, &z), &bj) in or.iter_mut().zip(buf.iter()).zip(&p.biases[0][lo..hi]) {
+                        *o = scale * (z * inv_sp + bj).cos();
+                    }
+                }
+            }
+        }
+        Variant::Opu => {
+            let scale = 1.0 / (p.m as f32).sqrt();
+            let inv_p = 1.0 / pad as f32;
+            let mut ibuf = vec![0.0f32; pad];
+            for block in 0..p.blocks {
+                let lo = block * pad;
+                let hi = ((block + 1) * pad).min(p.m);
+                for r in 0..batch {
+                    let xr = &x[r * p.d..(r + 1) * p.d];
+                    project(xr, &p.signs[0], block, pad, &mut buf);
+                    project(xr, &p.signs[1], block, pad, &mut ibuf);
+                    let or = &mut out[r * p.m + lo..r * p.m + hi];
+                    let it = or
+                        .iter_mut()
+                        .zip(buf.iter())
+                        .zip(ibuf.iter())
+                        .zip(&p.biases[0][lo..hi])
+                        .zip(&p.biases[1][lo..hi]);
+                    for ((((o, &zr), &zi), &brj), &bij) in it {
+                        let re = zr * inv_p + brj;
+                        let im = zi * inv_p + bij;
+                        *o = scale * (re * re + im * im);
+                    }
+                }
+            }
+        }
+        Variant::Match => unreachable!("bench never uses phi_match"),
+    }
+}
+
 fn main() {
-    let batch = 256usize;
+    let batches = [64usize, 256];
+    let threads = [2usize, 4];
     let mut rng = Rng::new(42);
     let mut log = BenchLog::new("fastrf_scaling");
-    println!("# fastrf scaling: dense (cache-blocked) vs SORF (FWHT), batch = {batch}");
+    println!(
+        "# fastrf scaling: dense (cache-blocked) vs SORF (batch-major FWHT), \
+         batch axis {batches:?}, thread axis {threads:?}"
+    );
+    let mut batch_never_loses = true;
     for &(k, d) in &[(3usize, 9usize), (5, 25), (6, 36)] {
         for &m in &[512usize, 2048, 8192] {
-            let mut x = vec![0.0f32; batch * d];
-            rng.fill_gaussian(&mut x, 1.0);
             for variant in [Variant::Gauss, Variant::Opu] {
                 let dense = DenseMap::new(RfParams::generate(variant, d, m, 0.1, &mut rng));
                 let sorf = SorfMap::new(SorfParams::generate(variant, d, m, 0.1, &mut rng));
-                let mut y = vec![0.0f32; batch * m];
-                let name = format!("{}_k{k}_d{d}_m{m}", variant.name());
-                let t_dense = bench_case("fastrf_dense", &name, 2, 7, || {
-                    dense.map_batch(&x, batch, &mut y);
-                });
-                log.record("dense", &name, t_dense);
-                let t_sorf = bench_case("fastrf_sorf", &name, 2, 7, || {
-                    sorf.map_batch(&x, batch, &mut y);
-                });
-                log.record("sorf", &name, t_sorf);
-                println!(
-                    "  -> {name}: dense/sorf = {:.2}x {}",
-                    t_dense / t_sorf.max(1e-12),
-                    if t_sorf < t_dense { "(sorf wins)" } else { "(dense wins)" }
-                );
+                for &batch in &batches {
+                    let mut x = vec![0.0f32; batch * d];
+                    rng.fill_gaussian(&mut x, 1.0);
+                    let mut y = vec![0.0f32; batch * m];
+                    let name = format!("{}_k{k}_d{d}_m{m}_b{batch}", variant.name());
+                    // Self-check before timing anything against it: the
+                    // reconstructed scalar loop must match the real map
+                    // bit for bit, or the regression bar is measuring a
+                    // different computation.
+                    {
+                        let mut want = vec![0.0f32; batch * m];
+                        sorf.map_batch(&x, batch, &mut want);
+                        sorf_row_at_a_time(&sorf, &x, batch, &mut y);
+                        assert_eq!(y, want, "scalar reconstruction drifted from map_batch: {name}");
+                    }
+                    let t_dense = bench_case("fastrf_dense", &name, 2, 7, || {
+                        dense.map_batch(&x, batch, &mut y);
+                    });
+                    log.record("dense", &name, t_dense);
+                    // Row-at-a-time: the historical hot loop the
+                    // batch-major refactor replaced (reconstructed
+                    // above), kept as the regression bar.
+                    let t_scalar = bench_case("fastrf_sorf_scalar", &name, 2, 7, || {
+                        sorf_row_at_a_time(&sorf, &x, batch, &mut y);
+                    });
+                    log.record("sorf_scalar", &name, t_scalar);
+                    let t_batch = bench_case("fastrf_sorf_t1", &name, 2, 7, || {
+                        sorf.map_batch(&x, batch, &mut y);
+                    });
+                    log.record("sorf_t1", &name, t_batch);
+                    for &t in &threads {
+                        let t_par = bench_case(&format!("fastrf_sorf_t{t}"), &name, 2, 7, || {
+                            sorf.map_batch_threads(&x, batch, &mut y, t);
+                        });
+                        log.record(&format!("sorf_t{t}"), &name, t_par);
+                    }
+                    if t_batch > t_scalar {
+                        batch_never_loses = false;
+                    }
+                    println!(
+                        "  -> {name}: dense/sorf = {:.2}x {} | scalar/batch = {:.2}x {}",
+                        t_dense / t_batch.max(1e-12),
+                        if t_batch < t_dense { "(sorf wins)" } else { "(dense wins)" },
+                        t_scalar / t_batch.max(1e-12),
+                        if t_batch <= t_scalar { "(batch >= 1x)" } else { "(REGRESSION)" }
+                    );
+                }
             }
         }
     }
     println!(
-        "\nacceptance point: opu/gauss at k=5 (d=25), m >= 2048 — sorf must win \
-         (blocks of p=32, 3·log2(32) butterflies/element vs 25 madds/element)."
+        "\nacceptance: (1) opu/gauss at k=5 (d=25), m >= 2048 — sorf must beat dense \
+         (blocks of p=32, 3·log2(32) butterflies/element vs 25 madds/element); \
+         (2) the batch-major path must be >= 1x the row-at-a-time path at every \
+         (d, m, batch) point: {}",
+        if batch_never_loses { "HELD on this run" } else { "VIOLATED on this run" }
     );
     match log.write() {
         Ok(path) => println!("wrote {}", path.display()),

@@ -25,5 +25,5 @@ pub mod pipeline;
 pub mod streaming;
 
 pub use metrics::PipelineMetrics;
-pub use pipeline::{embed_dataset, EngineMode, GsaConfig};
+pub use pipeline::{embed_dataset, fwht_threads_from_env_or, EngineMode, GsaConfig};
 pub use streaming::{Completed, GraphJob, StreamingPipeline, SubmitOutcome};

@@ -75,6 +75,18 @@ impl EngineMode {
     }
 }
 
+/// FWHT thread budget for engine-agnostic tests: the
+/// `GRAPHLET_RF_TEST_THREADS` env var when set (the CI matrix runs the
+/// suite at budgets 1 and 4 so the parallel panel path is exercised on
+/// every push), else `default`. Panics on an unparsable value — a
+/// broken matrix entry must fail loudly, not silently fall back.
+pub fn fwht_threads_from_env_or(default: usize) -> usize {
+    match std::env::var("GRAPHLET_RF_TEST_THREADS") {
+        Ok(s) => s.parse().expect("GRAPHLET_RF_TEST_THREADS"),
+        Err(_) => default,
+    }
+}
+
 /// Configuration of one GSA-phi embedding run.
 #[derive(Clone, Debug)]
 pub struct GsaConfig {
@@ -101,6 +113,14 @@ pub struct GsaConfig {
     /// bitwise independent of the count. In PJRT mode each shard
     /// constructs its own engine over the same artifacts.
     pub shards: usize,
+    /// Per-shard FWHT thread budget for the `cpu-sorf` engine: each
+    /// shard hands its batches to `SorfMap::map_batch_threads` with
+    /// this many panel workers. Default 1, so shard-level parallelism
+    /// owns the cores; raise it (`--fwht-threads N`) when shards are
+    /// few and batches large. A pure scheduling knob: embeddings are
+    /// bitwise identical for every value (pinned by tests), and it is
+    /// deliberately excluded from the serve cache fingerprint.
+    pub fwht_threads: usize,
     pub engine: EngineMode,
     pub seed: u64,
 }
@@ -119,6 +139,7 @@ impl Default for GsaConfig {
             workers: std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4).min(8),
             queue_cap: 8,
             shards: 1,
+            fwht_threads: 1,
             engine: EngineMode::Pjrt,
             seed: 0,
         }

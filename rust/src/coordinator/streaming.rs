@@ -36,13 +36,18 @@
 //!   batches under load, low latency when drained.
 //! - **Backpressure**: the job queue and per-shard channels are bounded;
 //!   [`StreamingPipeline::try_submit`] surfaces a full queue to callers
-//!   (the serve layer's admission control) instead of blocking.
+//!   (the serve layer's admission control) instead of blocking. Both
+//!   bounds are observable before they bite:
+//!   [`queue_depth`](StreamingPipeline::queue_depth) (admitted jobs not
+//!   yet claimed by a worker) and
+//!   [`shard_occupancy`](StreamingPipeline::shard_occupancy) (messages
+//!   in flight to each shard) feed the serve `stats` op.
 //!
 //! [`embed_dataset`]: super::pipeline::embed_dataset
 
 use std::collections::{HashMap, VecDeque};
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
@@ -162,6 +167,29 @@ impl Packer {
 /// (PJRT handles are not Sync, so each shard owns one).
 type PjrtSpawn = (PathBuf, Manifest, String);
 
+/// One shard's channel endpoint plus its live occupancy gauge: messages
+/// sent to the shard but not yet drained by its loop. The gauge is the
+/// serve `stats` backpressure signal — sustained non-zero occupancy
+/// means the feature engines, not the samplers, are the bottleneck. A
+/// sender blocked on a full channel has already bumped the gauge, so
+/// occupancy can transiently exceed the channel capacity — exactly when
+/// overload is worth seeing.
+#[derive(Clone)]
+struct ShardTx {
+    tx: SyncSender<Msg>,
+    occupancy: Arc<AtomicUsize>,
+}
+
+impl ShardTx {
+    fn send(&self, msg: Msg) {
+        self.occupancy.fetch_add(1, Ordering::Relaxed);
+        if self.tx.send(msg).is_err() {
+            // Receiver gone (teardown): roll the gauge back.
+            self.occupancy.fetch_sub(1, Ordering::Relaxed);
+        }
+    }
+}
+
 /// The one shared random-parameter draw, in whichever family the
 /// engine mode uses: dense Gaussian matrices for `pjrt`/`cpu`/
 /// `cpu-inline`, structured SORF diagonals for `cpu-sorf`. Every
@@ -242,6 +270,12 @@ impl JobQueue {
         }
     }
 
+    /// Jobs admitted but not yet claimed by a worker (the backpressure
+    /// depth gauge the serve `stats` op reports).
+    fn len(&self) -> usize {
+        self.inner.lock().expect("job queue lock").jobs.len()
+    }
+
     /// Blocking pop; `None` once the queue is closed and drained.
     /// `before_wait` runs — with the lock released — every time the
     /// queue turns out to be empty, before this worker goes to sleep:
@@ -287,6 +321,8 @@ pub struct StreamingPipeline {
     shard_handles: Vec<JoinHandle<PipelineMetrics>>,
     /// Live per-shard metric snapshots, refreshed by the shard threads.
     shard_slots: Vec<Arc<Mutex<PipelineMetrics>>>,
+    /// Live per-shard channel occupancy gauges (see [`ShardTx`]).
+    shard_occupancy: Vec<Arc<AtomicUsize>>,
     next_ticket: AtomicU64,
     cfg: GsaConfig,
     /// RNG state positioned right after the parameter draw — exactly
@@ -315,6 +351,7 @@ impl StreamingPipeline {
         cfg.shards = cfg.shards.max(1);
         cfg.workers = cfg.workers.max(1);
         cfg.queue_cap = cfg.queue_cap.max(1);
+        cfg.fwht_threads = cfg.fwht_threads.max(1);
         // Degenerate values would hang jobs (s = 0 never completes, a
         // 0-row batch never fills) or panic a shared worker thread
         // (graphlet size out of the u32-mask range) — reject up front.
@@ -364,21 +401,25 @@ impl StreamingPipeline {
         };
 
         // ---- feature shards -------------------------------------------
-        let mut txs: Vec<SyncSender<Msg>> = Vec::with_capacity(cfg.shards);
+        let mut txs: Vec<ShardTx> = Vec::with_capacity(cfg.shards);
         let mut shard_handles = Vec::with_capacity(cfg.shards);
         let mut shard_slots = Vec::with_capacity(cfg.shards);
+        let mut shard_occupancy = Vec::with_capacity(cfg.shards);
         for _q in 0..cfg.shards {
             let (tx, rx) = sync_channel::<Msg>(cfg.queue_cap);
             let slot = Arc::new(Mutex::new(PipelineMetrics::default()));
+            let occupancy = Arc::new(AtomicUsize::new(0));
             let spawn_spec = pjrt_spawn.clone();
             let params = params.clone();
             let cfg_cl = cfg.clone();
             let slot_cl = slot.clone();
+            let occ_cl = occupancy.clone();
             shard_handles.push(std::thread::spawn(move || {
-                shard_loop(rx, spawn_spec, &params, &cfg_cl, &slot_cl)
+                shard_loop(rx, spawn_spec, &params, &cfg_cl, &slot_cl, &occ_cl)
             }));
-            txs.push(tx);
+            txs.push(ShardTx { tx, occupancy: occupancy.clone() });
             shard_slots.push(slot);
+            shard_occupancy.push(occupancy);
         }
 
         // ---- sampler workers ------------------------------------------
@@ -401,10 +442,27 @@ impl StreamingPipeline {
             workers,
             shard_handles,
             shard_slots,
+            shard_occupancy,
             next_ticket: AtomicU64::new(0),
             cfg,
             seed_rng,
         })
+    }
+
+    /// Jobs admitted to the bounded queue but not yet claimed by a
+    /// sampler worker. Non-zero depth means the workers are saturated —
+    /// the observable precursor of [`SubmitOutcome::Overloaded`], which
+    /// only fires once the depth hits the queue capacity.
+    pub fn queue_depth(&self) -> usize {
+        self.jobs.len()
+    }
+
+    /// Per-shard feature-channel occupancy: batches/sums sent to each
+    /// shard and not yet drained by its loop (indexed by shard id).
+    /// Sustained non-zero values mean the feature engines, not the
+    /// samplers, are the bottleneck.
+    pub fn shard_occupancy(&self) -> Vec<usize> {
+        self.shard_occupancy.iter().map(|o| o.load(Ordering::Relaxed)).collect()
     }
 
     /// The pipeline's (normalized) configuration.
@@ -500,7 +558,7 @@ impl Drop for StreamingPipeline {
 }
 
 /// Send every open partial batch and reset the packers for reuse.
-fn flush_packers(packers: &mut [Packer], txs: &[SyncSender<Msg>], batch: usize, d: usize) {
+fn flush_packers(packers: &mut [Packer], txs: &[ShardTx], batch: usize, d: usize) {
     for (q, p) in packers.iter_mut().enumerate() {
         if p.rows == 0 {
             continue;
@@ -514,7 +572,7 @@ fn flush_packers(packers: &mut [Packer], txs: &[SyncSender<Msg>], batch: usize, 
             sample_secs: std::mem::take(&mut p.sample_secs),
         };
         p.rows = 0;
-        let _ = txs[q].send(Msg::Batch(msg));
+        txs[q].send(Msg::Batch(msg));
     }
 }
 
@@ -522,7 +580,7 @@ fn flush_packers(packers: &mut [Packer], txs: &[SyncSender<Msg>], batch: usize, 
 /// subgraphs in seed order, and pack rows into per-shard cross-request
 /// batches. Partial batches flush when the queue idles, so a lone
 /// request is never stranded behind an unfilled batch.
-fn worker_loop(queue: &JobQueue, txs: &[SyncSender<Msg>], params: &ParamSet, cfg: &GsaConfig) {
+fn worker_loop(queue: &JobQueue, txs: &[ShardTx], params: &ParamSet, cfg: &GsaConfig) {
     let sampler = sampler_by_name(&cfg.sampler);
     let inline_map = match (cfg.engine, params) {
         (EngineMode::CpuInline, ParamSet::Dense(p)) => Some(CpuFeatureMap::new((**p).clone())),
@@ -590,7 +648,7 @@ fn worker_loop(queue: &JobQueue, txs: &[SyncSender<Msg>], params: &ParamSet, cfg
                     samples: cfg.s,
                     sample_secs: t.elapsed_secs(),
                 };
-                let _ = txs[q].send(Msg::Sum(msg));
+                txs[q].send(Msg::Sum(msg));
             }
             None => {
                 // Fill this shard's cross-request batch.
@@ -615,7 +673,7 @@ fn worker_loop(queue: &JobQueue, txs: &[SyncSender<Msg>], params: &ParamSet, cfg
                             sample_secs: std::mem::take(&mut p.sample_secs),
                         };
                         p.rows = 0;
-                        let _ = txs[q].send(Msg::Batch(msg));
+                        txs[q].send(Msg::Batch(msg));
                         t = Timer::start();
                     }
                 }
@@ -692,6 +750,7 @@ fn shard_loop(
     params: &ParamSet,
     cfg: &GsaConfig,
     slot: &Mutex<PipelineMetrics>,
+    occupancy: &AtomicUsize,
 ) -> PipelineMetrics {
     let exec = match build_exec(spawn_spec, params, cfg) {
         Ok(exec) => exec,
@@ -705,6 +764,7 @@ fn shard_loop(
             let msg = format!("feature shard setup failed: {e}");
             let mut seen_rows: HashMap<u64, usize> = HashMap::new();
             for m in rx {
+                occupancy.fetch_sub(1, Ordering::Relaxed);
                 match m {
                     // A Sum is the job's entire payload: fail and forget.
                     Msg::Sum(s) => s.state.fail(msg.clone()),
@@ -737,6 +797,7 @@ fn shard_loop(
     let mut failed: HashMap<u64, usize> = HashMap::new();
     let mut cpu_out = vec![0.0f32; cfg.batch * m];
     for msg in rx {
+        occupancy.fetch_sub(1, Ordering::Relaxed);
         match msg {
             Msg::Sum(js) => {
                 metrics.samples += js.samples;
@@ -775,7 +836,14 @@ fn shard_loop(
                     }
                     ShardExec::Sorf(map) => {
                         cpu_out.resize(b.rows * m, 0.0);
-                        map.map_batch(&b.data, b.rows, &mut cpu_out[..b.rows * m]);
+                        // Batch-major panel execution with this shard's
+                        // --fwht-threads budget (1 = serial panels).
+                        map.map_batch_threads(
+                            &b.data,
+                            b.rows,
+                            &mut cpu_out[..b.rows * m],
+                            cfg.fwht_threads,
+                        );
                     }
                     ShardExec::Inline => unreachable!("batch message in inline mode"),
                 }
@@ -980,6 +1048,59 @@ mod tests {
             assert!(done.error.is_none());
         }
         pipe.shutdown().unwrap();
+    }
+
+    #[test]
+    fn queue_depth_and_occupancy_observable_then_drain() {
+        // One worker pinned on a long job: later submits must be
+        // visible as queue depth before the admission bound trips, and
+        // the gauges must read clean (zero) once everything drains.
+        let mut c = cfg(EngineMode::Cpu);
+        c.workers = 1;
+        c.shards = 2;
+        c.s = 20_000; // job 1 keeps the lone worker busy for a while
+        let pipe = StreamingPipeline::new(&c, None).unwrap();
+        assert_eq!(pipe.queue_depth(), 0);
+        assert_eq!(pipe.shard_occupancy(), [0, 0]);
+        let ds = SbmConfig { per_class: 2, r: 1.5, ..Default::default() }
+            .generate(&mut Rng::new(3));
+        let g = Arc::new(ds.graphs[0].clone());
+        let (tx, rx) = std::sync::mpsc::channel();
+        for i in 0..4u64 {
+            pipe.submit(GraphJob { graph: g.clone(), seed: i, tag: i, done: tx.clone() })
+                .unwrap();
+        }
+        drop(tx);
+        // The single worker claims at most one job instantly; the rest
+        // sit in the queue while it samples 20k subgraphs.
+        assert!(pipe.queue_depth() > 0, "backlog behind a busy worker must be visible");
+        assert_eq!(pipe.shard_occupancy().len(), 2);
+        for _ in 0..4 {
+            let done = rx.recv().unwrap();
+            assert!(done.error.is_none(), "{:?}", done.error);
+        }
+        // All jobs delivered: the queue is empty by construction, and
+        // every sent batch was drained before its job could complete.
+        assert_eq!(pipe.queue_depth(), 0);
+        assert_eq!(pipe.shard_occupancy(), [0, 0]);
+        pipe.shutdown().unwrap();
+    }
+
+    #[test]
+    fn sorf_fwht_threads_do_not_move_bits_through_the_pipeline() {
+        // The per-shard FWHT budget is a scheduling knob: streaming
+        // embeddings must be bitwise identical across budgets.
+        let ds = SbmConfig { per_class: 3, r: 1.5, ..Default::default() }
+            .generate(&mut Rng::new(4));
+        let run = |fwht_threads: usize| {
+            let mut c = cfg(EngineMode::CpuSorf);
+            c.fwht_threads = fwht_threads;
+            super::super::pipeline::embed_dataset(&ds, &c, None).unwrap().0
+        };
+        let reference = run(1);
+        for threads in [2usize, 4] {
+            assert_eq!(run(threads), reference, "fwht_threads={threads}");
+        }
     }
 
     #[test]

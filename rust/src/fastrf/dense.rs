@@ -107,6 +107,23 @@ impl DenseMap {
             Variant::Match => panic!("phi_match is not a dense feature map"),
         }
     }
+
+    /// [`map_batch`](Self::map_batch) with the batch's rows split
+    /// across up to `threads` scoped worker threads (the crate-private
+    /// `par_row_slabs` idiom in [`super`]) — the same entry point
+    /// [`crate::fastrf::SorfMap`] exposes, so the two engines stay
+    /// API-symmetric under the `--fwht-threads` budget. Each row's
+    /// output depends only on that row's input (the tiling only regroups
+    /// loops, never the per-output accumulation order), so any row split
+    /// is bitwise equal to the serial path.
+    pub fn map_batch_threads(&self, x: &[f32], batch: usize, out: &mut [f32], threads: usize) {
+        let p = &self.params;
+        assert_eq!(x.len(), batch * p.d);
+        assert_eq!(out.len(), batch * p.m);
+        super::par_row_slabs(x, out, batch, p.d, p.m, threads, |xc, rows, oc| {
+            self.map_batch(xc, rows, oc)
+        });
+    }
 }
 
 #[cfg(test)]
@@ -136,6 +153,34 @@ mod tests {
                 let mut reference = vec![0.0f32; batch * m];
                 CpuFeatureMap::new(params).map_batch(&x, batch, &mut reference);
                 assert_eq!(blocked, reference, "variant {variant:?} d={d} m={m} batch={batch}");
+            }
+        });
+    }
+
+    /// Row-parallel dispatch is a pure scheduling knob: every thread
+    /// count (including ones exceeding the batch) must reproduce the
+    /// serial map bit for bit.
+    #[test]
+    fn map_batch_threads_bitwise_equals_serial() {
+        check::check("dense-threads", 0xD7, 10, |rng| {
+            let d = 1 + rng.usize(20);
+            let m = 1 + rng.usize(300);
+            let batch = 1 + rng.usize(20);
+            for variant in [Variant::Gauss, Variant::Opu] {
+                let params = RfParams::generate(variant, d, m, 0.7, rng);
+                let map = DenseMap::new(params);
+                let mut x = vec![0.0f32; batch * d];
+                rng.fill_gaussian(&mut x, 1.0);
+                let mut reference = vec![0.0f32; batch * m];
+                map.map_batch(&x, batch, &mut reference);
+                for threads in [2usize, 3, batch + 2] {
+                    let mut got = vec![0.0f32; batch * m];
+                    map.map_batch_threads(&x, batch, &mut got, threads);
+                    assert_eq!(
+                        got, reference,
+                        "variant {variant:?} d={d} m={m} batch={batch} threads={threads}"
+                    );
+                }
             }
         });
     }

@@ -12,6 +12,20 @@
 //! inputs every intermediate is exact in f32 (sums of ≤ p inputs of
 //! magnitude ≤ 2²³⁻ˡᵒᵍᵖ), so the result is bit-for-bit equal to the
 //! naive sign-sum — the property the correctness test pins.
+//!
+//! Execution shapes, slowest to fastest on a batch:
+//! - [`fwht_inplace`] — one row at a time (the scalar reference);
+//! - [`fwht_batch`] — the same butterflies over a row-major panel,
+//!   with `chunks_exact`/`split_at_mut` inner loops so the hot loop
+//!   carries no bounds checks and autovectorizes;
+//! - [`fwht_batch_par`] — [`fwht_batch`] with the panel's rows split
+//!   across scoped threads.
+//!
+//! All three apply the identical per-row butterfly order, so their
+//! outputs are **bitwise equal on any input** (not merely close) — the
+//! property `tests/fastrf_prop.rs` pins across the whole (p, batch,
+//! threads) grid and the one that makes the batch-major refactor of
+//! [`super::SorfMap`] testable at all.
 
 /// Apply the unnormalized Walsh–Hadamard transform to `data` in place.
 ///
@@ -36,6 +50,66 @@ pub fn fwht_inplace(data: &mut [f32]) {
         }
         h *= 2;
     }
+}
+
+/// Apply the unnormalized Walsh–Hadamard transform to every row of a
+/// row-major `(panel.len() / p, p)` panel in place.
+///
+/// Batch-major workhorse of [`super::SorfMap::map_batch`]: one call
+/// transforms the whole batch, and the inner loops are structured for
+/// the optimizer — `chunks_exact_mut` rows, `split_at_mut` butterfly
+/// halves, and a `zip` over equal-length slices, so the hot loop has
+/// no bounds checks and vectorizes. The per-row butterfly order is
+/// exactly [`fwht_inplace`]'s, so outputs are bitwise equal to the
+/// scalar path on any input.
+///
+/// # Panics
+/// Panics if `p` is not a power of two, or if `panel.len()` is not a
+/// multiple of `p`. An empty panel (zero rows) is fine.
+pub fn fwht_batch(panel: &mut [f32], p: usize) {
+    assert!(p.is_power_of_two(), "FWHT length {p} is not a power of two");
+    assert_eq!(panel.len() % p, 0, "panel of {} floats is not rows x p={p}", panel.len());
+    for row in panel.chunks_exact_mut(p) {
+        let mut h = 1;
+        while h < p {
+            for pair in row.chunks_exact_mut(2 * h) {
+                let (a, b) = pair.split_at_mut(h);
+                for (x, y) in a.iter_mut().zip(b.iter_mut()) {
+                    let u = *x;
+                    let v = *y;
+                    *x = u + v;
+                    *y = u - v;
+                }
+            }
+            h *= 2;
+        }
+    }
+}
+
+/// [`fwht_batch`] with the panel's rows split across up to `threads`
+/// scoped worker threads (rows are independent, so the split is at row
+/// granularity and the outputs stay bitwise equal to the serial path).
+///
+/// `threads <= 1` — or a panel with fewer rows than threads would use —
+/// degrades to the serial [`fwht_batch`] without spawning. Note
+/// [`super::SorfMap`] spends its `--fwht-threads` budget one level up
+/// (block groups or row slabs, one spawn wave per map call) rather than
+/// here, so a standalone caller that wants a parallel transform is the
+/// audience for this entry point.
+pub fn fwht_batch_par(panel: &mut [f32], p: usize, threads: usize) {
+    assert!(p.is_power_of_two(), "FWHT length {p} is not a power of two");
+    assert_eq!(panel.len() % p, 0, "panel of {} floats is not rows x p={p}", panel.len());
+    let rows = panel.len() / p;
+    let threads = threads.max(1).min(rows.max(1));
+    if threads <= 1 {
+        return fwht_batch(panel, p);
+    }
+    let rows_per = rows.div_ceil(threads);
+    std::thread::scope(|s| {
+        for chunk in panel.chunks_mut(rows_per * p) {
+            s.spawn(move || fwht_batch(chunk, p));
+        }
+    });
 }
 
 /// Naive `O(p²)` Hadamard multiply: `out[i] = Σ_j (-1)^{popcount(i&j)}
@@ -132,6 +206,55 @@ mod tests {
     #[should_panic(expected = "power of two")]
     fn fwht_rejects_empty() {
         fwht_inplace(&mut []);
+    }
+
+    #[test]
+    fn fwht_batch_bitwise_matches_scalar_rows() {
+        // Identical butterfly order per row means identical bits on ANY
+        // input, gaussian included — no integer restriction needed.
+        check::check("fwht-batch", 0xF3, 25, |rng| {
+            let p = 1usize << rng.usize(8); // 1..=128
+            let rows = rng.usize(6); // 0..=5, zero rows included
+            let mut panel = vec![0.0f32; rows * p];
+            rng.fill_gaussian(&mut panel, 1.0);
+            let mut want = panel.clone();
+            for row in want.chunks_exact_mut(p) {
+                fwht_inplace(row);
+            }
+            fwht_batch(&mut panel, p);
+            assert_eq!(panel, want, "p={p} rows={rows}");
+        });
+    }
+
+    #[test]
+    fn fwht_batch_par_bitwise_matches_serial_for_every_split() {
+        check::check("fwht-batch-par", 0xF4, 15, |rng| {
+            let p = 1usize << rng.usize(7);
+            let rows = 1 + rng.usize(9);
+            let mut reference = vec![0.0f32; rows * p];
+            rng.fill_gaussian(&mut reference, 1.0);
+            let orig = reference.clone();
+            fwht_batch(&mut reference, p);
+            // Thread counts below, at, and above the row count — every
+            // split must land on the same bits.
+            for threads in [1usize, 2, 3, rows, rows + 3] {
+                let mut panel = orig.clone();
+                fwht_batch_par(&mut panel, p, threads);
+                assert_eq!(panel, reference, "p={p} rows={rows} threads={threads}");
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "power of two")]
+    fn fwht_batch_rejects_non_pow2() {
+        fwht_batch(&mut [0.0; 6], 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "rows x p")]
+    fn fwht_batch_rejects_ragged_panel() {
+        fwht_batch(&mut [0.0; 6], 4);
     }
 
     #[test]

@@ -31,8 +31,36 @@
 //! approximates the same kernels as the dense `cpu` engine — in
 //! `O(p log p)` per block instead of `O(d·m)` total.
 //!
+//! Execution is **batch-major**: a block never walks one row at a
+//! time. The whole batch is zero-padded into one contiguous row-major
+//! panel, each diagonal is applied in a single pass over the panel, and
+//! the FWHT butterflies run over all rows per stage. The thread budget
+//! is spent once per map call: with at least one row per worker the
+//! batch splits into row slabs (one whole-pipeline worker per slab,
+//! writing `out` in place); a row-starved stacked map (batch < threads,
+//! m > p) dispatches independent blocks instead, each worker computing
+//! its own column panel, stitched into `out`:
+//!
+//! ```text
+//!            batch rows ────────────────►
+//!   panel   ┌────────────── p ──────────────┐      block 0 ─ thread A ┐
+//!   (rows   │ x̂₀ │ x̂₁ │ x̂₂ │ … (row-major)  │      block 1 ─ thread A │ stitch
+//!    × p)   └──────────────────────────────┘      block 2 ─ thread B ├─► out
+//!     │  per round: one Dᵢᵇ pass over the        block 3 ─ thread B │ (cols
+//!     ▼  whole panel, then one batched FWHT      …                  ┘  lo..hi)
+//! ```
+//!
+//! Every execution shape — scalar reference, serial panel, block- or
+//! row-parallel — applies the identical per-element arithmetic, so
+//! embeddings are **bitwise identical** across batch sizes and thread
+//! counts (pinned by `tests/fastrf_prop.rs` and the pipeline stability
+//! tests). The thread budget defaults to 1 so shard-level parallelism
+//! keeps owning the cores; `--fwht-threads N` hands each shard N panel
+//! workers.
+//!
 //! Module map:
-//! - [`fwht`] — the in-place butterfly transform + naive reference;
+//! - [`fwht`] — the in-place butterfly transform (scalar, batched, and
+//!   row-parallel batched) + naive reference;
 //! - [`sorf`] — [`SorfParams`] (seeded Rademacher draws) and
 //!   [`SorfMap`] (the batched feature map, a drop-in for
 //!   [`crate::features::CpuFeatureMap`]);
@@ -52,7 +80,7 @@ pub mod fwht;
 pub mod sorf;
 
 pub use dense::{affine_blocked, DenseMap};
-pub use fwht::{fwht_inplace, naive_hadamard, next_pow2};
+pub use fwht::{fwht_batch, fwht_batch_par, fwht_inplace, naive_hadamard, next_pow2};
 pub use sorf::{SorfMap, SorfParams, SORF_ROUNDS};
 
 // The sharded pipeline moves SorfMap clones across threads; fail the
@@ -64,3 +92,37 @@ const _: () = {
     assert_shardable::<SorfParams>();
     assert_shardable::<DenseMap>();
 };
+
+/// Split a row-major `(rows, d) → (rows, m)` map across up to
+/// `threads` scoped workers, one contiguous row slab per worker; the
+/// shared row-parallel idiom of [`SorfMap::map_batch_threads`] and
+/// [`DenseMap::map_batch_threads`]. With an effective budget of 1 (or
+/// a single row) it calls `apply` directly — no spawn.
+///
+/// `apply(x_slab, slab_rows, out_slab)` must compute each output row
+/// from that row's input alone; every split is then bitwise equal to
+/// the serial call.
+pub(crate) fn par_row_slabs<F>(
+    x: &[f32],
+    out: &mut [f32],
+    rows: usize,
+    d: usize,
+    m: usize,
+    threads: usize,
+    apply: F,
+) where
+    F: Fn(&[f32], usize, &mut [f32]) + Sync,
+{
+    let threads = threads.max(1).min(rows.max(1));
+    if threads <= 1 {
+        apply(x, rows, out);
+        return;
+    }
+    let rows_per = rows.div_ceil(threads);
+    let apply = &apply;
+    std::thread::scope(|s| {
+        for (xc, oc) in x.chunks(rows_per * d).zip(out.chunks_mut(rows_per * m)) {
+            s.spawn(move || apply(xc, xc.len() / d, oc));
+        }
+    });
+}

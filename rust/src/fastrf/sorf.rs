@@ -15,7 +15,7 @@
 use crate::features::Variant;
 use crate::util::Rng;
 
-use super::fwht::{fwht_inplace, next_pow2};
+use super::fwht::{fwht_batch, next_pow2};
 
 /// Number of (diagonal, Hadamard) rounds per block. Three is the
 /// standard SORF depth: enough mixing that the rows behave like
@@ -90,20 +90,40 @@ impl SorfParams {
     }
 }
 
-/// One `HD` block applied to one input row: zero-pad `xr` into `buf`
-/// (length `pad`), then run `SORF_ROUNDS` (sign diagonal, unnormalized
-/// FWHT) rounds in place. Normalization is deferred to the caller's
-/// single output scale.
-fn project_block(xr: &[f32], signs: &[f32], block: usize, pad: usize, buf: &mut [f32]) {
-    buf[..xr.len()].copy_from_slice(xr);
-    buf[xr.len()..].fill(0.0);
+/// One `HD` block applied to a whole batch, panel-wise: zero-pad each
+/// input row of `x` (row-major `rows × d`) into `panel` (row-major
+/// `rows × pad`), then run `SORF_ROUNDS` rounds of (sign diagonal,
+/// unnormalized FWHT) — **one pass per diagonal over the whole batch**
+/// followed by one batched FWHT over the panel, instead of a per-row
+/// round trip.
+///
+/// Per-row arithmetic (multiply order, butterfly order) is identical to
+/// the historical scalar path, so outputs are bitwise equal for every
+/// batch size — pinned by `tests/fastrf_prop.rs`. Normalization is
+/// deferred to the caller's single output scale. Thread dispatch lives
+/// one level up ([`SorfMap::map_batch_threads`] splits blocks or row
+/// slabs, spawning once per map call, never per round).
+fn project_block_panel(
+    x: &[f32],
+    d: usize,
+    signs: &[f32],
+    block: usize,
+    pad: usize,
+    panel: &mut [f32],
+) {
+    for (row, xr) in panel.chunks_exact_mut(pad).zip(x.chunks_exact(d)) {
+        row[..d].copy_from_slice(xr);
+        row[d..].fill(0.0);
+    }
     for round in 0..SORF_ROUNDS {
         let base = (block * SORF_ROUNDS + round) * pad;
         let s = &signs[base..base + pad];
-        for (v, &sg) in buf.iter_mut().zip(s) {
-            *v *= sg;
+        for row in panel.chunks_exact_mut(pad) {
+            for (v, &sg) in row.iter_mut().zip(s) {
+                *v *= sg;
+            }
         }
-        fwht_inplace(buf);
+        fwht_batch(panel, pad);
     }
 }
 
@@ -126,13 +146,99 @@ impl SorfMap {
     }
 
     /// Map a row-major batch `x` of shape (batch, d) into `out` of
-    /// shape (batch, m).
+    /// shape (batch, m), single-threaded. Equivalent to
+    /// [`map_batch_threads`](Self::map_batch_threads) with a budget of
+    /// 1 — the entry the shard loop uses when `--fwht-threads` is left
+    /// at its default.
     pub fn map_batch(&self, x: &[f32], batch: usize, out: &mut [f32]) {
+        self.map_batch_threads(x, batch, out, 1);
+    }
+
+    /// Map a row-major batch `x` of shape (batch, d) into `out` of
+    /// shape (batch, m) with up to `threads` worker threads.
+    ///
+    /// Execution is batch-major: each `HD` block projects the whole
+    /// batch as one `(batch, p)` panel (one sign-diagonal pass over the
+    /// panel per round, then a batched FWHT) instead of re-walking the
+    /// block per row. The thread budget is spent once per call, on
+    /// whichever axis has the parallelism: when the batch has at least
+    /// one row per worker (the common shard shape) the batch splits
+    /// into row slabs — each worker runs the whole pipeline on its slab
+    /// and writes `out` in place, no scratch, no stitch; a row-starved
+    /// multi-block map (batch < threads, m > p) dispatches independent
+    /// blocks instead, each worker computing its own column panel,
+    /// stitched into `out` afterwards. Per-element arithmetic is
+    /// identical in every configuration, so outputs are bitwise equal
+    /// to the scalar path for every (batch, threads) — the contract
+    /// pinned by `tests/fastrf_prop.rs` and the pipeline's
+    /// cross-thread-count stability tests.
+    pub fn map_batch_threads(&self, x: &[f32], batch: usize, out: &mut [f32], threads: usize) {
         let p = &self.params;
         assert_eq!(x.len(), batch * p.d);
         assert_eq!(out.len(), batch * p.m);
+        if p.variant == Variant::Match {
+            panic!("phi_match is not a dense feature map");
+        }
+        if batch == 0 || p.m == 0 {
+            return; // nothing to write; keeps the panel chunking total
+        }
+        let threads = threads.max(1);
+        if p.blocks == 1 || batch >= threads {
+            // Rows are the better (or only) parallel axis: in-place
+            // slab writes, serial when the effective budget is 1.
+            let blocks = p.blocks;
+            super::par_row_slabs(x, out, batch, p.d, p.m, threads, |xc, rows, oc| {
+                self.apply_blocks(xc, rows, 0, blocks, oc, self.params.m, 0)
+            });
+            return;
+        }
+        let (pad, m) = (p.padded, p.m);
+        // Row-starved stacked map (batch < threads, m > p): dispatch
+        // independent blocks across the budget instead; each group of
+        // blocks computes its own (batch, cols) column panel in a scoped
+        // thread, and the panels tile `out`'s columns disjointly.
+        let groups = threads.min(p.blocks);
+        let per = p.blocks.div_ceil(groups);
+        let panels: Vec<(usize, usize, Vec<f32>)> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..groups)
+                .map(|g| (g * per, ((g + 1) * per).min(p.blocks)))
+                .filter(|&(b0, b1)| b0 < b1)
+                .map(|(b0, b1)| {
+                    s.spawn(move || {
+                        let lo = b0 * pad;
+                        let hi = (b1 * pad).min(m);
+                        let mut dst = vec![0.0f32; batch * (hi - lo)];
+                        self.apply_blocks(x, batch, b0, b1, &mut dst, hi - lo, lo);
+                        (lo, hi, dst)
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("sorf block worker")).collect()
+        });
+        for (lo, hi, dst) in panels {
+            for (or, dr) in out.chunks_exact_mut(m).zip(dst.chunks_exact(hi - lo)) {
+                or[lo..hi].copy_from_slice(dr);
+            }
+        }
+    }
+
+    /// Apply phi for blocks `b0..b1` of the map into `dst`, a row-major
+    /// `(batch, stride)` panel whose column 0 corresponds to feature
+    /// column `col0` (`dst = out, stride = m, col0 = 0` for the whole
+    /// map). Serial: callers own the thread dispatch.
+    fn apply_blocks(
+        &self,
+        x: &[f32],
+        batch: usize,
+        b0: usize,
+        b1: usize,
+        dst: &mut [f32],
+        stride: usize,
+        col0: usize,
+    ) {
+        let p = &self.params;
         let pad = p.padded;
-        let mut buf = vec![0.0f32; pad];
+        let mut panel = vec![0.0f32; batch * pad];
         match p.variant {
             Variant::Gauss | Variant::GaussEig => {
                 let scale = (2.0 / p.m as f32).sqrt();
@@ -144,14 +250,13 @@ impl SorfMap {
                 let b = &p.biases[0];
                 // Block-major loop order: one block's sign diagonals
                 // stay hot across the whole batch.
-                for block in 0..p.blocks {
+                for block in b0..b1 {
                     let lo = block * pad;
                     let hi = ((block + 1) * pad).min(p.m);
-                    for r in 0..batch {
-                        let xr = &x[r * p.d..(r + 1) * p.d];
-                        project_block(xr, signs, block, pad, &mut buf);
-                        let or = &mut out[r * p.m + lo..r * p.m + hi];
-                        for ((o, &z), &bj) in or.iter_mut().zip(buf.iter()).zip(&b[lo..hi]) {
+                    project_block_panel(x, p.d, signs, block, pad, &mut panel);
+                    for (dr, zr) in dst.chunks_exact_mut(stride).zip(panel.chunks_exact(pad)) {
+                        let dr = &mut dr[lo - col0..hi - col0];
+                        for ((o, &z), &bj) in dr.iter_mut().zip(zr).zip(&b[lo..hi]) {
                             *o = scale * (z * inv_sp + bj).cos();
                         }
                     }
@@ -163,30 +268,28 @@ impl SorfMap {
                 let inv_p = 1.0 / pad as f32;
                 let (sr, si) = (&p.signs[0], &p.signs[1]);
                 let (br, bi) = (&p.biases[0], &p.biases[1]);
-                let mut ibuf = vec![0.0f32; pad];
-                for block in 0..p.blocks {
+                let mut ipanel = vec![0.0f32; batch * pad];
+                for block in b0..b1 {
                     let lo = block * pad;
                     let hi = ((block + 1) * pad).min(p.m);
-                    for r in 0..batch {
-                        let xr = &x[r * p.d..(r + 1) * p.d];
-                        project_block(xr, sr, block, pad, &mut buf);
-                        project_block(xr, si, block, pad, &mut ibuf);
-                        let or = &mut out[r * p.m + lo..r * p.m + hi];
-                        let it = or
-                            .iter_mut()
-                            .zip(buf.iter())
-                            .zip(ibuf.iter())
-                            .zip(&br[lo..hi])
-                            .zip(&bi[lo..hi]);
-                        for ((((o, &zr), &zi), &brj), &bij) in it {
-                            let re = zr * inv_p + brj;
-                            let im = zi * inv_p + bij;
+                    project_block_panel(x, p.d, sr, block, pad, &mut panel);
+                    project_block_panel(x, p.d, si, block, pad, &mut ipanel);
+                    for ((dr, zr), zi) in dst
+                        .chunks_exact_mut(stride)
+                        .zip(panel.chunks_exact(pad))
+                        .zip(ipanel.chunks_exact(pad))
+                    {
+                        let dr = &mut dr[lo - col0..hi - col0];
+                        let it = dr.iter_mut().zip(zr).zip(zi).zip(&br[lo..hi]).zip(&bi[lo..hi]);
+                        for ((((o, &re0), &im0), &brj), &bij) in it {
+                            let re = re0 * inv_p + brj;
+                            let im = im0 * inv_p + bij;
                             *o = scale * (re * re + im * im);
                         }
                     }
                 }
             }
-            Variant::Match => panic!("phi_match is not a dense feature map"),
+            Variant::Match => unreachable!("rejected by map_batch_threads"),
         }
     }
 }
@@ -279,13 +382,14 @@ mod tests {
         let pad = 8usize;
         let params = SorfParams::generate(Variant::Gauss, pad, pad, 1.0, &mut rng);
         assert_eq!(params.padded, pad);
-        // Column k of the block matrix = block applied to basis vector k.
+        // Column k of the block matrix = block applied to basis vector
+        // k (a one-row panel through the batch-major projection).
         let mut cols = vec![vec![0.0f32; pad]; pad];
         let mut buf = vec![0.0f32; pad];
         for (k, col) in cols.iter_mut().enumerate() {
             let mut e = vec![0.0f32; pad];
             e[k] = 1.0;
-            project_block(&e, &params.signs[0], 0, pad, &mut buf);
+            project_block_panel(&e, pad, &params.signs[0], 0, pad, &mut buf);
             col.copy_from_slice(&buf);
         }
         for i in 0..pad {
@@ -317,6 +421,37 @@ mod tests {
         SorfMap::new(a).map_batch(&x, 3, &mut ya);
         SorfMap::new(b).map_batch(&x, 3, &mut yb);
         assert_eq!(ya, yb);
+    }
+
+    /// The thread budget is a pure scheduling knob: block-parallel and
+    /// row-parallel dispatch must land on exactly the bits the serial
+    /// path produces, for single-block (m <= p) and stacked (m > p)
+    /// maps alike. (The full (p, batch, threads) grid lives in
+    /// tests/fastrf_prop.rs; this is the unit-level pin.)
+    #[test]
+    fn map_batch_threads_bitwise_equals_serial() {
+        check::check("sorf-threads", 0x57, 10, |rng| {
+            let d = 1 + rng.usize(12);
+            // Alternate between single-block and multi-block shapes.
+            let m = if rng.bool(0.5) { 1 + rng.usize(8) } else { 20 + rng.usize(80) };
+            let batch = 1 + rng.usize(6);
+            for variant in [Variant::Gauss, Variant::Opu] {
+                let params = SorfParams::generate(variant, d, m, 0.8, rng);
+                let map = SorfMap::new(params);
+                let mut x = vec![0.0f32; batch * d];
+                rng.fill_gaussian(&mut x, 1.0);
+                let mut reference = vec![0.0f32; batch * m];
+                map.map_batch(&x, batch, &mut reference);
+                for threads in [2usize, 3, 8] {
+                    let mut got = vec![0.0f32; batch * m];
+                    map.map_batch_threads(&x, batch, &mut got, threads);
+                    assert_eq!(
+                        got, reference,
+                        "variant {variant:?} d={d} m={m} batch={batch} threads={threads}"
+                    );
+                }
+            }
+        });
     }
 
     /// Clones are interchangeable (the sharded pipeline's contract).

@@ -37,10 +37,14 @@
 //! (and serve as baselines when it is): the dense maps in [`features`]
 //! (`--engine cpu` / `cpu-inline`) and the **structured** SORF map in
 //! [`fastrf`] (`--engine cpu-sorf`), which replaces the dense `O(d·m)`
-//! projection with `HD`-product blocks computed by an in-place fast
-//! Walsh–Hadamard transform in `O(p log p)` — the software analogue of
-//! the paper's constant-time optical transform. See [`fastrf`] for the
-//! dataflow diagram and calibration.
+//! projection with `HD`-product blocks computed by a **batch-major**
+//! fast Walsh–Hadamard transform in `O(p log p)` — the software
+//! analogue of the paper's constant-time optical transform. Each shard
+//! executes its batches panel-wise (one diagonal pass + one batched
+//! FWHT per round over the whole batch) and can split independent
+//! blocks or panel rows across a `--fwht-threads` budget, with
+//! embeddings bitwise identical at every setting. See [`fastrf`] for
+//! the dataflow diagram and calibration.
 //!
 //! Quick tour: generate a dataset ([`gen`]), sample graphlets
 //! ([`sample`]), embed them with a feature map ([`features`] on CPU,

@@ -17,10 +17,12 @@
 //! ```
 //!
 //! Common flags: `--seed N`, `--engine pjrt|cpu|cpu-inline|cpu-sorf`,
-//! `--shards N`, `--workers N`, `--artifacts DIR`, `--out DIR`,
-//! `--scale quick|full`. The `cpu-sorf` engine swaps the dense random
-//! projection for structured SORF features (FWHT `HD` products, see
-//! `graphlet_rf::fastrf`) on every feature shard.
+//! `--shards N`, `--workers N`, `--fwht-threads N`, `--artifacts DIR`,
+//! `--out DIR`, `--scale quick|full`. The `cpu-sorf` engine swaps the
+//! dense random projection for structured SORF features (batch-major
+//! FWHT `HD` panels, see `graphlet_rf::fastrf`) on every feature
+//! shard; `--fwht-threads` gives each shard a panel-worker budget
+//! (default 1 — shard-level parallelism owns the cores).
 //!
 //! Serve path (one warm pipeline + cache behind a TCP line-JSON
 //! protocol; see `graphlet_rf::serve` for the full diagram):
@@ -122,18 +124,24 @@ const HELP: &str = "graphlet-rf — Fast Graph Kernel with Optical Random Featur
 USAGE: graphlet-rf <quickstart|fig1-left|fig1-right|fig2-left|fig2-right|fig3|thm1|gnn|info|serve|serve-bench>
              [--scale quick|mid|full] [--seed N]
              [--engine pjrt|cpu|cpu-inline|cpu-sorf]
-             [--shards N] [--workers N] [--variant opu|gauss|gauss-eig]
+             [--shards N] [--workers N] [--fwht-threads N]
+             [--variant opu|gauss|gauss-eig]
              [--artifacts DIR] [--out DIR] [--dataset dd|reddit] [--tu-dir DIR]
 
 --shards N runs N parallel feature-engine shards (jobs round-robin over
 shards); embeddings are bitwise identical for every shard/worker count.
 
 --engine cpu-sorf replaces the dense random projection with structured
-SORF features: HD-product blocks computed by an in-place fast
+SORF features: HD-product blocks computed by a batch-major fast
 Walsh-Hadamard transform in O(p log p) per block instead of O(d*m) —
 the software analogue of the paper's constant-time optical transform.
 Deterministic per seed; a different random-feature family than cpu, so
 embeddings differ numerically but match statistically.
+
+--fwht-threads N gives each cpu-sorf shard N panel workers: independent
+HD blocks (and, for single-block maps, panel rows) split across scoped
+threads. Default 1, so shard-level parallelism owns the cores; another
+pure scheduling knob — embeddings never move a bit.
 
 serve       long-running embedding daemon: line-delimited JSON over TCP,
             one persistent pipeline, cross-request batching, embedding
@@ -208,6 +216,9 @@ fn gsa_from_args(ctx: &ExpContext, args: &Args, seed: u64) -> Result<GsaConfig> 
     if let Some(workers) = args.try_parse::<usize>("workers").map_err(|e| anyhow::anyhow!(e))? {
         cfg.workers = workers.max(1);
     }
+    if let Some(t) = args.try_parse::<usize>("fwht-threads").map_err(|e| anyhow::anyhow!(e))? {
+        cfg.fwht_threads = t.max(1);
+    }
     if cfg.variant == Variant::Match {
         anyhow::bail!(
             "this command embeds with dense feature maps; use --variant opu|gauss|gauss-eig \
@@ -235,7 +246,8 @@ fn serve_cmd(ctx: &ExpContext, args: &Args, seed: u64) -> Result<()> {
         ..defaults
     };
     println!(
-        "serve: k={} s={} m={} variant={} engine={:?} shards={} workers={} cache_cap={}",
+        "serve: k={} s={} m={} variant={} engine={:?} shards={} workers={} fwht_threads={} \
+         cache_cap={}",
         cfg.gsa.k,
         cfg.gsa.s,
         cfg.gsa.m,
@@ -243,6 +255,7 @@ fn serve_cmd(ctx: &ExpContext, args: &Args, seed: u64) -> Result<()> {
         cfg.gsa.engine,
         cfg.gsa.shards,
         cfg.gsa.workers,
+        cfg.gsa.fwht_threads,
         cfg.cache_capacity
     );
     let server = Server::bind(&addr, cfg, ctx.engine.as_ref())?;

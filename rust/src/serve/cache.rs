@@ -6,8 +6,8 @@
 //! The fingerprint covers every [`GsaConfig`] field that changes the
 //! math (k, s, m, variant, impl, sampler, sigma, engine mode, seed) —
 //! deliberately *not* the scheduling knobs (workers, shards, queue_cap,
-//! batch in CPU modes would be safe too, but batch selects the PJRT
-//! artifact, so it is included).
+//! fwht_threads; batch in CPU modes would be safe too, but batch
+//! selects the PJRT artifact, so it is included).
 //!
 //! Eviction is LRU at a fixed capacity: embeddings are all the same
 //! size (m floats), so the cache's memory is `capacity * m * 4` bytes,
@@ -38,6 +38,11 @@ pub struct CacheKey {
 pub struct CacheStats {
     pub hits: u64,
     pub misses: u64,
+    /// Rows dropped by LRU eviction since the cache was built (inserts
+    /// refused at capacity 0 are not evictions — nothing was cached).
+    /// Eviction telemetry: a high rate relative to hits means the
+    /// working set exceeds `capacity` and the cache is churning.
+    pub evictions: u64,
     pub len: usize,
     pub capacity: usize,
 }
@@ -57,6 +62,7 @@ struct CacheInner {
     next_stamp: u64,
     hits: u64,
     misses: u64,
+    evictions: u64,
 }
 
 impl CacheInner {
@@ -89,6 +95,7 @@ impl EmbeddingCache {
                 next_stamp: 0,
                 hits: 0,
                 misses: 0,
+                evictions: 0,
             }),
             capacity,
         }
@@ -127,6 +134,7 @@ impl EmbeddingCache {
                 Some((stamp, old)) => {
                     g.order.remove(&stamp);
                     g.map.remove(&old);
+                    g.evictions += 1;
                 }
                 None => break,
             }
@@ -139,7 +147,13 @@ impl EmbeddingCache {
 
     pub fn stats(&self) -> CacheStats {
         let g = self.inner.lock().expect("cache lock");
-        CacheStats { hits: g.hits, misses: g.misses, len: g.map.len(), capacity: self.capacity }
+        CacheStats {
+            hits: g.hits,
+            misses: g.misses,
+            evictions: g.evictions,
+            len: g.map.len(),
+            capacity: self.capacity,
+        }
     }
 }
 
@@ -231,6 +245,37 @@ mod tests {
         assert!(c.get(&key(5)).is_some());
     }
 
+    /// The eviction counter tracks LRU drops one-for-one: inserts below
+    /// capacity and duplicate inserts count nothing; every insert at
+    /// capacity counts exactly one victim.
+    #[test]
+    fn eviction_counter_counts_lru_drops() {
+        let c = EmbeddingCache::new(2);
+        c.insert(key(1), vec![1.0]);
+        c.insert(key(2), vec![2.0]);
+        assert_eq!(c.stats().evictions, 0, "filling to capacity evicts nothing");
+        c.insert(key(2), vec![9.0]);
+        assert_eq!(c.stats().evictions, 0, "duplicate insert evicts nothing");
+        c.insert(key(3), vec![3.0]);
+        assert_eq!(c.stats().evictions, 1);
+        c.insert(key(4), vec![4.0]);
+        let s = c.stats();
+        assert_eq!((s.evictions, s.len), (2, 2));
+        // Hits never evict.
+        assert!(c.get(&key(4)).is_some());
+        assert_eq!(c.stats().evictions, 2);
+    }
+
+    #[test]
+    fn zero_capacity_drops_inserts_without_counting_evictions() {
+        let c = EmbeddingCache::new(0);
+        c.insert(key(1), vec![1.0]);
+        c.insert(key(2), vec![2.0]);
+        let s = c.stats();
+        assert_eq!(s.evictions, 0, "nothing cached means nothing evicted");
+        assert_eq!(s.len, 0);
+    }
+
     #[test]
     fn duplicate_insert_keeps_first_row() {
         let c = EmbeddingCache::new(2);
@@ -280,6 +325,7 @@ mod tests {
             GsaConfig { workers: 7, ..base.clone() },
             GsaConfig { shards: 3, ..base.clone() },
             GsaConfig { queue_cap: 99, ..base.clone() },
+            GsaConfig { fwht_threads: 4, ..base.clone() },
         ] {
             assert_eq!(fp, config_fingerprint(&same));
         }

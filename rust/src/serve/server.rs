@@ -373,6 +373,13 @@ fn validate_graph(ctx: &ServeCtx, v: usize, edges: &[(usize, usize)]) -> Result<
 fn stats_reply(id: u64, ctx: &ServeCtx) -> String {
     let cache = ctx.cache.stats();
     let pipe = ctx.pipeline.metrics_snapshot();
+    // Backpressure gauges: admitted-but-unclaimed jobs and per-shard
+    // channel occupancy, so overload (`Overloaded`) is observable as
+    // rising depth before admission control starts rejecting.
+    let mut occupancy = Json::arr();
+    for occ in ctx.pipeline.shard_occupancy() {
+        occupancy.push(occ);
+    }
     Json::obj()
         .set("id", id)
         .set("ok", true)
@@ -382,6 +389,7 @@ fn stats_reply(id: u64, ctx: &ServeCtx) -> String {
             Json::obj()
                 .set("hits", cache.hits)
                 .set("misses", cache.misses)
+                .set("evictions", cache.evictions)
                 .set("len", cache.len)
                 .set("capacity", cache.capacity),
         )
@@ -393,6 +401,8 @@ fn stats_reply(id: u64, ctx: &ServeCtx) -> String {
                 .set("batches", pipe.batches)
                 .set("padded_rows", pipe.padded_rows)
                 .set("feature_secs", pipe.feature_secs)
+                .set("queue_depth", ctx.pipeline.queue_depth())
+                .set("shard_occupancy", occupancy)
                 .set("shards", ctx.cfg.gsa.shards.max(1))
                 .set("workers", ctx.cfg.gsa.workers.max(1)),
         )

@@ -152,6 +152,19 @@ mod tests {
         assert!(err.contains("--k") && err.contains("banana"), "{err}");
     }
 
+    /// Kebab-case option names with numeric values — the
+    /// `--fwht-threads 4` shape the engine knobs use — parse in both
+    /// the spaced and `=` styles, and absence falls back to defaults.
+    #[test]
+    fn kebab_case_numeric_options() {
+        let a = parse(&["serve", "--fwht-threads", "4", "--cache-cap=512"]);
+        assert_eq!(a.try_parse::<usize>("fwht-threads").unwrap(), Some(4));
+        assert_eq!(a.parse_or("cache-cap", 0usize), 512);
+        assert_eq!(a.try_parse::<usize>("max-nodes").unwrap(), None);
+        let b = parse(&[]);
+        assert_eq!(b.parse_or("fwht-threads", 1usize), 1);
+    }
+
     #[test]
     fn flag_followed_by_flag_is_flag() {
         let a = parse(&["--fast", "--k", "7"]);

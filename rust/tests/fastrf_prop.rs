@@ -1,0 +1,181 @@
+//! Differential battery for the batch-major FWHT/SORF execution path.
+//!
+//! The PR 4 refactor rewrote the SORF hot loop from row-at-a-time to
+//! batch-major panels with an optional thread budget; its whole
+//! contract is that no execution shape moves a single bit. This
+//! battery pins that, seeded and randomized, across the full grid:
+//!
+//! - `fwht_batch` / `fwht_batch_par` vs the scalar `fwht_inplace` vs
+//!   the naive `O(p²)` sign-sum reference, for every power of two
+//!   `p ≤ 4096` and batch sizes `{1, 3, B, B+1}` (B = the test
+//!   pipeline's compiled batch size);
+//! - the involution law `H(Hx) = p·x`, exact on `{-1, 0, 1}` inputs
+//!   (all intermediates stay ≤ 2²⁴, so f32 arithmetic is exact);
+//! - `SorfMap::map_batch_threads` / `DenseMap::map_batch_threads` vs
+//!   their row-at-a-time scalar evaluation, across thread budgets.
+//!
+//! The thread axis additionally honors `GRAPHLET_RF_TEST_THREADS`
+//! (the CI matrix runs 1 and 4) so the parallel path is exercised on
+//! every push, not just where a test hardcodes it.
+
+use graphlet_rf::coordinator::fwht_threads_from_env_or;
+use graphlet_rf::fastrf::{
+    fwht_batch, fwht_batch_par, fwht_inplace, naive_hadamard, DenseMap, SorfMap, SorfParams,
+};
+use graphlet_rf::features::{CpuFeatureMap, RfParams, Variant};
+use graphlet_rf::util::Rng;
+
+/// The compiled-size batch B of the differential grid (matches the
+/// small-test pipeline batch used across tests/).
+const B: usize = 32;
+
+/// Every power of two up to 4096.
+fn pow2_grid() -> Vec<usize> {
+    (0..=12).map(|e| 1usize << e).collect()
+}
+
+fn batch_grid() -> [usize; 4] {
+    [1, 3, B, B + 1]
+}
+
+/// Integer-valued panel in [-8, 8]: every FWHT intermediate for
+/// p ≤ 4096 stays ≤ 8·4096 = 2¹⁵ ≪ 2²⁴, so f32 sums are exact and
+/// bitwise comparison against the naive sign-sum is meaningful.
+fn integer_panel(rng: &mut Rng, len: usize) -> Vec<f32> {
+    (0..len).map(|_| rng.usize(17) as f32 - 8.0).collect()
+}
+
+#[test]
+fn fwht_batch_matches_scalar_and_naive_across_grid() {
+    let mut rng = Rng::new(0xBA77E41);
+    for p in pow2_grid() {
+        for rows in batch_grid() {
+            let panel = integer_panel(&mut rng, rows * p);
+
+            // Scalar path: the per-row in-place butterfly.
+            let mut scalar = panel.clone();
+            for row in scalar.chunks_exact_mut(p) {
+                fwht_inplace(row);
+            }
+
+            // Batch-major path.
+            let mut batch = panel.clone();
+            fwht_batch(&mut batch, p);
+            assert_eq!(batch, scalar, "fwht_batch vs scalar: p={p} rows={rows}");
+
+            // Naive O(p²) reference, bit-for-bit on integer inputs.
+            // Capped at p ≤ 256 to keep the battery fast in debug
+            // builds; the scalar path itself is pinned against the
+            // naive reference at these sizes by the fwht unit tests,
+            // so transitivity covers the rest of the grid.
+            if p <= 256 {
+                for (br, pr) in batch.chunks_exact(p).zip(panel.chunks_exact(p)) {
+                    assert_eq!(br, &naive_hadamard(pr)[..], "naive: p={p} rows={rows}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn fwht_batch_par_matches_serial_across_grid_and_threads() {
+    let env_threads = fwht_threads_from_env_or(2);
+    let mut rng = Rng::new(0xBA77E42);
+    for p in pow2_grid() {
+        for rows in batch_grid() {
+            // Gaussian inputs: identical per-row butterfly order means
+            // identical bits with no integer restriction.
+            let mut panel = vec![0.0f32; rows * p];
+            rng.fill_gaussian(&mut panel, 1.0);
+            let mut reference = panel.clone();
+            fwht_batch(&mut reference, p);
+            for threads in [1usize, 2, 4, env_threads, rows + 1] {
+                let mut got = panel.clone();
+                fwht_batch_par(&mut got, p, threads);
+                assert_eq!(got, reference, "p={p} rows={rows} threads={threads}");
+            }
+        }
+    }
+}
+
+#[test]
+fn fwht_involution_recovers_p_times_input_exactly() {
+    let mut rng = Rng::new(0xBA77E43);
+    for p in pow2_grid() {
+        for rows in [1usize, 3] {
+            // {-1, 0, 1} inputs: after two unnormalized transforms the
+            // magnitudes reach at most p² = 2²⁴, still exact in f32.
+            let panel: Vec<f32> = (0..rows * p).map(|_| rng.usize(3) as f32 - 1.0).collect();
+            let mut twice = panel.clone();
+            fwht_batch(&mut twice, p);
+            fwht_batch(&mut twice, p);
+            let scaled: Vec<f32> = panel.iter().map(|&v| v * p as f32).collect();
+            assert_eq!(twice, scaled, "H(Hx) != p·x at p={p} rows={rows}");
+        }
+    }
+}
+
+/// SORF batch execution vs its own scalar path: evaluating the map one
+/// row at a time (batch = 1 calls) is the row-at-a-time execution the
+/// refactor replaced; every batch size and thread budget must
+/// reproduce it bit for bit, for both feature variants and for
+/// single-block (m ≤ p) and stacked (m > p) shapes.
+#[test]
+fn sorf_map_batch_differential_vs_scalar_rows() {
+    let env_threads = fwht_threads_from_env_or(2);
+    let mut rng = Rng::new(0x50FF);
+    for (d, m) in [(9usize, 12usize), (9, 100), (25, 2048), (6, 130)] {
+        for variant in [Variant::Gauss, Variant::Opu] {
+            let params = SorfParams::generate(variant, d, m, 0.7, &mut rng);
+            let map = SorfMap::new(params);
+            for rows in batch_grid() {
+                let mut x = vec![0.0f32; rows * d];
+                rng.fill_gaussian(&mut x, 1.0);
+                // Scalar path: one row per call.
+                let mut scalar = vec![0.0f32; rows * m];
+                for (xr, or) in x.chunks_exact(d).zip(scalar.chunks_exact_mut(m)) {
+                    map.map_batch(xr, 1, or);
+                }
+                for threads in [1usize, 2, 4, env_threads] {
+                    let mut got = vec![0.0f32; rows * m];
+                    map.map_batch_threads(&x, rows, &mut got, threads);
+                    assert_eq!(
+                        got, scalar,
+                        "sorf {variant:?} d={d} m={m} rows={rows} threads={threads}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// The dense engine's symmetric entry point: row-parallel dispatch vs
+/// the unblocked per-row reference map, bitwise.
+#[test]
+fn dense_map_batch_differential_vs_scalar_rows() {
+    let env_threads = fwht_threads_from_env_or(2);
+    let mut rng = Rng::new(0xDE4511);
+    for (d, m) in [(9usize, 40usize), (25, 300)] {
+        for variant in [Variant::Gauss, Variant::Opu] {
+            let params = RfParams::generate(variant, d, m, 0.7, &mut rng);
+            let map = DenseMap::new(params.clone());
+            let reference = CpuFeatureMap::new(params);
+            for rows in batch_grid() {
+                let mut x = vec![0.0f32; rows * d];
+                rng.fill_gaussian(&mut x, 1.0);
+                let mut scalar = vec![0.0f32; rows * m];
+                for (xr, or) in x.chunks_exact(d).zip(scalar.chunks_exact_mut(m)) {
+                    reference.map_batch(xr, 1, or);
+                }
+                for threads in [1usize, 2, env_threads] {
+                    let mut got = vec![0.0f32; rows * m];
+                    map.map_batch_threads(&x, rows, &mut got, threads);
+                    assert_eq!(
+                        got, scalar,
+                        "dense {variant:?} d={d} m={m} rows={rows} threads={threads}"
+                    );
+                }
+            }
+        }
+    }
+}

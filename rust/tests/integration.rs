@@ -6,7 +6,7 @@
 //! `make artifacts` has not run.
 
 use graphlet_rf::classify::{train_and_eval, TrainConfig};
-use graphlet_rf::coordinator::{embed_dataset, EngineMode, GsaConfig};
+use graphlet_rf::coordinator::{embed_dataset, fwht_threads_from_env_or, EngineMode, GsaConfig};
 use graphlet_rf::data::Dataset;
 use graphlet_rf::features::Variant;
 use graphlet_rf::gen::{DdLikeConfig, RedditLikeConfig, SbmConfig};
@@ -139,6 +139,10 @@ fn sharded_pipeline_bitwise_stable_on_variable_size_graphs() {
             batch: 32,
             shards,
             workers,
+            // The CI matrix reruns this whole test at FWHT budgets 1
+            // and 4 (GRAPHLET_RF_TEST_THREADS), so shard/worker
+            // stability is pinned on the parallel panel path too.
+            fwht_threads: fwht_threads_from_env_or(1),
             engine: mode,
             seed: 21,
             ..Default::default()
@@ -154,6 +158,42 @@ fn sharded_pipeline_bitwise_stable_on_variable_size_graphs() {
                 );
                 assert_eq!(m.samples, ds.len() * 120);
                 assert_eq!(m.shard_feature_secs.len(), shards);
+            }
+        }
+    }
+}
+
+/// The `--fwht-threads` budget is the fourth scheduling axis the
+/// bitwise invariant quantifies over: cpu-sorf embeddings must be
+/// identical across budgets {1, 2, 4} for every shard × worker combo
+/// the sharded-stability test already pins — batch-major panels,
+/// block-parallel dispatch, and row-parallel FWHT all included.
+#[test]
+fn sorf_bitwise_stable_across_fwht_thread_budgets() {
+    let ds = DdLikeConfig { per_class: 6, ..Default::default() }.generate(&mut Rng::new(8));
+    let mk = |fwht_threads: usize, shards: usize, workers: usize| GsaConfig {
+        k: 5,
+        s: 120,
+        m: 48,
+        batch: 32,
+        shards,
+        workers,
+        fwht_threads,
+        engine: EngineMode::CpuSorf,
+        seed: 21,
+        ..Default::default()
+    };
+    let (reference, _) = embed_dataset(&ds, &mk(1, 1, 1), None).unwrap();
+    assert!(reference.iter().all(|v| v.is_finite()));
+    for fwht_threads in [2usize, 4] {
+        for shards in [1usize, 2, 4] {
+            for workers in [1usize, 4] {
+                let (e, m) = embed_dataset(&ds, &mk(fwht_threads, shards, workers), None).unwrap();
+                assert_eq!(
+                    e, reference,
+                    "bitwise drift: fwht_threads={fwht_threads} shards={shards} workers={workers}"
+                );
+                assert_eq!(m.samples, ds.len() * 120);
             }
         }
     }

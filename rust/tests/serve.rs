@@ -12,7 +12,7 @@ use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpStream};
 use std::thread::JoinHandle;
 
-use graphlet_rf::coordinator::{embed_dataset, EngineMode, GsaConfig};
+use graphlet_rf::coordinator::{embed_dataset, fwht_threads_from_env_or, EngineMode, GsaConfig};
 use graphlet_rf::data::Dataset;
 use graphlet_rf::gen::SbmConfig;
 use graphlet_rf::serve::{
@@ -37,6 +37,9 @@ fn test_gsa() -> GsaConfig {
         // whole file per CPU engine via GRAPHLET_RF_TEST_ENGINE
         // (cpu-sorf included) — the daemon contract is identical.
         engine: EngineMode::from_env_or(EngineMode::Cpu),
+        // Likewise per FWHT budget (GRAPHLET_RF_TEST_THREADS 1 and 4):
+        // a scheduling knob, so every daemon reply stays bitwise equal.
+        fwht_threads: fwht_threads_from_env_or(1),
         seed: 42,
         ..Default::default()
     }
@@ -244,8 +247,80 @@ fn cache_eviction_is_lru_through_the_daemon() {
     assert_eq!(cache.get("capacity").and_then(Json::as_u64), Some(2));
     let hits = cache.get("hits").and_then(Json::as_u64).unwrap();
     assert!(hits >= 2, "hits = {hits}");
+    // Eviction telemetry: the sequence above evicted exactly twice
+    // (graph 2's insert dropped LRU graph 1; graph 1's re-insert
+    // dropped LRU graph 2) — sequential roundtrips make this exact.
+    assert_eq!(cache.get("evictions").and_then(Json::as_u64), Some(2));
 
     drop(client);
+    send_shutdown(&addr.to_string()).unwrap();
+    server.join().unwrap();
+}
+
+/// Backpressure telemetry through the real daemon: with one worker
+/// pinned on a slow job, queued work must show up as `queue_depth > 0`
+/// in the `stats` op *before* admission control starts rejecting — and
+/// once the bound is exceeded, `Overloaded` errors must actually fire.
+/// `shard_occupancy` rides along with one gauge per shard.
+#[test]
+fn stats_expose_queue_depth_before_overload_fires() {
+    let mut gsa = test_gsa();
+    gsa.workers = 1;
+    gsa.shards = 1;
+    gsa.queue_cap = 4; // job-queue capacity = queue_cap * workers = 4
+    gsa.s = 30_000; // each job pins the lone worker for a long time
+    gsa.m = 8;
+    let (addr, server) = start_server(ServeConfig { gsa, ..Default::default() });
+    let ds = quickstart_ds();
+    let mut client = Client::connect(addr);
+
+    // Pipeline admitted-but-slow work without reading replies: the lone
+    // worker claims at most one job instantly, the rest sit in the
+    // bounded queue.
+    for id in 0..4u64 {
+        client.send(&embed_request(id, id as usize, &ds.graphs[0]));
+    }
+    // Stats replies are synthetic (written ahead of the slow embeds),
+    // so the snapshot is readable while the jobs are still queued.
+    client.send(r#"{"op":"stats","id":100}"#);
+    let stats = loop {
+        let line = client.recv();
+        let v = Json::parse(line.trim()).unwrap();
+        if v.get("op").and_then(Json::as_str) == Some("stats") {
+            break v;
+        }
+    };
+    let pipe = stats.get("pipeline").unwrap();
+    let depth = pipe.get("queue_depth").and_then(Json::as_u64).unwrap();
+    assert!(depth > 0, "backlog behind a busy worker must be visible, got depth {depth}");
+    let occupancy = pipe.get("shard_occupancy").and_then(Json::as_array).unwrap();
+    assert_eq!(occupancy.len(), 1, "one gauge per shard");
+    assert!(occupancy[0].as_u64().is_some(), "occupancy is a counter");
+
+    // Now push past the bound: the queue (cap 4) already holds the
+    // backlog, so a burst of extra submits must trip admission control.
+    for id in 200..208u64 {
+        client.send(&embed_request(id, (id - 200) as usize, &ds.graphs[1]));
+    }
+    // At most one burst submit can have found a free queue slot, so at
+    // least 7 rejections reply instantly — reading 6 never blocks on a
+    // slow accepted job.
+    let mut overloaded = 0usize;
+    for _ in 0..6 {
+        let line = client.recv();
+        if line.contains("overloaded") {
+            overloaded += 1;
+        }
+    }
+    assert!(overloaded > 0, "a burst past the queue bound must be rejected as overloaded");
+
+    // Slam the connection shut without draining the slow embeds; the
+    // daemon must still answer a fresh connection and shut down clean.
+    drop(client);
+    let mut client2 = Client::connect(addr);
+    let pong = client2.roundtrip(r#"{"op":"ping","id":1}"#);
+    assert!(pong.contains("\"ok\":true"), "{pong}");
+    drop(client2);
     send_shutdown(&addr.to_string()).unwrap();
     server.join().unwrap();
 }

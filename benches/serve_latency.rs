@@ -37,11 +37,14 @@ fn main() {
     let addr = server.local_addr().to_string();
     let handle = std::thread::spawn(move || server.run().expect("serve run"));
 
-    let pair = run_bench(&addr, 4, 32, 7).expect("bench run");
-    println!("serve_latency/cold  {}", pair.cold.line());
-    println!("serve_latency/warm  {}", pair.warm.line());
-    assert_eq!(pair.cold.errors, 0, "cold pass must be error-free");
-    assert_eq!(pair.warm.errors, 0, "warm pass must be error-free");
+    let run = run_bench(&addr, 4, 32, 7).expect("bench run");
+    for (label, report) in &run.passes {
+        println!("serve_latency/{label}  {}", report.line());
+        assert_eq!(report.errors, 0, "{label} pass must be error-free");
+    }
+    let warm = run.get("warm_l1").expect("warm_l1 pass");
+    assert_eq!(warm.recomputed_graphs, 0, "warm_l1 pass must be fully cached");
+    println!("{}", run.json());
 
     send_shutdown(&addr).expect("shutdown");
     handle.join().expect("server thread");

@@ -4,6 +4,30 @@
 //! so the real D&D / REDDIT-BINARY data can be dropped in when available;
 //! the synthetic substitutes in [`crate::gen`] produce the same `Dataset`
 //! type, so everything downstream is agnostic.
+//!
+//! Expected on-disk layout for `--data-dir DIR` (quickstart and fig3):
+//! one directory per dataset, holding the unzipped TU files named after
+//! the dataset — for D&D (`--dataset dd`, files `DD_*`) and
+//! REDDIT-BINARY (`--dataset reddit`, files `REDDIT-BINARY_*`; the
+//! short CLI names map onto the archive prefixes via [`tu_name`], and a
+//! verbatim TU prefix like `--dataset PROTEINS` also works; archives
+//! from <https://chrsmrrs.github.io/datasets/>):
+//!
+//! ```text
+//!  DIR/
+//!    DD_A.txt                 edge list, "a, b" per line, 1-based
+//!                             global node ids, both directions listed
+//!    DD_graph_indicator.txt   line n = graph id (1-based) of node n;
+//!                             node blocks contiguous per graph
+//!    DD_graph_labels.txt      line g = class label of graph g (any two
+//!                             distinct integers; normalized to {0,1})
+//! ```
+//!
+//! Optional TU files (`*_node_labels.txt`, `*_edge_labels.txt`,
+//! `*_graph_attributes.txt`, …) are ignored: the graphlet pipeline is
+//! structure-only. Malformed input fails with a contextual `Err` (see
+//! [`load_tu_dataset`]), so a bad drop-in is a readable CLI error, not
+//! a panic.
 
 use std::io::BufRead;
 use std::path::Path;
@@ -77,6 +101,19 @@ impl Dataset {
             mean_v,
             mean_deg
         )
+    }
+}
+
+/// Map the CLI's short dataset names onto the canonical TU archive
+/// prefixes (`--dataset dd` → files `DD_*.txt`, `--dataset reddit` →
+/// `REDDIT-BINARY_*.txt`), so the same `--dataset` value selects the
+/// synthetic substitute *and* the real drop-in under `--data-dir`. Any
+/// other name is taken to already be a TU prefix and passes through.
+pub fn tu_name(name: &str) -> &str {
+    match name {
+        "dd" => "DD",
+        "reddit" => "REDDIT-BINARY",
+        other => other,
     }
 }
 
@@ -379,6 +416,17 @@ mod tests {
         let err = format!("{:#}", load_tu_dataset(&dir, "ghost").unwrap_err());
         assert!(err.contains("opening"), "{err}");
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// The CLI's `--dataset dd|reddit` names must reach the parser as
+    /// the real archives' file prefixes; true TU prefixes pass through.
+    #[test]
+    fn tu_name_maps_cli_names_to_archive_prefixes() {
+        assert_eq!(tu_name("dd"), "DD");
+        assert_eq!(tu_name("reddit"), "REDDIT-BINARY");
+        assert_eq!(tu_name("DD"), "DD");
+        assert_eq!(tu_name("REDDIT-BINARY"), "REDDIT-BINARY");
+        assert_eq!(tu_name("PROTEINS"), "PROTEINS");
     }
 
     #[test]

@@ -177,7 +177,11 @@ pub fn fig3(
     seed: u64,
 ) -> Result<Json> {
     let (ds, k, s) = match (dataset, tu_dir) {
-        (name, Some(dir)) => (crate::data::load_tu_dataset(dir, name)?, 7, scale.s),
+        // `--dataset dd|reddit` selects the same data in both modes:
+        // the short name maps onto the TU archive's file prefix here.
+        (name, Some(dir)) => {
+            (crate::data::load_tu_dataset(dir, crate::data::tu_name(name))?, 7, scale.s)
+        }
         ("dd", None) => {
             let per_class = scale.per_class.max(30) * 2;
             (DdLikeConfig { per_class, ..Default::default() }.generate(&mut Rng::new(seed)), 7, scale.s)

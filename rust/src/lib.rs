@@ -30,8 +30,12 @@
 //! [`coordinator::embed_dataset`] batch adapter; heavy traffic uses the
 //! [`serve`] daemon (`graphlet-rf serve`), which keeps the pipeline and
 //! artifacts warm across requests, batches rows from concurrent TCP
-//! clients together, and fronts it all with a content-addressed
-//! embedding cache.
+//! clients together, and fronts it all with a **two-level**
+//! content-addressed embedding cache: an in-RAM LRU (optionally
+//! cost-aware) over the crash-tolerant on-disk segment log in
+//! [`store`] (`--store-dir`), so a daemon restart serves previously
+//! computed rows bitwise identical from disk instead of recomputing
+//! them.
 //!
 //! Three CPU feature engines back the shards when PJRT is unavailable
 //! (and serve as baselines when it is): the dense maps in [`features`]
@@ -68,4 +72,5 @@ pub mod mmd;
 pub mod runtime;
 pub mod sample;
 pub mod serve;
+pub mod store;
 pub mod util;

@@ -24,15 +24,22 @@
 //! shard; `--fwht-threads` gives each shard a panel-worker budget
 //! (default 1 — shard-level parallelism owns the cores).
 //!
-//! Serve path (one warm pipeline + cache behind a TCP line-JSON
-//! protocol; see `graphlet_rf::serve` for the full diagram):
+//! Serve path (one warm pipeline + a two-level cache behind a TCP
+//! line-JSON protocol; see `graphlet_rf::serve` for the full diagram):
 //!
 //! ```text
-//! clients ──TCP──► per-conn reader ──┬─ cache hit ───► per-conn writer
+//! clients ──TCP──► per-conn reader ──┬─ L1 RAM hit ──► per-conn writer
+//!                                    ├─ L2 store hit (--store-dir,
+//!                                    │   promoted to L1) ──► writer
 //!                                    └─ miss: GraphJob ──► shared
 //!                  StreamingPipeline (workers ► shards) ──► Completed
-//!                                    └──────────────────► per-conn writer
+//!                                    └─ write-through L2+L1 ──► writer
 //! ```
+//!
+//! With `--store-dir DIR` the daemon persists every computed row to an
+//! append-only segment log (`graphlet_rf::store`); a restarted daemon
+//! reopens the log and serves yesterday's rows bitwise identical with
+//! zero recomputes.
 //!
 //! Unknown subcommands print the usage text to **stderr** and exit
 //! nonzero; `graphlet-rf help` (or no arguments) prints it to stdout
@@ -100,7 +107,15 @@ fn main() -> Result<()> {
         }
         "fig3" => {
             let dataset = args.str_or("dataset", "dd").to_string();
-            let tu_dir = args.get("tu-dir").map(std::path::Path::new);
+            // --data-dir is the canonical real-data flag (--tu-dir kept
+            // as an alias): point it at a TU-format directory holding
+            // <dataset>_A.txt etc. (see rust/src/data/mod.rs for the
+            // layout) to run the fig3 protocol on D&D / REDDIT-BINARY
+            // instead of the synthetic substitutes.
+            let tu_dir = args
+                .get("data-dir")
+                .or_else(|| args.get("tu-dir"))
+                .map(std::path::Path::new);
             figures::fig3(&ctx, &scale, &dataset, tu_dir, seed)?;
         }
         "thm1" => {
@@ -109,7 +124,7 @@ fn main() -> Result<()> {
         "gnn" => gnn_cmd(&ctx, &args, seed)?,
         "info" => info(&ctx)?,
         "serve" => serve_cmd(&ctx, &args, seed)?,
-        "serve-bench" => serve_bench_cmd(&args, seed)?,
+        "serve-bench" => serve_bench_cmd(&ctx, &args, seed)?,
         "help" => println!("{HELP}"),
         other => {
             eprintln!("unknown subcommand {other:?}\n\n{HELP}");
@@ -126,7 +141,9 @@ USAGE: graphlet-rf <quickstart|fig1-left|fig1-right|fig2-left|fig2-right|fig3|th
              [--engine pjrt|cpu|cpu-inline|cpu-sorf]
              [--shards N] [--workers N] [--fwht-threads N]
              [--variant opu|gauss|gauss-eig]
-             [--artifacts DIR] [--out DIR] [--dataset dd|reddit] [--tu-dir DIR]
+             [--artifacts DIR] [--out DIR] [--dataset dd|reddit]
+             [--data-dir DIR] [--tu-dir DIR]
+             [--store-dir DIR] [--cache-policy lru|cost-aware]
 
 --shards N runs N parallel feature-engine shards (jobs round-robin over
 shards); embeddings are bitwise identical for every shard/worker count.
@@ -144,13 +161,27 @@ threads. Default 1, so shard-level parallelism owns the cores; another
 pure scheduling knob — embeddings never move a bit.
 
 serve       long-running embedding daemon: line-delimited JSON over TCP,
-            one persistent pipeline, cross-request batching, embedding
-            cache. Flags: --port N (default 7878), --addr HOST:PORT,
-            --cache-cap N, --max-nodes N, --max-edges N, plus the usual
-            embedding flags (--k --s --m --variant --shards --workers).
+            one persistent pipeline, cross-request batching, two-level
+            embedding cache. Flags: --port N (default 7878),
+            --addr HOST:PORT, --cache-cap N,
+            --cache-policy lru|cost-aware (L1 eviction; cost-aware
+            weighs victims by row size x recompute cost),
+            --store-dir DIR (persistent L2 segment log — rows survive
+            daemon restarts and are served bitwise identical from disk),
+            --max-nodes N, --max-edges N, plus the usual embedding
+            flags (--k --s --m --variant --shards --workers).
 serve-bench loopback load generator: --addr HOST:PORT (default
             127.0.0.1:7878), --clients C, --requests N per client;
-            reports cold/warm throughput and p50/p99 latency.
+            reports labeled cold/warm_l1 passes (throughput, p50/p99,
+            daemon-verified recompute counts) plus one JSON result
+            line. With --store-dir DIR it instead hosts the daemon
+            itself and adds the warm_l2 restart pass: kill the daemon,
+            reopen the store, and measure zero-recompute throughput
+            (self-checked: any recompute or full miss fails the run).
+
+fig3 --data-dir DIR loads the real TU-format dataset (e.g. D&D,
+REDDIT-BINARY; see rust/src/data/mod.rs for the expected file layout)
+instead of the synthetic substitute; quickstart accepts the same flag.
 
 Run `make artifacts` first to build the AOT XLA artifacts (PJRT engine);
 without them the CPU fallback engine is used automatically.";
@@ -164,8 +195,21 @@ fn quickstart(ctx: &ExpContext, args: &Args, seed: u64) -> Result<()> {
     let r = args.parse_or("r", 1.2f64);
     let per_class = args.parse_or("per-class", 60usize);
     let cfg = gsa_from_args(ctx, args, seed)?;
-    println!("generating SBM dataset: r={r}, {} graphs", 2 * per_class);
-    let ds = SbmConfig { r, per_class, ..Default::default() }.generate(&mut Rng::new(seed));
+    // End-to-end on real data: --data-dir DIR loads the TU-format
+    // dataset named by --dataset (e.g. DD, REDDIT-BINARY; layout
+    // documented in rust/src/data/mod.rs) through the hardened parser
+    // instead of generating a synthetic SBM set.
+    let ds = match args.get("data-dir") {
+        Some(dir) => {
+            let name = graphlet_rf::data::tu_name(args.str_or("dataset", "dd"));
+            println!("loading TU dataset {name} from {dir}");
+            graphlet_rf::data::load_tu_dataset(std::path::Path::new(dir), name)?
+        }
+        None => {
+            println!("generating SBM dataset: r={r}, {} graphs", 2 * per_class);
+            SbmConfig { r, per_class, ..Default::default() }.generate(&mut Rng::new(seed))
+        }
+    };
     println!("{}", ds.summary());
     println!(
         "embedding: k={} s={} m={} variant={} sampler={} engine={:?} shards={} workers={}",
@@ -228,26 +272,43 @@ fn gsa_from_args(ctx: &ExpContext, args: &Args, seed: u64) -> Result<GsaConfig> 
     Ok(cfg)
 }
 
-/// `graphlet-rf serve`: bind the daemon and block in the accept loop.
-fn serve_cmd(ctx: &ExpContext, args: &Args, seed: u64) -> Result<()> {
-    use graphlet_rf::serve::{ServeConfig, Server};
+/// Serve-layer configuration shared by `serve` and the self-hosted
+/// `serve-bench` restart mode.
+fn serve_cfg_from_args(
+    ctx: &ExpContext,
+    args: &Args,
+    seed: u64,
+) -> Result<graphlet_rf::serve::ServeConfig> {
+    use graphlet_rf::serve::{EvictPolicy, ServeConfig};
 
     let gsa = gsa_from_args(ctx, args, seed)?;
-    let addr = match args.get("addr") {
-        Some(a) => a.to_string(),
-        None => format!("127.0.0.1:{}", args.parse_or("port", 7878u16)),
-    };
     let defaults = ServeConfig::default();
-    let cfg = ServeConfig {
+    Ok(ServeConfig {
         gsa,
         max_nodes: args.parse_or("max-nodes", defaults.max_nodes),
         max_edges: args.parse_or("max-edges", defaults.max_edges),
         cache_capacity: args.parse_or("cache-cap", defaults.cache_capacity),
+        cache_policy: match args.get("cache-policy") {
+            Some(name) => EvictPolicy::parse(name)?,
+            None => defaults.cache_policy,
+        },
+        store_dir: args.get("store-dir").map(std::path::PathBuf::from),
         ..defaults
+    })
+}
+
+/// `graphlet-rf serve`: bind the daemon and block in the accept loop.
+fn serve_cmd(ctx: &ExpContext, args: &Args, seed: u64) -> Result<()> {
+    use graphlet_rf::serve::Server;
+
+    let addr = match args.get("addr") {
+        Some(a) => a.to_string(),
+        None => format!("127.0.0.1:{}", args.parse_or("port", 7878u16)),
     };
+    let cfg = serve_cfg_from_args(ctx, args, seed)?;
     println!(
         "serve: k={} s={} m={} variant={} engine={:?} shards={} workers={} fwht_threads={} \
-         cache_cap={}",
+         cache_cap={} cache_policy={} store={}",
         cfg.gsa.k,
         cfg.gsa.s,
         cfg.gsa.m,
@@ -256,7 +317,11 @@ fn serve_cmd(ctx: &ExpContext, args: &Args, seed: u64) -> Result<()> {
         cfg.gsa.shards,
         cfg.gsa.workers,
         cfg.gsa.fwht_threads,
-        cfg.cache_capacity
+        cfg.cache_capacity,
+        cfg.cache_policy.name(),
+        cfg.store_dir
+            .as_ref()
+            .map_or("none (RAM-only cache)".to_string(), |d| d.display().to_string()),
     );
     let server = Server::bind(&addr, cfg, ctx.engine.as_ref())?;
     println!("serving on {} (line-delimited JSON; send {{\"op\":\"shutdown\"}} to stop)",
@@ -264,20 +329,46 @@ fn serve_cmd(ctx: &ExpContext, args: &Args, seed: u64) -> Result<()> {
     server.run()
 }
 
-/// `graphlet-rf serve-bench`: drive a running daemon over loopback and
-/// print cold/warm throughput + latency percentiles.
-fn serve_bench_cmd(args: &Args, seed: u64) -> Result<()> {
-    let addr = args.str_or("addr", "127.0.0.1:7878").to_string();
+/// `graphlet-rf serve-bench`: drive a daemon over loopback and print
+/// labeled pass reports (throughput + latency percentiles) plus one
+/// machine-readable JSON line. With `--store-dir` the daemons are
+/// hosted in-process and a third restart-warm (`warm_l2`) pass measures
+/// zero-recompute serving off the reopened segment log.
+fn serve_bench_cmd(ctx: &ExpContext, args: &Args, seed: u64) -> Result<()> {
     let clients = args.parse_or("clients", 4usize).max(1);
     let per_client = args.parse_or("requests", 32usize).max(1);
-    println!("serve-bench: {addr}, {clients} clients x {per_client} requests, seed {seed}");
-    let pair = graphlet_rf::serve::run_bench(&addr, clients, per_client, seed)?;
-    println!("cold: {}", pair.cold.line());
-    println!("warm: {}", pair.warm.line());
-    if args.flag("shutdown") {
-        graphlet_rf::serve::send_shutdown(&addr)?;
-        println!("sent shutdown to {addr}");
+    let run = match args.get("store-dir") {
+        Some(dir) => {
+            println!(
+                "serve-bench (restart mode): store={dir}, {clients} clients x {per_client} \
+                 requests, seed {seed}"
+            );
+            let cfg = serve_cfg_from_args(ctx, args, seed)?;
+            graphlet_rf::serve::run_restart_bench(
+                &cfg,
+                clients,
+                per_client,
+                seed,
+                ctx.engine.as_ref(),
+            )?
+        }
+        None => {
+            let addr = args.str_or("addr", "127.0.0.1:7878").to_string();
+            println!(
+                "serve-bench: {addr}, {clients} clients x {per_client} requests, seed {seed}"
+            );
+            let run = graphlet_rf::serve::run_bench(&addr, clients, per_client, seed)?;
+            if args.flag("shutdown") {
+                graphlet_rf::serve::send_shutdown(&addr)?;
+                println!("sent shutdown to {addr}");
+            }
+            run
+        }
+    };
+    for (label, report) in &run.passes {
+        println!("{label}: {}", report.line());
     }
+    println!("{}", run.json());
     Ok(())
 }
 

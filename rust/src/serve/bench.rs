@@ -3,27 +3,41 @@
 //! C client threads each run a synchronous request/reply loop over one
 //! TCP connection (pipeline concurrency comes from the C parallel
 //! connections — that is exactly the traffic shape cross-request
-//! batching exists for). Two passes:
+//! batching exists for). Passes carry explicit labels so a cache hit at
+//! one tier can never masquerade as another:
 //!
 //! - **cold**: every request uses a fresh `graph_index`, so every
 //!   embedding is computed by the pipeline;
-//! - **warm**: the identical requests replayed, so every reply should
-//!   come from the embedding cache.
+//! - **warm_l1**: the identical requests replayed against the same
+//!   daemon, so every reply should come from the in-RAM cache;
+//! - **warm_l2** ([`run_restart_bench`] only): the daemon is shut down,
+//!   a *new* daemon reopens the same `--store-dir`, and the requests
+//!   replay once more — every reply should come off the segment log
+//!   with **zero pipeline recomputes** (self-checked: the pass fails if
+//!   the daemon computed any graph or took any full miss).
 //!
-//! Reported per pass: throughput (requests/s) and p50/p99 latency from
-//! a merged per-request latency reservoir. Fixed seed → fixed workload,
-//! so numbers are comparable across PRs (the serving-perf baseline).
+//! Reported per pass: throughput (requests/s), p50/p99 latency from a
+//! merged per-request latency reservoir, and the daemon-side
+//! `pipeline.graphs` / `cache.l2_misses` deltas measured through the
+//! `stats` op (so "the cache served everything" is a daemon-verified
+//! fact, not an inference from reply flags). Fixed seed → fixed
+//! workload, so numbers are comparable across PRs; the final line of
+//! `graphlet-rf serve-bench` is one machine-readable JSON object
+//! ([`BenchRun::json`]).
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
+use std::thread::JoinHandle;
 
 use anyhow::{Context, Result};
 
 use crate::gen::SbmConfig;
 use crate::graph::AnyGraph;
-use crate::util::{Rng, Stats, Timer};
+use crate::runtime::Engine;
+use crate::util::{Json, Rng, Stats, Timer};
 
 use super::protocol::{embed_request, parse_embed_reply};
+use super::server::{ServeConfig, Server};
 
 /// One pass's aggregate numbers.
 #[derive(Clone, Debug)]
@@ -31,6 +45,12 @@ pub struct BenchReport {
     pub requests: usize,
     pub errors: usize,
     pub cached_replies: usize,
+    /// Daemon-side `pipeline.graphs` delta across the pass: embeddings
+    /// the pipeline actually computed (0 for a fully cached pass).
+    pub recomputed_graphs: u64,
+    /// Daemon-side `cache.l2_misses` delta: requests absent from both
+    /// cache tiers (always 0 when every reply was served from cache).
+    pub l2_miss_delta: u64,
     pub wall_secs: f64,
     pub requests_per_sec: f64,
     pub p50_ms: f64,
@@ -40,38 +60,171 @@ pub struct BenchReport {
 impl BenchReport {
     pub fn line(&self) -> String {
         format!(
-            "requests={} errors={} cached={} wall={:.2}s throughput={:.0} req/s \
-             p50={:.2}ms p99={:.2}ms",
+            "requests={} errors={} cached={} recomputed={} wall={:.2}s \
+             throughput={:.0} req/s p50={:.2}ms p99={:.2}ms",
             self.requests,
             self.errors,
             self.cached_replies,
+            self.recomputed_graphs,
             self.wall_secs,
             self.requests_per_sec,
             self.p50_ms,
             self.p99_ms
         )
     }
+
+    fn json(&self, label: &str) -> Json {
+        Json::obj()
+            .set("label", label)
+            .set("requests", self.requests)
+            .set("errors", self.errors)
+            .set("cached_replies", self.cached_replies)
+            .set("recomputed_graphs", self.recomputed_graphs)
+            .set("l2_miss_delta", self.l2_miss_delta)
+            .set("wall_secs", self.wall_secs)
+            .set("throughput_rps", self.requests_per_sec)
+            .set("p50_ms", self.p50_ms)
+            .set("p99_ms", self.p99_ms)
+    }
 }
 
-/// Cold + warm pass results.
+/// An ordered set of labeled passes (`cold`, `warm_l1`, and — in
+/// restart mode — `warm_l2`).
 #[derive(Clone, Debug)]
-pub struct BenchPair {
-    pub cold: BenchReport,
-    pub warm: BenchReport,
+pub struct BenchRun {
+    pub passes: Vec<(String, BenchReport)>,
+}
+
+impl BenchRun {
+    pub fn get(&self, label: &str) -> Option<&BenchReport> {
+        self.passes.iter().find(|(l, _)| l == label).map(|(_, r)| r)
+    }
+
+    /// The machine-readable form printed as serve-bench's last line.
+    pub fn json(&self) -> Json {
+        let mut passes = Json::arr();
+        for (label, r) in &self.passes {
+            passes.push(r.json(label));
+        }
+        Json::obj().set("bench", "serve").set("passes", passes)
+    }
 }
 
 /// Drive `addr` with `clients` threads of `per_client` requests each,
-/// twice (cold then warm). The workload is `seed`-deterministic SBM
-/// graphs, so two runs against equally-configured servers measure the
-/// same thing. NOTE: "cold" assumes a fresh server cache; replaying
+/// twice (`cold` then `warm_l1`). The workload is `seed`-deterministic
+/// SBM graphs, so two runs against equally-configured servers measure
+/// the same thing. NOTE: "cold" assumes a fresh server cache; replaying
 /// against a warm long-lived server shifts cold-pass numbers toward
-/// warm ones.
-pub fn run_bench(addr: &str, clients: usize, per_client: usize, seed: u64) -> Result<BenchPair> {
-    let ds = SbmConfig { per_class: 4, ..Default::default() }.generate(&mut Rng::new(seed));
-    let graphs: Vec<AnyGraph> = ds.graphs;
+/// warm ones (the `recomputed_graphs` column makes that visible).
+pub fn run_bench(addr: &str, clients: usize, per_client: usize, seed: u64) -> Result<BenchRun> {
+    let graphs = workload(seed);
     let cold = run_pass(addr, clients, per_client, &graphs)?;
-    let warm = run_pass(addr, clients, per_client, &graphs)?;
-    Ok(BenchPair { cold, warm })
+    let warm_l1 = run_pass(addr, clients, per_client, &graphs)?;
+    Ok(BenchRun {
+        passes: vec![("cold".to_string(), cold), ("warm_l1".to_string(), warm_l1)],
+    })
+}
+
+/// The three-pass restart benchmark (requires `cfg.store_dir`): host a
+/// daemon in-process, run `cold` + `warm_l1`, shut it down, host a
+/// *fresh* daemon over the same store directory, and measure `warm_l2`
+/// — restart-warm throughput where every row is served off the segment
+/// log. Self-checks that the L2 pass recomputed nothing: any
+/// `pipeline.graphs` or `cache.l2_misses` movement fails the run
+/// (an L1 hit or a recompute can never be mislabeled as L2).
+///
+/// `engine` is the PJRT template exactly as for `Server::bind` — pass
+/// it when `cfg.gsa.engine` is PJRT (the CLI forwards its detected
+/// engine), `None` for the CPU engines.
+pub fn run_restart_bench(
+    cfg: &ServeConfig,
+    clients: usize,
+    per_client: usize,
+    seed: u64,
+    engine: Option<&Engine>,
+) -> Result<BenchRun> {
+    anyhow::ensure!(
+        cfg.store_dir.is_some(),
+        "run_restart_bench requires ServeConfig.store_dir (the L2 segment log)"
+    );
+    let graphs = workload(seed);
+
+    let (addr, handle) = host(cfg.clone(), engine)?;
+    let cold = run_pass(&addr, clients, per_client, &graphs)?;
+    let warm_l1 = run_pass(&addr, clients, per_client, &graphs)?;
+    stop(&addr, handle)?;
+
+    // "Restart": a brand-new daemon process-equivalent — fresh pipeline,
+    // empty L1 — over the store directory the first daemon populated.
+    let (addr, handle) = host(cfg.clone(), engine)?;
+    let warm_l2 = run_pass(&addr, clients, per_client, &graphs)?;
+    stop(&addr, handle)?;
+
+    anyhow::ensure!(
+        warm_l2.errors == 0,
+        "restart-warm self-check: {} requests errored",
+        warm_l2.errors
+    );
+    anyhow::ensure!(
+        warm_l2.recomputed_graphs == 0,
+        "restart-warm self-check: the daemon recomputed {} graphs — the L2 pass must be \
+         served entirely from the store",
+        warm_l2.recomputed_graphs
+    );
+    anyhow::ensure!(
+        warm_l2.l2_miss_delta == 0,
+        "restart-warm self-check: {} full misses — every key must be on the segment log",
+        warm_l2.l2_miss_delta
+    );
+    Ok(BenchRun {
+        passes: vec![
+            ("cold".to_string(), cold),
+            ("warm_l1".to_string(), warm_l1),
+            ("warm_l2".to_string(), warm_l2),
+        ],
+    })
+}
+
+/// The fixed bench workload: a seed-deterministic SBM set.
+fn workload(seed: u64) -> Vec<AnyGraph> {
+    SbmConfig { per_class: 4, ..Default::default() }.generate(&mut Rng::new(seed)).graphs
+}
+
+/// Bind + run a daemon on an ephemeral loopback port.
+fn host(cfg: ServeConfig, engine: Option<&Engine>) -> Result<(String, JoinHandle<Result<()>>)> {
+    let server = Server::bind("127.0.0.1:0", cfg, engine)?;
+    let addr = server.local_addr().to_string();
+    let handle = std::thread::spawn(move || server.run());
+    Ok((addr, handle))
+}
+
+fn stop(addr: &str, handle: JoinHandle<Result<()>>) -> Result<()> {
+    send_shutdown(addr)?;
+    handle.join().map_err(|_| anyhow::anyhow!("serve daemon panicked"))?
+}
+
+/// Daemon-side counters a pass brackets itself with: cumulative
+/// `pipeline.graphs` (computed embeddings) and `cache.l2_misses` (full
+/// misses), read through the `stats` op on a throwaway connection.
+fn snapshot(addr: &str) -> Result<(u64, u64)> {
+    let mut stream =
+        TcpStream::connect(addr).with_context(|| format!("connecting stats probe to {addr}"))?;
+    stream.write_all(b"{\"op\":\"stats\"}\n")?;
+    stream.flush()?;
+    let mut reply = String::new();
+    BufReader::new(stream).read_line(&mut reply)?;
+    let j = Json::parse(reply.trim()).map_err(|e| anyhow::anyhow!("stats reply: {e}"))?;
+    let graphs = j
+        .get("pipeline")
+        .and_then(|p| p.get("graphs"))
+        .and_then(Json::as_u64)
+        .ok_or_else(|| anyhow::anyhow!("stats reply missing pipeline.graphs"))?;
+    let l2_misses = j
+        .get("cache")
+        .and_then(|c| c.get("l2_misses"))
+        .and_then(Json::as_u64)
+        .unwrap_or(0);
+    Ok((graphs, l2_misses))
 }
 
 fn run_pass(
@@ -82,6 +235,7 @@ fn run_pass(
 ) -> Result<BenchReport> {
     let clients = clients.max(1);
     let per_client = per_client.max(1);
+    let (graphs0, misses0) = snapshot(addr)?;
     let wall = Timer::start();
     let results = std::thread::scope(|scope| {
         let mut handles = Vec::with_capacity(clients);
@@ -94,6 +248,7 @@ fn run_pass(
             .collect::<Result<Vec<_>>>()
     })?;
     let wall_secs = wall.elapsed_secs();
+    let (graphs1, misses1) = snapshot(addr)?;
     let mut lat = Stats::new();
     let (mut errors, mut cached) = (0usize, 0usize);
     for (s, e, h) in results {
@@ -106,6 +261,8 @@ fn run_pass(
         requests,
         errors,
         cached_replies: cached,
+        recomputed_graphs: graphs1.saturating_sub(graphs0),
+        l2_miss_delta: misses1.saturating_sub(misses0),
         wall_secs,
         requests_per_sec: if wall_secs > 0.0 { requests as f64 / wall_secs } else { 0.0 },
         p50_ms: lat.percentile(50.0) * 1e3,

@@ -1,36 +1,85 @@
-//! Content-addressed embedding cache.
+//! The two-level content-addressed embedding cache: an in-RAM LRU (L1)
+//! over the persistent segment-log store (L2, optional).
 //!
 //! Key = (canonical graph hash, config fingerprint, per-job sampling
 //! seed): with all three fixed an embedding is a pure function of its
-//! inputs, so cached rows are bitwise identical to recomputed ones.
-//! The fingerprint covers every [`GsaConfig`] field that changes the
-//! math (k, s, m, variant, impl, sampler, sigma, engine mode, seed) —
-//! deliberately *not* the scheduling knobs (workers, shards, queue_cap,
+//! inputs, so cached rows are bitwise identical to recomputed ones —
+//! which is exactly what makes them safe to serve from RAM *or* from a
+//! segment log written by a previous daemon process. The fingerprint
+//! covers every [`GsaConfig`] field that changes the math (k, s, m,
+//! variant, impl, sampler, sigma, engine mode, seed) — deliberately
+//! *not* the scheduling knobs (workers, shards, queue_cap,
 //! fwht_threads; batch in CPU modes would be safe too, but batch
 //! selects the PJRT artifact, so it is included).
 //!
-//! Eviction is LRU at a fixed capacity: embeddings are all the same
-//! size (m floats), so the cache's memory is `capacity * m * 4` bytes,
-//! and under serving traffic with popular repeat graphs recency is a
-//! strictly better eviction signal than insertion order (a hot row
-//! inserted early must not be evicted before a cold row inserted
-//! late). Every hit bumps the row's recency; eviction removes the
-//! least-recently-*used* row. Implemented as a monotonic-stamp index
-//! (`BTreeMap<stamp, key>`, O(log n) per touch) — no unsafe, no
-//! hand-rolled linked list. Hit/miss counters feed the serve `stats`
-//! op.
+//! Tiering ([`TieredCache`], the type the serve daemon actually holds):
+//!
+//! ```text
+//!   get(key) ──► L1 (RAM, LRU / cost-aware) ── hit ──► row
+//!                  │ miss
+//!                  ▼
+//!                L2 (segment log, --store-dir) ── hit ──► promote to L1,
+//!                  │ miss                                 count l2_hit
+//!                  ▼
+//!                None  (caller computes; insert() then writes the row
+//!                       through BOTH tiers — L2 first, so a row a
+//!                       client saw is already durable)
+//! ```
+//!
+//! L1 eviction is LRU at a fixed capacity by default. The optional
+//! **cost-aware** policy ([`EvictPolicy::CostAware`]) examines the
+//! `window` least-recently-used rows and evicts the one that is
+//! cheapest to recompute (weight = `row_len ×
+//! recompute_cost_estimate`); under mixed workloads this keeps the
+//! expensive SORF/dense rows resident a little longer than plain
+//! recency would. Both policies are implemented on the same
+//! monotonic-stamp index (`BTreeMap<stamp, key>`, O(log n) per touch,
+//! O(window) per eviction) — no unsafe, no hand-rolled linked list.
+//! Hit/miss/eviction counters feed the serve `stats` op.
 
 use std::collections::{BTreeMap, HashMap};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
-use crate::coordinator::GsaConfig;
+use anyhow::{bail, Result};
 
-/// The content address of one embedding row.
-#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
-pub struct CacheKey {
-    pub graph_hash: u64,
-    pub config_fp: u64,
-    pub seed: u64,
+use crate::coordinator::{EngineMode, GsaConfig};
+use crate::store::{EmbeddingStore, StoreStats};
+
+pub use crate::store::CacheKey;
+
+/// L1 eviction policy (`--cache-policy`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EvictPolicy {
+    /// Evict the least-recently-used row (the default).
+    Lru,
+    /// Among the `window` least-recently-used rows, evict the one with
+    /// the smallest recompute weight (`row_len × recompute cost`); ties
+    /// fall back to recency. `window` bounds the scan so eviction stays
+    /// O(window) — outside the window plain recency still rules.
+    CostAware { window: usize },
+}
+
+/// Default candidate window for [`EvictPolicy::CostAware`].
+pub const COST_WINDOW: usize = 8;
+
+impl EvictPolicy {
+    /// Parse a policy name (CLI); bad input is an `Err`, not a panic.
+    pub fn parse(s: &str) -> Result<EvictPolicy> {
+        Ok(match s {
+            "lru" => EvictPolicy::Lru,
+            "cost" | "cost-aware" => EvictPolicy::CostAware { window: COST_WINDOW },
+            other => bail!("unknown cache policy {other:?} (expected lru|cost-aware)"),
+        })
+    }
+
+    /// The name reported by the `stats` op.
+    pub fn name(&self) -> &'static str {
+        match self {
+            EvictPolicy::Lru => "lru",
+            EvictPolicy::CostAware { .. } => "cost-aware",
+        }
+    }
 }
 
 /// Counters + size snapshot for the `stats` op.
@@ -38,26 +87,30 @@ pub struct CacheKey {
 pub struct CacheStats {
     pub hits: u64,
     pub misses: u64,
-    /// Rows dropped by LRU eviction since the cache was built (inserts
+    /// Rows dropped by eviction since the cache was built (inserts
     /// refused at capacity 0 are not evictions — nothing was cached).
     /// Eviction telemetry: a high rate relative to hits means the
     /// working set exceeds `capacity` and the cache is churning.
     pub evictions: u64,
     pub len: usize,
     pub capacity: usize,
+    /// The active eviction policy name (`lru` / `cost-aware`).
+    pub policy: &'static str,
 }
 
-/// A cached row plus its recency stamp (the key into `order`).
+/// A cached row plus its recency stamp (the key into `order`) and its
+/// recompute weight (consulted by the cost-aware policy only).
 struct Entry {
     row: Vec<f32>,
     stamp: u64,
+    cost: f64,
 }
 
 struct CacheInner {
     map: HashMap<CacheKey, Entry>,
     /// Recency index: stamp → key, oldest stamp first. Stamps are drawn
     /// from a monotonic counter, so the first entry is always the LRU
-    /// victim; a hit moves its key to a fresh stamp in O(log n).
+    /// row; a hit moves its key to a fresh stamp in O(log n).
     order: BTreeMap<u64, CacheKey>,
     next_stamp: u64,
     hits: u64,
@@ -78,16 +131,21 @@ impl CacheInner {
     }
 }
 
-/// Thread-safe LRU-evicting embedding cache.
+/// Thread-safe in-RAM embedding cache (the L1 tier).
 pub struct EmbeddingCache {
     inner: Mutex<CacheInner>,
     capacity: usize,
+    policy: EvictPolicy,
 }
 
 impl EmbeddingCache {
     /// `capacity` = maximum cached rows; 0 disables caching entirely
-    /// (every lookup is a miss, inserts are dropped).
+    /// (every lookup is a miss, inserts are dropped). Plain LRU.
     pub fn new(capacity: usize) -> EmbeddingCache {
+        EmbeddingCache::with_policy(capacity, EvictPolicy::Lru)
+    }
+
+    pub fn with_policy(capacity: usize, policy: EvictPolicy) -> EmbeddingCache {
         EmbeddingCache {
             inner: Mutex::new(CacheInner {
                 map: HashMap::new(),
@@ -98,6 +156,7 @@ impl EmbeddingCache {
                 evictions: 0,
             }),
             capacity,
+            policy,
         }
     }
 
@@ -118,9 +177,18 @@ impl EmbeddingCache {
         }
     }
 
-    /// Insert a freshly computed row (first write wins; LRU eviction at
-    /// capacity — the least-recently-used row is dropped).
+    /// Insert a freshly computed row with the default recompute weight
+    /// (its length — correct when every row costs the same, which is
+    /// all a plain-LRU cache can assume).
     pub fn insert(&self, key: CacheKey, row: Vec<f32>) {
+        let cost = row.len() as f64;
+        self.insert_with_cost(key, row, cost);
+    }
+
+    /// Insert a freshly computed row (first write wins) with an
+    /// explicit recompute weight. At capacity the victim is chosen by
+    /// the configured [`EvictPolicy`].
+    pub fn insert_with_cost(&self, key: CacheKey, row: Vec<f32>, cost: f64) {
         if self.capacity == 0 {
             return;
         }
@@ -129,8 +197,25 @@ impl EmbeddingCache {
             return;
         }
         while g.map.len() >= self.capacity {
-            // First stamp in the recency index = least recently used.
-            match g.order.first_key_value().map(|(&stamp, &old)| (stamp, old)) {
+            let victim = match self.policy {
+                EvictPolicy::Lru => g.order.first_key_value().map(|(&s, &k)| (s, k)),
+                EvictPolicy::CostAware { window } => g
+                    .order
+                    .iter()
+                    .take(window.max(1))
+                    .map(|(&stamp, &old)| (stamp, old))
+                    // Ascending-stamp iteration + strict min: among
+                    // equal weights the OLDEST candidate wins, so the
+                    // policy degrades to LRU when costs are uniform.
+                    .min_by(|a, b| {
+                        let ca = g.map.get(&a.1).map_or(0.0, |e| e.cost);
+                        let cb = g.map.get(&b.1).map_or(0.0, |e| e.cost);
+                        ca.partial_cmp(&cb)
+                            .unwrap_or(std::cmp::Ordering::Equal)
+                            .then(a.0.cmp(&b.0))
+                    }),
+            };
+            match victim {
                 Some((stamp, old)) => {
                     g.order.remove(&stamp);
                     g.map.remove(&old);
@@ -142,7 +227,7 @@ impl EmbeddingCache {
         let stamp = g.next_stamp;
         g.next_stamp += 1;
         g.order.insert(stamp, key);
-        g.map.insert(key, Entry { row, stamp });
+        g.map.insert(key, Entry { row, stamp, cost });
     }
 
     pub fn stats(&self) -> CacheStats {
@@ -153,8 +238,138 @@ impl EmbeddingCache {
             evictions: g.evictions,
             len: g.map.len(),
             capacity: self.capacity,
+            policy: self.policy.name(),
         }
     }
+}
+
+/// Combined snapshot of both tiers for the `stats` op.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TieredStats {
+    pub l1: CacheStats,
+    /// L1 misses that the store answered (each one a recompute avoided).
+    pub l2_hits: u64,
+    /// Full misses: absent from both tiers — the pipeline computes.
+    pub l2_misses: u64,
+    /// Rows copied L2 → L1 on an L2 hit (always equals `l2_hits` today;
+    /// kept separate so a future no-promote read path stays honest).
+    pub l2_promotions: u64,
+    /// Segment-log counters when the store is enabled.
+    pub store: Option<StoreStats>,
+}
+
+/// The serve daemon's cache: L1 in RAM, L2 on disk (optional).
+///
+/// `get` probes L1 then L2, promoting L2 hits into L1; `insert` writes
+/// through both tiers (L2 first — once a client holds a reply, the row
+/// is already in the OS page cache on its way to disk). The store is
+/// behind one `Mutex`: L2 traffic is the *miss* path of an L1 whose hit
+/// path stays as concurrent as before, and one store writer at a time
+/// is exactly the append-only log's contract.
+pub struct TieredCache {
+    l1: EmbeddingCache,
+    l2: Option<Mutex<EmbeddingStore>>,
+    /// Per-float recompute weight (from [`recompute_cost_estimate`]);
+    /// multiplied by `row_len` to weight cost-aware eviction.
+    row_cost: f64,
+    l2_hits: AtomicU64,
+    l2_misses: AtomicU64,
+    l2_promotions: AtomicU64,
+}
+
+impl TieredCache {
+    /// `row_cost` is the per-row recompute weight (use
+    /// [`recompute_cost_estimate`]; only the cost-aware policy reads
+    /// it). `store: None` gives the previous single-tier behavior.
+    pub fn new(
+        l1_capacity: usize,
+        policy: EvictPolicy,
+        row_cost: f64,
+        store: Option<EmbeddingStore>,
+    ) -> TieredCache {
+        TieredCache {
+            l1: EmbeddingCache::with_policy(l1_capacity, policy),
+            l2: store.map(Mutex::new),
+            row_cost,
+            l2_hits: AtomicU64::new(0),
+            l2_misses: AtomicU64::new(0),
+            l2_promotions: AtomicU64::new(0),
+        }
+    }
+
+    fn weight(&self, row: &[f32]) -> f64 {
+        row.len() as f64 * self.row_cost
+    }
+
+    /// Probe L1 then L2. An L2 hit is promoted into L1 (without a
+    /// write-back — the row is already durable) and served bitwise as
+    /// stored.
+    pub fn get(&self, key: &CacheKey) -> Option<Vec<f32>> {
+        if let Some(row) = self.l1.get(key) {
+            return Some(row);
+        }
+        let store = self.l2.as_ref()?;
+        let found = store.lock().expect("store lock").get(key);
+        match found {
+            Some(row) => {
+                self.l2_hits.fetch_add(1, Ordering::Relaxed);
+                self.l2_promotions.fetch_add(1, Ordering::Relaxed);
+                self.l1.insert_with_cost(*key, row.clone(), self.weight(&row));
+                Some(row)
+            }
+            None => {
+                self.l2_misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Write a freshly computed row through both tiers. A store append
+    /// failure (disk full, permissions) degrades to RAM-only for that
+    /// row — logged, never fatal to the request.
+    pub fn insert(&self, key: CacheKey, row: Vec<f32>) {
+        if let Some(store) = &self.l2 {
+            let mut s = store.lock().expect("store lock");
+            if !s.contains(&key) {
+                if let Err(e) = s.put(key, &row) {
+                    eprintln!("serve: embedding store write-through failed: {e:#}");
+                }
+            }
+        }
+        let w = self.weight(&row);
+        self.l1.insert_with_cost(key, row, w);
+    }
+
+    pub fn stats(&self) -> TieredStats {
+        TieredStats {
+            l1: self.l1.stats(),
+            l2_hits: self.l2_hits.load(Ordering::Relaxed),
+            l2_misses: self.l2_misses.load(Ordering::Relaxed),
+            l2_promotions: self.l2_promotions.load(Ordering::Relaxed),
+            store: self
+                .l2
+                .as_ref()
+                .map(|s| s.lock().expect("store lock").stats()),
+        }
+    }
+}
+
+/// Relative cost of recomputing one embedding row under `cfg` — the
+/// feature-map work for its s samples (the sampler walk is common to
+/// every engine and omitted). Dense engines project each sample in
+/// O(d·m); the structured SORF engine in O(m·log p) with p the padded
+/// power-of-two input width. Only *ratios* matter (the cost-aware
+/// eviction policy compares weights), so constant factors are dropped.
+pub fn recompute_cost_estimate(cfg: &GsaConfig) -> f64 {
+    let d = cfg.input_dim().max(1) as f64;
+    let per_sample = match cfg.engine {
+        EngineMode::CpuSorf => {
+            let p = crate::fastrf::next_pow2(cfg.input_dim().max(2)) as f64;
+            cfg.m as f64 * p.log2()
+        }
+        _ => d * cfg.m as f64,
+    };
+    cfg.s as f64 * per_sample
 }
 
 /// Hash the math-relevant parts of a [`GsaConfig`] into the cache key's
@@ -182,7 +397,7 @@ pub fn config_fingerprint(cfg: &GsaConfig) -> u64 {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::EngineMode;
+    use crate::store::StoreConfig;
 
     fn key(n: u64) -> CacheKey {
         CacheKey { graph_hash: n, config_fp: 1, seed: 2 }
@@ -197,6 +412,7 @@ mod tests {
         assert!(c.get(&key(2)).is_none());
         let s = c.stats();
         assert_eq!((s.hits, s.misses, s.len, s.capacity), (1, 2, 1, 4));
+        assert_eq!(s.policy, "lru", "plain LRU stays the default policy");
     }
 
     #[test]
@@ -245,7 +461,7 @@ mod tests {
         assert!(c.get(&key(5)).is_some());
     }
 
-    /// The eviction counter tracks LRU drops one-for-one: inserts below
+    /// The eviction counter tracks drops one-for-one: inserts below
     /// capacity and duplicate inserts count nothing; every insert at
     /// capacity counts exactly one victim.
     #[test]
@@ -291,6 +507,164 @@ mod tests {
         c.insert(key(1), vec![1.0]);
         assert!(c.get(&key(1)).is_none());
         assert_eq!(c.stats().len, 0);
+    }
+
+    /// Cost-aware eviction prefers the cheapest-to-recompute candidate
+    /// over the strictly least-recently-used one.
+    #[test]
+    fn cost_aware_evicts_cheap_rows_before_expensive_ones() {
+        let c = EmbeddingCache::with_policy(2, EvictPolicy::CostAware { window: 8 });
+        assert_eq!(c.stats().policy, "cost-aware");
+        c.insert_with_cost(key(1), vec![1.0], 100.0); // expensive, oldest
+        c.insert_with_cost(key(2), vec![2.0], 1.0); // cheap, newer
+        c.insert_with_cost(key(3), vec![3.0], 50.0);
+        // Plain LRU would evict key(1); cost-aware drops cheap key(2).
+        assert_eq!(c.get(&key(1)), Some(vec![1.0]), "expensive row must survive");
+        assert!(c.get(&key(2)).is_none(), "cheap row must be the victim");
+        assert_eq!(c.get(&key(3)), Some(vec![3.0]));
+        assert_eq!(c.stats().evictions, 1);
+    }
+
+    /// With uniform costs the cost-aware policy is exactly LRU (ties
+    /// break by age), so enabling it on a single-config daemon never
+    /// degrades the eviction order.
+    #[test]
+    fn cost_aware_with_uniform_costs_degrades_to_lru() {
+        let c = EmbeddingCache::with_policy(2, EvictPolicy::CostAware { window: 8 });
+        c.insert_with_cost(key(1), vec![1.0], 7.0);
+        c.insert_with_cost(key(2), vec![2.0], 7.0);
+        assert_eq!(c.get(&key(1)), Some(vec![1.0])); // bump 1's recency
+        c.insert_with_cost(key(3), vec![3.0], 7.0);
+        assert!(c.get(&key(2)).is_none(), "equal costs: LRU row is the victim");
+        assert!(c.get(&key(1)).is_some());
+    }
+
+    /// Outside the candidate window recency still rules: a cheap row
+    /// that is *recent enough* is not considered for eviction.
+    #[test]
+    fn cost_aware_window_bounds_the_candidate_scan() {
+        let c = EmbeddingCache::with_policy(3, EvictPolicy::CostAware { window: 1 });
+        c.insert_with_cost(key(1), vec![1.0], 100.0);
+        c.insert_with_cost(key(2), vec![2.0], 1.0);
+        c.insert_with_cost(key(3), vec![3.0], 1.0);
+        // Window of 1 = plain LRU: key(1) is the only candidate.
+        c.insert_with_cost(key(4), vec![4.0], 1.0);
+        assert!(c.get(&key(1)).is_none(), "window 1 must behave as LRU");
+        assert!(c.get(&key(2)).is_some());
+    }
+
+    #[test]
+    fn evict_policy_parse_roundtrip_and_errors() {
+        assert_eq!(EvictPolicy::parse("lru").unwrap(), EvictPolicy::Lru);
+        assert_eq!(
+            EvictPolicy::parse("cost-aware").unwrap(),
+            EvictPolicy::CostAware { window: COST_WINDOW }
+        );
+        assert_eq!(
+            EvictPolicy::parse("cost").unwrap(),
+            EvictPolicy::CostAware { window: COST_WINDOW }
+        );
+        let err = EvictPolicy::parse("mru").unwrap_err().to_string();
+        assert!(err.contains("unknown cache policy") && err.contains("lru|cost-aware"), "{err}");
+    }
+
+    /// The structured engine's rows are cheaper to recompute than the
+    /// dense engines' at the same shape — the whole point of SORF — and
+    /// the estimate must reflect that so cost-aware eviction prefers
+    /// dropping them first.
+    #[test]
+    fn recompute_cost_estimate_ranks_sorf_below_dense() {
+        let dense = GsaConfig {
+            k: 6,
+            s: 2000,
+            m: 5000,
+            engine: EngineMode::Cpu,
+            ..Default::default()
+        };
+        let sorf = GsaConfig { engine: EngineMode::CpuSorf, ..dense.clone() };
+        let (cd, cs) = (recompute_cost_estimate(&dense), recompute_cost_estimate(&sorf));
+        assert!(cs < cd, "sorf estimate {cs} must undercut dense {cd}");
+        assert!(cs > 0.0 && cd.is_finite());
+        // More samples cost more, for both families.
+        let heavier = GsaConfig { s: 4000, ..dense.clone() };
+        assert!(recompute_cost_estimate(&heavier) > cd);
+    }
+
+    fn temp_store(tag: &str) -> StoreConfig {
+        let dir = std::env::temp_dir()
+            .join(format!("graphlet_tiered_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        StoreConfig::new(dir)
+    }
+
+    /// The tiering contract: L1 evictions are not data loss (the store
+    /// still answers), L2 hits promote, and a brand-new TieredCache
+    /// over the same directory still serves every row bitwise.
+    #[test]
+    fn tiered_cache_promotes_from_store_and_survives_reopen() {
+        let cfg = temp_store("promote");
+        let store = EmbeddingStore::open(cfg.clone()).unwrap();
+        let t = TieredCache::new(1, EvictPolicy::Lru, 1.0, Some(store));
+        t.insert(key(1), vec![1.0, -0.0, f32::MIN_POSITIVE]);
+        t.insert(key(2), vec![2.0]); // evicts key(1) from the 1-row L1
+        let s = t.stats();
+        assert_eq!(s.l1.evictions, 1);
+        assert_eq!(s.store.unwrap().records, 2, "write-through persists both rows");
+
+        // key(1) is gone from L1 but must come back from the store.
+        let row = t.get(&key(1)).expect("L2 must answer after L1 eviction");
+        assert_eq!(
+            row.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            [1.0f32, -0.0, f32::MIN_POSITIVE].iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            "store round-trip must be bitwise"
+        );
+        let s = t.stats();
+        assert_eq!((s.l2_hits, s.l2_promotions), (1, 1));
+        // Promoted: the next get is a pure L1 hit (no new l2 counters).
+        assert!(t.get(&key(1)).is_some());
+        assert_eq!(t.stats().l2_hits, 1);
+        // Full miss: both tiers empty for this key.
+        assert!(t.get(&key(9)).is_none());
+        assert_eq!(t.stats().l2_misses, 1);
+
+        // A fresh cache over the same dir (daemon restart): cold L1,
+        // warm L2.
+        drop(t);
+        let store = EmbeddingStore::open(cfg.clone()).unwrap();
+        let t = TieredCache::new(4, EvictPolicy::Lru, 1.0, Some(store));
+        assert_eq!(t.get(&key(2)), Some(vec![2.0]));
+        let s = t.stats();
+        assert_eq!((s.l2_hits, s.l1.misses), (1, 1));
+        let _ = std::fs::remove_dir_all(&cfg.dir);
+    }
+
+    /// Without a store the tiered cache is exactly the old single-tier
+    /// cache: L2 counters stay zero and misses are full misses.
+    #[test]
+    fn tiered_cache_without_store_is_single_tier() {
+        let t = TieredCache::new(2, EvictPolicy::Lru, 1.0, None);
+        assert!(t.get(&key(1)).is_none());
+        t.insert(key(1), vec![1.0]);
+        assert_eq!(t.get(&key(1)), Some(vec![1.0]));
+        let s = t.stats();
+        assert_eq!((s.l2_hits, s.l2_misses, s.l2_promotions), (0, 0, 0));
+        assert!(s.store.is_none());
+        assert_eq!((s.l1.hits, s.l1.misses), (1, 1));
+    }
+
+    /// Duplicate inserts do not bloat the log: write-through is
+    /// append-once per key.
+    #[test]
+    fn tiered_insert_is_append_once_per_key() {
+        let cfg = temp_store("dedupe");
+        let store = EmbeddingStore::open(cfg.clone()).unwrap();
+        let t = TieredCache::new(4, EvictPolicy::Lru, 1.0, Some(store));
+        t.insert(key(1), vec![1.0]);
+        t.insert(key(1), vec![9.9]); // L1 keeps first; L2 must not re-append
+        let st = t.stats().store.unwrap();
+        assert_eq!((st.records, st.dead_bytes), (1, 0));
+        assert_eq!(t.get(&key(1)), Some(vec![1.0]));
+        let _ = std::fs::remove_dir_all(&cfg.dir);
     }
 
     #[test]

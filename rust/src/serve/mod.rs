@@ -27,10 +27,32 @@
 //!                        └── fresh rows also land in the embedding cache ──┘
 //! ```
 //!
+//! The "cache hit" box above is **two-level** ([`cache::TieredCache`]):
+//!
+//! ```text
+//!   reader ── get(key) ──► L1: in-RAM LRU / cost-aware (cache_capacity)
+//!                            │ miss                     ▲ promote
+//!                            ▼                          │
+//!                          L2: segment log (--store-dir, crate::store)
+//!                            │ miss                 durable across
+//!                            ▼                      daemon restarts
+//!                          pipeline computes ── writer inserts through
+//!                          BOTH tiers (L2 append first, then L1)
+//! ```
+//!
+//! Without `--store-dir` the L2 box disappears and behavior is the
+//! historical RAM-only cache. With it, a restarted daemon reopens the
+//! log (skipping torn/corrupt tail records with a counter — see
+//! [`crate::store`]) and serves previously computed rows **bitwise
+//! identical** with zero pipeline recomputes — pinned end-to-end by
+//! `tests/store.rs` and measured by serve-bench's `warm_l2` restart
+//! pass.
+//!
 //! Request/reply format and per-request error semantics live in
-//! [`protocol`]; the cache key discipline in [`cache`]; the
-//! load-generator (`graphlet-rf serve-bench`, throughput + p50/p99) in
-//! [`bench`].
+//! [`protocol`]; the cache key + tiering discipline in [`cache`]; the
+//! load-generator (`graphlet-rf serve-bench`, labeled
+//! `cold`/`warm_l1`/`warm_l2` passes with throughput + p50/p99 and a
+//! machine-readable JSON line) in [`bench`].
 //!
 //! Robustness contract (pinned by `tests/serve.rs`): malformed JSON
 //! lines, oversized graphs, unknown ops, and mid-request disconnects
@@ -44,7 +66,10 @@ pub mod cache;
 pub mod protocol;
 pub mod server;
 
-pub use bench::{run_bench, send_shutdown, BenchPair, BenchReport};
-pub use cache::{config_fingerprint, CacheKey, CacheStats, EmbeddingCache};
+pub use bench::{run_bench, run_restart_bench, send_shutdown, BenchReport, BenchRun};
+pub use cache::{
+    config_fingerprint, recompute_cost_estimate, CacheKey, CacheStats, EmbeddingCache,
+    EvictPolicy, TieredCache, TieredStats,
+};
 pub use protocol::{embed_request, parse_embed_reply, parse_request, Request};
 pub use server::{ServeConfig, Server};

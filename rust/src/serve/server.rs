@@ -17,9 +17,12 @@ use anyhow::{Context, Result};
 use crate::coordinator::{Completed, GraphJob, GsaConfig, StreamingPipeline, SubmitOutcome};
 use crate::graph::{canonical_hash, AnyGraph, CsrGraph};
 use crate::runtime::Engine;
+use crate::store::{EmbeddingStore, StoreConfig};
 use crate::util::Json;
 
-use super::cache::{config_fingerprint, CacheKey, EmbeddingCache};
+use super::cache::{
+    config_fingerprint, recompute_cost_estimate, CacheKey, EvictPolicy, TieredCache,
+};
 use super::protocol::{embed_reply, error_reply, parse_request, ProtoError, Request};
 
 /// Serve-layer configuration wrapping the embedding [`GsaConfig`].
@@ -52,6 +55,13 @@ pub struct ServeConfig {
     pub max_pending_replies: usize,
     /// Embedding cache capacity in rows (0 disables caching).
     pub cache_capacity: usize,
+    /// L1 eviction policy (`--cache-policy lru|cost-aware`).
+    pub cache_policy: EvictPolicy,
+    /// Segment-log directory for the persistent L2 tier
+    /// (`--store-dir`); `None` keeps the cache RAM-only. With a store,
+    /// rows computed by a previous daemon process are served bitwise
+    /// identical from disk after a restart instead of being recomputed.
+    pub store_dir: Option<std::path::PathBuf>,
 }
 
 impl Default for ServeConfig {
@@ -64,15 +74,17 @@ impl Default for ServeConfig {
             max_graph_index: 1 << 20,
             max_pending_replies: 1024,
             cache_capacity: 4096,
+            cache_policy: EvictPolicy::Lru,
+            store_dir: None,
         }
     }
 }
 
-/// Shared server state: the pipeline, the cache, and counters.
+/// Shared server state: the pipeline, the tiered cache, and counters.
 struct ServeCtx {
     cfg: ServeConfig,
     pipeline: StreamingPipeline,
-    cache: EmbeddingCache,
+    cache: TieredCache,
     config_fp: u64,
     addr: SocketAddr,
     stop: AtomicBool,
@@ -91,14 +103,28 @@ pub struct Server {
 impl Server {
     /// Build the persistent pipeline and bind the listener. `engine` is
     /// the PJRT template when `cfg.gsa.engine` is PJRT (same contract as
-    /// `embed_dataset`).
+    /// `embed_dataset`). With `cfg.store_dir` set, the segment log is
+    /// opened (recovering whatever a previous daemon left, torn tails
+    /// skipped) and tiered under the in-RAM cache.
     pub fn bind(addr: &str, cfg: ServeConfig, engine: Option<&Engine>) -> Result<Server> {
         let pipeline = StreamingPipeline::new(&cfg.gsa, engine)?;
         let listener =
             TcpListener::bind(addr).with_context(|| format!("binding serve socket {addr}"))?;
         let local = listener.local_addr()?;
         let config_fp = config_fingerprint(pipeline.cfg());
-        let cache = EmbeddingCache::new(cfg.cache_capacity);
+        let store = match &cfg.store_dir {
+            Some(dir) => Some(
+                EmbeddingStore::open(StoreConfig::new(dir.clone()))
+                    .with_context(|| format!("opening embedding store {}", dir.display()))?,
+            ),
+            None => None,
+        };
+        let cache = TieredCache::new(
+            cfg.cache_capacity,
+            cfg.cache_policy,
+            recompute_cost_estimate(pipeline.cfg()),
+            store,
+        );
         Ok(Server {
             listener,
             ctx: Arc::new(ServeCtx {
@@ -371,7 +397,8 @@ fn validate_graph(ctx: &ServeCtx, v: usize, edges: &[(usize, usize)]) -> Result<
 }
 
 fn stats_reply(id: u64, ctx: &ServeCtx) -> String {
-    let cache = ctx.cache.stats();
+    let tiered = ctx.cache.stats();
+    let cache = tiered.l1;
     let pipe = ctx.pipeline.metrics_snapshot();
     // Backpressure gauges: admitted-but-unclaimed jobs and per-shard
     // channel occupancy, so overload (`Overloaded`) is observable as
@@ -380,19 +407,41 @@ fn stats_reply(id: u64, ctx: &ServeCtx) -> String {
     for occ in ctx.pipeline.shard_occupancy() {
         occupancy.push(occ);
     }
-    Json::obj()
+    let mut out = Json::obj()
         .set("id", id)
         .set("ok", true)
         .set("op", "stats")
         .set(
             "cache",
+            // L1 counters keep their historical names; the l2_* trio is
+            // always present (zero without a store) so clients can
+            // track the full-miss rate — `l2_misses` is the number of
+            // requests the pipeline actually had to compute when a
+            // store is attached.
             Json::obj()
                 .set("hits", cache.hits)
                 .set("misses", cache.misses)
                 .set("evictions", cache.evictions)
                 .set("len", cache.len)
-                .set("capacity", cache.capacity),
-        )
+                .set("capacity", cache.capacity)
+                .set("policy", cache.policy)
+                .set("l2_hits", tiered.l2_hits)
+                .set("l2_misses", tiered.l2_misses)
+                .set("l2_promotions", tiered.l2_promotions),
+        );
+    if let Some(st) = tiered.store {
+        out = out.set(
+            "store",
+            Json::obj()
+                .set("segments", st.segments)
+                .set("records", st.records)
+                .set("live_bytes", st.live_bytes)
+                .set("dead_bytes", st.dead_bytes)
+                .set("corrupt_skipped", st.corrupt_skipped)
+                .set("compactions", st.compactions),
+        );
+    }
+    out
         .set(
             "pipeline",
             Json::obj()

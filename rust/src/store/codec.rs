@@ -1,0 +1,257 @@
+//! The hand-rolled binary codec for embedding-store records.
+//!
+//! One record carries one embedding row plus its content address
+//! ([`CacheKey`]), length-prefixed and checksummed so a reader can walk
+//! a segment without any external index and can *prove* each record
+//! intact before trusting it:
+//!
+//! ```text
+//!  offset  size  field
+//!  ──────  ────  ─────────────────────────────────────────────
+//!       0     4  payload_len (u32 LE) — bytes of the payload
+//!       4     8  key.graph_hash (u64 LE)  ┐
+//!      12     8  key.config_fp  (u64 LE)  │
+//!      20     8  key.seed       (u64 LE)  │ payload
+//!      28     4  row_len        (u32 LE)  │ (payload_len bytes)
+//!      32  4·row_len  row f32 bits (LE)   ┘
+//!    32+4·row_len  8  FNV-1a of the payload bytes (u64 LE)
+//! ```
+//!
+//! Rows are written as raw `f32::to_bits` and read back with
+//! `f32::from_bits`, so a round-trip is **bitwise** — the store serves
+//! exactly the floats the pipeline computed, NaN payloads included.
+//! The checksum is the same FNV-1a mixing as [`crate::util::fnv`] (one
+//! definition crate-wide), covering the payload only: the length prefix
+//! is validated structurally (bounds + row_len consistency) instead.
+//!
+//! Decoding distinguishes [`Decoded::Truncated`] (fewer bytes than the
+//! framing promises — the torn tail a crash leaves behind) from
+//! [`Decoded::Corrupt`] (framing present but inconsistent, or a
+//! checksum mismatch). Both are recoverable conditions for the segment
+//! scanner, never panics.
+
+use crate::util::fnv;
+
+/// The content address of one embedding row: with `(canonical graph
+/// hash, config fingerprint, per-job seed)` fixed, an embedding is a
+/// pure function of its inputs — which is what makes rows durable
+/// artifacts worth persisting. Defined here (the on-disk key) and
+/// re-exported by `serve::cache` (the in-RAM key); both tiers address
+/// rows identically.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct CacheKey {
+    pub graph_hash: u64,
+    pub config_fp: u64,
+    pub seed: u64,
+}
+
+/// Every segment file starts with these 8 bytes (name + format version;
+/// bump the digit on incompatible codec changes).
+pub const SEGMENT_MAGIC: [u8; 8] = *b"GRFSEG1\n";
+
+/// Payload bytes ahead of the row data: three u64 key fields + u32 row
+/// length.
+pub const PAYLOAD_HEADER: usize = 28;
+
+/// Framing bytes around the payload: u32 length prefix + u64 checksum.
+pub const RECORD_OVERHEAD: usize = 12;
+
+/// Sanity bound on `row_len` (16M floats = 64 MiB rows): a length
+/// beyond this is treated as corruption, so a scrambled length prefix
+/// cannot make the scanner attempt a huge allocation.
+pub const MAX_ROW_LEN: usize = 1 << 24;
+
+/// Total encoded size of a record carrying `row_len` floats.
+pub fn record_len(row_len: usize) -> usize {
+    RECORD_OVERHEAD + PAYLOAD_HEADER + 4 * row_len
+}
+
+/// Append one encoded record to `out`.
+pub fn encode_record(key: &CacheKey, row: &[f32], out: &mut Vec<u8>) {
+    let payload_len = PAYLOAD_HEADER + 4 * row.len();
+    out.reserve(RECORD_OVERHEAD + payload_len);
+    out.extend_from_slice(&(payload_len as u32).to_le_bytes());
+    let payload_start = out.len();
+    out.extend_from_slice(&key.graph_hash.to_le_bytes());
+    out.extend_from_slice(&key.config_fp.to_le_bytes());
+    out.extend_from_slice(&key.seed.to_le_bytes());
+    out.extend_from_slice(&(row.len() as u32).to_le_bytes());
+    for v in row {
+        out.extend_from_slice(&v.to_bits().to_le_bytes());
+    }
+    let sum = fnv::mix_bytes(fnv::OFFSET, &out[payload_start..]);
+    out.extend_from_slice(&sum.to_le_bytes());
+}
+
+/// Outcome of decoding the record at the front of `buf`.
+#[derive(Debug)]
+pub enum Decoded {
+    /// A verified record; `len` is the encoded size consumed.
+    Record { key: CacheKey, row: Vec<f32>, len: usize },
+    /// The framing promises more bytes than `buf` holds — the torn tail
+    /// an interrupted append leaves behind.
+    Truncated,
+    /// Framing present but inconsistent, or the checksum failed. When
+    /// the framing itself was plausible, `skip` carries the record's
+    /// encoded length so a scanner can resync past *just* the damaged
+    /// record (one flipped bit must not cost the rest of the segment);
+    /// `skip: None` means the length prefix is untrustworthy and
+    /// nothing after it can be re-framed.
+    Corrupt { reason: &'static str, skip: Option<usize> },
+}
+
+fn read_u32(b: &[u8]) -> u32 {
+    u32::from_le_bytes([b[0], b[1], b[2], b[3]])
+}
+
+fn read_u64(b: &[u8]) -> u64 {
+    u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]])
+}
+
+/// Decode (and verify) the record at the front of `buf`. Callers scan a
+/// segment by repeatedly decoding and advancing by the returned `len`;
+/// an empty `buf` is end-of-segment and should not reach here.
+pub fn decode_record(buf: &[u8]) -> Decoded {
+    if buf.len() < 4 {
+        return Decoded::Truncated;
+    }
+    let payload_len = read_u32(buf) as usize;
+    if !(PAYLOAD_HEADER..=PAYLOAD_HEADER + 4 * MAX_ROW_LEN).contains(&payload_len) {
+        return Decoded::Corrupt { reason: "payload length out of bounds", skip: None };
+    }
+    let total = RECORD_OVERHEAD + payload_len;
+    if buf.len() < total {
+        return Decoded::Truncated;
+    }
+    let payload = &buf[4..4 + payload_len];
+    let want_sum = read_u64(&buf[4 + payload_len..total]);
+    if fnv::mix_bytes(fnv::OFFSET, payload) != want_sum {
+        return Decoded::Corrupt { reason: "checksum mismatch", skip: Some(total) };
+    }
+    let row_len = read_u32(&payload[24..28]) as usize;
+    if payload_len != PAYLOAD_HEADER + 4 * row_len {
+        return Decoded::Corrupt {
+            reason: "row length disagrees with payload length",
+            skip: Some(total),
+        };
+    }
+    let key = CacheKey {
+        graph_hash: read_u64(&payload[0..8]),
+        config_fp: read_u64(&payload[8..16]),
+        seed: read_u64(&payload[16..24]),
+    };
+    let mut row = Vec::with_capacity(row_len);
+    for chunk in payload[PAYLOAD_HEADER..].chunks_exact(4) {
+        row.push(f32::from_bits(read_u32(chunk)));
+    }
+    Decoded::Record { key, row, len: total }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(n: u64) -> CacheKey {
+        CacheKey { graph_hash: n, config_fp: n ^ 0xBEEF, seed: n.wrapping_mul(31) }
+    }
+
+    #[test]
+    fn roundtrip_is_bitwise_including_odd_floats() {
+        let row = vec![1.0f32, -0.0, f32::MIN_POSITIVE, f32::NAN, 3.25e-7, f32::INFINITY];
+        let mut buf = Vec::new();
+        encode_record(&key(7), &row, &mut buf);
+        assert_eq!(buf.len(), record_len(row.len()));
+        match decode_record(&buf) {
+            Decoded::Record { key: k, row: back, len } => {
+                assert_eq!(k, key(7));
+                assert_eq!(len, buf.len());
+                assert_eq!(back.len(), row.len());
+                for (a, b) in back.iter().zip(&row) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "bitwise drift");
+                }
+            }
+            other => panic!("decode failed: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn consecutive_records_scan() {
+        let mut buf = Vec::new();
+        encode_record(&key(1), &[1.0, 2.0], &mut buf);
+        encode_record(&key(2), &[], &mut buf);
+        encode_record(&key(3), &[9.5; 17], &mut buf);
+        let mut at = 0usize;
+        let mut seen = Vec::new();
+        while at < buf.len() {
+            match decode_record(&buf[at..]) {
+                Decoded::Record { key, len, .. } => {
+                    seen.push(key.graph_hash);
+                    at += len;
+                }
+                other => panic!("scan broke at {at}: {other:?}"),
+            }
+        }
+        assert_eq!(seen, [1, 2, 3]);
+        assert_eq!(at, buf.len());
+    }
+
+    #[test]
+    fn truncation_at_every_boundary_is_truncated_not_panic() {
+        let mut buf = Vec::new();
+        encode_record(&key(4), &[1.0, 2.0, 3.0], &mut buf);
+        for cut in 1..buf.len() {
+            match decode_record(&buf[..cut]) {
+                Decoded::Truncated => {}
+                Decoded::Corrupt { .. } => {
+                    panic!("clean prefix of len {cut} must read as truncated, not corrupt")
+                }
+                Decoded::Record { .. } => panic!("prefix of len {cut} decoded as a full record"),
+            }
+        }
+    }
+
+    #[test]
+    fn bit_flips_fail_the_checksum_and_carry_a_resync_hint() {
+        let mut clean = Vec::new();
+        encode_record(&key(5), &[0.5, -0.5, 42.0], &mut clean);
+        // Flip one bit in every payload byte position in turn. The
+        // framing stays intact, so every flip must be skippable: the
+        // hint lets a scanner lose exactly one record, not a segment.
+        for at in 4..4 + PAYLOAD_HEADER + 12 {
+            let mut buf = clean.clone();
+            buf[at] ^= 0x40;
+            match decode_record(&buf) {
+                Decoded::Corrupt { skip: Some(n), .. } => assert_eq!(n, clean.len()),
+                other => panic!("flip at byte {at} not caught: {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn absurd_length_prefix_is_corrupt_without_allocating_or_resyncing() {
+        let mut buf = Vec::new();
+        encode_record(&key(6), &[1.0], &mut buf);
+        buf[0..4].copy_from_slice(&u32::MAX.to_le_bytes());
+        match decode_record(&buf) {
+            Decoded::Corrupt { reason, skip } => {
+                assert!(reason.contains("length"), "{reason}");
+                assert!(skip.is_none(), "an untrusted length must not offer a resync hint");
+            }
+            other => panic!("{other:?}"),
+        }
+        // Too-small lengths (below the fixed payload header) too.
+        buf[0..4].copy_from_slice(&3u32.to_le_bytes());
+        assert!(matches!(decode_record(&buf), Decoded::Corrupt { skip: None, .. }));
+    }
+
+    #[test]
+    fn empty_row_roundtrips() {
+        let mut buf = Vec::new();
+        encode_record(&key(8), &[], &mut buf);
+        assert_eq!(buf.len(), RECORD_OVERHEAD + PAYLOAD_HEADER);
+        match decode_record(&buf) {
+            Decoded::Record { row, .. } => assert!(row.is_empty()),
+            other => panic!("{other:?}"),
+        }
+    }
+}

@@ -1,0 +1,657 @@
+//! The append-only segment log: rotation, recovery scan, and
+//! compaction. See [`super`] (the module docs) for the on-disk layout
+//! diagram; the record codec lives in [`super::codec`].
+//!
+//! Durability model: every [`put`](EmbeddingStore::put) is one
+//! unbuffered `write_all` straight to the active segment file, so a
+//! record is either fully in the OS page cache or it is the torn tail —
+//! there is no user-space write buffer for a crash to eat. The recovery
+//! scan ([`open`](EmbeddingStore::open)) walks each segment record by
+//! record; a checksum-failed record with intact framing is *resynced
+//! past* (one flipped bit loses one row, not a segment), while a torn
+//! tail or untrustworthy length prefix stops the segment — both counted
+//! in `corrupt_skipped`, never panicking — and the *last* segment is
+//! truncated back to its last intact record so future appends start
+//! from a clean byte. (`fsync` per record is deliberately not paid: the
+//! contract is "crash-tolerant", not "power-loss-proof per row" — a
+//! lost tail row is recomputed and rewritten on the next request.)
+//!
+//! Single-writer contract: exactly one [`EmbeddingStore`] (one daemon)
+//! may own a directory at a time — there is no cross-process lock, and
+//! two writers would interleave appends into the same active segment.
+//! (A lock file is deliberately absent for now: a stale lock left by a
+//! SIGKILLed daemon would block the restart-recovery path this store
+//! exists for; a liveness-checked lock is a ROADMAP follow-up.)
+
+use std::collections::{btree_map, BTreeMap, BTreeSet, HashMap};
+use std::fs::{File, OpenOptions};
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use super::codec::{decode_record, encode_record, CacheKey, Decoded, SEGMENT_MAGIC};
+
+/// Tunables for one store directory.
+#[derive(Clone, Debug)]
+pub struct StoreConfig {
+    /// Directory holding the `seg-NNNNNNNN.log` files (created on open).
+    pub dir: PathBuf,
+    /// Rotate the active segment once it would exceed this many bytes
+    /// (a single record larger than the threshold still gets written —
+    /// into a segment of its own).
+    pub segment_bytes: u64,
+    /// Compact when `dead_bytes / (live + dead)` exceeds this ratio…
+    pub compact_dead_ratio: f64,
+    /// …and the log holds at least this many bytes (tiny logs are never
+    /// worth rewriting).
+    pub compact_min_bytes: u64,
+}
+
+impl StoreConfig {
+    pub fn new(dir: impl Into<PathBuf>) -> StoreConfig {
+        StoreConfig {
+            dir: dir.into(),
+            segment_bytes: 8 << 20,
+            compact_dead_ratio: 0.5,
+            compact_min_bytes: 1 << 20,
+        }
+    }
+}
+
+/// Where one live record sits on disk.
+#[derive(Clone, Copy, Debug)]
+struct RecordLoc {
+    segment: u64,
+    offset: u64,
+    len: u32,
+}
+
+/// Counter/size snapshot for the serve `stats` op.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StoreStats {
+    /// Segment files currently on disk.
+    pub segments: usize,
+    /// Live (indexed) records.
+    pub records: usize,
+    /// Bytes owned by live records.
+    pub live_bytes: u64,
+    /// Bytes owned by superseded (or corrupt-and-skipped) records —
+    /// reclaimed by compaction.
+    pub dead_bytes: u64,
+    /// Torn/corrupt records skipped — at open (one per abandoned
+    /// segment tail) or at read time (a record that fails its checksum
+    /// is dropped from the index and recomputed upstream).
+    pub corrupt_skipped: u64,
+    /// Compaction passes completed since open.
+    pub compactions: u64,
+}
+
+/// A content-addressed, append-only embedding store over numbered
+/// segment files, with an in-memory offset index rebuilt by scanning
+/// the segments on open. Not internally synchronized — the serve tier
+/// wraps it in a `Mutex` (one store per daemon).
+pub struct EmbeddingStore {
+    cfg: StoreConfig,
+    index: HashMap<CacheKey, RecordLoc>,
+    /// Lazily opened read handles, one per segment.
+    readers: BTreeMap<u64, File>,
+    /// Ids of the segment files currently on disk.
+    segment_ids: BTreeSet<u64>,
+    /// Append handle for the active (highest-id) segment.
+    active: File,
+    active_id: u64,
+    active_len: u64,
+    live_bytes: u64,
+    dead_bytes: u64,
+    corrupt_skipped: u64,
+    compactions: u64,
+    scratch: Vec<u8>,
+}
+
+fn segment_path(dir: &Path, id: u64) -> PathBuf {
+    dir.join(format!("seg-{id:08}.log"))
+}
+
+/// Create (or truncate) a segment file and write its magic header.
+fn create_segment(dir: &Path, id: u64) -> Result<File> {
+    let path = segment_path(dir, id);
+    let mut f = OpenOptions::new()
+        .create(true)
+        .truncate(true)
+        .write(true)
+        .open(&path)
+        .with_context(|| format!("creating segment {}", path.display()))?;
+    f.write_all(&SEGMENT_MAGIC)?;
+    Ok(f)
+}
+
+impl EmbeddingStore {
+    /// Open (or initialize) the store at `cfg.dir`: scan every segment
+    /// in id order, rebuild the offset index (a later record for the
+    /// same key supersedes the earlier one, whose bytes become dead),
+    /// and truncate the active segment past its last intact record.
+    /// Torn or corrupt data is skipped with a counter — never an error,
+    /// never a panic: losing a tail row only costs one recompute.
+    pub fn open(cfg: StoreConfig) -> Result<EmbeddingStore> {
+        std::fs::create_dir_all(&cfg.dir)
+            .with_context(|| format!("creating store dir {}", cfg.dir.display()))?;
+        let mut ids: Vec<u64> = Vec::new();
+        for entry in std::fs::read_dir(&cfg.dir)? {
+            let name = entry?.file_name();
+            if let Some(id) = name
+                .to_str()
+                .and_then(|n| n.strip_prefix("seg-"))
+                .and_then(|n| n.strip_suffix(".log"))
+                .and_then(|n| n.parse::<u64>().ok())
+            {
+                ids.push(id);
+            }
+        }
+        ids.sort_unstable();
+
+        let mut index: HashMap<CacheKey, RecordLoc> = HashMap::new();
+        let mut live_bytes = 0u64;
+        let mut dead_bytes = 0u64;
+        let mut corrupt_skipped = 0u64;
+        for (pos, &id) in ids.iter().enumerate() {
+            let path = segment_path(&cfg.dir, id);
+            let bytes =
+                std::fs::read(&path).with_context(|| format!("reading {}", path.display()))?;
+            let is_last = pos + 1 == ids.len();
+            if bytes.len() < SEGMENT_MAGIC.len() || bytes[..SEGMENT_MAGIC.len()] != SEGMENT_MAGIC {
+                // Torn or foreign header: nothing in this segment is
+                // trustworthy. The last segment is reset so appends
+                // start clean; earlier ones are left untouched.
+                corrupt_skipped += 1;
+                if is_last {
+                    create_segment(&cfg.dir, id)?;
+                }
+                continue;
+            }
+            let mut at = SEGMENT_MAGIC.len();
+            while at < bytes.len() {
+                match decode_record(&bytes[at..]) {
+                    Decoded::Record { key, row: _, len } => {
+                        let loc = RecordLoc { segment: id, offset: at as u64, len: len as u32 };
+                        if let Some(old) = index.insert(key, loc) {
+                            dead_bytes += u64::from(old.len);
+                            live_bytes = live_bytes.saturating_sub(u64::from(old.len));
+                        }
+                        live_bytes += len as u64;
+                        at += len;
+                    }
+                    Decoded::Corrupt { skip: Some(len), .. } => {
+                        // Intact framing, failed verification (e.g. one
+                        // flipped bit): resync past exactly this record
+                        // so the rest of the segment survives. Its
+                        // bytes stay on disk as dead weight until
+                        // compaction.
+                        corrupt_skipped += 1;
+                        dead_bytes += len as u64;
+                        at += len;
+                    }
+                    Decoded::Truncated | Decoded::Corrupt { skip: None, .. } => {
+                        // Torn tail or untrustworthy length prefix: one
+                        // counted skip, and nothing after it can be
+                        // re-framed — the rest of this segment is
+                        // unreachable.
+                        corrupt_skipped += 1;
+                        break;
+                    }
+                }
+            }
+            if is_last && at < bytes.len() {
+                // Drop the torn tail so the next append starts at a
+                // record boundary.
+                let f = OpenOptions::new().write(true).open(&path)?;
+                f.set_len(at as u64)?;
+            }
+        }
+
+        // The active segment is the highest id on disk, or a fresh
+        // seg-00000000 for an empty directory.
+        let (active_id, active) = match ids.last().copied() {
+            Some(id) => {
+                let f = OpenOptions::new()
+                    .append(true)
+                    .open(segment_path(&cfg.dir, id))
+                    .with_context(|| format!("opening active segment {id}"))?;
+                (id, f)
+            }
+            None => {
+                ids.push(0);
+                (0, create_segment(&cfg.dir, 0)?)
+            }
+        };
+        let active_len = active.metadata()?.len();
+        Ok(EmbeddingStore {
+            cfg,
+            index,
+            readers: BTreeMap::new(),
+            segment_ids: ids.into_iter().collect(),
+            active,
+            active_id,
+            active_len,
+            live_bytes,
+            dead_bytes,
+            corrupt_skipped,
+            compactions: 0,
+            scratch: Vec::new(),
+        })
+    }
+
+    /// Look up a row by content address. A record that fails its
+    /// checksum at read time is dropped from the index and counted in
+    /// `corrupt_skipped` — the caller sees a miss and recomputes.
+    pub fn get(&mut self, key: &CacheKey) -> Option<Vec<f32>> {
+        let loc = *self.index.get(key)?;
+        match self.read_at(loc) {
+            Ok((k, row)) if k == *key => Some(row),
+            _ => {
+                self.corrupt_skipped += 1;
+                self.index.remove(key);
+                self.live_bytes = self.live_bytes.saturating_sub(u64::from(loc.len));
+                self.dead_bytes += u64::from(loc.len);
+                None
+            }
+        }
+    }
+
+    /// Append a row (write-through from the cache tier). Re-putting an
+    /// existing key supersedes its old record (the bytes become dead
+    /// and are reclaimed by compaction); callers that want append-once
+    /// semantics should check [`contains`](Self::contains) first.
+    pub fn put(&mut self, key: CacheKey, row: &[f32]) -> Result<()> {
+        let loc = self.append_record(&key, row)?;
+        if let Some(old) = self.index.insert(key, loc) {
+            self.dead_bytes += u64::from(old.len);
+            self.live_bytes = self.live_bytes.saturating_sub(u64::from(old.len));
+        }
+        self.live_bytes += u64::from(loc.len);
+        self.maybe_compact()
+    }
+
+    pub fn contains(&self, key: &CacheKey) -> bool {
+        self.index.contains_key(key)
+    }
+
+    /// Live (indexed) record count.
+    pub fn len(&self) -> usize {
+        self.index.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.index.is_empty()
+    }
+
+    pub fn stats(&self) -> StoreStats {
+        StoreStats {
+            segments: self.segment_ids.len(),
+            records: self.index.len(),
+            live_bytes: self.live_bytes,
+            dead_bytes: self.dead_bytes,
+            corrupt_skipped: self.corrupt_skipped,
+            compactions: self.compactions,
+        }
+    }
+
+    /// Rewrite every live record into fresh segments (numbered after
+    /// the current active, so a crash mid-compaction leaves a directory
+    /// where the ascending-id recovery scan still prefers the rewrite),
+    /// then delete the old generation. Reclaims all dead bytes.
+    pub fn compact(&mut self) -> Result<()> {
+        let mut entries: Vec<(CacheKey, RecordLoc)> =
+            self.index.iter().map(|(k, &l)| (*k, l)).collect();
+        // (segment, offset) order: sequential reads, deterministic
+        // rewrite layout.
+        entries.sort_unstable_by_key(|&(_, l)| (l.segment, l.offset));
+        let old_ids: Vec<u64> = self.segment_ids.iter().copied().collect();
+        self.rotate()?;
+        let mut new_index = HashMap::with_capacity(entries.len());
+        let mut new_live = 0u64;
+        for (key, loc) in entries {
+            let row = match self.read_at(loc) {
+                Ok((k, row)) if k == key => row,
+                // A record that went bad between index build and
+                // rewrite: skip it, like any other corrupt read.
+                _ => {
+                    self.corrupt_skipped += 1;
+                    continue;
+                }
+            };
+            let new_loc = self.append_record(&key, &row)?;
+            new_live += u64::from(new_loc.len);
+            new_index.insert(key, new_loc);
+        }
+        self.index = new_index;
+        self.live_bytes = new_live;
+        self.dead_bytes = 0;
+        for id in old_ids {
+            self.readers.remove(&id);
+            self.segment_ids.remove(&id);
+            let _ = std::fs::remove_file(segment_path(&self.cfg.dir, id));
+        }
+        self.compactions += 1;
+        Ok(())
+    }
+
+    fn maybe_compact(&mut self) -> Result<()> {
+        let total = self.live_bytes + self.dead_bytes;
+        if total >= self.cfg.compact_min_bytes
+            && self.dead_bytes as f64 > self.cfg.compact_dead_ratio * total as f64
+        {
+            self.compact()?;
+        }
+        Ok(())
+    }
+
+    /// Encode and append one record to the active segment, rotating
+    /// first when the segment is at its size threshold. No index or
+    /// byte accounting — [`put`](Self::put) and
+    /// [`compact`](Self::compact) layer their own on top.
+    fn append_record(&mut self, key: &CacheKey, row: &[f32]) -> Result<RecordLoc> {
+        let mut buf = std::mem::take(&mut self.scratch);
+        buf.clear();
+        encode_record(key, row, &mut buf);
+        if self.active_len > SEGMENT_MAGIC.len() as u64
+            && self.active_len + buf.len() as u64 > self.cfg.segment_bytes
+        {
+            self.rotate()?;
+        }
+        let wrote = self.active.write_all(&buf);
+        self.scratch = buf;
+        if let Err(e) = wrote {
+            // A partial append is a torn tail mid-segment; rotate so
+            // later records land in a clean segment (the recovery scan
+            // would otherwise stop at the tear and lose them).
+            let _ = self.rotate();
+            return Err(anyhow::Error::from(e).context("appending embedding record"));
+        }
+        let loc = RecordLoc {
+            segment: self.active_id,
+            offset: self.active_len,
+            len: self.scratch.len() as u32,
+        };
+        self.active_len += self.scratch.len() as u64;
+        Ok(loc)
+    }
+
+    fn rotate(&mut self) -> Result<()> {
+        let id = self.active_id + 1;
+        self.active = create_segment(&self.cfg.dir, id)?;
+        self.active_id = id;
+        self.active_len = SEGMENT_MAGIC.len() as u64;
+        self.segment_ids.insert(id);
+        Ok(())
+    }
+
+    /// Read + verify the record at `loc` through this segment's (lazily
+    /// opened) read handle.
+    fn read_at(&mut self, loc: RecordLoc) -> Result<(CacheKey, Vec<f32>)> {
+        let file = match self.readers.entry(loc.segment) {
+            btree_map::Entry::Occupied(e) => e.into_mut(),
+            btree_map::Entry::Vacant(e) => {
+                let path = segment_path(&self.cfg.dir, loc.segment);
+                e.insert(
+                    File::open(&path)
+                        .with_context(|| format!("opening segment {}", path.display()))?,
+                )
+            }
+        };
+        file.seek(SeekFrom::Start(loc.offset))?;
+        let mut buf = vec![0u8; loc.len as usize];
+        file.read_exact(&mut buf)?;
+        match decode_record(&buf) {
+            Decoded::Record { key, row, .. } => Ok((key, row)),
+            Decoded::Truncated => bail!("record truncated on disk"),
+            Decoded::Corrupt { reason, .. } => bail!("record corrupt on disk: {reason}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::store::codec::record_len;
+
+    fn key(n: u64) -> CacheKey {
+        CacheKey { graph_hash: n, config_fp: 0xC0FFEE, seed: n ^ 0xA5 }
+    }
+
+    fn row(n: u64, len: usize) -> Vec<f32> {
+        (0..len).map(|i| (n as f32) * 0.25 + (i as f32) * 1.5e-3).collect()
+    }
+
+    fn temp_store(tag: &str) -> StoreConfig {
+        let dir = std::env::temp_dir()
+            .join(format!("graphlet_store_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        StoreConfig::new(dir)
+    }
+
+    fn cleanup(cfg: &StoreConfig) {
+        let _ = std::fs::remove_dir_all(&cfg.dir);
+    }
+
+    #[test]
+    fn put_get_roundtrip_and_reopen_rebuild_index() {
+        let cfg = temp_store("roundtrip");
+        {
+            let mut s = EmbeddingStore::open(cfg.clone()).unwrap();
+            assert!(s.is_empty());
+            for n in 0..10u64 {
+                s.put(key(n), &row(n, 16)).unwrap();
+            }
+            assert_eq!(s.len(), 10);
+            for n in 0..10u64 {
+                let got = s.get(&key(n)).unwrap();
+                assert_eq!(
+                    got.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    row(n, 16).iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    "row {n} must round-trip bitwise"
+                );
+            }
+            assert!(s.get(&key(99)).is_none());
+            let st = s.stats();
+            assert_eq!((st.records, st.segments, st.dead_bytes, st.corrupt_skipped), (10, 1, 0, 0));
+            assert_eq!(st.live_bytes, 10 * record_len(16) as u64);
+        }
+        // Reopen: the index is rebuilt purely from the segment scan.
+        let mut s = EmbeddingStore::open(cfg.clone()).unwrap();
+        assert_eq!(s.len(), 10);
+        for n in 0..10u64 {
+            assert_eq!(s.get(&key(n)).unwrap(), row(n, 16), "row {n} lost across reopen");
+        }
+        assert_eq!(s.stats().corrupt_skipped, 0);
+        cleanup(&cfg);
+    }
+
+    #[test]
+    fn torn_final_record_is_dropped_not_fatal() {
+        let cfg = temp_store("torn");
+        {
+            let mut s = EmbeddingStore::open(cfg.clone()).unwrap();
+            for n in 0..3u64 {
+                s.put(key(n), &row(n, 8)).unwrap();
+            }
+        }
+        // Tear the final record mid-checksum, as a crash would.
+        let path = segment_path(&cfg.dir, 0);
+        let len = std::fs::metadata(&path).unwrap().len();
+        let f = OpenOptions::new().write(true).open(&path).unwrap();
+        f.set_len(len - 5).unwrap();
+        drop(f);
+
+        let mut s = EmbeddingStore::open(cfg.clone()).unwrap();
+        let st = s.stats();
+        assert_eq!(st.corrupt_skipped, 1, "the torn tail must be counted");
+        assert_eq!(st.records, 2, "only the torn record is lost");
+        assert!(s.get(&key(2)).is_none(), "the torn record must read as a miss");
+        assert_eq!(s.get(&key(0)).unwrap(), row(0, 8));
+        assert_eq!(s.get(&key(1)).unwrap(), row(1, 8));
+        // The tail was truncated: a fresh put lands cleanly and
+        // survives another reopen.
+        s.put(key(2), &row(2, 8)).unwrap();
+        drop(s);
+        let mut s = EmbeddingStore::open(cfg.clone()).unwrap();
+        assert_eq!(s.stats().corrupt_skipped, 0, "truncation removed the torn bytes");
+        assert_eq!(s.get(&key(2)).unwrap(), row(2, 8));
+        cleanup(&cfg);
+    }
+
+    #[test]
+    fn mid_segment_bit_flip_loses_exactly_one_record() {
+        let cfg = temp_store("midcorrupt");
+        {
+            let mut s = EmbeddingStore::open(cfg.clone()).unwrap();
+            for n in 0..6u64 {
+                s.put(key(n), &row(n, 8)).unwrap();
+            }
+            assert_eq!(s.stats().segments, 1, "one big segment holds every record");
+        }
+        // Flip a byte inside the SECOND record of six: the framing is
+        // intact, so the recovery scan must resync past exactly that
+        // record — one flipped bit costs one row, not the segment.
+        let path = segment_path(&cfg.dir, 0);
+        let mut bytes = std::fs::read(&path).unwrap();
+        let at = SEGMENT_MAGIC.len() + record_len(8) + 20;
+        bytes[at] ^= 0x10;
+        std::fs::write(&path, &bytes).unwrap();
+
+        let mut s = EmbeddingStore::open(cfg.clone()).unwrap();
+        let st = s.stats();
+        assert_eq!(st.corrupt_skipped, 1);
+        assert_eq!(st.records, 5);
+        assert_eq!(st.dead_bytes, record_len(8) as u64, "the skipped bytes become dead weight");
+        assert_eq!(s.get(&key(0)).unwrap(), row(0, 8), "record before the flip survives");
+        assert!(s.get(&key(1)).is_none(), "the flipped record is lost");
+        for n in 2..6u64 {
+            assert_eq!(
+                s.get(&key(n)).unwrap(),
+                row(n, 8),
+                "records after the flip in the same segment must survive"
+            );
+        }
+        cleanup(&cfg);
+    }
+
+    #[test]
+    fn rotation_splits_segments_and_all_rows_stay_readable() {
+        let mut cfg = temp_store("rotate");
+        cfg.segment_bytes = 3 * record_len(4) as u64; // ~3 records per segment
+        let mut s = EmbeddingStore::open(cfg.clone()).unwrap();
+        for n in 0..20u64 {
+            s.put(key(n), &row(n, 4)).unwrap();
+        }
+        let st = s.stats();
+        assert!(st.segments >= 6, "20 records at ~3/segment, got {}", st.segments);
+        for n in 0..20u64 {
+            assert_eq!(s.get(&key(n)).unwrap(), row(n, 4));
+        }
+        drop(s);
+        let mut s = EmbeddingStore::open(cfg.clone()).unwrap();
+        assert_eq!(s.stats().segments, st.segments, "reopen must see the same segments");
+        for n in 0..20u64 {
+            assert_eq!(s.get(&key(n)).unwrap(), row(n, 4));
+        }
+        cleanup(&cfg);
+    }
+
+    #[test]
+    fn duplicate_puts_count_dead_bytes_and_compaction_reclaims_them() {
+        let mut cfg = temp_store("compact");
+        cfg.segment_bytes = 4 * record_len(8) as u64;
+        cfg.compact_min_bytes = u64::MAX; // manual compaction only
+        let mut s = EmbeddingStore::open(cfg.clone()).unwrap();
+        for n in 0..4u64 {
+            s.put(key(n), &row(n, 8)).unwrap();
+        }
+        // Rewrite key 0 five times: five superseded records.
+        for gen in 0..5u64 {
+            s.put(key(0), &row(100 + gen, 8)).unwrap();
+        }
+        let st = s.stats();
+        assert_eq!(st.records, 4);
+        assert_eq!(st.dead_bytes, 5 * record_len(8) as u64);
+        let segments_before = st.segments;
+        assert!(segments_before >= 2);
+
+        s.compact().unwrap();
+        let st = s.stats();
+        assert_eq!(st.dead_bytes, 0, "compaction reclaims every dead byte");
+        assert_eq!(st.records, 4);
+        assert_eq!(st.live_bytes, 4 * record_len(8) as u64);
+        assert_eq!(st.compactions, 1);
+        // Liveness: every key still reads back the LATEST value.
+        assert_eq!(s.get(&key(0)).unwrap(), row(104, 8));
+        for n in 1..4u64 {
+            assert_eq!(s.get(&key(n)).unwrap(), row(n, 8));
+        }
+        // The old generation's files are actually gone from disk.
+        let on_disk = std::fs::read_dir(&cfg.dir).unwrap().count();
+        assert_eq!(on_disk, s.stats().segments, "deleted segments must not linger");
+        assert!(on_disk < segments_before + 2);
+
+        // And the compacted layout survives a reopen.
+        drop(s);
+        let mut s = EmbeddingStore::open(cfg.clone()).unwrap();
+        assert_eq!(s.len(), 4);
+        assert_eq!(s.get(&key(0)).unwrap(), row(104, 8));
+        assert_eq!(s.stats().dead_bytes, 0);
+        cleanup(&cfg);
+    }
+
+    #[test]
+    fn compaction_triggers_automatically_past_the_dead_ratio() {
+        let mut cfg = temp_store("autocompact");
+        cfg.compact_min_bytes = record_len(8) as u64; // tiny log may compact
+        cfg.compact_dead_ratio = 0.5;
+        let mut s = EmbeddingStore::open(cfg.clone()).unwrap();
+        s.put(key(1), &row(1, 8)).unwrap();
+        // Keep superseding the same key: once dead > live the put path
+        // must compact on its own.
+        for gen in 0..4u64 {
+            s.put(key(1), &row(10 + gen, 8)).unwrap();
+        }
+        let st = s.stats();
+        assert!(st.compactions >= 1, "dead ratio crossing must trigger compaction");
+        assert!(
+            st.dead_bytes as f64 <= 0.5 * (st.live_bytes + st.dead_bytes) as f64,
+            "post-compaction dead ratio must be back under the bound: {st:?}"
+        );
+        assert_eq!(s.get(&key(1)).unwrap(), row(13, 8), "latest value must win");
+        cleanup(&cfg);
+    }
+
+    #[test]
+    fn empty_directory_opens_and_missing_keys_miss() {
+        let cfg = temp_store("empty");
+        let mut s = EmbeddingStore::open(cfg.clone()).unwrap();
+        assert!(s.is_empty());
+        assert!(s.get(&key(0)).is_none());
+        let st = s.stats();
+        assert_eq!((st.segments, st.records, st.live_bytes), (1, 0, 0));
+        cleanup(&cfg);
+    }
+
+    #[test]
+    fn torn_header_on_last_segment_resets_it() {
+        let cfg = temp_store("tornheader");
+        {
+            let mut s = EmbeddingStore::open(cfg.clone()).unwrap();
+            s.put(key(1), &row(1, 4)).unwrap();
+        }
+        // Crash while creating the next segment: 3 bytes of magic only.
+        std::fs::write(segment_path(&cfg.dir, 1), b"GRF").unwrap();
+        let mut s = EmbeddingStore::open(cfg.clone()).unwrap();
+        assert_eq!(s.stats().corrupt_skipped, 1);
+        assert_eq!(s.get(&key(1)).unwrap(), row(1, 4), "earlier segment unaffected");
+        // The reset segment accepts appends and survives reopen.
+        s.put(key(2), &row(2, 4)).unwrap();
+        drop(s);
+        let mut s = EmbeddingStore::open(cfg.clone()).unwrap();
+        assert_eq!(s.get(&key(2)).unwrap(), row(2, 4));
+        cleanup(&cfg);
+    }
+}

@@ -1,0 +1,61 @@
+//! `store`: the persistent tier of the embedding cache — a
+//! content-addressed, append-only **segment log** for embedding rows.
+//!
+//! The paper's economics make embeddings worth keeping: computing one
+//! is the expensive part of the graphlet pipeline, and once computed a
+//! row is a *pure function* of `(canonical graph hash, config
+//! fingerprint, sampling seed)` — the explicit-feature-map view of
+//! graph kernels makes rows durable artifacts, not transient request
+//! state. This module stores them so a daemon restart serves yesterday's
+//! rows **bitwise identical** from disk instead of recomputing them.
+//!
+//! On-disk layout (see [`codec`] for the byte-exact record format):
+//!
+//! ```text
+//!  <dir>/
+//!    seg-00000000.log     ┐ numbered segments, scanned in id order on
+//!    seg-00000001.log     │ open; the highest id is the active segment
+//!    seg-00000002.log  ◄──┘ (appends go here; rotate at segment_bytes)
+//!
+//!  one segment:
+//!    ┌──────────┬────────────┬────────────┬─ ─ ─┬─(torn tail)─┐
+//!    │ "GRFSEG1\n" │ record 0 │ record 1  │ ... │ skipped     │
+//!    └──────────┴────────────┴────────────┴─ ─ ─┴─────────────┘
+//!      8-byte magic            length-prefixed, FNV-checksummed
+//!
+//!  one record:
+//!    [u32 payload_len][u64 graph_hash][u64 config_fp][u64 seed]
+//!    [u32 row_len][row_len × f32 bits][u64 FNV-1a(payload)]
+//! ```
+//!
+//! Properties the serve tier builds on:
+//!
+//! - **Append-only writes**: a put is one unbuffered `write_all`; no
+//!   in-place mutation, so a crash can only produce a *torn tail*.
+//! - **Recovery by scan**: [`EmbeddingStore::open`] rebuilds the whole
+//!   in-memory offset index from the segments; torn/corrupt records are
+//!   skipped with the `corrupt_skipped` counter (never a panic, never a
+//!   failed open) — a checksum failure with intact framing resyncs past
+//!   just that record — and the active segment is truncated back to its
+//!   last intact record. One store owns a directory at a time (no
+//!   cross-process lock; see [`log`]'s module docs).
+//! - **Supersede, then compact**: re-putting a key makes the old record
+//!   dead; when `dead/(live+dead)` crosses `compact_dead_ratio`,
+//!   [`EmbeddingStore::compact`] rewrites live records into a fresh
+//!   segment generation (numbered after the old one, so the ascending
+//!   recovery scan prefers the rewrite even after a mid-compaction
+//!   crash) and deletes the old files.
+//! - **Bitwise fidelity**: rows are stored as raw `f32` bits; what the
+//!   pipeline computed is exactly what a later daemon serves (pinned by
+//!   `tests/store.rs` against a fresh `embed_dataset` run).
+//!
+//! The serve layer tiers this store *under* its in-RAM LRU
+//! ([`crate::serve::cache::TieredCache`]): L1 misses probe the store
+//! and promote hits; inserts write through. No new dependencies — the
+//! codec is hand-rolled, checksums share [`crate::util::fnv`].
+
+pub mod codec;
+pub mod log;
+
+pub use codec::CacheKey;
+pub use log::{EmbeddingStore, StoreConfig, StoreStats};

@@ -32,7 +32,58 @@ fn help_prints_usage_to_stdout_and_exits_zero() {
         assert!(stdout.contains("USAGE"), "{stdout}");
         assert!(stdout.contains("serve"), "help must mention the serve subcommand: {stdout}");
         assert!(stdout.contains("cpu-sorf"), "help must list the cpu-sorf engine: {stdout}");
+        assert!(stdout.contains("--store-dir"), "help must document the store flag: {stdout}");
+        assert!(stdout.contains("--cache-policy"), "help must document eviction: {stdout}");
+        assert!(stdout.contains("--data-dir"), "help must document real TU data: {stdout}");
     }
+}
+
+/// `serve-bench --store-dir` through the real binary: hosts the daemon,
+/// restarts it over the same segment log, and self-checks that the
+/// `warm_l2` pass recomputed nothing. The last stdout line is the
+/// machine-readable JSON result.
+#[test]
+fn serve_bench_restart_mode_reports_all_three_passes() {
+    let dir = std::env::temp_dir()
+        .join(format!("graphlet_cli_storebench_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let out = run(&[
+        "serve-bench",
+        "--store-dir",
+        dir.to_str().unwrap(),
+        "--clients",
+        "2",
+        "--requests",
+        "4",
+        "--engine",
+        "cpu",
+        "--k",
+        "3",
+        "--s",
+        "40",
+        "--m",
+        "16",
+        "--batch",
+        "8",
+        "--workers",
+        "2",
+    ]);
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(out.status.success(), "restart bench failed:\n{stdout}\n{stderr}");
+    for label in ["cold:", "warm_l1:", "warm_l2:"] {
+        assert!(stdout.contains(label), "missing pass {label}:\n{stdout}");
+    }
+    assert!(
+        stdout.contains("warm_l2: requests=8 errors=0 cached=8 recomputed=0"),
+        "restart pass must serve everything from the store:\n{stdout}"
+    );
+    let json = stdout.lines().last().unwrap_or_default();
+    assert!(
+        json.contains("\"bench\":\"serve\"") && json.contains("\"label\":\"warm_l2\""),
+        "last line must be the JSON result: {json}"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
 }
 
 /// `--engine cpu-sorf` runs the full quickstart flow (SBM → sampling →

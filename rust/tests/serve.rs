@@ -45,7 +45,28 @@ fn test_gsa() -> GsaConfig {
     }
 }
 
-fn start_server(cfg: ServeConfig) -> (SocketAddr, JoinHandle<()>) {
+/// Start a daemon; with `GRAPHLET_RF_TEST_STORE=1` (the CI store axis)
+/// a fresh per-test temp-dir segment log is attached, so every leg of
+/// the engine matrix also runs the daemon contract with the L2 tier
+/// enabled — the wire protocol, bitwise replies, and error semantics
+/// must be identical either way.
+fn start_server(tag: &str, mut cfg: ServeConfig) -> (SocketAddr, JoinHandle<()>) {
+    if cfg.store_dir.is_none()
+        && std::env::var("GRAPHLET_RF_TEST_STORE").as_deref() == Ok("1")
+    {
+        let dir = std::env::temp_dir()
+            .join(format!("graphlet_rf_serve_store_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        cfg.store_dir = Some(dir);
+    }
+    start_server_ram_only(cfg)
+}
+
+/// Start a daemon exactly as configured (no store axis): for tests
+/// whose assertions pin L1-only semantics — with an L2 tier an
+/// L1-evicted row is *still* served `cached:true` from disk, which is
+/// the tiering working as designed, not an eviction bug.
+fn start_server_ram_only(cfg: ServeConfig) -> (SocketAddr, JoinHandle<()>) {
     let server = Server::bind("127.0.0.1:0", cfg, None).unwrap();
     let addr = server.local_addr();
     let handle = std::thread::spawn(move || server.run().unwrap());
@@ -89,7 +110,7 @@ fn concurrent_clients_bitwise_match_embed_dataset_and_hit_cache() {
     let ds = quickstart_ds();
     let m = gsa.m;
     let (want, _) = embed_dataset(&ds, &gsa, None).unwrap();
-    let (addr, server) = start_server(ServeConfig { gsa, ..Default::default() });
+    let (addr, server) = start_server("bitwise", ServeConfig { gsa, ..Default::default() });
 
     // Two concurrent clients submit interleaved halves of the dataset,
     // pipelining all their requests before reading replies — this is
@@ -157,7 +178,7 @@ fn protocol_errors_are_per_request_and_daemon_survives() {
     gsa.s = 50;
     gsa.m = 16;
     let cfg = ServeConfig { gsa, max_nodes: 80, max_edges: 500, ..Default::default() };
-    let (addr, server) = start_server(cfg);
+    let (addr, server) = start_server("protocol", cfg);
     let mut client = Client::connect(addr);
 
     // Malformed JSON line.
@@ -218,8 +239,11 @@ fn cache_eviction_is_lru_through_the_daemon() {
     let mut gsa = test_gsa();
     gsa.s = 50;
     gsa.m = 16;
+    // RAM-only deliberately: this test pins the L1 eviction order via
+    // the `cached` flag, and an attached store would (correctly) serve
+    // evicted rows from disk.
     let cfg = ServeConfig { gsa, cache_capacity: 2, ..Default::default() };
-    let (addr, server) = start_server(cfg);
+    let (addr, server) = start_server_ram_only(cfg);
     let ds = quickstart_ds();
     let mut client = Client::connect(addr);
     // Sequential roundtrips make cache state deterministic: the writer
@@ -270,7 +294,7 @@ fn stats_expose_queue_depth_before_overload_fires() {
     gsa.queue_cap = 4; // job-queue capacity = queue_cap * workers = 4
     gsa.s = 30_000; // each job pins the lone worker for a long time
     gsa.m = 8;
-    let (addr, server) = start_server(ServeConfig { gsa, ..Default::default() });
+    let (addr, server) = start_server("backpressure", ServeConfig { gsa, ..Default::default() });
     let ds = quickstart_ds();
     let mut client = Client::connect(addr);
 
@@ -330,7 +354,7 @@ fn mid_request_disconnect_keeps_daemon_serving() {
     let mut gsa = test_gsa();
     gsa.s = 2000; // slow enough that the job is still in flight on close
     gsa.m = 16;
-    let (addr, server) = start_server(ServeConfig { gsa, ..Default::default() });
+    let (addr, server) = start_server("disconnect", ServeConfig { gsa, ..Default::default() });
     let ds = quickstart_ds();
 
     // Fire a request and slam the connection shut without reading the

@@ -1,0 +1,238 @@
+//! Daemon-level durability tests for the persistent embedding store:
+//! a real serve daemon over a temp `--store-dir`, killed and restarted.
+//!
+//! Pins the PR's acceptance contract:
+//! - after a daemon restart over the same store directory, previously
+//!   requested embeddings are served with `l2_hits > 0`, **zero**
+//!   pipeline recomputes, and rows **bitwise identical** to a fresh
+//!   `embed_dataset` run;
+//! - a torn final record (crash mid-append) is skipped gracefully with
+//!   `corrupt_skipped` visible in `stats` — never a panic — and the
+//!   lost row is recomputed and re-persisted on the next request.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::path::{Path, PathBuf};
+use std::thread::JoinHandle;
+
+use graphlet_rf::coordinator::{embed_dataset, fwht_threads_from_env_or, EngineMode, GsaConfig};
+use graphlet_rf::data::Dataset;
+use graphlet_rf::gen::SbmConfig;
+use graphlet_rf::serve::{embed_request, parse_embed_reply, send_shutdown, ServeConfig, Server};
+use graphlet_rf::util::{Json, Rng};
+
+fn test_ds() -> Dataset {
+    SbmConfig { per_class: 3, r: 1.5, ..Default::default() }.generate(&mut Rng::new(11))
+}
+
+fn test_gsa() -> GsaConfig {
+    GsaConfig {
+        k: 3,
+        s: 100,
+        m: 64,
+        batch: 32,
+        workers: 3,
+        shards: 2,
+        // The CI engine matrix reruns this file per CPU engine; the
+        // durability contract (bitwise restart recovery) is identical.
+        engine: EngineMode::from_env_or(EngineMode::Cpu),
+        fwht_threads: fwht_threads_from_env_or(1),
+        seed: 42,
+        ..Default::default()
+    }
+}
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("graphlet_store_it_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn start_server(cfg: ServeConfig) -> (SocketAddr, JoinHandle<()>) {
+    let server = Server::bind("127.0.0.1:0", cfg, None).unwrap();
+    let addr = server.local_addr();
+    let handle = std::thread::spawn(move || server.run().unwrap());
+    (addr, handle)
+}
+
+struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    fn connect(addr: SocketAddr) -> Client {
+        let stream = TcpStream::connect(addr).unwrap();
+        Client { reader: BufReader::new(stream.try_clone().unwrap()), writer: stream }
+    }
+
+    fn roundtrip(&mut self, line: &str) -> String {
+        self.writer.write_all(line.as_bytes()).unwrap();
+        self.writer.write_all(b"\n").unwrap();
+        self.writer.flush().unwrap();
+        let mut reply = String::new();
+        self.reader.read_line(&mut reply).unwrap();
+        assert!(!reply.is_empty(), "server closed the connection");
+        reply
+    }
+
+    fn stats(&mut self) -> Json {
+        Json::parse(self.roundtrip(r#"{"op":"stats","id":900}"#).trim()).unwrap()
+    }
+}
+
+/// Sequentially embed graph `g` at stream position `g`; returns
+/// (row, cached). Sequential roundtrips make the store's append order
+/// (and so the torn-tail victim) deterministic: the writer thread
+/// persists a fresh row before it writes the reply line.
+fn embed(client: &mut Client, ds: &Dataset, g: usize) -> (Vec<f32>, bool) {
+    let reply = client.roundtrip(&embed_request(g as u64, g, &ds.graphs[g]));
+    let (id, row, cached) = parse_embed_reply(&reply).unwrap();
+    assert_eq!(id, g as u64);
+    (row, cached)
+}
+
+fn u64_at(stats: &Json, obj: &str, field: &str) -> u64 {
+    stats
+        .get(obj)
+        .and_then(|o| o.get(field))
+        .and_then(Json::as_u64)
+        .unwrap_or_else(|| panic!("stats missing {obj}.{field}: {stats}"))
+}
+
+/// The highest-numbered (active) segment file in a store dir.
+fn active_segment(dir: &Path) -> PathBuf {
+    let mut segs: Vec<PathBuf> = std::fs::read_dir(dir)
+        .unwrap()
+        .map(|e| e.unwrap().path())
+        .filter(|p| {
+            p.file_name()
+                .and_then(|n| n.to_str())
+                .is_some_and(|n| n.starts_with("seg-") && n.ends_with(".log"))
+        })
+        .collect();
+    segs.sort();
+    segs.pop().expect("store dir holds no segment files")
+}
+
+#[test]
+fn daemon_restart_serves_bitwise_rows_from_disk_with_zero_recompute() {
+    let gsa = test_gsa();
+    let ds = test_ds();
+    let m = gsa.m;
+    let (want, _) = embed_dataset(&ds, &gsa, None).unwrap();
+    let dir = temp_dir("restart");
+    let cfg = ServeConfig { gsa, store_dir: Some(dir.clone()), ..Default::default() };
+
+    // Daemon #1: compute every graph once; rows are written through to
+    // the segment log as each reply goes out.
+    let (addr, server) = start_server(cfg.clone());
+    let mut client = Client::connect(addr);
+    for g in 0..ds.len() {
+        let (row, cached) = embed(&mut client, &ds, g);
+        assert!(!cached, "first sight of graph {g} must be computed");
+        assert_eq!(&want[g * m..(g + 1) * m], &row[..], "daemon #1 drifted vs embed_dataset");
+    }
+    let stats = client.stats();
+    assert_eq!(u64_at(&stats, "store", "records") as usize, ds.len());
+    assert_eq!(u64_at(&stats, "store", "corrupt_skipped"), 0);
+    drop(client);
+    send_shutdown(&addr.to_string()).unwrap();
+    server.join().unwrap();
+
+    // Daemon #2: fresh pipeline, empty L1, same store directory. Every
+    // previously requested row must come off the disk log — bitwise
+    // equal to a fresh embed_dataset run, with zero pipeline work.
+    let (addr, server) = start_server(cfg);
+    let mut client = Client::connect(addr);
+    for g in 0..ds.len() {
+        let (row, cached) = embed(&mut client, &ds, g);
+        assert!(cached, "graph {g} must be served from the reopened store");
+        assert_eq!(
+            &want[g * m..(g + 1) * m],
+            &row[..],
+            "graph {g}: restart-recovered row is not bitwise identical"
+        );
+    }
+    let stats = client.stats();
+    assert_eq!(u64_at(&stats, "cache", "l2_hits") as usize, ds.len());
+    assert_eq!(u64_at(&stats, "cache", "l2_promotions") as usize, ds.len());
+    assert_eq!(u64_at(&stats, "cache", "l2_misses"), 0, "no key may miss both tiers");
+    assert_eq!(
+        u64_at(&stats, "pipeline", "graphs"),
+        0,
+        "the restarted daemon must not recompute anything"
+    );
+    assert_eq!(u64_at(&stats, "store", "corrupt_skipped"), 0);
+
+    // Promoted rows now live in L1: a re-request is a pure RAM hit and
+    // the L2 counters stay put.
+    let (row, cached) = embed(&mut client, &ds, 0);
+    assert!(cached);
+    assert_eq!(&want[..m], &row[..]);
+    let stats = client.stats();
+    assert_eq!(u64_at(&stats, "cache", "l2_hits") as usize, ds.len());
+    assert!(u64_at(&stats, "cache", "hits") >= 1);
+
+    drop(client);
+    send_shutdown(&addr.to_string()).unwrap();
+    server.join().unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn torn_tail_is_skipped_counted_and_recomputed() {
+    let gsa = test_gsa();
+    let ds = test_ds();
+    let m = gsa.m;
+    let (want, _) = embed_dataset(&ds, &gsa, None).unwrap();
+    let dir = temp_dir("torn");
+    let cfg = ServeConfig { gsa, store_dir: Some(dir.clone()), ..Default::default() };
+
+    // Daemon #1 populates the log in request order (sequential client).
+    let (addr, server) = start_server(cfg.clone());
+    let mut client = Client::connect(addr);
+    for g in 0..ds.len() {
+        let (_, cached) = embed(&mut client, &ds, g);
+        assert!(!cached);
+    }
+    drop(client);
+    send_shutdown(&addr.to_string()).unwrap();
+    server.join().unwrap();
+
+    // "SIGKILL mid-append": tear the last appended record (the final
+    // graph's row) by truncating the active segment mid-checksum.
+    let seg = active_segment(&dir);
+    let len = std::fs::metadata(&seg).unwrap().len();
+    let f = std::fs::OpenOptions::new().write(true).open(&seg).unwrap();
+    f.set_len(len - 5).unwrap();
+    drop(f);
+
+    // Daemon #2 must open the damaged log without panicking, skip the
+    // torn record with a visible counter, and keep serving.
+    let last = ds.len() - 1;
+    let (addr, server) = start_server(cfg);
+    let mut client = Client::connect(addr);
+    let stats = client.stats();
+    assert_eq!(u64_at(&stats, "store", "corrupt_skipped"), 1, "torn tail must be counted");
+    assert_eq!(u64_at(&stats, "store", "records") as usize, ds.len() - 1);
+
+    // Undamaged rows still come off the disk log, bitwise.
+    let (row, cached) = embed(&mut client, &ds, 0);
+    assert!(cached, "undamaged row must be an L2 hit");
+    assert_eq!(&want[..m], &row[..]);
+
+    // The torn row reads as a miss, recomputes to the identical bits,
+    // and is re-persisted.
+    let (row, cached) = embed(&mut client, &ds, last);
+    assert!(!cached, "the torn row must be recomputed, not served");
+    assert_eq!(&want[last * m..(last + 1) * m], &row[..], "recomputed row drifted");
+    let stats = client.stats();
+    assert_eq!(u64_at(&stats, "pipeline", "graphs"), 1, "exactly the torn row recomputes");
+    assert_eq!(u64_at(&stats, "store", "records") as usize, ds.len(), "row re-persisted");
+
+    drop(client);
+    send_shutdown(&addr.to_string()).unwrap();
+    server.join().unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+}

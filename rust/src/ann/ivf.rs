@@ -1,0 +1,387 @@
+//! IVFFlat: k-means centroids + inverted posting lists over embedding
+//! rows, with a brute-force exhaustive path that doubles as the exact
+//! oracle.
+//!
+//! Exactness contract (pinned by `tests/ann.rs`):
+//! - Every path computes distances with the ONE [`l2_distance`]
+//!   function over the same stored rows, so any path that *considers*
+//!   a row reports a bitwise-identical distance for it.
+//! - Neighbors are ordered by the total order [`neighbor_cmp`]
+//!   (distance, then key), so result order is deterministic even under
+//!   distance ties (duplicate rows).
+//! - At `probe >= 1.0` — or below the `min_brute` size threshold — the
+//!   query short-circuits to the exhaustive scan, which considers every
+//!   row: ids and distances are exactly the brute-force oracle's.
+
+use std::cmp::Ordering;
+
+use crate::store::CacheKey;
+
+use super::kmeans::lloyd;
+
+/// Default fraction of posting lists scanned per query.
+pub const DEFAULT_PROBE: f64 = 0.25;
+/// Below this many indexed rows, every query brute-force scans.
+pub const DEFAULT_MIN_BRUTE: usize = 64;
+/// Upper bound on the centroid count (`nlist = min(⌊√n⌋, cap)`).
+pub const DEFAULT_CENTROID_CAP: usize = 256;
+/// Lloyd's iteration budget per build.
+pub const DEFAULT_KMEANS_ITERS: usize = 12;
+/// Pending-tail length that triggers a background index rebuild.
+pub const DEFAULT_REBUILD_PENDING: usize = 256;
+
+/// Build/query parameters for the IVF index.
+#[derive(Clone, Debug)]
+pub struct AnnConfig {
+    /// Fraction of posting lists scanned per query, in (0, 1]. At 1.0
+    /// the scan is exhaustive (exact).
+    pub probe_factor: f64,
+    /// Brute-force threshold: indexes smaller than this skip the IVF
+    /// machinery entirely.
+    pub min_brute: usize,
+    /// Cap on the centroid count.
+    pub centroid_cap: usize,
+    /// Lloyd's iteration budget.
+    pub kmeans_iters: usize,
+    /// k-means init seed.
+    pub seed: u64,
+    /// Pending-tail length that triggers a rebuild (used by the serve
+    /// cache, carried here so one struct travels the stack).
+    pub rebuild_pending: usize,
+}
+
+impl Default for AnnConfig {
+    fn default() -> Self {
+        AnnConfig {
+            probe_factor: DEFAULT_PROBE,
+            min_brute: DEFAULT_MIN_BRUTE,
+            centroid_cap: DEFAULT_CENTROID_CAP,
+            kmeans_iters: DEFAULT_KMEANS_ITERS,
+            seed: 0x1DF_F1A7,
+            rebuild_pending: DEFAULT_REBUILD_PENDING,
+        }
+    }
+}
+
+/// One retrieval hit: a stored key and its exact L2 distance.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Neighbor {
+    pub key: CacheKey,
+    pub distance: f32,
+}
+
+/// Result of one index query, with scan-effort counters for `stats`.
+#[derive(Clone, Debug, Default)]
+pub struct AnnQuery {
+    /// Up to k neighbors in `(distance, key)` order.
+    pub neighbors: Vec<Neighbor>,
+    /// Posting lists scanned (0 on the brute-force path).
+    pub probed: usize,
+    /// Rows whose distance was computed.
+    pub scanned: usize,
+}
+
+/// Exact L2 distance: f64-accumulated squared diffs, one sqrt, rounded
+/// once to f32. This is the single distance function for every path —
+/// IVF, brute force, and the pending-tail scan — which is what makes
+/// "bitwise-equal distances" a meaningful cross-path contract.
+pub fn l2_distance(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0.0f64;
+    for (&x, &y) in a.iter().zip(b) {
+        let d = f64::from(x) - f64::from(y);
+        acc += d * d;
+    }
+    acc.sqrt() as f32
+}
+
+/// Total order on neighbors: distance first (IEEE total order, so ties
+/// and specials are deterministic), then key. Keys are unique within an
+/// index, so the order is strict.
+pub fn neighbor_cmp(a: &Neighbor, b: &Neighbor) -> Ordering {
+    a.distance.total_cmp(&b.distance).then_with(|| a.key.cmp(&b.key))
+}
+
+/// Immutable IVFFlat index over a snapshot of store rows. Rebuilt from
+/// scratch on store open / compaction / pending-tail overflow; queries
+/// share it behind an `Arc`.
+#[derive(Debug)]
+pub struct AnnIndex {
+    cfg: AnnConfig,
+    dim: usize,
+    /// Row keys, ascending — `rows[i]` belongs to `keys[i]`.
+    keys: Vec<CacheKey>,
+    /// Flat `n × dim` row-major copy of the indexed rows.
+    rows: Vec<f32>,
+    /// Flat `nlist × dim` centroids.
+    centroids: Vec<f32>,
+    /// Per-centroid posting lists of row indices.
+    lists: Vec<Vec<u32>>,
+    /// Entries dropped at build time (row length != dim).
+    skipped: usize,
+}
+
+impl AnnIndex {
+    /// Build an index over `entries`. Rows whose length differs from
+    /// `dim` are dropped (counted in [`AnnIndex::skipped`]); duplicate
+    /// keys keep their first row. Entries are sorted by key so the
+    /// build is a pure function of (row set, cfg) regardless of input
+    /// order — store snapshots and in-memory corpora build bitwise-
+    /// identical indexes.
+    pub fn build(mut entries: Vec<(CacheKey, Vec<f32>)>, dim: usize, cfg: &AnnConfig) -> AnnIndex {
+        let mut skipped = 0usize;
+        entries.retain(|(_, row)| {
+            let ok = dim > 0 && row.len() == dim;
+            if !ok {
+                skipped += 1;
+            }
+            ok
+        });
+        entries.sort_unstable_by(|a, b| a.0.cmp(&b.0));
+        entries.dedup_by(|a, b| a.0 == b.0);
+
+        let n = entries.len();
+        let mut keys = Vec::with_capacity(n);
+        let mut rows = Vec::with_capacity(n * dim);
+        for (key, row) in entries {
+            keys.push(key);
+            rows.extend_from_slice(&row);
+        }
+
+        let (centroids, lists) = if n == 0 {
+            (Vec::new(), Vec::new())
+        } else {
+            let nlist = isqrt(n).clamp(1, cfg.centroid_cap.max(1)).min(n);
+            let km = lloyd(&rows, dim, nlist, cfg.seed, cfg.kmeans_iters);
+            let mut lists = vec![Vec::new(); nlist];
+            for (i, &a) in km.assign.iter().enumerate() {
+                lists[a as usize].push(i as u32);
+            }
+            (km.centroids, lists)
+        };
+
+        AnnIndex { cfg: cfg.clone(), dim, keys, rows, centroids, lists, skipped }
+    }
+
+    /// k nearest stored rows. Dispatch: exhaustive scan at
+    /// `probe >= 1.0` or below the `min_brute` threshold, IVF probing
+    /// otherwise. Returns `min(k, len)` neighbors.
+    pub fn nearest(&self, query: &[f32], k: usize, probe: f64) -> AnnQuery {
+        if probe >= 1.0 || self.keys.len() < self.cfg.min_brute {
+            self.nearest_brute(query, k)
+        } else {
+            self.nearest_ivf(query, k, probe)
+        }
+    }
+
+    /// Exhaustive scan: every row, exact distances. This is the oracle
+    /// the differential battery holds the IVF path to.
+    pub fn nearest_brute(&self, query: &[f32], k: usize) -> AnnQuery {
+        let n = self.keys.len();
+        let neighbors = self.select_k(0..n as u32, query, k);
+        AnnQuery { neighbors, probed: 0, scanned: n }
+    }
+
+    /// IVF probe: rank centroids by distance to the query, scan the
+    /// `⌈probe · nlist⌉` nearest posting lists. Exposed (not just
+    /// `nearest`) so tests can pin that the IVF machinery itself — not
+    /// merely the dispatch short-circuit — is exact at probe 1.0.
+    pub fn nearest_ivf(&self, query: &[f32], k: usize, probe: f64) -> AnnQuery {
+        let nlist = self.lists.len();
+        if nlist == 0 {
+            return AnnQuery::default();
+        }
+        // Rank centroids by (distance, index): deterministic under ties.
+        let mut order: Vec<(f32, u32)> = self
+            .centroids
+            .chunks_exact(self.dim)
+            .enumerate()
+            .map(|(c, cent)| (l2_distance(query, cent), c as u32))
+            .collect();
+        order.sort_unstable_by(|a, b| a.0.total_cmp(&b.0).then_with(|| a.1.cmp(&b.1)));
+        let nprobe = ((probe * nlist as f64).ceil() as usize).clamp(1, nlist);
+        let mut candidates: Vec<u32> = Vec::new();
+        for &(_, c) in order.iter().take(nprobe) {
+            candidates.extend_from_slice(&self.lists[c as usize]);
+        }
+        let scanned = candidates.len();
+        let neighbors = self.select_k(candidates.into_iter(), query, k);
+        AnnQuery { neighbors, probed: nprobe, scanned }
+    }
+
+    /// Shared tail of every path: exact distances for the candidate
+    /// rows, `(distance, key)` sort, truncate to k.
+    fn select_k(
+        &self,
+        candidates: impl Iterator<Item = u32>,
+        query: &[f32],
+        k: usize,
+    ) -> Vec<Neighbor> {
+        let mut neighbors: Vec<Neighbor> = candidates
+            .map(|i| {
+                let i = i as usize;
+                Neighbor {
+                    key: self.keys[i],
+                    distance: l2_distance(query, &self.rows[i * self.dim..(i + 1) * self.dim]),
+                }
+            })
+            .collect();
+        neighbors.sort_unstable_by(neighbor_cmp);
+        neighbors.truncate(k);
+        neighbors
+    }
+
+    /// Whether `key` is covered by this index (used to prune the serve
+    /// cache's pending tail after a rebuild).
+    pub fn contains(&self, key: &CacheKey) -> bool {
+        self.keys.binary_search(key).is_ok()
+    }
+
+    /// Number of indexed rows.
+    pub fn len(&self) -> usize {
+        self.keys.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.keys.is_empty()
+    }
+
+    /// Row dimensionality this index was built for.
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Posting-list (= centroid) count.
+    pub fn nlist(&self) -> usize {
+        self.lists.len()
+    }
+
+    /// Entries dropped at build time for having the wrong row length.
+    pub fn skipped(&self) -> usize {
+        self.skipped
+    }
+}
+
+/// ⌊√n⌋ without pulling in integer-sqrt from unstable std. Exact for
+/// every n this index will ever see (f64 is exact below 2^53).
+fn isqrt(n: usize) -> usize {
+    (n as f64).sqrt().floor() as usize
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn key(i: u64) -> CacheKey {
+        CacheKey { graph_hash: i.wrapping_mul(0x9E37_79B9_7F4A_7C15), config_fp: 0xC0FFEE, seed: i }
+    }
+
+    fn corpus(n: usize, dim: usize, seed: u64) -> Vec<(CacheKey, Vec<f32>)> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|i| {
+                let mut row = vec![0.0f32; dim];
+                rng.fill_gaussian(&mut row, 1.0);
+                (key(i as u64), row)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn empty_index_answers_empty() {
+        let idx = AnnIndex::build(Vec::new(), 8, &AnnConfig::default());
+        assert!(idx.is_empty());
+        assert_eq!(idx.nlist(), 0);
+        let q = idx.nearest(&[0.0; 8], 5, 1.0);
+        assert!(q.neighbors.is_empty());
+        let q = idx.nearest_ivf(&[0.0; 8], 5, 0.25);
+        assert!(q.neighbors.is_empty());
+    }
+
+    #[test]
+    fn tiny_store_clamps_to_a_single_list() {
+        for n in [1usize, 2, 3] {
+            let idx = AnnIndex::build(corpus(n, 6, 9), 6, &AnnConfig::default());
+            assert_eq!(idx.len(), n);
+            // isqrt(1..=3) == 1: everything lands in one posting list.
+            assert_eq!(idx.nlist(), 1, "n={n}");
+            let q = idx.nearest_ivf(&[0.0; 6], n, 0.01);
+            assert_eq!(q.probed, 1);
+            assert_eq!(q.neighbors.len(), n);
+        }
+    }
+
+    #[test]
+    fn centroid_cap_bounds_the_list_count() {
+        let cfg = AnnConfig { centroid_cap: 4, ..AnnConfig::default() };
+        let idx = AnnIndex::build(corpus(100, 4, 3), 4, &cfg);
+        assert_eq!(idx.nlist(), 4, "isqrt(100)=10 must clamp to cap=4");
+    }
+
+    #[test]
+    fn wrong_dim_rows_are_skipped_not_indexed() {
+        let mut entries = corpus(5, 8, 21);
+        entries.push((key(100), vec![0.0; 3]));
+        entries.push((key(101), Vec::new()));
+        let idx = AnnIndex::build(entries, 8, &AnnConfig::default());
+        assert_eq!(idx.len(), 5);
+        assert_eq!(idx.skipped(), 2);
+        assert!(!idx.contains(&key(100)));
+    }
+
+    #[test]
+    fn duplicate_keys_keep_one_row() {
+        let mut entries = corpus(4, 4, 31);
+        let dup = entries[2].clone();
+        entries.push(dup);
+        let idx = AnnIndex::build(entries, 4, &AnnConfig::default());
+        assert_eq!(idx.len(), 4);
+    }
+
+    #[test]
+    fn self_query_returns_itself_at_distance_zero() {
+        let entries = corpus(50, 16, 77);
+        let idx = AnnIndex::build(entries.clone(), 16, &AnnConfig::default());
+        for (k, row) in &entries {
+            let q = idx.nearest(row, 1, 1.0);
+            assert_eq!(q.neighbors[0].key, *k);
+            assert_eq!(q.neighbors[0].distance.to_bits(), 0.0f32.to_bits());
+        }
+    }
+
+    #[test]
+    fn probe_is_clamped_to_at_least_one_list() {
+        // 100 rows ≥ min_brute is not guaranteed here, so call the IVF
+        // path directly: even a vanishing probe factor scans one list.
+        let idx = AnnIndex::build(corpus(100, 8, 5), 8, &AnnConfig::default());
+        let q = idx.nearest_ivf(&[0.0; 8], 3, 1e-9);
+        assert_eq!(q.probed, 1);
+        let q = idx.nearest_ivf(&[0.0; 8], 3, 5.0);
+        assert_eq!(q.probed, idx.nlist());
+    }
+
+    #[test]
+    fn brute_dispatch_below_min_brute_and_at_probe_one() {
+        let cfg = AnnConfig { min_brute: 64, ..AnnConfig::default() };
+        let small = AnnIndex::build(corpus(20, 8, 13), 8, &cfg);
+        let q = small.nearest(&[0.0; 8], 5, 0.1);
+        assert_eq!((q.probed, q.scanned), (0, 20), "below min_brute must brute-scan");
+        let large = AnnIndex::build(corpus(80, 8, 13), 8, &cfg);
+        let q = large.nearest(&[0.0; 8], 5, 1.0);
+        assert_eq!((q.probed, q.scanned), (0, 80), "probe 1.0 must brute-scan");
+        let q = large.nearest(&[0.0; 8], 5, 0.25);
+        assert!(q.probed > 0, "above min_brute at probe<1 must take the IVF path");
+    }
+
+    #[test]
+    fn neighbor_order_is_total_under_distance_ties() {
+        // Two identical rows tie at any distance; key order breaks it.
+        let row = vec![1.0f32; 4];
+        let entries = vec![(key(2), row.clone()), (key(1), row.clone())];
+        let idx = AnnIndex::build(entries, 4, &AnnConfig::default());
+        let q = idx.nearest(&row, 2, 1.0);
+        assert_eq!(q.neighbors[0].key, key(1).min(key(2)));
+        assert_eq!(q.neighbors[0].distance.to_bits(), q.neighbors[1].distance.to_bits());
+    }
+}

@@ -1,0 +1,247 @@
+//! Seeded Lloyd's k-means over flat row-major `f32` rows.
+//!
+//! This is the clustering stage of the IVFFlat index: deliberately
+//! small, dependency-free, and **deterministic** — same rows, same
+//! seed, same iteration budget ⇒ bitwise-identical centroids on every
+//! platform. Determinism is load-bearing: the differential battery in
+//! `tests/ann.rs` compares an index built from an in-memory corpus
+//! against one built from a store snapshot, and the daemon restart
+//! test asserts a rebuilt index serves identical neighbors.
+//!
+//! Design points:
+//! - **Init**: `k` distinct rows chosen by [`crate::util::Rng::sample_distinct`]
+//!   and sorted, so the initial centroid order is a pure function of
+//!   (rows, seed) — independent of Floyd-sampling order.
+//! - **Assignment**: strict `<` comparison over f64-accumulated squared
+//!   distances; ties go to the lowest centroid index.
+//! - **Update**: f64 sums divided by counts, rounded once to f32 —
+//!   summation order is fixed (row order), so means are reproducible.
+//! - **Empty clusters**: reseeded each step from the farthest unclaimed
+//!   point (distance to its own fresh centroid; ties to the lowest row
+//!   index). A reseed copies a real row, so centroids can never be NaN
+//!   even on adversarial all-identical input.
+//! - **Termination**: stable assignment or `max_iters`, whichever comes
+//!   first. `max_iters` is clamped to ≥ 1 so `assign` is always
+//!   populated.
+
+use crate::util::Rng;
+
+/// Result of a Lloyd's run: `centroids` is `k × dim` row-major,
+/// `assign[i]` is the centroid index of row `i`.
+#[derive(Clone, Debug)]
+pub struct Kmeans {
+    pub centroids: Vec<f32>,
+    pub assign: Vec<u32>,
+    pub k: usize,
+    pub iters: usize,
+}
+
+/// Squared L2 between two rows, accumulated in f64. Shared by the
+/// assignment and reseed steps so "nearest centroid" means the same
+/// thing everywhere inside one run.
+#[inline]
+fn dist_sq(a: &[f32], b: &[f32]) -> f64 {
+    let mut acc = 0.0f64;
+    for (&x, &y) in a.iter().zip(b) {
+        let d = f64::from(x) - f64::from(y);
+        acc += d * d;
+    }
+    acc
+}
+
+/// Run seeded Lloyd's k-means on `rows` (`n × dim`, row-major).
+///
+/// Contract: `dim > 0`, `rows.len()` is a multiple of `dim`, and
+/// `1 <= k <= n`. Callers (the IVF builder) clamp `k` before calling.
+pub fn lloyd(rows: &[f32], dim: usize, k: usize, seed: u64, max_iters: usize) -> Kmeans {
+    assert!(dim > 0, "kmeans: dim must be positive");
+    assert_eq!(rows.len() % dim, 0, "kmeans: rows not a multiple of dim");
+    let n = rows.len() / dim;
+    assert!(k >= 1 && k <= n, "kmeans: need 1 <= k={k} <= n={n}");
+
+    // Deterministic init: k distinct row indices, sorted so centroid
+    // order does not depend on Floyd's sampling order.
+    let mut picks = Vec::new();
+    Rng::new(seed).sample_distinct(n, k, &mut picks);
+    picks.sort_unstable();
+    let mut centroids = Vec::with_capacity(k * dim);
+    for &i in &picks {
+        centroids.extend_from_slice(&rows[i * dim..(i + 1) * dim]);
+    }
+
+    let mut assign = vec![0u32; n];
+    let mut iters = 0usize;
+    for _ in 0..max_iters.max(1) {
+        iters += 1;
+
+        // Assignment: nearest centroid, strict `<` so ties resolve to
+        // the lowest centroid index.
+        let mut changed = false;
+        for (row, a) in rows.chunks_exact(dim).zip(assign.iter_mut()) {
+            let mut best = 0u32;
+            let mut best_d = f64::INFINITY;
+            for (c, cent) in centroids.chunks_exact(dim).enumerate() {
+                let d = dist_sq(row, cent);
+                if d < best_d {
+                    best_d = d;
+                    best = c as u32;
+                }
+            }
+            if *a != best {
+                *a = best;
+                changed = true;
+            }
+        }
+        // Converged: assignments are stable under the current centroids
+        // (after iteration 1, which must run the update at least once).
+        if iters > 1 && !changed {
+            break;
+        }
+
+        // Update: f64 accumulators in fixed row order.
+        let mut sums = vec![0.0f64; k * dim];
+        let mut counts = vec![0u32; k];
+        for (row, &a) in rows.chunks_exact(dim).zip(assign.iter()) {
+            let a = a as usize;
+            counts[a] += 1;
+            for (s, &x) in sums[a * dim..(a + 1) * dim].iter_mut().zip(row) {
+                *s += f64::from(x);
+            }
+        }
+        for ((sum, cent), &count) in sums
+            .chunks_exact(dim)
+            .zip(centroids.chunks_exact_mut(dim))
+            .zip(counts.iter())
+        {
+            if count > 0 {
+                for (c, &s) in cent.iter_mut().zip(sum) {
+                    *c = (s / f64::from(count)) as f32;
+                }
+            }
+            // count == 0: keep the stale centroid; the reseed below
+            // overwrites it with a real row.
+        }
+
+        // Deterministic empty-cluster reseeding: each empty cluster (in
+        // ascending index) takes the unclaimed row farthest from its
+        // own fresh centroid (ties → lowest row index).
+        if counts.iter().any(|&c| c == 0) {
+            let mut claimed = vec![false; n];
+            for c in 0..k {
+                if counts[c] > 0 {
+                    continue;
+                }
+                let mut best: Option<(f64, usize)> = None;
+                for (i, row) in rows.chunks_exact(dim).enumerate() {
+                    if claimed[i] {
+                        continue;
+                    }
+                    let a = assign[i] as usize;
+                    let d = dist_sq(row, &centroids[a * dim..(a + 1) * dim]);
+                    let farther = match best {
+                        None => true,
+                        Some((bd, _)) => d > bd,
+                    };
+                    if farther {
+                        best = Some((d, i));
+                    }
+                }
+                if let Some((_, i)) = best {
+                    claimed[i] = true;
+                    centroids[c * dim..(c + 1) * dim]
+                        .copy_from_slice(&rows[i * dim..(i + 1) * dim]);
+                }
+            }
+            // A reseed moved a centroid: the next assignment pass must
+            // run (it either changes something or proves stability).
+        }
+    }
+
+    Kmeans { centroids, assign, k, iters }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gaussian_rows(n: usize, dim: usize, seed: u64) -> Vec<f32> {
+        let mut rows = vec![0.0f32; n * dim];
+        Rng::new(seed).fill_gaussian(&mut rows, 1.0);
+        rows
+    }
+
+    #[test]
+    fn same_rows_and_seed_give_bitwise_identical_centroids() {
+        let rows = gaussian_rows(80, 16, 0x5EED);
+        let a = lloyd(&rows, 16, 9, 7, 12);
+        let b = lloyd(&rows, 16, 9, 7, 12);
+        assert_eq!(a.iters, b.iters);
+        assert_eq!(a.assign, b.assign);
+        let abits: Vec<u32> = a.centroids.iter().map(|x| x.to_bits()).collect();
+        let bbits: Vec<u32> = b.centroids.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(abits, bbits, "centroids must be bitwise reproducible");
+    }
+
+    #[test]
+    fn empty_cluster_reseeding_terminates_within_the_iteration_budget() {
+        // 32 identical rows with k=8: init picks 8 identical centroids,
+        // every row ties to centroid 0, clusters 1..8 go empty and must
+        // be reseeded each step — the run still has to terminate.
+        let dim = 8;
+        let row: Vec<f32> = (0..dim).map(|j| 1.5 + j as f32).collect();
+        let mut rows = Vec::new();
+        for _ in 0..32 {
+            rows.extend_from_slice(&row);
+        }
+        let km = lloyd(&rows, dim, 8, 3, 10);
+        assert!(km.iters <= 10);
+        assert_eq!(km.assign.len(), 32);
+        assert!(km.assign.iter().all(|&a| (a as usize) < 8));
+        assert!(km.centroids.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn all_identical_rows_yield_nan_free_centroids_equal_to_the_row() {
+        let dim = 4;
+        let row = [0.25f32, -3.0, 7.5, 0.0];
+        let mut rows = Vec::new();
+        for _ in 0..10 {
+            rows.extend_from_slice(&row);
+        }
+        let km = lloyd(&rows, dim, 3, 99, 12);
+        assert!(km.centroids.iter().all(|x| x.is_finite()), "NaN centroid on identical input");
+        // Means of identical rows and reseeds of identical rows are
+        // both the row itself.
+        for cent in km.centroids.chunks_exact(dim) {
+            assert_eq!(cent, &row[..]);
+        }
+    }
+
+    #[test]
+    fn k_equals_n_assigns_each_row_its_own_centroid() {
+        let rows = gaussian_rows(6, 5, 42);
+        let km = lloyd(&rows, 5, 6, 1, 12);
+        let mut seen = km.assign.clone();
+        seen.sort_unstable();
+        seen.dedup();
+        assert_eq!(seen.len(), 6, "distinct rows with k=n must occupy distinct clusters");
+    }
+
+    #[test]
+    fn k_equals_one_centroid_is_the_global_mean() {
+        let dim = 3;
+        let rows = [0.0f32, 0.0, 0.0, 2.0, 4.0, 6.0];
+        let km = lloyd(&rows, dim, 1, 5, 12);
+        assert_eq!(km.centroids.len(), dim);
+        assert_eq!(km.centroids, vec![1.0, 2.0, 3.0]);
+        assert_eq!(km.assign, vec![0, 0]);
+    }
+
+    #[test]
+    fn max_iters_zero_is_clamped_and_still_assigns() {
+        let rows = gaussian_rows(12, 4, 8);
+        let km = lloyd(&rows, 4, 3, 2, 0);
+        assert_eq!(km.iters, 1);
+        assert_eq!(km.assign.len(), 12);
+    }
+}

@@ -1,0 +1,43 @@
+//! ann: approximate nearest-neighbor retrieval (IVFFlat) over the
+//! persistent embedding store — the `nearest` serve op's engine.
+//!
+//! Dataflow:
+//!
+//! ```text
+//!   EmbeddingStore (live rows)
+//!        | snapshot_rows()          brief store lock, key-sorted
+//!        v
+//!   seeded Lloyd's k-means         kmeans::lloyd, runs OFF the lock
+//!        | nlist = min(isqrt(n), centroid_cap) centroids
+//!        v
+//!   AnnIndex: centroids + per-centroid posting lists of row ids
+//!        |
+//!        |   query row (embedded by the pipeline)
+//!        |        |
+//!        |        +-- probe in (0,1): rank centroids, scan the
+//!        |        |   ceil(probe * nlist) nearest lists
+//!        |        +-- probe >= 1.0 OR n < min_brute: exhaustive
+//!        |            scan of every row (the exact oracle)
+//!        v        v
+//!   candidates --> exact L2 (l2_distance: f64 accumulate -> f32)
+//!        v
+//!   sort by (distance, key) -> top-k Neighbors
+//! ```
+//!
+//! The serve cache layers a **pending tail** on top: rows persisted
+//! after the last build are brute-scanned alongside the index until a
+//! background rebuild absorbs them, so `index ∪ pending` always covers
+//! every live row and probe 1.0 stays exact-complete at any moment.
+//! Distances are exact on every path (the "approximate" part is only
+//! *which rows are considered* at probe < 1.0); ids and distances at
+//! probe 1.0 are pinned bitwise to a brute-force oracle by
+//! `tests/ann.rs`.
+
+mod ivf;
+mod kmeans;
+
+pub use ivf::{
+    l2_distance, neighbor_cmp, AnnConfig, AnnIndex, AnnQuery, Neighbor, DEFAULT_CENTROID_CAP,
+    DEFAULT_KMEANS_ITERS, DEFAULT_MIN_BRUTE, DEFAULT_PROBE, DEFAULT_REBUILD_PENDING,
+};
+pub use kmeans::{lloyd, Kmeans};

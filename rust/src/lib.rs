@@ -35,7 +35,11 @@
 //! cost-aware) over the crash-tolerant on-disk segment log in
 //! [`store`] (`--store-dir`), so a daemon restart serves previously
 //! computed rows bitwise identical from disk instead of recomputing
-//! them.
+//! them. On top of the store, [`ann`] builds an IVFFlat index (seeded
+//! k-means centroids + inverted posting lists) so the daemon's
+//! `nearest` op answers "which known graphs is this most similar to?"
+//! — k-NN retrieval over every stored embedding with exact L2
+//! distances, probe-factor tunable, pinned to a brute-force oracle.
 //!
 //! Three CPU feature engines back the shards when PJRT is unavailable
 //! (and serve as baselines when it is): the dense maps in [`features`]
@@ -57,6 +61,7 @@
 //! linear tail ([`classify`]), reproduce a paper figure
 //! ([`experiments`]), or run the embedding service ([`serve`]).
 
+pub mod ann;
 pub mod classify;
 pub mod coordinator;
 pub mod data;

@@ -144,6 +144,7 @@ USAGE: graphlet-rf <quickstart|fig1-left|fig1-right|fig2-left|fig2-right|fig3|th
              [--artifacts DIR] [--out DIR] [--dataset dd|reddit]
              [--data-dir DIR] [--tu-dir DIR]
              [--store-dir DIR] [--cache-policy lru|cost-aware]
+             [--ann-probe F] [--ann-min-brute N]
 
 --shards N runs N parallel feature-engine shards (jobs round-robin over
 shards); embeddings are bitwise identical for every shard/worker count.
@@ -170,14 +171,23 @@ serve       long-running embedding daemon: line-delimited JSON over TCP,
             daemon restarts and are served bitwise identical from disk),
             --max-nodes N, --max-edges N, plus the usual embedding
             flags (--k --s --m --variant --shards --workers).
+            With a store the daemon also answers the nearest op (k-NN
+            retrieval over every stored embedding through an IVFFlat
+            index, exact L2 distances): --ann-probe F sets the default
+            fraction of inverted lists scanned per query (0 < F <= 1;
+            1.0 = exhaustive/exact), --ann-min-brute N brute-forces
+            below N indexed rows.
 serve-bench loopback load generator: --addr HOST:PORT (default
             127.0.0.1:7878), --clients C, --requests N per client;
             reports labeled cold/warm_l1 passes (throughput, p50/p99,
             daemon-verified recompute counts) plus one JSON result
             line. With --store-dir DIR it instead hosts the daemon
-            itself and adds the warm_l2 restart pass: kill the daemon,
+            itself and adds the warm_l2 restart pass — kill the daemon,
             reopen the store, and measure zero-recompute throughput
-            (self-checked: any recompute or full miss fails the run).
+            (self-checked: any recompute or full miss fails the run) —
+            plus nearest_p10/p50/p100 retrieval passes (k-NN queries at
+            probe factors 0.1/0.5/1.0 over the persisted corpus, with
+            the index build cost reported as ann_build_ms).
 
 fig3 --data-dir DIR loads the real TU-format dataset (e.g. D&D,
 REDDIT-BINARY; see rust/src/data/mod.rs for the expected file layout)
@@ -293,6 +303,8 @@ fn serve_cfg_from_args(
             None => defaults.cache_policy,
         },
         store_dir: args.get("store-dir").map(std::path::PathBuf::from),
+        ann_probe: args.parse_or("ann-probe", defaults.ann_probe),
+        ann_min_brute: args.parse_or("ann-min-brute", defaults.ann_min_brute),
         ..defaults
     })
 }
@@ -323,6 +335,12 @@ fn serve_cmd(ctx: &ExpContext, args: &Args, seed: u64) -> Result<()> {
             .as_ref()
             .map_or("none (RAM-only cache)".to_string(), |d| d.display().to_string()),
     );
+    if cfg.store_dir.is_some() {
+        println!(
+            "serve: nearest op enabled (ann_probe={} ann_min_brute={})",
+            cfg.ann_probe, cfg.ann_min_brute
+        );
+    }
     let server = Server::bind(&addr, cfg, ctx.engine.as_ref())?;
     println!("serving on {} (line-delimited JSON; send {{\"op\":\"shutdown\"}} to stop)",
              server.local_addr());

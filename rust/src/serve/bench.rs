@@ -14,7 +14,15 @@
 //!   a *new* daemon reopens the same `--store-dir`, and the requests
 //!   replay once more — every reply should come off the segment log
 //!   with **zero pipeline recomputes** (self-checked: the pass fails if
-//!   the daemon computed any graph or took any full miss).
+//!   the daemon computed any graph or took any full miss);
+//! - **nearest_p10 / nearest_p50 / nearest_p100** ([`run_restart_bench`]
+//!   only): k-NN `nearest` queries against the restarted daemon's ANN
+//!   index at probe factors 0.1 / 0.5 / 1.0, replaying the same
+//!   (graph, graph_index) pairs so every query row is already cached —
+//!   the passes time the IVFFlat search itself, not the embedding
+//!   pipeline (self-checked: zero errors, zero recomputes). The index
+//!   build cost over the full corpus is reported once as
+//!   `ann_build_ms` (the restarted daemon's open-time build).
 //!
 //! Reported per pass: throughput (requests/s), p50/p99 latency from a
 //! merged per-request latency reservoir, and the daemon-side
@@ -36,7 +44,7 @@ use crate::graph::AnyGraph;
 use crate::runtime::Engine;
 use crate::util::{Json, Rng, Stats, Timer};
 
-use super::protocol::{embed_request, parse_embed_reply};
+use super::protocol::{embed_request, nearest_request, parse_embed_reply, parse_nearest_reply};
 use super::server::{ServeConfig, Server};
 
 /// One pass's aggregate numbers.
@@ -89,10 +97,14 @@ impl BenchReport {
 }
 
 /// An ordered set of labeled passes (`cold`, `warm_l1`, and — in
-/// restart mode — `warm_l2`).
+/// restart mode — `warm_l2` plus the `nearest_p*` retrieval passes).
 #[derive(Clone, Debug)]
 pub struct BenchRun {
     pub passes: Vec<(String, BenchReport)>,
+    /// The restarted daemon's open-time ANN index build over the full
+    /// persisted corpus, in milliseconds (restart mode with a store
+    /// only; `None` for [`run_bench`]).
+    pub ann_build_ms: Option<f64>,
 }
 
 impl BenchRun {
@@ -106,7 +118,11 @@ impl BenchRun {
         for (label, r) in &self.passes {
             passes.push(r.json(label));
         }
-        Json::obj().set("bench", "serve").set("passes", passes)
+        let mut out = Json::obj().set("bench", "serve").set("passes", passes);
+        if let Some(ms) = self.ann_build_ms {
+            out = out.set("ann_build_ms", ms);
+        }
+        out
     }
 }
 
@@ -122,6 +138,7 @@ pub fn run_bench(addr: &str, clients: usize, per_client: usize, seed: u64) -> Re
     let warm_l1 = run_pass(addr, clients, per_client, &graphs)?;
     Ok(BenchRun {
         passes: vec![("cold".to_string(), cold), ("warm_l1".to_string(), warm_l1)],
+        ann_build_ms: None,
     })
 }
 
@@ -156,8 +173,32 @@ pub fn run_restart_bench(
 
     // "Restart": a brand-new daemon process-equivalent — fresh pipeline,
     // empty L1 — over the store directory the first daemon populated.
+    // Its open-time ANN build covers the whole persisted corpus.
     let (addr, handle) = host(cfg.clone(), engine)?;
+    let ann_build = ann_build_ms(&addr)?;
     let warm_l2 = run_pass(&addr, clients, per_client, &graphs)?;
+
+    // k-NN retrieval over that corpus: replaying the same
+    // (graph, graph_index) pairs means every query row is already in
+    // L1 after warm_l2, so these passes time the IVFFlat search alone.
+    let k = 10.min(clients.max(1) * per_client.max(1));
+    let mut nearest_passes = Vec::new();
+    for probe in [0.1, 0.5, 1.0] {
+        let label = format!("nearest_p{:.0}", probe * 100.0);
+        let pass = run_nearest_pass(&addr, clients, per_client, &graphs, k, probe)?;
+        anyhow::ensure!(
+            pass.errors == 0,
+            "{label} self-check: {} requests errored",
+            pass.errors
+        );
+        anyhow::ensure!(
+            pass.recomputed_graphs == 0,
+            "{label} self-check: the daemon recomputed {} graphs — every query row must \
+             already be cached",
+            pass.recomputed_graphs
+        );
+        nearest_passes.push((label, pass));
+    }
     stop(&addr, handle)?;
 
     anyhow::ensure!(
@@ -176,13 +217,13 @@ pub fn run_restart_bench(
         "restart-warm self-check: {} full misses — every key must be on the segment log",
         warm_l2.l2_miss_delta
     );
-    Ok(BenchRun {
-        passes: vec![
-            ("cold".to_string(), cold),
-            ("warm_l1".to_string(), warm_l1),
-            ("warm_l2".to_string(), warm_l2),
-        ],
-    })
+    let mut passes = vec![
+        ("cold".to_string(), cold),
+        ("warm_l1".to_string(), warm_l1),
+        ("warm_l2".to_string(), warm_l2),
+    ];
+    passes.extend(nearest_passes);
+    Ok(BenchRun { passes, ann_build_ms: ann_build })
 }
 
 /// The fixed bench workload: a seed-deterministic SBM set.
@@ -227,20 +268,60 @@ fn snapshot(addr: &str) -> Result<(u64, u64)> {
     Ok((graphs, l2_misses))
 }
 
+/// The restarted daemon's ANN index build cost (stats
+/// `ann.last_build_ms`); `None` when the daemon runs without a store.
+fn ann_build_ms(addr: &str) -> Result<Option<f64>> {
+    let mut stream =
+        TcpStream::connect(addr).with_context(|| format!("connecting stats probe to {addr}"))?;
+    stream.write_all(b"{\"op\":\"stats\"}\n")?;
+    stream.flush()?;
+    let mut reply = String::new();
+    BufReader::new(stream).read_line(&mut reply)?;
+    let j = Json::parse(reply.trim()).map_err(|e| anyhow::anyhow!("stats reply: {e}"))?;
+    Ok(j.get("ann").and_then(|a| a.get("last_build_ms")).and_then(Json::as_f64))
+}
+
 fn run_pass(
     addr: &str,
     clients: usize,
     per_client: usize,
     graphs: &[AnyGraph],
 ) -> Result<BenchReport> {
+    let per_client = per_client.max(1);
+    run_pass_with(addr, clients, per_client, |c| client_loop(addr, c, per_client, graphs))
+}
+
+/// A `nearest`-op pass: same fan-out and bracketing as [`run_pass`],
+/// but every request is a k-NN query at the given probe factor.
+fn run_nearest_pass(
+    addr: &str,
+    clients: usize,
+    per_client: usize,
+    graphs: &[AnyGraph],
+    k: usize,
+    probe: f64,
+) -> Result<BenchReport> {
+    let per_client = per_client.max(1);
+    run_pass_with(addr, clients, per_client, |c| {
+        nearest_client_loop(addr, c, per_client, graphs, k, probe)
+    })
+}
+
+/// Shared pass skeleton: bracket daemon-side counters, fan `clients`
+/// copies of `job` out over scoped threads, merge latency reservoirs.
+fn run_pass_with<F>(addr: &str, clients: usize, per_client: usize, job: F) -> Result<BenchReport>
+where
+    F: Fn(usize) -> Result<(Stats, usize, usize)> + Sync,
+{
     let clients = clients.max(1);
     let per_client = per_client.max(1);
     let (graphs0, misses0) = snapshot(addr)?;
     let wall = Timer::start();
     let results = std::thread::scope(|scope| {
         let mut handles = Vec::with_capacity(clients);
+        let job = &job;
         for c in 0..clients {
-            handles.push(scope.spawn(move || client_loop(addr, c, per_client, graphs)));
+            handles.push(scope.spawn(move || job(c)));
         }
         handles
             .into_iter()
@@ -308,6 +389,45 @@ fn client_loop(
         }
     }
     Ok((lat, errors, cached))
+}
+
+/// One retrieval client: `nearest` queries over the same
+/// (graph, graph_index) pairs [`client_loop`] embedded, so the query
+/// rows are cache hits and the timed work is the ANN search. A reply
+/// with fewer than `k` neighbors counts as an error (the corpus holds
+/// at least `k` rows by construction).
+fn nearest_client_loop(
+    addr: &str,
+    client: usize,
+    per_client: usize,
+    graphs: &[AnyGraph],
+    k: usize,
+    probe: f64,
+) -> Result<(Stats, usize, usize)> {
+    let stream =
+        TcpStream::connect(addr).with_context(|| format!("connecting bench client to {addr}"))?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = stream;
+    let mut lat = Stats::new();
+    let mut errors = 0usize;
+    let mut reply = String::new();
+    for i in 0..per_client {
+        let g = &graphs[i % graphs.len()];
+        let graph_index = client * per_client + i;
+        let line = nearest_request(i as u64, graph_index, k, Some(probe), g);
+        let t = Timer::start();
+        writer.write_all(line.as_bytes())?;
+        writer.write_all(b"\n")?;
+        writer.flush()?;
+        reply.clear();
+        reader.read_line(&mut reply)?;
+        lat.record(t.elapsed_secs());
+        match parse_nearest_reply(&reply) {
+            Ok((_, neighbors, _, _)) if neighbors.len() == k => {}
+            _ => errors += 1,
+        }
+    }
+    Ok((lat, errors, 0))
 }
 
 /// Ask a server to stop (used by benches/tests for clean teardown).

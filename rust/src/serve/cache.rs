@@ -36,13 +36,25 @@
 //! monotonic-stamp index (`BTreeMap<stamp, key>`, O(log n) per touch,
 //! O(window) per eviction) — no unsafe, no hand-rolled linked list.
 //! Hit/miss/eviction counters feed the serve `stats` op.
+//!
+//! When the store is enabled the cache also carries the **ANN
+//! retrieval side-car** (the `nearest` op's state): an immutable
+//! [`crate::ann::AnnIndex`] behind an `RwLock` plus a *pending tail*
+//! of rows persisted since the last build. Queries scan
+//! `index ∪ pending`, so retrieval at probe 1.0 is exact-complete at
+//! every moment; rebuilds run on a background thread that holds the
+//! store mutex only long enough to snapshot rows (never for the
+//! k-means), triggered at construction, on pending-tail overflow, and
+//! after a put trips the store's auto-compaction.
 
 use std::collections::{BTreeMap, HashMap};
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+use std::time::Instant;
 
 use anyhow::{bail, Result};
 
+use crate::ann::{neighbor_cmp, AnnConfig, AnnIndex, Neighbor};
 use crate::coordinator::{EngineMode, GsaConfig};
 use crate::store::{EmbeddingStore, StoreStats};
 
@@ -256,6 +268,112 @@ pub struct TieredStats {
     pub l2_promotions: u64,
     /// Segment-log counters when the store is enabled.
     pub store: Option<StoreStats>,
+    /// ANN retrieval-index counters when the index is enabled.
+    pub ann: Option<AnnStats>,
+}
+
+/// Snapshot of the ANN retrieval index for the `stats` op.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct AnnStats {
+    /// Centroid count of the current index (== posting lists).
+    pub centroids: usize,
+    /// Rows covered by the current index.
+    pub indexed: usize,
+    /// Rows in the pending tail (persisted after the last build;
+    /// brute-scanned by every query until a rebuild absorbs them).
+    pub pending: usize,
+    /// Index builds since the cache was constructed (≥ 1: one runs at
+    /// construction).
+    pub builds: u64,
+    /// Wall time of the most recent build, milliseconds.
+    pub last_build_ms: f64,
+    /// `nearest` queries answered.
+    pub queries: u64,
+    /// Posting lists scanned across all queries (0 for brute scans).
+    pub probed_lists: u64,
+    /// Rows distance-computed across all queries (index + pending).
+    pub scanned_rows: u64,
+}
+
+/// Result of one tiered `nearest` query (index ∪ pending tail).
+#[derive(Clone, Debug)]
+pub struct NearestOutcome {
+    /// Up to k neighbors in `(distance, key)` order.
+    pub neighbors: Vec<Neighbor>,
+    /// Posting lists scanned (0 on a brute-force path).
+    pub probed: usize,
+    /// Rows distance-computed, pending tail included.
+    pub scanned: usize,
+}
+
+/// The ANN side-car of a [`TieredCache`]: an immutable IVF index swapped
+/// whole behind an `RwLock`, plus the pending tail of rows persisted
+/// since the last build. Invariant: `index ∪ pending ⊇ live store rows`
+/// (a row may transiently appear in both right after a swap; queries
+/// dedup by key), so `nearest` at probe 1.0 is exact-complete no matter
+/// when rebuilds land.
+struct AnnCell {
+    cfg: AnnConfig,
+    /// Row dimensionality (the pipeline's `m`); rows of any other
+    /// length are excluded from retrieval.
+    dim: usize,
+    index: RwLock<Arc<AnnIndex>>,
+    pending: Mutex<Vec<(CacheKey, Vec<f32>)>>,
+    /// Guard: at most one background rebuild in flight.
+    rebuilding: AtomicBool,
+    builds: AtomicU64,
+    last_build_us: AtomicU64,
+    queries: AtomicU64,
+    probed_lists: AtomicU64,
+    scanned_rows: AtomicU64,
+}
+
+impl AnnCell {
+    fn new(cfg: AnnConfig, dim: usize) -> AnnCell {
+        let empty = Arc::new(AnnIndex::build(Vec::new(), dim, &cfg));
+        AnnCell {
+            cfg,
+            dim,
+            index: RwLock::new(empty),
+            pending: Mutex::new(Vec::new()),
+            rebuilding: AtomicBool::new(false),
+            builds: AtomicU64::new(0),
+            last_build_us: AtomicU64::new(0),
+            queries: AtomicU64::new(0),
+            probed_lists: AtomicU64::new(0),
+            scanned_rows: AtomicU64::new(0),
+        }
+    }
+
+    /// Rebuild the index from a store snapshot. The store mutex is held
+    /// only for the row snapshot — the k-means (the expensive part)
+    /// runs on this thread's own copy, then the fresh index is swapped
+    /// in and the pending rows it covers are pruned. Swap-then-prune
+    /// order matters: between the two a query may see a row in both
+    /// places (deduped), but never in neither.
+    fn rebuild(cell: &AnnCell, store: &Mutex<EmbeddingStore>) {
+        let t = Instant::now();
+        let entries = store.lock().expect("store lock").snapshot_rows();
+        let index = Arc::new(AnnIndex::build(entries, cell.dim, &cell.cfg));
+        *cell.index.write().expect("ann index lock") = Arc::clone(&index);
+        cell.pending.lock().expect("ann pending lock").retain(|(k, _)| !index.contains(k));
+        cell.builds.fetch_add(1, Ordering::Relaxed);
+        cell.last_build_us.store(t.elapsed().as_micros() as u64, Ordering::Relaxed);
+    }
+
+    fn stats(&self) -> AnnStats {
+        let index = Arc::clone(&self.index.read().expect("ann index lock"));
+        AnnStats {
+            centroids: index.nlist(),
+            indexed: index.len(),
+            pending: self.pending.lock().expect("ann pending lock").len(),
+            builds: self.builds.load(Ordering::Relaxed),
+            last_build_ms: self.last_build_us.load(Ordering::Relaxed) as f64 / 1000.0,
+            queries: self.queries.load(Ordering::Relaxed),
+            probed_lists: self.probed_lists.load(Ordering::Relaxed),
+            scanned_rows: self.scanned_rows.load(Ordering::Relaxed),
+        }
+    }
 }
 
 /// The serve daemon's cache: L1 in RAM, L2 on disk (optional).
@@ -268,7 +386,9 @@ pub struct TieredStats {
 /// is exactly the append-only log's contract.
 pub struct TieredCache {
     l1: EmbeddingCache,
-    l2: Option<Mutex<EmbeddingStore>>,
+    l2: Option<Arc<Mutex<EmbeddingStore>>>,
+    /// The ANN retrieval index over the store (requires `l2`).
+    ann: Option<Arc<AnnCell>>,
     /// Per-float recompute weight (from [`recompute_cost_estimate`]);
     /// multiplied by `row_len` to weight cost-aware eviction.
     row_cost: f64,
@@ -287,9 +407,35 @@ impl TieredCache {
         row_cost: f64,
         store: Option<EmbeddingStore>,
     ) -> TieredCache {
+        TieredCache::with_ann(l1_capacity, policy, row_cost, store, None)
+    }
+
+    /// Like [`TieredCache::new`], plus an optional ANN retrieval index
+    /// over the store: `ann = Some((cfg, dim))` builds the index
+    /// synchronously over the rows already on disk (so a restarted
+    /// daemon answers `nearest` from its first request), with `dim` the
+    /// pipeline's row length. Ignored without a store — retrieval is
+    /// defined over the durable corpus, not the RAM tier.
+    pub fn with_ann(
+        l1_capacity: usize,
+        policy: EvictPolicy,
+        row_cost: f64,
+        store: Option<EmbeddingStore>,
+        ann: Option<(AnnConfig, usize)>,
+    ) -> TieredCache {
+        let l2 = store.map(|s| Arc::new(Mutex::new(s)));
+        let ann = match (&l2, ann) {
+            (Some(store), Some((cfg, dim))) => {
+                let cell = Arc::new(AnnCell::new(cfg, dim));
+                AnnCell::rebuild(&cell, store);
+                Some(cell)
+            }
+            _ => None,
+        };
         TieredCache {
             l1: EmbeddingCache::with_policy(l1_capacity, policy),
-            l2: store.map(Mutex::new),
+            l2,
+            ann,
             row_cost,
             l2_hits: AtomicU64::new(0),
             l2_misses: AtomicU64::new(0),
@@ -327,17 +473,124 @@ impl TieredCache {
     /// Write a freshly computed row through both tiers. A store append
     /// failure (disk full, permissions) degrades to RAM-only for that
     /// row — logged, never fatal to the request.
+    ///
+    /// A row that actually persisted also enters the ANN pending tail
+    /// (immediately searchable); a rebuild is kicked in the background
+    /// when the tail overflows or when this put tripped the store's
+    /// auto-compaction.
     pub fn insert(&self, key: CacheKey, row: Vec<f32>) {
+        let mut persisted = false;
+        let mut compacted = false;
         if let Some(store) = &self.l2 {
             let mut s = store.lock().expect("store lock");
             if !s.contains(&key) {
-                if let Err(e) = s.put(key, &row) {
-                    eprintln!("serve: embedding store write-through failed: {e:#}");
+                let before = s.stats().compactions;
+                match s.put(key, &row) {
+                    Ok(()) => {
+                        persisted = true;
+                        compacted = s.stats().compactions > before;
+                    }
+                    Err(e) => eprintln!("serve: embedding store write-through failed: {e:#}"),
                 }
+            }
+        }
+        if let Some(cell) = self.ann.as_ref().filter(|_| persisted) {
+            let mut trigger = compacted;
+            if row.len() == cell.dim {
+                let mut p = cell.pending.lock().expect("ann pending lock");
+                p.push((key, row.clone()));
+                trigger = trigger || p.len() >= cell.cfg.rebuild_pending.max(1);
+            }
+            if trigger {
+                self.spawn_ann_rebuild();
             }
         }
         let w = self.weight(&row);
         self.l1.insert_with_cost(key, row, w);
+    }
+
+    /// Insert into L1 only — used for `nearest` query rows, which must
+    /// NOT enter the store (a retrieval query must not grow the corpus
+    /// it searches) but are worth keeping warm for repeat queries.
+    pub fn insert_query_row(&self, key: CacheKey, row: Vec<f32>) {
+        let w = self.weight(&row);
+        self.l1.insert_with_cost(key, row, w);
+    }
+
+    /// k nearest stored rows to `query`, exact L2 distances, merged
+    /// across the current index and the pending tail.
+    /// `probe_override` replaces the configured probe factor for this
+    /// query only. Errors when the ANN index is not enabled (no store).
+    pub fn nearest(
+        &self,
+        query: &[f32],
+        k: usize,
+        probe_override: Option<f64>,
+    ) -> Result<NearestOutcome> {
+        let Some(cell) = &self.ann else {
+            bail!("nearest requires a persistent store (start the daemon with --store-dir)");
+        };
+        let probe = probe_override.unwrap_or(cell.cfg.probe_factor);
+        let index = Arc::clone(&cell.index.read().expect("ann index lock"));
+        let mut result = index.nearest(query, k, probe);
+        // The pending tail is always brute-scanned: rows persisted
+        // after the last build stay exactly as searchable as indexed
+        // ones. Dedup by key (sorting makes duplicates adjacent) in
+        // case a rebuild swapped mid-flight.
+        {
+            let pending = cell.pending.lock().expect("ann pending lock");
+            for (pk, prow) in pending.iter() {
+                if prow.len() != query.len() {
+                    continue;
+                }
+                result.scanned += 1;
+                result
+                    .neighbors
+                    .push(Neighbor { key: *pk, distance: crate::ann::l2_distance(query, prow) });
+            }
+        }
+        result.neighbors.sort_unstable_by(neighbor_cmp);
+        result.neighbors.dedup_by(|a, b| a.key == b.key);
+        result.neighbors.truncate(k);
+        cell.queries.fetch_add(1, Ordering::Relaxed);
+        cell.probed_lists.fetch_add(result.probed as u64, Ordering::Relaxed);
+        cell.scanned_rows.fetch_add(result.scanned as u64, Ordering::Relaxed);
+        Ok(NearestOutcome {
+            neighbors: result.neighbors,
+            probed: result.probed,
+            scanned: result.scanned,
+        })
+    }
+
+    /// Live row count of the store, `None` without one. (`nearest`
+    /// callers use this to validate `k` against the corpus size.)
+    pub fn store_len(&self) -> Option<usize> {
+        self.l2.as_ref().map(|s| s.lock().expect("store lock").len())
+    }
+
+    /// Kick a background index rebuild (at most one in flight; a
+    /// concurrent request returns immediately). The rebuild thread
+    /// holds the store mutex only for the row snapshot — never for the
+    /// k-means — so request threads are not stalled behind it. A row
+    /// that lands after the in-flight snapshot simply stays in the
+    /// pending tail until the next trigger; retrieval is never stale.
+    fn spawn_ann_rebuild(&self) {
+        let (Some(store), Some(cell)) = (self.l2.as_ref(), self.ann.as_ref()) else {
+            return;
+        };
+        if cell
+            .rebuilding
+            .compare_exchange(false, true, Ordering::AcqRel, Ordering::Acquire)
+            .is_err()
+        {
+            return;
+        }
+        let store = Arc::clone(store);
+        let cell = Arc::clone(cell);
+        std::thread::spawn(move || {
+            AnnCell::rebuild(&cell, &store);
+            cell.rebuilding.store(false, Ordering::Release);
+        });
     }
 
     pub fn stats(&self) -> TieredStats {
@@ -350,6 +603,7 @@ impl TieredCache {
                 .l2
                 .as_ref()
                 .map(|s| s.lock().expect("store lock").stats()),
+            ann: self.ann.as_ref().map(|cell| cell.stats()),
         }
     }
 }
@@ -665,6 +919,85 @@ mod tests {
         assert_eq!((st.records, st.dead_bytes), (1, 0));
         assert_eq!(t.get(&key(1)), Some(vec![1.0]));
         let _ = std::fs::remove_dir_all(&cfg.dir);
+    }
+
+    #[test]
+    fn tiered_nearest_searches_index_and_pending_tail() {
+        let cfg = temp_store("ann_pending");
+        // Rows already on disk are indexed by the open-time build…
+        {
+            let mut s = EmbeddingStore::open(cfg.clone()).unwrap();
+            s.put(key(1), &[0.0, 0.0]).unwrap();
+            s.put(key(2), &[1.0, 0.0]).unwrap();
+        }
+        let store = EmbeddingStore::open(cfg.clone()).unwrap();
+        let t = TieredCache::with_ann(
+            4,
+            EvictPolicy::Lru,
+            1.0,
+            Some(store),
+            Some((AnnConfig::default(), 2)),
+        );
+        let s = t.stats().ann.unwrap();
+        assert_eq!((s.indexed, s.pending, s.builds), (2, 0, 1));
+        assert_eq!(t.store_len(), Some(2));
+
+        // …while a fresh insert lands in the pending tail and is
+        // immediately searchable, exactly like an indexed row.
+        t.insert(key(3), vec![0.1, 0.0]);
+        let s = t.stats().ann.unwrap();
+        assert_eq!((s.indexed, s.pending), (2, 1));
+        let out = t.nearest(&[0.0, 0.0], 3, Some(1.0)).unwrap();
+        let keys: Vec<CacheKey> = out.neighbors.iter().map(|n| n.key).collect();
+        assert_eq!(keys, vec![key(1), key(3), key(2)]);
+        assert_eq!(out.neighbors[0].distance.to_bits(), 0.0f32.to_bits());
+        assert_eq!(out.scanned, 3, "index rows + pending row all scanned");
+
+        // A wrong-dimension row persists but never enters retrieval.
+        t.insert(key(4), vec![1.0, 2.0, 3.0]);
+        assert_eq!(t.stats().ann.unwrap().pending, 1);
+
+        // Query rows (insert_query_row) stay out of store and tail.
+        t.insert_query_row(key(5), vec![9.0, 9.0]);
+        let s = t.stats();
+        assert_eq!(s.ann.unwrap().pending, 1);
+        assert_eq!(s.store.unwrap().records, 4);
+        let _ = std::fs::remove_dir_all(&cfg.dir);
+    }
+
+    #[test]
+    fn pending_overflow_triggers_a_background_rebuild() {
+        let cfg = temp_store("ann_rebuild");
+        let store = EmbeddingStore::open(cfg.clone()).unwrap();
+        let acfg = AnnConfig { rebuild_pending: 3, ..AnnConfig::default() };
+        let t = TieredCache::with_ann(8, EvictPolicy::Lru, 1.0, Some(store), Some((acfg, 2)));
+        for n in 0..3u64 {
+            t.insert(key(10 + n), vec![n as f32, 0.0]);
+        }
+        // The rebuild runs off-thread; poll for it (bounded).
+        let deadline = Instant::now() + std::time::Duration::from_secs(30);
+        loop {
+            let s = t.stats().ann.unwrap();
+            if s.builds >= 2 && s.pending == 0 {
+                assert_eq!(s.indexed, 3);
+                break;
+            }
+            assert!(Instant::now() < deadline, "background rebuild never landed: {s:?}");
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        // Absorbed rows stay searchable.
+        let out = t.nearest(&[2.0, 0.0], 1, Some(1.0)).unwrap();
+        assert_eq!(out.neighbors[0].key, key(12));
+        let _ = std::fs::remove_dir_all(&cfg.dir);
+    }
+
+    #[test]
+    fn nearest_without_a_store_is_an_error() {
+        let t = TieredCache::new(2, EvictPolicy::Lru, 1.0, None);
+        let err = t.nearest(&[0.0], 1, None).unwrap_err().to_string();
+        assert!(err.contains("--store-dir"), "{err}");
+        assert!(t.stats().ann.is_none());
+        assert!(t.store_len().is_none());
     }
 
     #[test]

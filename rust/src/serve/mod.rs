@@ -48,11 +48,28 @@
 //! `tests/store.rs` and measured by serve-bench's `warm_l2` restart
 //! pass.
 //!
+//! With a store attached the daemon also answers **k-NN retrieval**:
+//! the `nearest` op embeds a query graph through the same cache/pipeline
+//! path above, then searches an IVFFlat index ([`crate::ann`]) kept as a
+//! side-car over the stored corpus:
+//!
+//! ```text
+//!   nearest ── embed query (cache or pipeline; row stays L1-only) ──┐
+//!                                                                  ▼
+//!   AnnIndex (k-means centroids + inverted lists, rebuilt in the
+//!   background off the request thread) ∪ pending tail (rows stored
+//!   since the last build, brute-scanned) ──► k keys + exact L2
+//! ```
+//!
+//! At `probe >= 1.0` (or below `--ann-min-brute` rows) the search is an
+//! exhaustive scan, bitwise identical to the brute-force oracle —
+//! pinned by `tests/ann.rs`.
+//!
 //! Request/reply format and per-request error semantics live in
 //! [`protocol`]; the cache key + tiering discipline in [`cache`]; the
 //! load-generator (`graphlet-rf serve-bench`, labeled
-//! `cold`/`warm_l1`/`warm_l2` passes with throughput + p50/p99 and a
-//! machine-readable JSON line) in [`bench`].
+//! `cold`/`warm_l1`/`warm_l2`/`nearest_p*` passes with throughput +
+//! p50/p99 and a machine-readable JSON line) in [`bench`].
 //!
 //! Robustness contract (pinned by `tests/serve.rs`): malformed JSON
 //! lines, oversized graphs, unknown ops, and mid-request disconnects
@@ -68,8 +85,10 @@ pub mod server;
 
 pub use bench::{run_bench, run_restart_bench, send_shutdown, BenchReport, BenchRun};
 pub use cache::{
-    config_fingerprint, recompute_cost_estimate, CacheKey, CacheStats, EmbeddingCache,
-    EvictPolicy, TieredCache, TieredStats,
+    config_fingerprint, recompute_cost_estimate, AnnStats, CacheKey, CacheStats, EmbeddingCache,
+    EvictPolicy, NearestOutcome, TieredCache, TieredStats,
 };
-pub use protocol::{embed_request, parse_embed_reply, parse_request, Request};
+pub use protocol::{
+    embed_request, nearest_request, parse_embed_reply, parse_nearest_reply, parse_request, Request,
+};
 pub use server::{ServeConfig, Server};

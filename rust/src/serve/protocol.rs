@@ -5,33 +5,76 @@
 //!
 //! ```text
 //! {"op":"embed","id":7,"v":60,"edges":[[0,1],[1,2],...],"graph_index":0}
+//! {"op":"nearest","id":8,"k":10,"v":60,"edges":[[0,1],...],"probe":0.5}
 //! {"op":"ping","id":1}
 //! {"op":"stats","id":2}
 //! {"op":"shutdown","id":3}
 //! ```
 //!
+//! Op table:
+//!
+//! | op         | fields                                   | reply |
+//! |------------|------------------------------------------|-------|
+//! | `embed`    | `v`, `edges`, [`graph_index`]            | the graph's embedding row (cached or computed) |
+//! | `nearest`  | `v`, `edges`, `k`, [`graph_index`], [`probe`] | the `k` stored keys nearest to the graph's embedding, exact L2 distances (requires `--store-dir`) |
+//! | `ping`     | —                                        | `{"ok":true}` |
+//! | `stats`    | —                                        | pipeline/cache/store/ann counters |
+//! | `shutdown` | —                                        | ack, then the daemon drains and exits |
+//!
 //! `graph_index` selects the position in the server's per-graph seed
 //! stream (default 0); submitting graph i of a dataset with
 //! `graph_index = i` reproduces `embed_dataset` output bit for bit.
+//! `nearest.k` must be ≥ 1 and at most the store's row count;
+//! `nearest.probe`, when present, overrides the daemon's `--ann-probe`
+//! for this query and must lie in (0, 1] — at 1.0 the scan is
+//! exhaustive (exact). A `nearest` query is **read-only**: it embeds
+//! the query graph (through cache or pipeline) but never adds it to
+//! the stored corpus.
 //!
 //! Replies (order is NOT guaranteed to match request order — replies
 //! stream out as cross-request batches complete; match on `id`):
 //!
 //! ```text
 //! {"id":7,"ok":true,"cached":false,"m":5000,"embedding":[...]}
+//! {"id":8,"ok":true,"op":"nearest","k":10,
+//!  "neighbors":[{"key":"00ab..:01cd..:02ef..","distance":0.37},...],
+//!  "probed":4,"scanned":130}
 //! {"id":9,"ok":false,"error":"..."}
 //! ```
+//!
+//! Neighbor keys are colon-separated hex triples
+//! (`graph_hash:config_fp:seed`, 16 digits each): the protocol's JSON
+//! numbers are f64-backed (exact only below 2^53), so full-width u64
+//! key fields travel as strings.
 //!
 //! Every malformed line produces an `ok:false` reply for that request
 //! only; the connection and the daemon keep running.
 
+use crate::ann::Neighbor;
 use crate::graph::AnyGraph;
+use crate::store::CacheKey;
 use crate::util::Json;
 
 /// A parsed client request.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Request {
-    Embed { id: u64, v: usize, edges: Vec<(usize, usize)>, graph_index: usize },
+    Embed {
+        id: u64,
+        v: usize,
+        edges: Vec<(usize, usize)>,
+        graph_index: usize,
+    },
+    /// k-NN retrieval: embed the query graph, return the k nearest
+    /// stored keys. `probe` overrides the daemon's probe factor for
+    /// this query when present.
+    Nearest {
+        id: u64,
+        v: usize,
+        edges: Vec<(usize, usize)>,
+        graph_index: usize,
+        k: usize,
+        probe: Option<f64>,
+    },
     Ping { id: u64 },
     Stats { id: u64 },
     Shutdown { id: u64 },
@@ -69,41 +112,72 @@ pub fn parse_request(line: &str) -> Result<Request, ProtoError> {
         "stats" => Ok(Request::Stats { id }),
         "shutdown" => Ok(Request::Shutdown { id }),
         "embed" => {
-            let v = j
-                .get("v")
-                .and_then(Json::as_usize)
-                .ok_or_else(|| ProtoError::new(Some(id), "embed: missing node count \"v\""))?;
-            let raw_edges = j
-                .get("edges")
-                .and_then(Json::as_array)
-                .ok_or_else(|| ProtoError::new(Some(id), "embed: missing \"edges\" array"))?;
-            let mut edges = Vec::with_capacity(raw_edges.len());
-            for e in raw_edges {
-                let pair = e.as_array().filter(|p| p.len() == 2).ok_or_else(|| {
-                    ProtoError::new(Some(id), "embed: each edge must be a [a, b] pair")
-                })?;
-                let a = pair[0].as_usize();
-                let b = pair[1].as_usize();
-                match (a, b) {
-                    (Some(a), Some(b)) => edges.push((a, b)),
-                    _ => {
-                        return Err(ProtoError::new(
-                            Some(id),
-                            "embed: edge endpoints must be non-negative integers",
-                        ))
-                    }
-                }
-            }
-            let graph_index = match j.get("graph_index") {
-                None => 0,
-                Some(v) => v.as_usize().ok_or_else(|| {
-                    ProtoError::new(Some(id), "\"graph_index\" must be a non-negative integer")
-                })?,
-            };
+            let (v, edges, graph_index) = parse_graph_fields(&j, id, "embed")?;
             Ok(Request::Embed { id, v, edges, graph_index })
+        }
+        "nearest" => {
+            let (v, edges, graph_index) = parse_graph_fields(&j, id, "nearest")?;
+            let k = j.get("k").and_then(Json::as_usize).ok_or_else(|| {
+                ProtoError::new(Some(id), "nearest: missing neighbor count \"k\"")
+            })?;
+            if k == 0 {
+                return Err(ProtoError::new(Some(id), "nearest: \"k\" must be at least 1"));
+            }
+            let probe = match j.get("probe") {
+                None => None,
+                Some(p) => {
+                    let p = p.as_f64().filter(|p| p.is_finite() && *p > 0.0 && *p <= 1.0);
+                    Some(p.ok_or_else(|| {
+                        ProtoError::new(Some(id), "nearest: \"probe\" must be a number in (0, 1]")
+                    })?)
+                }
+            };
+            Ok(Request::Nearest { id, v, edges, graph_index, k, probe })
         }
         other => Err(ProtoError::new(Some(id), format!("unknown op {other:?}"))),
     }
+}
+
+/// The graph payload shared by `embed` and `nearest` (both embed a
+/// client graph through the pipeline): node count, edge list, and the
+/// seed-stream position.
+fn parse_graph_fields(
+    j: &Json,
+    id: u64,
+    op: &str,
+) -> Result<(usize, Vec<(usize, usize)>, usize), ProtoError> {
+    let v = j
+        .get("v")
+        .and_then(Json::as_usize)
+        .ok_or_else(|| ProtoError::new(Some(id), format!("{op}: missing node count \"v\"")))?;
+    let raw_edges = j
+        .get("edges")
+        .and_then(Json::as_array)
+        .ok_or_else(|| ProtoError::new(Some(id), format!("{op}: missing \"edges\" array")))?;
+    let mut edges = Vec::with_capacity(raw_edges.len());
+    for e in raw_edges {
+        let pair = e.as_array().filter(|p| p.len() == 2).ok_or_else(|| {
+            ProtoError::new(Some(id), format!("{op}: each edge must be a [a, b] pair"))
+        })?;
+        let a = pair[0].as_usize();
+        let b = pair[1].as_usize();
+        match (a, b) {
+            (Some(a), Some(b)) => edges.push((a, b)),
+            _ => {
+                return Err(ProtoError::new(
+                    Some(id),
+                    format!("{op}: edge endpoints must be non-negative integers"),
+                ))
+            }
+        }
+    }
+    let graph_index = match j.get("graph_index") {
+        None => 0,
+        Some(v) => v.as_usize().ok_or_else(|| {
+            ProtoError::new(Some(id), "\"graph_index\" must be a non-negative integer")
+        })?,
+    };
+    Ok((v, edges, graph_index))
 }
 
 /// Format a successful embed reply.
@@ -159,6 +233,81 @@ pub fn parse_embed_reply(line: &str) -> Result<(u64, Vec<f32>, bool), String> {
     Ok((id, row, cached))
 }
 
+/// Format a successful nearest reply. Keys render as hex triples (see
+/// module docs); distances as f64 (an exact widening of the f32, so
+/// the client's narrowing read is bitwise).
+pub fn nearest_reply(id: u64, neighbors: &[Neighbor], probed: usize, scanned: usize) -> String {
+    let mut arr = Json::arr();
+    for n in neighbors {
+        arr.push(Json::obj().set("key", n.key.to_hex()).set("distance", n.distance));
+    }
+    Json::obj()
+        .set("id", id)
+        .set("ok", true)
+        .set("op", "nearest")
+        .set("k", neighbors.len())
+        .set("neighbors", arr)
+        .set("probed", probed)
+        .set("scanned", scanned)
+        .to_string()
+}
+
+/// Serialize a nearest request for a query graph (client side:
+/// serve-bench and the integration tests). `probe` is omitted from the
+/// wire when `None` (the daemon then uses its `--ann-probe` default).
+pub fn nearest_request(
+    id: u64,
+    graph_index: usize,
+    k: usize,
+    probe: Option<f64>,
+    g: &AnyGraph,
+) -> String {
+    let mut edges = Json::arr();
+    for u in 0..g.v() {
+        for w in g.neighbors(u) {
+            if u < w {
+                edges.push(vec![u, w]);
+            }
+        }
+    }
+    let mut obj = Json::obj()
+        .set("op", "nearest")
+        .set("id", id)
+        .set("graph_index", graph_index)
+        .set("k", k)
+        .set("v", g.v())
+        .set("edges", edges);
+    if let Some(p) = probe {
+        obj = obj.set("probe", p);
+    }
+    obj.to_string()
+}
+
+/// Parse a nearest reply into (id, neighbors, probed, scanned) —
+/// client side.
+pub fn parse_nearest_reply(line: &str) -> Result<(u64, Vec<Neighbor>, usize, usize), String> {
+    let j = Json::parse(line)?;
+    let id = j.get("id").and_then(Json::as_u64).ok_or("reply missing id")?;
+    if j.get("ok").and_then(Json::as_bool) != Some(true) {
+        let msg = j.get("error").and_then(Json::as_str).unwrap_or("unknown server error");
+        return Err(format!("request {id} failed: {msg}"));
+    }
+    let arr = j.get("neighbors").and_then(Json::as_array).ok_or("reply missing neighbors")?;
+    let mut neighbors = Vec::with_capacity(arr.len());
+    for n in arr {
+        let key = n
+            .get("key")
+            .and_then(Json::as_str)
+            .and_then(CacheKey::from_hex)
+            .ok_or("neighbor missing hex key")?;
+        let distance = n.get("distance").and_then(Json::as_f64).ok_or("neighbor missing distance")?;
+        neighbors.push(Neighbor { key, distance: distance as f32 });
+    }
+    let probed = j.get("probed").and_then(Json::as_usize).unwrap_or(0);
+    let scanned = j.get("scanned").and_then(Json::as_usize).unwrap_or(0);
+    Ok((id, neighbors, probed, scanned))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -211,6 +360,79 @@ mod tests {
 
         let e = parse_request(r#"{"id":-3,"op":"ping"}"#).unwrap_err();
         assert!(e.id.is_none());
+    }
+
+    #[test]
+    fn nearest_request_roundtrip() {
+        let g = AnyGraph::Csr(CsrGraph::from_edges(4, &[(0, 1), (2, 3), (1, 2)]));
+        let line = nearest_request(11, 2, 5, Some(0.5), &g);
+        match parse_request(&line).unwrap() {
+            Request::Nearest { id, v, edges, graph_index, k, probe } => {
+                assert_eq!(id, 11);
+                assert_eq!(v, 4);
+                assert_eq!(graph_index, 2);
+                assert_eq!(k, 5);
+                assert_eq!(probe, Some(0.5));
+                assert_eq!(edges, vec![(0, 1), (1, 2), (2, 3)]);
+            }
+            other => panic!("wrong request: {other:?}"),
+        }
+        // probe omitted on the wire stays None after parsing.
+        let line = nearest_request(12, 0, 1, None, &g);
+        assert!(!line.contains("probe"), "{line}");
+        match parse_request(&line).unwrap() {
+            Request::Nearest { probe, .. } => assert_eq!(probe, None),
+            other => panic!("wrong request: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn nearest_requests_validate_k_and_probe() {
+        let e = parse_request(r#"{"id":4,"op":"nearest","v":3,"edges":[]}"#).unwrap_err();
+        assert_eq!(e.id, Some(4));
+        assert!(e.msg.contains("\"k\""), "{}", e.msg);
+
+        let e = parse_request(r#"{"id":4,"op":"nearest","v":3,"edges":[],"k":0}"#).unwrap_err();
+        assert!(e.msg.contains("at least 1"), "{}", e.msg);
+
+        for bad in [r#""probe":1.5"#, r#""probe":0"#, r#""probe":-0.2"#] {
+            let line = format!(r#"{{"id":4,"op":"nearest","v":3,"edges":[],"k":1,{bad}}}"#);
+            let e = parse_request(&line).unwrap_err();
+            assert!(e.msg.contains("probe"), "{bad}: {}", e.msg);
+        }
+
+        // the shared graph-payload errors name the nearest op.
+        let e = parse_request(r#"{"id":4,"op":"nearest","v":3,"edges":[[0]],"k":1}"#).unwrap_err();
+        assert!(e.msg.contains("nearest") && e.msg.contains("pair"), "{}", e.msg);
+        let e = parse_request(r#"{"id":4,"op":"nearest","edges":[],"k":1}"#).unwrap_err();
+        assert!(e.msg.contains("nearest") && e.msg.contains("\"v\""), "{}", e.msg);
+    }
+
+    #[test]
+    fn nearest_reply_roundtrip_is_bitwise() {
+        let neighbors = vec![
+            Neighbor {
+                key: CacheKey { graph_hash: u64::MAX, config_fp: 1 << 63, seed: 0 },
+                distance: 0.0,
+            },
+            Neighbor {
+                key: CacheKey { graph_hash: 7, config_fp: 0xC0FFEE, seed: 42 },
+                distance: 3.25e-7,
+            },
+        ];
+        let line = nearest_reply(8, &neighbors, 4, 130);
+        let (id, back, probed, scanned) = parse_nearest_reply(&line).unwrap();
+        assert_eq!(id, 8);
+        assert_eq!(probed, 4);
+        assert_eq!(scanned, 130);
+        assert_eq!(back.len(), neighbors.len());
+        for (a, b) in back.iter().zip(&neighbors) {
+            assert_eq!(a.key, b.key);
+            assert_eq!(a.distance.to_bits(), b.distance.to_bits());
+        }
+
+        let err = parse_nearest_reply(&error_reply(Some(9), "no store")).unwrap_err();
+        assert!(err.contains("no store") && err.contains('9'), "{err}");
     }
 
     #[test]

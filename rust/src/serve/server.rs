@@ -14,6 +14,7 @@ use std::sync::{Arc, Condvar, Mutex};
 
 use anyhow::{Context, Result};
 
+use crate::ann::AnnConfig;
 use crate::coordinator::{Completed, GraphJob, GsaConfig, StreamingPipeline, SubmitOutcome};
 use crate::graph::{canonical_hash, AnyGraph, CsrGraph};
 use crate::runtime::Engine;
@@ -23,7 +24,9 @@ use crate::util::Json;
 use super::cache::{
     config_fingerprint, recompute_cost_estimate, CacheKey, EvictPolicy, TieredCache,
 };
-use super::protocol::{embed_reply, error_reply, parse_request, ProtoError, Request};
+use super::protocol::{
+    embed_reply, error_reply, nearest_reply, parse_request, ProtoError, Request,
+};
 
 /// Serve-layer configuration wrapping the embedding [`GsaConfig`].
 #[derive(Clone, Debug)]
@@ -62,6 +65,15 @@ pub struct ServeConfig {
     /// rows computed by a previous daemon process are served bitwise
     /// identical from disk after a restart instead of being recomputed.
     pub store_dir: Option<std::path::PathBuf>,
+    /// IVFFlat probe factor (`--ann-probe`) for `nearest` queries that
+    /// do not carry an explicit `probe`: the fraction of inverted lists
+    /// scanned, in (0, 1]. At 1.0 every query is an exhaustive (exact)
+    /// scan. Only meaningful with `store_dir` set.
+    pub ann_probe: f64,
+    /// Below this many indexed rows `nearest` brute-forces the whole
+    /// corpus instead of probing lists (`--ann-min-brute`) — at small n
+    /// the exact scan is cheaper than the centroid ranking it skips.
+    pub ann_min_brute: usize,
 }
 
 impl Default for ServeConfig {
@@ -76,6 +88,8 @@ impl Default for ServeConfig {
             cache_capacity: 4096,
             cache_policy: EvictPolicy::Lru,
             store_dir: None,
+            ann_probe: crate::ann::DEFAULT_PROBE,
+            ann_min_brute: crate::ann::DEFAULT_MIN_BRUTE,
         }
     }
 }
@@ -119,11 +133,25 @@ impl Server {
             ),
             None => None,
         };
-        let cache = TieredCache::new(
+        // The ANN side-car rides on the persistent tier: without a
+        // store there is no corpus to search, so `nearest` is refused.
+        let ann = cfg.store_dir.as_ref().map(|_| {
+            (
+                AnnConfig {
+                    probe_factor: cfg.ann_probe,
+                    min_brute: cfg.ann_min_brute,
+                    seed: cfg.gsa.seed,
+                    ..AnnConfig::default()
+                },
+                cfg.gsa.m,
+            )
+        });
+        let cache = TieredCache::with_ann(
             cfg.cache_capacity,
             cfg.cache_policy,
             recompute_cost_estimate(pipeline.cfg()),
             store,
+            ann,
         );
         Ok(Server {
             listener,
@@ -173,6 +201,10 @@ enum PendingReply {
     /// A pipeline-computed embedding; `key` = Some means "insert into
     /// the cache on arrival".
     Embed { id: u64, key: Option<CacheKey> },
+    /// A pipeline-computed *query* embedding for a k-NN request: on
+    /// arrival the row is cached L1-only (never persisted — `nearest`
+    /// is read-only) and then searched against the ANN index.
+    Nearest { id: u64, key: CacheKey, k: usize, probe: Option<f64> },
 }
 
 /// Per-connection state shared between the reader and writer threads:
@@ -318,19 +350,8 @@ fn handle_request(
             Flow::Shutdown
         }
         Request::Embed { id, v, edges, graph_index } => {
-            if let Err(msg) = validate_graph(ctx, v, &edges) {
+            if let Err(msg) = validate_query(ctx, v, &edges, graph_index) {
                 ctx.errors.fetch_add(1, Ordering::Relaxed);
-                send_raw(shared, reply_tx, tag, error_reply(Some(id), &msg));
-                return Flow::Continue;
-            }
-            if graph_index > ctx.cfg.max_graph_index {
-                // Seed derivation walks the stream to position i; an
-                // unbounded index would be an O(i) CPU hole.
-                ctx.errors.fetch_add(1, Ordering::Relaxed);
-                let msg = format!(
-                    "graph_index {graph_index} exceeds limit {}",
-                    ctx.cfg.max_graph_index
-                );
                 send_raw(shared, reply_tx, tag, error_reply(Some(id), &msg));
                 return Flow::Continue;
             }
@@ -348,27 +369,109 @@ fn handle_request(
                 .lock()
                 .expect("pending lock")
                 .insert(tag, PendingReply::Embed { id, key: Some(key) });
-            let job =
-                GraphJob { graph: Arc::new(graph), seed, tag, done: reply_tx.clone() };
-            match ctx.pipeline.try_submit(job) {
-                Ok(SubmitOutcome::Accepted) => {}
-                Ok(SubmitOutcome::Overloaded) => {
-                    ctx.errors.fetch_add(1, Ordering::Relaxed);
-                    send_raw(
-                        shared,
-                        reply_tx,
-                        tag,
-                        error_reply(Some(id), "server overloaded: job queue full, retry later"),
-                    );
-                }
-                Err(e) => {
-                    ctx.errors.fetch_add(1, Ordering::Relaxed);
-                    send_raw(shared, reply_tx, tag, error_reply(Some(id), &e.to_string()));
-                }
+            submit_job(ctx, shared, reply_tx, tag, id, graph, seed);
+            Flow::Continue
+        }
+        Request::Nearest { id, v, edges, graph_index, k, probe } => {
+            if let Err(msg) = validate_query(ctx, v, &edges, graph_index) {
+                ctx.errors.fetch_add(1, Ordering::Relaxed);
+                send_raw(shared, reply_tx, tag, error_reply(Some(id), &msg));
+                return Flow::Continue;
             }
+            // k is validated against the *stored* corpus up front so the
+            // obvious misuses fail fast, before the query is embedded.
+            let Some(n) = ctx.cache.store_len() else {
+                ctx.errors.fetch_add(1, Ordering::Relaxed);
+                let msg =
+                    "nearest requires a persistent store (start the daemon with --store-dir)";
+                send_raw(shared, reply_tx, tag, error_reply(Some(id), msg));
+                return Flow::Continue;
+            };
+            if k > n {
+                ctx.errors.fetch_add(1, Ordering::Relaxed);
+                let msg = format!("nearest: k={k} exceeds the {n} stored rows");
+                send_raw(shared, reply_tx, tag, error_reply(Some(id), &msg));
+                return Flow::Continue;
+            }
+            let graph = AnyGraph::Csr(CsrGraph::from_edges(v, &edges));
+            let seed = ctx.pipeline.graph_seed(graph_index);
+            let key =
+                CacheKey { graph_hash: canonical_hash(&graph), config_fp: ctx.config_fp, seed };
+            if let Some(row) = ctx.cache.get(&key) {
+                send_raw(shared, reply_tx, tag, render_nearest(ctx, id, &row, k, probe));
+                return Flow::Continue;
+            }
+            shared
+                .pending
+                .lock()
+                .expect("pending lock")
+                .insert(tag, PendingReply::Nearest { id, key, k, probe });
+            submit_job(ctx, shared, reply_tx, tag, id, graph, seed);
             Flow::Continue
         }
     }
+}
+
+/// Hand an embedding job to the pipeline, mapping admission-control
+/// rejections to per-request error replies (shared by embed/nearest).
+fn submit_job(
+    ctx: &ServeCtx,
+    shared: &ConnShared,
+    reply_tx: &Sender<Completed>,
+    tag: u64,
+    id: u64,
+    graph: AnyGraph,
+    seed: u64,
+) {
+    let job = GraphJob { graph: Arc::new(graph), seed, tag, done: reply_tx.clone() };
+    match ctx.pipeline.try_submit(job) {
+        Ok(SubmitOutcome::Accepted) => {}
+        Ok(SubmitOutcome::Overloaded) => {
+            ctx.errors.fetch_add(1, Ordering::Relaxed);
+            send_raw(
+                shared,
+                reply_tx,
+                tag,
+                error_reply(Some(id), "server overloaded: job queue full, retry later"),
+            );
+        }
+        Err(e) => {
+            ctx.errors.fetch_add(1, Ordering::Relaxed);
+            send_raw(shared, reply_tx, tag, error_reply(Some(id), &e.to_string()));
+        }
+    }
+}
+
+/// Run the k-NN search for an already-embedded query row and render the
+/// reply line (used from both the cache-hit fast path and the writer).
+fn render_nearest(ctx: &ServeCtx, id: u64, row: &[f32], k: usize, probe: Option<f64>) -> String {
+    match ctx.cache.nearest(row, k, probe) {
+        Ok(out) => nearest_reply(id, &out.neighbors, out.probed, out.scanned),
+        Err(e) => {
+            ctx.errors.fetch_add(1, Ordering::Relaxed);
+            error_reply(Some(id), &e.to_string())
+        }
+    }
+}
+
+/// The guards shared by every graph-carrying request: graph shape
+/// limits plus the seed-stream position bound (deriving the seed at
+/// position i costs O(i) RNG draws, so an unbounded client-supplied
+/// index would let one request pin a reader thread).
+fn validate_query(
+    ctx: &ServeCtx,
+    v: usize,
+    edges: &[(usize, usize)],
+    graph_index: usize,
+) -> Result<(), String> {
+    validate_graph(ctx, v, edges)?;
+    if graph_index > ctx.cfg.max_graph_index {
+        return Err(format!(
+            "graph_index {graph_index} exceeds limit {}",
+            ctx.cfg.max_graph_index
+        ));
+    }
+    Ok(())
 }
 
 fn validate_graph(ctx: &ServeCtx, v: usize, edges: &[(usize, usize)]) -> Result<(), String> {
@@ -441,6 +544,26 @@ fn stats_reply(id: u64, ctx: &ServeCtx) -> String {
                 .set("compactions", st.compactions),
         );
     }
+    if let Some(ann) = tiered.ann {
+        out = out.set(
+            "ann",
+            // `lists` mirrors `centroids` (IVFFlat has one inverted
+            // list per centroid); `indexed + pending` covers every
+            // live stored row between rebuilds.
+            Json::obj()
+                .set("centroids", ann.centroids)
+                .set("lists", ann.centroids)
+                .set("indexed", ann.indexed)
+                .set("pending", ann.pending)
+                .set("builds", ann.builds)
+                .set("last_build_ms", ann.last_build_ms)
+                .set("queries", ann.queries)
+                .set("probed_lists", ann.probed_lists)
+                .set("scanned_rows", ann.scanned_rows)
+                .set("probe_factor", ctx.cfg.ann_probe)
+                .set("min_brute", ctx.cfg.ann_min_brute),
+        );
+    }
     out
         .set(
             "pipeline",
@@ -494,6 +617,18 @@ fn writer_loop(
                         ctx.cache.insert(k, done.row.clone());
                     }
                     embed_reply(id, &done.row, false)
+                }
+            },
+            PendingReply::Nearest { id, key, k, probe } => match done.error {
+                Some(e) => {
+                    ctx.errors.fetch_add(1, Ordering::Relaxed);
+                    error_reply(Some(id), &e)
+                }
+                None => {
+                    // L1-only: repeat queries stay warm without the
+                    // query row ever joining the stored corpus.
+                    ctx.cache.insert_query_row(key, done.row.clone());
+                    render_nearest(ctx, id, &done.row, k, probe)
                 }
             },
         };

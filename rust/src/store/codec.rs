@@ -38,11 +38,35 @@ use crate::util::fnv;
 /// artifacts worth persisting. Defined here (the on-disk key) and
 /// re-exported by `serve::cache` (the in-RAM key); both tiers address
 /// rows identically.
-#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+/// `Ord` is lexicographic over `(graph_hash, config_fp, seed)`: the ANN
+/// index sorts snapshots by key so index builds are deterministic even
+/// though the store's in-RAM offset index is an (unordered) `HashMap`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct CacheKey {
     pub graph_hash: u64,
     pub config_fp: u64,
     pub seed: u64,
+}
+
+impl CacheKey {
+    /// Wire encoding for the `nearest` reply: the protocol's JSON
+    /// numbers are f64-backed (exact only below 2^53), so full-width
+    /// u64 key fields travel as a colon-separated hex triple instead.
+    pub fn to_hex(&self) -> String {
+        format!("{:016x}:{:016x}:{:016x}", self.graph_hash, self.config_fp, self.seed)
+    }
+
+    /// Inverse of [`CacheKey::to_hex`]; `None` on any malformed input.
+    pub fn from_hex(s: &str) -> Option<CacheKey> {
+        let mut parts = s.split(':');
+        let graph_hash = u64::from_str_radix(parts.next()?, 16).ok()?;
+        let config_fp = u64::from_str_radix(parts.next()?, 16).ok()?;
+        let seed = u64::from_str_radix(parts.next()?, 16).ok()?;
+        if parts.next().is_some() {
+            return None;
+        }
+        Some(CacheKey { graph_hash, config_fp, seed })
+    }
 }
 
 /// Every segment file starts with these 8 bytes (name + format version;
@@ -242,6 +266,32 @@ mod tests {
         // Too-small lengths (below the fixed payload header) too.
         buf[0..4].copy_from_slice(&3u32.to_le_bytes());
         assert!(matches!(decode_record(&buf), Decoded::Corrupt { skip: None, .. }));
+    }
+
+    #[test]
+    fn cache_key_hex_roundtrips_full_width_u64s() {
+        let keys = [
+            CacheKey { graph_hash: 0, config_fp: 0, seed: 0 },
+            CacheKey { graph_hash: u64::MAX, config_fp: 1 << 63, seed: (1 << 53) + 1 },
+            key(123),
+        ];
+        for k in keys {
+            let hex = k.to_hex();
+            assert_eq!(hex.len(), 16 * 3 + 2);
+            assert_eq!(CacheKey::from_hex(&hex), Some(k));
+        }
+        let long = "f".repeat(17);
+        for bad in ["", "12:34", "zz:0:0", "0:0:0:0", "0:0:", long.as_str()] {
+            assert_eq!(CacheKey::from_hex(bad), None, "{bad:?} must not parse");
+        }
+    }
+
+    #[test]
+    fn cache_key_order_is_lexicographic_over_fields() {
+        let a = CacheKey { graph_hash: 1, config_fp: 9, seed: 9 };
+        let b = CacheKey { graph_hash: 2, config_fp: 0, seed: 0 };
+        let c = CacheKey { graph_hash: 2, config_fp: 0, seed: 1 };
+        assert!(a < b && b < c);
     }
 
     #[test]

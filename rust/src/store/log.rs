@@ -276,6 +276,24 @@ impl EmbeddingStore {
         self.index.contains_key(key)
     }
 
+    /// Every live row, **sorted by key**. This is the ANN index's feed:
+    /// the offset index is a `HashMap` (unordered), so the sort is what
+    /// makes an index build a pure function of the row *set* — the
+    /// determinism the differential battery and the restart test pin.
+    /// Rows that fail their checksum are dropped (counted in
+    /// `corrupt_skipped`) exactly as in [`get`](Self::get).
+    pub fn snapshot_rows(&mut self) -> Vec<(CacheKey, Vec<f32>)> {
+        let mut keys: Vec<CacheKey> = self.index.keys().copied().collect();
+        keys.sort_unstable();
+        let mut out = Vec::with_capacity(keys.len());
+        for key in keys {
+            if let Some(row) = self.get(&key) {
+                out.push((key, row));
+            }
+        }
+        out
+    }
+
     /// Live (indexed) record count.
     pub fn len(&self) -> usize {
         self.index.len()
@@ -632,6 +650,32 @@ mod tests {
         assert!(s.get(&key(0)).is_none());
         let st = s.stats();
         assert_eq!((st.segments, st.records, st.live_bytes), (1, 0, 0));
+        cleanup(&cfg);
+    }
+
+    #[test]
+    fn snapshot_rows_is_key_sorted_and_complete() {
+        let cfg = temp_store("snapshot");
+        let mut s = EmbeddingStore::open(cfg.clone()).unwrap();
+        // Insert in a scrambled key order; the snapshot must come back
+        // sorted regardless.
+        for n in [5u64, 1, 9, 3, 7, 0] {
+            s.put(key(n), &row(n, 8)).unwrap();
+        }
+        let snap = s.snapshot_rows();
+        assert_eq!(snap.len(), 6);
+        let keys: Vec<CacheKey> = snap.iter().map(|(k, _)| *k).collect();
+        let mut sorted = keys.clone();
+        sorted.sort_unstable();
+        assert_eq!(keys, sorted, "snapshot must be key-sorted");
+        for (k, r) in &snap {
+            let n = k.graph_hash;
+            assert_eq!(
+                r.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                row(n, 8).iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "snapshot row {n} must be bitwise"
+            );
+        }
         cleanup(&cfg);
     }
 

@@ -51,8 +51,12 @@
 //!
 //! The serve layer tiers this store *under* its in-RAM LRU
 //! ([`crate::serve::cache::TieredCache`]): L1 misses probe the store
-//! and promote hits; inserts write through. No new dependencies — the
-//! codec is hand-rolled, checksums share [`crate::util::fnv`].
+//! and promote hits; inserts write through. The ANN retrieval index
+//! ([`crate::ann`]) feeds on [`EmbeddingStore::snapshot_rows`] — a
+//! key-sorted dump of every live row — taken under a brief lock at
+//! daemon open, after compaction, and when the pending tail overflows.
+//! No new dependencies — the codec is hand-rolled, checksums share
+//! [`crate::util::fnv`].
 
 pub mod codec;
 pub mod log;

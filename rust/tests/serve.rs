@@ -16,7 +16,8 @@ use graphlet_rf::coordinator::{embed_dataset, fwht_threads_from_env_or, EngineMo
 use graphlet_rf::data::Dataset;
 use graphlet_rf::gen::SbmConfig;
 use graphlet_rf::serve::{
-    embed_request, parse_embed_reply, send_shutdown, ServeConfig, Server,
+    embed_request, nearest_request, parse_embed_reply, parse_nearest_reply, send_shutdown,
+    ServeConfig, Server,
 };
 use graphlet_rf::util::{Json, Rng};
 
@@ -46,13 +47,15 @@ fn test_gsa() -> GsaConfig {
 }
 
 /// Start a daemon; with `GRAPHLET_RF_TEST_STORE=1` (the CI store axis)
-/// a fresh per-test temp-dir segment log is attached, so every leg of
-/// the engine matrix also runs the daemon contract with the L2 tier
-/// enabled — the wire protocol, bitwise replies, and error semantics
-/// must be identical either way.
+/// or `GRAPHLET_RF_TEST_ANN=1` (the ANN axis) a fresh per-test temp-dir
+/// segment log is attached, so every leg of the engine matrix also runs
+/// the daemon contract with the L2 tier — and its IVFFlat retrieval
+/// side-car — enabled: the wire protocol, bitwise replies, and error
+/// semantics must be identical either way.
 fn start_server(tag: &str, mut cfg: ServeConfig) -> (SocketAddr, JoinHandle<()>) {
+    let axis_on = |var: &str| std::env::var(var).as_deref() == Ok("1");
     if cfg.store_dir.is_none()
-        && std::env::var("GRAPHLET_RF_TEST_STORE").as_deref() == Ok("1")
+        && (axis_on("GRAPHLET_RF_TEST_STORE") || axis_on("GRAPHLET_RF_TEST_ANN"))
     {
         let dir = std::env::temp_dir()
             .join(format!("graphlet_rf_serve_store_{tag}_{}", std::process::id()));
@@ -347,6 +350,203 @@ fn stats_expose_queue_depth_before_overload_fires() {
     drop(client2);
     send_shutdown(&addr.to_string()).unwrap();
     server.join().unwrap();
+}
+
+/// A daemon with a store attached for the `nearest` tests; the store
+/// lives in a fresh per-test temp dir, returned so the test can clean
+/// it up after shutdown.
+fn start_server_with_store(
+    tag: &str,
+    mut cfg: ServeConfig,
+) -> (SocketAddr, JoinHandle<()>, std::path::PathBuf) {
+    let dir = std::env::temp_dir()
+        .join(format!("graphlet_rf_serve_ann_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    cfg.store_dir = Some(dir.clone());
+    let (addr, handle) = start_server_ram_only(cfg);
+    (addr, handle, dir)
+}
+
+fn u64_at(stats: &Json, obj: &str, field: &str) -> u64 {
+    stats
+        .get(obj)
+        .and_then(|o| o.get(field))
+        .and_then(Json::as_u64)
+        .unwrap_or_else(|| panic!("stats missing {obj}.{field}: {stats}"))
+}
+
+/// Every malformed `nearest` request fails that request only — bad k,
+/// bad probe, malformed edges, k beyond the corpus — and the same
+/// connection keeps serving embeds, retrievals, and pings afterwards.
+#[test]
+fn nearest_error_paths_are_per_request_and_daemon_survives() {
+    let mut gsa = test_gsa();
+    gsa.s = 50;
+    gsa.m = 16;
+    let (addr, server, dir) =
+        start_server_with_store("errors", ServeConfig { gsa, ..Default::default() });
+    let ds = quickstart_ds();
+    let mut client = Client::connect(addr);
+
+    // k=1 against the still-empty corpus: a clean per-request error.
+    let reply = client.roundtrip(&nearest_request(1, 0, 1, None, &ds.graphs[0]));
+    let err = parse_nearest_reply(&reply).unwrap_err();
+    assert!(err.contains("exceeds"), "{err}");
+
+    // Grow the corpus to 3 rows.
+    for g in 0..3 {
+        parse_embed_reply(&client.roundtrip(&embed_request(g as u64, g, &ds.graphs[g])))
+            .unwrap();
+    }
+
+    // Missing k.
+    let reply = client.roundtrip(r#"{"op":"nearest","id":10,"v":5,"edges":[[0,1]]}"#);
+    assert!(reply.contains("\\\"k\\\"") || reply.contains("\"k\""), "{reply}");
+    assert!(reply.contains("\"ok\":false"), "{reply}");
+
+    // k = 0.
+    let reply = client.roundtrip(r#"{"op":"nearest","id":11,"v":5,"edges":[[0,1]],"k":0}"#);
+    assert!(reply.contains("at least 1"), "{reply}");
+
+    // k beyond the 3 stored rows.
+    let reply = client.roundtrip(r#"{"op":"nearest","id":12,"v":5,"edges":[[0,1]],"k":99}"#);
+    assert!(reply.contains("exceeds"), "{reply}");
+
+    // Malformed edges.
+    let reply = client.roundtrip(r#"{"op":"nearest","id":13,"v":5,"edges":[[0]],"k":1}"#);
+    assert!(reply.contains("pair"), "{reply}");
+
+    // Probe outside (0, 1].
+    for bad in [r#""probe":1.5"#, r#""probe":0"#] {
+        let line = format!(r#"{{"op":"nearest","id":14,"v":5,"edges":[[0,1]],"k":1,{bad}}}"#);
+        let reply = client.roundtrip(&line);
+        assert!(reply.contains("probe"), "{bad}: {reply}");
+        assert!(reply.contains("\"ok\":false"), "{bad}: {reply}");
+    }
+
+    // After every failure, a valid retrieval still works: graph 0 is
+    // cached, so this is the hit fast path; probe 1.0 → exact, self at
+    // rank 0 with a bitwise-zero distance.
+    let reply = client.roundtrip(&nearest_request(20, 0, 3, Some(1.0), &ds.graphs[0]));
+    let (id, neighbors, _, scanned) = parse_nearest_reply(&reply).unwrap();
+    assert_eq!(id, 20);
+    assert_eq!(neighbors.len(), 3);
+    assert_eq!(scanned, 3, "probe 1.0 over 3 rows must scan all 3");
+    assert_eq!(neighbors[0].distance.to_bits(), 0.0f32.to_bits(), "self must rank first");
+    for pair in neighbors.windows(2) {
+        assert!(pair[0].distance <= pair[1].distance, "neighbors must be sorted");
+    }
+
+    // …and so does the rest of the protocol.
+    let pong = client.roundtrip(r#"{"op":"ping","id":21}"#);
+    assert!(pong.contains("\"ok\":true"), "{pong}");
+
+    drop(client);
+    send_shutdown(&addr.to_string()).unwrap();
+    server.join().unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Without `--store-dir` there is no corpus: `nearest` must fail with a
+/// pointer at the flag, per-request, and the daemon keeps serving.
+#[test]
+fn nearest_without_a_store_is_a_per_request_error() {
+    let mut gsa = test_gsa();
+    gsa.s = 50;
+    gsa.m = 16;
+    // RAM-only deliberately (and immune to the store/ANN env axes):
+    // this test pins the no-store error path.
+    let (addr, server) = start_server_ram_only(ServeConfig { gsa, ..Default::default() });
+    let ds = quickstart_ds();
+    let mut client = Client::connect(addr);
+
+    let reply = client.roundtrip(&nearest_request(1, 0, 1, None, &ds.graphs[0]));
+    let err = parse_nearest_reply(&reply).unwrap_err();
+    assert!(err.contains("--store-dir"), "{err}");
+
+    let pong = client.roundtrip(r#"{"op":"ping","id":2}"#);
+    assert!(pong.contains("\"ok\":true"), "{pong}");
+
+    drop(client);
+    send_shutdown(&addr.to_string()).unwrap();
+    server.join().unwrap();
+}
+
+/// The daemon's `nearest` distances are **bitwise** what the client can
+/// compute from the embed replies — and the op is read-only: a query
+/// through the uncached (pipeline) path never grows the stored corpus.
+#[test]
+fn nearest_is_bitwise_exact_and_read_only_through_the_daemon() {
+    let gsa = test_gsa();
+    let m = gsa.m;
+    let (addr, server, dir) =
+        start_server_with_store("bitwise", ServeConfig { gsa, ..Default::default() });
+    let ds = quickstart_ds();
+    let mut client = Client::connect(addr);
+
+    // Embed the whole dataset, keeping the rows as the client-side
+    // ground truth for distances.
+    let mut rows: Vec<Vec<f32>> = Vec::new();
+    for g in 0..ds.len() {
+        let (_, row, _) =
+            parse_embed_reply(&client.roundtrip(&embed_request(g as u64, g, &ds.graphs[g])))
+                .unwrap();
+        assert_eq!(row.len(), m);
+        rows.push(row);
+    }
+    let n = ds.len();
+
+    // Every stored graph queried at probe 1.0: the reply's distance
+    // sequence must equal the client-recomputed distances, sorted
+    // ascending, bit for bit (cache-hit path: the rows are in L1).
+    for g in 0..n {
+        let reply = client.roundtrip(&nearest_request(g as u64, g, n, Some(1.0), &ds.graphs[g]));
+        let (_, neighbors, _, scanned) = parse_nearest_reply(&reply).unwrap();
+        assert_eq!(neighbors.len(), n, "graph {g}");
+        assert_eq!(scanned, n, "graph {g}: probe 1.0 must scan the whole corpus");
+        let mut want: Vec<f32> =
+            rows.iter().map(|r| graphlet_rf::ann::l2_distance(&rows[g], r)).collect();
+        want.sort_unstable_by(|a, b| a.total_cmp(b));
+        for (rank, (got, want)) in neighbors.iter().zip(&want).enumerate() {
+            assert_eq!(
+                got.distance.to_bits(),
+                want.to_bits(),
+                "graph {g} rank {rank}: daemon distance {} vs client {}",
+                got.distance,
+                want
+            );
+        }
+        assert_eq!(neighbors[0].distance.to_bits(), 0.0f32.to_bits(), "self must rank first");
+    }
+
+    let stats = Json::parse(client.roundtrip(r#"{"op":"stats","id":800}"#).trim()).unwrap();
+    assert_eq!(u64_at(&stats, "store", "records") as usize, n);
+    assert_eq!(u64_at(&stats, "ann", "queries") as usize, n);
+    assert_eq!(
+        u64_at(&stats, "ann", "indexed") + u64_at(&stats, "ann", "pending"),
+        n as u64,
+        "index ∪ pending must cover the whole corpus: {stats}"
+    );
+
+    // Read-only through the *uncached* path: a fresh graph_index forces
+    // the query row through the pipeline (PendingReply::Nearest), and
+    // the stored corpus must not grow.
+    let reply =
+        client.roundtrip(&nearest_request(900, n + 100, n, Some(1.0), &ds.graphs[0]));
+    let (id, neighbors, _, _) = parse_nearest_reply(&reply).unwrap();
+    assert_eq!(id, 900);
+    assert_eq!(neighbors.len(), n);
+    let stats = Json::parse(client.roundtrip(r#"{"op":"stats","id":801}"#).trim()).unwrap();
+    assert_eq!(
+        u64_at(&stats, "store", "records") as usize,
+        n,
+        "a nearest query row must never be persisted"
+    );
+
+    drop(client);
+    send_shutdown(&addr.to_string()).unwrap();
+    server.join().unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
 }
 
 #[test]

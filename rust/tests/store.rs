@@ -18,7 +18,10 @@ use std::thread::JoinHandle;
 use graphlet_rf::coordinator::{embed_dataset, fwht_threads_from_env_or, EngineMode, GsaConfig};
 use graphlet_rf::data::Dataset;
 use graphlet_rf::gen::SbmConfig;
-use graphlet_rf::serve::{embed_request, parse_embed_reply, send_shutdown, ServeConfig, Server};
+use graphlet_rf::serve::{
+    embed_request, nearest_request, parse_embed_reply, parse_nearest_reply, send_shutdown,
+    ServeConfig, Server,
+};
 use graphlet_rf::util::{Json, Rng};
 
 fn test_ds() -> Dataset {
@@ -173,6 +176,79 @@ fn daemon_restart_serves_bitwise_rows_from_disk_with_zero_recompute() {
     let stats = client.stats();
     assert_eq!(u64_at(&stats, "cache", "l2_hits") as usize, ds.len());
     assert!(u64_at(&stats, "cache", "hits") >= 1);
+
+    drop(client);
+    send_shutdown(&addr.to_string()).unwrap();
+    server.join().unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Restarting the daemon rebuilds the ANN index from the reopened
+/// segment log — and serves **identical** neighbors: same keys, same
+/// order, bitwise-equal distances. In daemon #1 the corpus lives in the
+/// pending tail (the open-time build saw an empty store); in daemon #2
+/// it is fully indexed — the two code paths must agree exactly.
+#[test]
+fn restart_rebuilds_ann_index_and_serves_identical_neighbors() {
+    let gsa = test_gsa();
+    let ds = test_ds();
+    let dir = temp_dir("ann_restart");
+    let cfg = ServeConfig { gsa, store_dir: Some(dir.clone()), ..Default::default() };
+    let k = 3usize;
+
+    // Daemon #1: the open-time build runs over the empty store; every
+    // embed then lands in the pending tail (too few rows to trigger a
+    // background rebuild).
+    let (addr, server) = start_server(cfg.clone());
+    let mut client = Client::connect(addr);
+    for g in 0..ds.len() {
+        embed(&mut client, &ds, g);
+    }
+    let stats = client.stats();
+    assert_eq!(u64_at(&stats, "ann", "builds"), 1, "exactly the open-time build");
+    assert_eq!(u64_at(&stats, "ann", "indexed"), 0, "daemon #1 opened an empty store");
+    assert_eq!(u64_at(&stats, "ann", "pending") as usize, ds.len());
+
+    let mut want = Vec::new();
+    for g in 0..ds.len() {
+        let reply =
+            client.roundtrip(&nearest_request(g as u64, g, k, Some(1.0), &ds.graphs[g]));
+        let (_, neighbors, _, scanned) = parse_nearest_reply(&reply).unwrap();
+        assert_eq!(neighbors.len(), k, "graph {g}");
+        assert_eq!(scanned, ds.len(), "graph {g}: probe 1.0 must scan the full corpus");
+        want.push(neighbors);
+    }
+    drop(client);
+    send_shutdown(&addr.to_string()).unwrap();
+    server.join().unwrap();
+
+    // Daemon #2: the open-time build now indexes all persisted rows;
+    // the pending tail is empty. Same queries, identical answers.
+    let (addr, server) = start_server(cfg);
+    let mut client = Client::connect(addr);
+    let stats = client.stats();
+    assert_eq!(u64_at(&stats, "ann", "builds"), 1);
+    assert_eq!(u64_at(&stats, "ann", "indexed") as usize, ds.len(), "rebuilt from disk");
+    assert_eq!(u64_at(&stats, "ann", "pending"), 0);
+    assert!(u64_at(&stats, "ann", "centroids") >= 1);
+
+    for g in 0..ds.len() {
+        let reply =
+            client.roundtrip(&nearest_request(g as u64, g, k, Some(1.0), &ds.graphs[g]));
+        let (_, neighbors, _, _) = parse_nearest_reply(&reply).unwrap();
+        assert_eq!(neighbors.len(), k, "graph {g}");
+        for (rank, (a, b)) in neighbors.iter().zip(&want[g]).enumerate() {
+            assert_eq!(a.key, b.key, "graph {g} rank {rank}: neighbor key changed on restart");
+            assert_eq!(
+                a.distance.to_bits(),
+                b.distance.to_bits(),
+                "graph {g} rank {rank}: distance not bitwise across restart"
+            );
+        }
+    }
+    // Retrieval stayed read-only across both daemons.
+    let stats = client.stats();
+    assert_eq!(u64_at(&stats, "store", "records") as usize, ds.len());
 
     drop(client);
     send_shutdown(&addr.to_string()).unwrap();

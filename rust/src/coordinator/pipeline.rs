@@ -28,6 +28,7 @@ use super::metrics::PipelineMetrics;
 use super::streaming::{GraphJob, StreamingPipeline};
 use crate::data::Dataset;
 use crate::features::Variant;
+use crate::obs::{self, TraceCtx};
 use crate::runtime::Engine;
 use crate::util::Timer;
 
@@ -60,6 +61,17 @@ impl EngineMode {
             "cpu-sorf" => EngineMode::CpuSorf,
             other => bail!("unknown engine {other:?} (expected pjrt|cpu|cpu-inline|cpu-sorf)"),
         })
+    }
+
+    /// The CLI name of this mode (inverse of [`parse`](Self::parse)) —
+    /// what the serve banner and `stats.server.engine` report.
+    pub fn name(self) -> &'static str {
+        match self {
+            EngineMode::Pjrt => "pjrt",
+            EngineMode::Cpu => "cpu",
+            EngineMode::CpuInline => "cpu-inline",
+            EngineMode::CpuSorf => "cpu-sorf",
+        }
     }
 
     /// Engine for engine-agnostic tests: the `GRAPHLET_RF_TEST_ENGINE`
@@ -186,6 +198,10 @@ pub fn embed_dataset(
             seed: seeds[g_idx],
             tag: g_idx as u64,
             done: done_tx.clone(),
+            // Batch jobs share the serve vocabulary: admission →
+            // queue_wait → projection spans land in the process-global
+            // ring. Observation-only, so tracing never moves a bit.
+            trace: Some(TraceCtx::new("embed_dataset", g_idx as u64, obs::global_ring().clone())),
         })?;
     }
     drop(done_tx);

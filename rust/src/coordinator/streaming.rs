@@ -2,7 +2,7 @@
 //! that outlive any one dataset.
 //!
 //! ```text
-//!   GraphJob (graph, seed, tag, done) ──► bounded job queue
+//!   GraphJob (graph, seed, tag, done, trace) ──► bounded job queue
 //!                                              │ (admission control:
 //!                                              │  try_submit → Overloaded)
 //!                    sampler workers ◄─────────┘
@@ -42,6 +42,11 @@
 //!   yet claimed by a worker) and
 //!   [`shard_occupancy`](StreamingPipeline::shard_occupancy) (messages
 //!   in flight to each shard) feed the serve `stats` op.
+//! - **Observability is observation-only**: the [`crate::obs`] wiring
+//!   (queue-wait / batch-wait / projection histograms, per-job
+//!   [`TraceCtx`] stage stamps) reads clocks and atomics but never an
+//!   RNG or a row, so embeddings are bitwise identical with tracing on
+//!   or off — pinned by `tests/obs.rs`.
 //!
 //! [`embed_dataset`]: super::pipeline::embed_dataset
 
@@ -51,6 +56,7 @@ use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
+use std::time::Instant;
 
 use anyhow::{bail, Result};
 
@@ -59,6 +65,7 @@ use super::pipeline::{EngineMode, GsaConfig};
 use crate::fastrf::{SorfMap, SorfParams};
 use crate::features::{CpuFeatureMap, RfParams};
 use crate::graph::AnyGraph;
+use crate::obs::{self, TraceCtx};
 use crate::runtime::{Engine, Manifest, RfExecutor};
 use crate::sample::sampler_by_name;
 use crate::util::{Rng, Timer};
@@ -74,6 +81,10 @@ pub struct GraphJob {
     pub tag: u64,
     /// Where the finished embedding is delivered.
     pub done: Sender<Completed>,
+    /// Optional span handle: workers and shards stamp the stages this
+    /// job crosses (queue wait, projection). Pure observation — `None`
+    /// and `Some` produce bitwise-identical embeddings.
+    pub trace: Option<TraceCtx>,
 }
 
 /// A finished (or failed) job, delivered on the job's `done` channel.
@@ -105,6 +116,7 @@ struct JobState {
     ticket: u64,
     tag: u64,
     done: Sender<Completed>,
+    trace: Option<TraceCtx>,
 }
 
 impl JobState {
@@ -124,6 +136,9 @@ struct Job {
     seed: u64,
     shard: usize,
     state: Arc<JobState>,
+    /// When the job entered the queue — the worker that claims it
+    /// records the difference as `pipeline.queue_wait_us`.
+    queued: Instant,
 }
 
 /// A batch in flight: row-major input rows + the (job, rows) segments
@@ -134,6 +149,9 @@ struct Batch {
     rows: usize,
     /// Sampler busy-time attributed to this batch (metrics).
     sample_secs: f64,
+    /// When the batch was handed to the shard channel — the shard
+    /// records the difference as `shard.batch_wait_us`.
+    sent_at: Instant,
 }
 
 /// Message from CpuInline workers: a finished per-job feature sum.
@@ -142,6 +160,7 @@ struct JobSum {
     sum: Vec<f32>,
     samples: usize,
     sample_secs: f64,
+    sent_at: Instant,
 }
 
 enum Msg {
@@ -490,11 +509,20 @@ impl StreamingPipeline {
 
     fn make_job(&self, job: GraphJob) -> Job {
         let ticket = self.next_ticket.fetch_add(1, Ordering::Relaxed);
+        if let Some(t) = &job.trace {
+            t.stamp("admission");
+        }
         Job {
             graph: job.graph,
             seed: job.seed,
             shard: (ticket % self.cfg.shards as u64) as usize,
-            state: Arc::new(JobState { ticket, tag: job.tag, done: job.done }),
+            state: Arc::new(JobState {
+                ticket,
+                tag: job.tag,
+                done: job.done,
+                trace: job.trace,
+            }),
+            queued: Instant::now(),
         }
     }
 
@@ -570,6 +598,7 @@ fn flush_packers(packers: &mut [Packer], txs: &[ShardTx], batch: usize, d: usize
             segments: std::mem::take(&mut p.segments),
             rows: p.rows,
             sample_secs: std::mem::take(&mut p.sample_secs),
+            sent_at: Instant::now(),
         };
         p.rows = 0;
         txs[q].send(Msg::Batch(msg));
@@ -582,6 +611,10 @@ fn flush_packers(packers: &mut [Packer], txs: &[ShardTx], batch: usize, d: usize
 /// request is never stranded behind an unfilled batch.
 fn worker_loop(queue: &JobQueue, txs: &[ShardTx], params: &ParamSet, cfg: &GsaConfig) {
     let sampler = sampler_by_name(&cfg.sampler);
+    let h_queue_wait = obs::global().histo("pipeline.queue_wait_us");
+    // Inline mode projects on the worker thread, so the projection
+    // histogram is recorded here; batch modes record it in shard_loop.
+    let h_projection = obs::global().histo("shard.projection_us");
     let inline_map = match (cfg.engine, params) {
         (EngineMode::CpuInline, ParamSet::Dense(p)) => Some(CpuFeatureMap::new((**p).clone())),
         _ => None,
@@ -606,6 +639,10 @@ fn worker_loop(queue: &JobQueue, txs: &[ShardTx], params: &ParamSet, cfg: &GsaCo
         // traffic — and a sleeping worker never pins the queue lock.
         let job = queue.pop(|| flush_packers(&mut packers, txs, cfg.batch, d));
         let Some(job) = job else { break };
+        h_queue_wait.record(job.queued.elapsed());
+        if let Some(tr) = &job.state.trace {
+            tr.stamp("queue_wait");
+        }
 
         let g = &*job.graph;
         if cfg.k > g.v() {
@@ -632,7 +669,9 @@ fn worker_loop(queue: &JobQueue, txs: &[ShardTx], params: &ParamSet, cfg: &GsaCo
                         let gl = sampler.sample(g, cfg.k, &mut rng, &mut scratch);
                         cfg.variant.write_input(&gl, &mut inline_x[r * d..(r + 1) * d]);
                     }
+                    let proj = Instant::now();
                     map.map_batch(&inline_x[..chunk * d], chunk, &mut inline_feat[..chunk * cfg.m]);
+                    h_projection.record(proj.elapsed());
                     for r in 0..chunk {
                         for (acc, &v) in
                             sum.iter_mut().zip(&inline_feat[r * cfg.m..(r + 1) * cfg.m])
@@ -642,11 +681,15 @@ fn worker_loop(queue: &JobQueue, txs: &[ShardTx], params: &ParamSet, cfg: &GsaCo
                     }
                     done += chunk;
                 }
+                if let Some(tr) = &job.state.trace {
+                    tr.stamp("projection");
+                }
                 let msg = JobSum {
                     state: job.state.clone(),
                     sum,
                     samples: cfg.s,
                     sample_secs: t.elapsed_secs(),
+                    sent_at: Instant::now(),
                 };
                 txs[q].send(Msg::Sum(msg));
             }
@@ -671,6 +714,7 @@ fn worker_loop(queue: &JobQueue, txs: &[ShardTx], params: &ParamSet, cfg: &GsaCo
                             segments: std::mem::take(&mut p.segments),
                             rows: cfg.batch,
                             sample_secs: std::mem::take(&mut p.sample_secs),
+                            sent_at: Instant::now(),
                         };
                         p.rows = 0;
                         txs[q].send(Msg::Batch(msg));
@@ -788,6 +832,8 @@ fn shard_loop(
 
     let m = cfg.m;
     let inv = 1.0 / cfg.s as f32;
+    let h_batch_wait = obs::global().histo("shard.batch_wait_us");
+    let h_projection = obs::global().histo("shard.projection_us");
     let mut metrics = PipelineMetrics::default();
     let mut accums: HashMap<u64, Accum> = HashMap::new();
     // Tickets whose batch failed mid-run -> rows seen so far. Later
@@ -800,6 +846,7 @@ fn shard_loop(
         occupancy.fetch_sub(1, Ordering::Relaxed);
         match msg {
             Msg::Sum(js) => {
+                h_batch_wait.record(js.sent_at.elapsed());
                 metrics.samples += js.samples;
                 metrics.sample_secs += js.sample_secs;
                 metrics.batches += 1;
@@ -820,6 +867,7 @@ fn shard_loop(
                 });
             }
             Msg::Batch(b) => {
+                h_batch_wait.record(b.sent_at.elapsed());
                 let t = Timer::start();
                 let mut exec_err: Option<String> = None;
                 match &exec {
@@ -869,6 +917,7 @@ fn shard_loop(
                     continue;
                 }
                 let dt = t.elapsed_secs();
+                h_projection.record_us((dt * 1e6) as u64);
                 metrics.feature_secs += dt;
                 metrics.batch_latency.record(dt);
                 metrics.batches += 1;
@@ -878,6 +927,9 @@ fn shard_loop(
                 // within each job — the determinism invariant).
                 let mut row0 = 0usize;
                 for (state, rows) in &b.segments {
+                    if let Some(tr) = &state.trace {
+                        tr.stamp("projection");
+                    }
                     if let Some(seen) = failed.get_mut(&state.ticket) {
                         *seen += rows;
                         if *seen >= cfg.s {
@@ -966,6 +1018,7 @@ mod tests {
                     seed: seeds[g_idx],
                     tag: g_idx as u64,
                     done: tx.clone(),
+                    trace: None,
                 })
                 .unwrap();
             }
@@ -994,8 +1047,14 @@ mod tests {
             g.add_edge(0, 1);
             AnyGraph::Dense(g)
         };
-        pipe.submit(GraphJob { graph: Arc::new(tiny), seed: 1, tag: 7, done: tx.clone() })
-            .unwrap();
+        pipe.submit(GraphJob {
+            graph: Arc::new(tiny),
+            seed: 1,
+            tag: 7,
+            done: tx.clone(),
+            trace: None,
+        })
+        .unwrap();
         let c1 = rx.recv().unwrap();
         assert_eq!(c1.tag, 7);
         let err = c1.error.expect("too-small graph must fail");
@@ -1005,7 +1064,7 @@ mod tests {
             6,
             &[(0, 1), (1, 2), (2, 3), (3, 4), (4, 5), (5, 0)],
         ));
-        pipe.submit(GraphJob { graph: Arc::new(ok_graph), seed: 2, tag: 8, done: tx })
+        pipe.submit(GraphJob { graph: Arc::new(ok_graph), seed: 2, tag: 8, done: tx, trace: None })
             .unwrap();
         let c2 = rx.recv().unwrap();
         assert!(c2.error.is_none());
@@ -1033,7 +1092,13 @@ mod tests {
         let mut overloaded = 0usize;
         for i in 0..32u64 {
             match pipe
-                .try_submit(GraphJob { graph: g.clone(), seed: i, tag: i, done: tx.clone() })
+                .try_submit(GraphJob {
+                    graph: g.clone(),
+                    seed: i,
+                    tag: i,
+                    done: tx.clone(),
+                    trace: None,
+                })
                 .unwrap()
             {
                 SubmitOutcome::Accepted => accepted += 1,
@@ -1067,8 +1132,14 @@ mod tests {
         let g = Arc::new(ds.graphs[0].clone());
         let (tx, rx) = std::sync::mpsc::channel();
         for i in 0..4u64 {
-            pipe.submit(GraphJob { graph: g.clone(), seed: i, tag: i, done: tx.clone() })
-                .unwrap();
+            pipe.submit(GraphJob {
+                graph: g.clone(),
+                seed: i,
+                tag: i,
+                done: tx.clone(),
+                trace: None,
+            })
+            .unwrap();
         }
         drop(tx);
         // The single worker claims at most one job instantly; the rest

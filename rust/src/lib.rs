@@ -54,6 +54,16 @@
 //! embeddings bitwise identical at every setting. See [`fastrf`] for
 //! the dataflow diagram and calibration.
 //!
+//! Where the time goes is first-class: [`obs`] is a zero-dependency
+//! observability layer — a process-wide registry of atomic counters,
+//! gauges, and log₂-bucketed latency histograms, plus per-request span
+//! tracing that stamps every stage a request crosses (admission, queue
+//! wait, projection, cache probe, L2 read, ANN search, reply write) and
+//! keeps recent spans in a ring served by the daemon's `metrics` and
+//! `trace` ops. Spans slower than `--slow-ms` log one structured JSON
+//! line to stderr. Tracing is pure observation: embeddings are bitwise
+//! identical with it on or off.
+//!
 //! Quick tour: generate a dataset ([`gen`]), sample graphlets
 //! ([`sample`]), embed them with a feature map ([`features`] on CPU,
 //! [`fastrf`] for structured features, or [`runtime`] +
@@ -74,6 +84,7 @@ pub mod graph;
 pub mod iso;
 pub mod kernelgk;
 pub mod mmd;
+pub mod obs;
 pub mod runtime;
 pub mod sample;
 pub mod serve;

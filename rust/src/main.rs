@@ -144,7 +144,7 @@ USAGE: graphlet-rf <quickstart|fig1-left|fig1-right|fig2-left|fig2-right|fig3|th
              [--artifacts DIR] [--out DIR] [--dataset dd|reddit]
              [--data-dir DIR] [--tu-dir DIR]
              [--store-dir DIR] [--cache-policy lru|cost-aware]
-             [--ann-probe F] [--ann-min-brute N]
+             [--ann-probe F] [--ann-min-brute N] [--slow-ms N]
 
 --shards N runs N parallel feature-engine shards (jobs round-robin over
 shards); embeddings are bitwise identical for every shard/worker count.
@@ -177,6 +177,11 @@ serve       long-running embedding daemon: line-delimited JSON over TCP,
             fraction of inverted lists scanned per query (0 < F <= 1;
             1.0 = exhaustive/exact), --ann-min-brute N brute-forces
             below N indexed rows.
+            Observability: the metrics op returns every latency
+            histogram (log2 buckets + p50/p90/p99) and the trace op the
+            last N per-request stage spans; --slow-ms N additionally
+            captures any request slower than N ms and logs it as one
+            JSON line to stderr (0 = every request; default off).
 serve-bench loopback load generator: --addr HOST:PORT (default
             127.0.0.1:7878), --clients C, --requests N per client;
             reports labeled cold/warm_l1 passes (throughput, p50/p99,
@@ -305,6 +310,7 @@ fn serve_cfg_from_args(
         store_dir: args.get("store-dir").map(std::path::PathBuf::from),
         ann_probe: args.parse_or("ann-probe", defaults.ann_probe),
         ann_min_brute: args.parse_or("ann-min-brute", defaults.ann_min_brute),
+        slow_ms: args.parse_or("slow-ms", defaults.slow_ms),
         ..defaults
     })
 }
@@ -319,13 +325,13 @@ fn serve_cmd(ctx: &ExpContext, args: &Args, seed: u64) -> Result<()> {
     };
     let cfg = serve_cfg_from_args(ctx, args, seed)?;
     println!(
-        "serve: k={} s={} m={} variant={} engine={:?} shards={} workers={} fwht_threads={} \
-         cache_cap={} cache_policy={} store={}",
+        "serve: k={} s={} m={} variant={} engine={} shards={} workers={} fwht_threads={} \
+         cache_cap={} cache_policy={} store={} slow_ms={}",
         cfg.gsa.k,
         cfg.gsa.s,
         cfg.gsa.m,
         cfg.gsa.variant.name(),
-        cfg.gsa.engine,
+        cfg.gsa.engine.name(),
         cfg.gsa.shards,
         cfg.gsa.workers,
         cfg.gsa.fwht_threads,
@@ -334,6 +340,7 @@ fn serve_cmd(ctx: &ExpContext, args: &Args, seed: u64) -> Result<()> {
         cfg.store_dir
             .as_ref()
             .map_or("none (RAM-only cache)".to_string(), |d| d.display().to_string()),
+        if cfg.slow_ms == u64::MAX { "off".to_string() } else { cfg.slow_ms.to_string() },
     );
     if cfg.store_dir.is_some() {
         println!(
@@ -342,8 +349,12 @@ fn serve_cmd(ctx: &ExpContext, args: &Args, seed: u64) -> Result<()> {
         );
     }
     let server = Server::bind(&addr, cfg, ctx.engine.as_ref())?;
-    println!("serving on {} (line-delimited JSON; send {{\"op\":\"shutdown\"}} to stop)",
-             server.local_addr());
+    println!(
+        "serving on {} (config_fp={:016x}; line-delimited JSON; send {{\"op\":\"shutdown\"}} \
+         to stop)",
+        server.local_addr(),
+        server.config_fp(),
+    );
     server.run()
 }
 

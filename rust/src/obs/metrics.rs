@@ -1,0 +1,435 @@
+//! Process-wide metric registry: atomic counters, gauges, and
+//! fixed-boundary log₂-bucketed latency histograms. Zero dependencies,
+//! lock-free on the record path — the registry's `Mutex` guards only
+//! name → handle resolution (done once per call site and cached in an
+//! `Arc`), never a `record()`.
+//!
+//! ## Histogram shape
+//!
+//! Values are **microseconds**. Bucket boundaries are fixed powers of
+//! two, so two histograms (or two runs) that record the same multiset
+//! of values produce identical bucket arrays — and therefore identical
+//! derived percentiles — with no configuration to drift:
+//!
+//! - bucket `0`: exactly `0` µs
+//! - bucket `i` (1 ≤ i < [`OVERFLOW_BUCKET`]): `[2^(i-1), 2^i)` µs
+//! - bucket [`OVERFLOW_BUCKET`]: everything ≥ 2^39 µs (≈ 6.4 days)
+//!
+//! A percentile estimate walks the buckets to the requested rank
+//! (`ceil(p/100 · count)`) and reports that bucket's **inclusive upper
+//! bound** (`2^i − 1`); the overflow bucket reports the exact recorded
+//! maximum. Alongside the buckets the histogram keeps an exact `count`,
+//! `sum`, and `max`, so means are exact and only the percentile is
+//! bucket-quantized (within 2× of the true value by construction).
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::util::Json;
+
+/// Index of the overflow bucket; finite buckets are `0..OVERFLOW_BUCKET`.
+pub const OVERFLOW_BUCKET: usize = 40;
+/// Total bucket-array length (finite buckets + overflow).
+pub const NUM_BUCKETS: usize = OVERFLOW_BUCKET + 1;
+
+/// Which bucket a microsecond value lands in.
+#[inline]
+pub fn bucket_index(us: u64) -> usize {
+    if us == 0 {
+        return 0;
+    }
+    let idx = 64 - us.leading_zeros() as usize; // 1 -> 1, 2..3 -> 2, 4..7 -> 3, ...
+    idx.min(OVERFLOW_BUCKET)
+}
+
+/// Inclusive upper bound of a finite bucket (`None` for the overflow
+/// bucket, whose "bound" is the recorded maximum).
+#[inline]
+pub fn bucket_upper_us(idx: usize) -> Option<u64> {
+    match idx {
+        0 => Some(0),
+        i if i < OVERFLOW_BUCKET => Some((1u64 << i) - 1),
+        _ => None,
+    }
+}
+
+/// A monotonically increasing atomic counter.
+#[derive(Debug, Default)]
+pub struct Counter {
+    v: AtomicU64,
+}
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.v.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.v.load(Ordering::Relaxed)
+    }
+}
+
+/// An up/down gauge. `dec` saturates at zero rather than wrapping, so a
+/// racy extra decrement can never turn the gauge into 2^64 − 1.
+#[derive(Debug, Default)]
+pub struct Gauge {
+    v: AtomicU64,
+}
+
+impl Gauge {
+    pub fn inc(&self) {
+        self.v.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn dec(&self) {
+        let _ = self
+            .v
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| {
+                Some(v.saturating_sub(1))
+            });
+    }
+
+    pub fn set(&self, n: u64) {
+        self.v.store(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.v.load(Ordering::Relaxed)
+    }
+}
+
+/// A log₂-bucketed latency histogram (see the module docs for the
+/// boundary scheme). All fields are relaxed atomics: recording is a
+/// handful of `fetch_add`s plus one `fetch_max`, safe from any thread.
+#[derive(Debug)]
+pub struct Histo {
+    buckets: [AtomicU64; NUM_BUCKETS],
+    count: AtomicU64,
+    sum_us: AtomicU64,
+    max_us: AtomicU64,
+}
+
+impl Default for Histo {
+    fn default() -> Histo {
+        Histo {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+            max_us: AtomicU64::new(0),
+        }
+    }
+}
+
+impl Histo {
+    pub fn new() -> Histo {
+        Histo::default()
+    }
+
+    /// Record one microsecond value.
+    pub fn record_us(&self, us: u64) {
+        self.buckets[bucket_index(us)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.max_us.fetch_max(us, Ordering::Relaxed);
+    }
+
+    /// Record a duration (saturating to µs).
+    pub fn record(&self, d: std::time::Duration) {
+        self.record_us(d.as_micros().min(u64::MAX as u128) as u64);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Point-in-time copy of the histogram. Bucket reads are not
+    /// mutually atomic, so a snapshot taken *while* recording races may
+    /// be momentarily inconsistent with `count` — a snapshot taken at
+    /// quiescence (what every test and self-check does) is exact.
+    pub fn snapshot(&self) -> HistoSnapshot {
+        HistoSnapshot {
+            count: self.count.load(Ordering::Relaxed),
+            sum_us: self.sum_us.load(Ordering::Relaxed),
+            max_us: self.max_us.load(Ordering::Relaxed),
+            buckets: std::array::from_fn(|i| self.buckets[i].load(Ordering::Relaxed)),
+        }
+    }
+}
+
+/// An owned copy of a [`Histo`]'s state; percentiles are computed here
+/// so the estimate is a pure function of the copied buckets.
+#[derive(Clone, Debug)]
+pub struct HistoSnapshot {
+    pub count: u64,
+    pub sum_us: u64,
+    pub max_us: u64,
+    pub buckets: [u64; NUM_BUCKETS],
+}
+
+impl HistoSnapshot {
+    /// Percentile estimate in µs: walk buckets to rank
+    /// `ceil(p/100 · count)` and report that bucket's inclusive upper
+    /// bound (the recorded max for the overflow bucket). An empty
+    /// histogram reports 0. Deterministic given the same recorded set.
+    pub fn percentile_us(&self, p: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = ((p / 100.0) * self.count as f64).ceil().max(1.0) as u64;
+        let rank = rank.min(self.count);
+        let mut cum = 0u64;
+        for (i, &n) in self.buckets.iter().enumerate() {
+            cum += n;
+            if cum >= rank {
+                return bucket_upper_us(i).unwrap_or(self.max_us);
+            }
+        }
+        // count said there were samples but the buckets raced empty;
+        // the max is the least-wrong answer.
+        self.max_us
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_us as f64 / self.count as f64
+        }
+    }
+
+    /// The JSON shape served by the `metrics` op and embedded (without
+    /// buckets) in `stats` summaries.
+    pub fn to_json(&self, with_buckets: bool) -> Json {
+        let mut j = Json::obj()
+            .set("count", self.count)
+            .set("sum_us", self.sum_us)
+            .set("max_us", self.max_us)
+            .set("p50_us", self.percentile_us(50.0))
+            .set("p90_us", self.percentile_us(90.0))
+            .set("p99_us", self.percentile_us(99.0));
+        if with_buckets {
+            j = j.set("buckets", self.buckets.to_vec());
+        }
+        j
+    }
+}
+
+enum Metric {
+    Counter(Arc<Counter>),
+    Gauge(Arc<Gauge>),
+    Histo(Arc<Histo>),
+}
+
+/// A name → metric registry. Call sites resolve a name once (taking the
+/// map lock) and keep the returned `Arc` handle; the handle records
+/// lock-free forever after. Instantiable for unit tests; production
+/// code uses the process-wide [`global()`] instance — note that
+/// in-process multi-daemon tests (serve-bench restart mode) therefore
+/// *share* histograms, which is why every daemon-side self-check
+/// compares **before/after deltas**, never absolute counts.
+#[derive(Default)]
+pub struct Registry {
+    metrics: Mutex<BTreeMap<String, Metric>>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// Resolve (or create) a counter. Asking for a name that is already
+    /// registered as a different kind is a programming error; it yields
+    /// a fresh detached handle (recorded values go nowhere) rather than
+    /// a panic, so a naming bug can never take the daemon down.
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        let mut m = self.metrics.lock().unwrap();
+        match m
+            .entry(name.to_string())
+            .or_insert_with(|| Metric::Counter(Arc::new(Counter::default())))
+        {
+            Metric::Counter(c) => c.clone(),
+            _ => {
+                debug_assert!(false, "metric {name} registered with a different kind");
+                Arc::new(Counter::default())
+            }
+        }
+    }
+
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        let mut m = self.metrics.lock().unwrap();
+        match m
+            .entry(name.to_string())
+            .or_insert_with(|| Metric::Gauge(Arc::new(Gauge::default())))
+        {
+            Metric::Gauge(g) => g.clone(),
+            _ => {
+                debug_assert!(false, "metric {name} registered with a different kind");
+                Arc::new(Gauge::default())
+            }
+        }
+    }
+
+    pub fn histo(&self, name: &str) -> Arc<Histo> {
+        let mut m = self.metrics.lock().unwrap();
+        match m
+            .entry(name.to_string())
+            .or_insert_with(|| Metric::Histo(Arc::new(Histo::new())))
+        {
+            Metric::Histo(h) => h.clone(),
+            _ => {
+                debug_assert!(false, "metric {name} registered with a different kind");
+                Arc::new(Histo::new())
+            }
+        }
+    }
+
+    /// Point-in-time copy of one histogram, if registered.
+    pub fn histo_snapshot(&self, name: &str) -> Option<HistoSnapshot> {
+        let m = self.metrics.lock().unwrap();
+        match m.get(name) {
+            Some(Metric::Histo(h)) => Some(h.snapshot()),
+            _ => None,
+        }
+    }
+
+    /// Snapshots of every histogram whose name starts with `prefix`,
+    /// name-sorted (the map is a `BTreeMap`). Feeds the per-op request
+    /// summaries in `stats` and serve-bench's count self-checks.
+    pub fn histo_snapshots_prefixed(&self, prefix: &str) -> Vec<(String, HistoSnapshot)> {
+        let m = self.metrics.lock().unwrap();
+        m.iter()
+            .filter_map(|(name, metric)| match metric {
+                Metric::Histo(h) if name.starts_with(prefix) => {
+                    Some((name.clone(), h.snapshot()))
+                }
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// Full registry snapshot as JSON — the `metrics` serve op's reply
+    /// body. Deterministic shape: names are emitted in sorted order,
+    /// histograms carry their full bucket arrays plus derived
+    /// percentiles, so the output is directly scrapable.
+    pub fn snapshot_json(&self) -> Json {
+        let m = self.metrics.lock().unwrap();
+        let mut counters = Json::obj();
+        let mut gauges = Json::obj();
+        let mut histos = Json::obj();
+        for (name, metric) in m.iter() {
+            match metric {
+                Metric::Counter(c) => counters = counters.set(name, c.get()),
+                Metric::Gauge(g) => gauges = gauges.set(name, g.get()),
+                Metric::Histo(h) => histos = histos.set(name, h.snapshot().to_json(true)),
+            }
+        }
+        // Finite-bucket inclusive upper bounds, once — scrapers pair
+        // them index-wise with every histogram's bucket array (the
+        // final bucket is the overflow; its bound is that histo's max).
+        let uppers: Vec<u64> = (0..OVERFLOW_BUCKET)
+            .map(|i| bucket_upper_us(i).expect("finite bucket"))
+            .collect();
+        Json::obj()
+            .set("bucket_uppers_us", uppers)
+            .set("counters", counters)
+            .set("gauges", gauges)
+            .set("histograms", histos)
+    }
+}
+
+/// The process-wide registry every production call site records into.
+pub fn global() -> &'static Registry {
+    static GLOBAL: OnceLock<Registry> = OnceLock::new();
+    GLOBAL.get_or_init(Registry::new)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_index_boundaries() {
+        assert_eq!(bucket_index(0), 0);
+        assert_eq!(bucket_index(1), 1);
+        assert_eq!(bucket_index(2), 2);
+        assert_eq!(bucket_index(3), 2);
+        assert_eq!(bucket_index(4), 3);
+        for i in 1..OVERFLOW_BUCKET {
+            let lo = 1u64 << (i - 1);
+            let hi = (1u64 << i) - 1;
+            assert_eq!(bucket_index(lo), i, "low edge of bucket {i}");
+            assert_eq!(bucket_index(hi), i, "high edge of bucket {i}");
+        }
+        assert_eq!(bucket_index(1u64 << 39), OVERFLOW_BUCKET);
+        assert_eq!(bucket_index(u64::MAX), OVERFLOW_BUCKET);
+    }
+
+    #[test]
+    fn percentiles_are_bucket_uppers_and_deterministic() {
+        let h = Histo::new();
+        for v in [0u64, 1, 2, 3, 900, 1000, 1100, 50_000] {
+            h.record_us(v);
+        }
+        let s1 = h.snapshot();
+        let s2 = h.snapshot();
+        assert_eq!(s1.buckets, s2.buckets);
+        assert_eq!(s1.count, 8);
+        assert_eq!(s1.sum_us, 53_006);
+        assert_eq!(s1.max_us, 50_000);
+        // rank(50%) = 4 -> the bucket holding value 3 -> upper 3.
+        assert_eq!(s1.percentile_us(50.0), 3);
+        // rank(100%) = 8 -> bucket of 50_000 (2^15..2^16) -> upper 65535.
+        assert_eq!(s1.percentile_us(100.0), 65_535);
+    }
+
+    #[test]
+    fn empty_histogram_percentiles_are_zero() {
+        let s = Histo::new().snapshot();
+        assert_eq!(s.percentile_us(50.0), 0);
+        assert_eq!(s.percentile_us(99.0), 0);
+        assert_eq!(s.mean_us(), 0.0);
+    }
+
+    #[test]
+    fn registry_handles_share_state_and_snapshot_sorts() {
+        let r = Registry::new();
+        let a = r.histo("z.lat");
+        let b = r.histo("z.lat");
+        a.record_us(5);
+        b.record_us(7);
+        assert_eq!(r.histo_snapshot("z.lat").unwrap().count, 2);
+        r.counter("a.count").add(3);
+        r.gauge("m.depth").set(2);
+        let j = r.snapshot_json();
+        assert_eq!(
+            j.get("counters").and_then(|c| c.get("a.count")).and_then(Json::as_u64),
+            Some(3)
+        );
+        assert_eq!(
+            j.get("gauges").and_then(|g| g.get("m.depth")).and_then(Json::as_u64),
+            Some(2)
+        );
+        let h = j.get("histograms").and_then(|h| h.get("z.lat")).unwrap();
+        assert_eq!(h.get("count").and_then(Json::as_u64), Some(2));
+        assert_eq!(
+            h.get("buckets").and_then(Json::as_array).map(|b| b.len()),
+            Some(NUM_BUCKETS)
+        );
+    }
+
+    #[test]
+    fn gauge_dec_saturates() {
+        let g = Gauge::default();
+        g.dec();
+        assert_eq!(g.get(), 0);
+        g.inc();
+        g.inc();
+        g.dec();
+        assert_eq!(g.get(), 1);
+    }
+}

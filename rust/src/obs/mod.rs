@@ -1,0 +1,69 @@
+//! Daemon-side observability: latency histograms + per-request span
+//! tracing, zero dependencies. The counters in `stats` say *what*
+//! happened; this module says *where the time went* — the substrate
+//! every perf PR (mmap L2, replication, accelerator SORF) reports
+//! against.
+//!
+//! Two halves:
+//! - [`metrics`]: a process-wide [`Registry`] of atomic [`Counter`]s,
+//!   [`Gauge`]s, and log₂-bucketed [`Histo`]grams (µs values, fixed
+//!   power-of-two boundaries, deterministic bucket-derived p50/p90/p99).
+//!   Snapshot served whole by the `metrics` serve op.
+//! - [`trace`]: a [`TraceCtx`] handle carried along each request's
+//!   dataflow, stamping named stages; finished spans land in a bounded
+//!   [`SpanRing`] served by the `trace` op, and spans slower than
+//!   `--slow-ms` also emit one structured JSON line to stderr.
+//!
+//! ## Request lifecycle and its stage stamps
+//!
+//! ```text
+//!  client line ──► handle_request            TraceCtx::new(op, id)
+//!                    │  cache probe          stamp "cache_probe"   + cache.probe_us
+//!                    │    (L1 miss, L2 hit)                          cache.l2_read_us
+//!                    │    (nearest: index)   stamp "ann_search"    + ann.probe_us
+//!                    ▼  miss → submit        stamp "admission"
+//!              ┌─ JobQueue ─┐                                        pipeline.queue_depth
+//!              │  worker claims job          stamp "queue_wait"    + pipeline.queue_wait_us
+//!              │  pack rows → shard channel                          shard.batch_wait_us
+//!              │  shard executes batch       stamp "projection"    + shard.projection_us
+//!              └─ row streams back ─┘
+//!                    │  write-through L2                             store.append_us
+//!                    ▼                                               (store.compact_us)
+//!                 writer_loop                stamp "reply_write"   + serve.request_us.<op>
+//!                    │  reply flushed to client
+//!                    ▼
+//!              last TraceCtx handle drops ──► span deposits into SpanRing
+//!                                             (≥ --slow-ms → 1 stderr JSON line)
+//! ```
+//!
+//! `embed_dataset` jobs get the same treatment with op `embed_dataset`
+//! (admission → queue_wait → projection), so batch experiments and the
+//! serve path share one vocabulary.
+//!
+//! ## Metric catalog
+//!
+//! | name | kind | recorded by |
+//! |---|---|---|
+//! | `serve.request_us.<op>` | histo | writer_loop / direct reply, before the bytes flush |
+//! | `pipeline.queue_wait_us` | histo | worker claiming a job off the queue |
+//! | `shard.batch_wait_us` | histo | shard receiving a packed batch (time in channel) |
+//! | `shard.projection_us` | histo | shard executing one batch (any engine, incl. FWHT) |
+//! | `cache.probe_us` | histo | `TieredCache::get`, full L1+L2 probe |
+//! | `cache.l2_read_us` | histo | the store read inside an L1-miss probe |
+//! | `store.append_us` | histo | `EmbeddingStore::put` |
+//! | `store.compact_us` | histo | `EmbeddingStore::compact` |
+//! | `ann.build_us` | histo | IVFFlat index (re)build |
+//! | `ann.probe_us` | histo | `nearest` query against index + pending tail |
+//! | `serve.slow_spans` | counter | every slow-span stderr line |
+//!
+//! Recording is relaxed-atomic and observation-only — no RNG draws, no
+//! row arithmetic — so tracing on vs off cannot change embeddings
+//! (bitwise-pinned by `tests/obs.rs`). The registry is process-global:
+//! in-process multi-daemon tests share it, so self-checks always
+//! compare before/after **deltas**.
+
+pub mod metrics;
+pub mod trace;
+
+pub use metrics::{global, Counter, Gauge, Histo, HistoSnapshot, Registry};
+pub use trace::{global_ring, SpanRecord, SpanRing, TraceCtx};

@@ -1,0 +1,279 @@
+//! Lightweight per-request span tracing.
+//!
+//! A [`TraceCtx`] is a cheap clonable handle (one `Arc`) created at
+//! request admission and carried along the request's dataflow — through
+//! the job queue, the shard executors, the cache tiers — each layer
+//! calling [`stamp`](TraceCtx::stamp) to record "stage X finished at
+//! +N µs". Stamping is pure observation: it reads a clock and pushes
+//! into a `Mutex<Vec>` on the span, it never touches RNG state or row
+//! math, which is what makes tracing-on vs tracing-off bitwise
+//! invisible to embeddings (pinned by `tests/obs.rs`).
+//!
+//! When the **last** handle drops (reply written, job drained — however
+//! the request ends, including error paths), the finished span deposits
+//! itself into the [`SpanRing`] exactly once — `Drop` on the inner
+//! state is the uniqueness proof, there is no "finish" call to forget
+//! or double-invoke. The ring keeps the most recent `cap` spans plus a
+//! separate bounded list of *slow* spans (total ≥ the `--slow-ms`
+//! threshold); each slow span is also logged as a single structured
+//! JSON line to stderr at deposit time.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::util::Json;
+
+/// Stages recorded per span can't grow without bound (a job split
+/// across many batches stamps "projection" once per batch).
+const MAX_STAGES: usize = 64;
+/// Bound on the separate slow-span list.
+const SLOW_CAP: usize = 64;
+
+/// One finished span: where a request's time went, stage by stage.
+/// `stages` are `(name, offset_us)` pairs in stamp order — offsets are
+/// measured from span start, so stage *durations* are adjacent
+/// differences.
+#[derive(Clone, Debug)]
+pub struct SpanRecord {
+    pub op: String,
+    pub tag: u64,
+    pub total_us: u64,
+    pub stages: Vec<(&'static str, u64)>,
+}
+
+impl SpanRecord {
+    /// The JSON shape used both by the `trace` serve op and the
+    /// slow-span stderr line.
+    pub fn to_json(&self) -> Json {
+        let mut stages = Json::obj();
+        for &(name, us) in &self.stages {
+            stages = stages.set(name, us);
+        }
+        Json::obj()
+            .set("op", self.op.as_str())
+            .set("tag", self.tag)
+            .set("total_us", self.total_us)
+            .set("stages", stages)
+    }
+}
+
+struct SpanInner {
+    op: String,
+    tag: u64,
+    start: Instant,
+    stages: Mutex<Vec<(&'static str, u64)>>,
+    ring: Arc<SpanRing>,
+}
+
+impl Drop for SpanInner {
+    fn drop(&mut self) {
+        // Last handle gone -> the span is complete. `&mut self` means
+        // no other stamper exists; `get_mut` skips the lock (and a
+        // poisoned mutex just means a stamper panicked — the stamps it
+        // did land are still worth depositing).
+        let stages = std::mem::take(
+            self.stages.get_mut().unwrap_or_else(|e| e.into_inner()),
+        );
+        let rec = SpanRecord {
+            op: std::mem::take(&mut self.op),
+            tag: self.tag,
+            total_us: self.start.elapsed().as_micros().min(u64::MAX as u128) as u64,
+            stages,
+        };
+        self.ring.deposit(rec);
+    }
+}
+
+/// A clonable handle on one in-flight span. Dropping the last clone
+/// finishes the span and deposits it into the ring.
+#[derive(Clone)]
+pub struct TraceCtx {
+    inner: Arc<SpanInner>,
+}
+
+impl std::fmt::Debug for TraceCtx {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("TraceCtx")
+            .field("op", &self.inner.op)
+            .field("tag", &self.inner.tag)
+            .finish()
+    }
+}
+
+impl TraceCtx {
+    /// Open a span. `op` names the request kind (`embed`, `nearest`,
+    /// `embed_dataset`); `tag` disambiguates (request id / graph index).
+    pub fn new(op: &str, tag: u64, ring: Arc<SpanRing>) -> TraceCtx {
+        TraceCtx {
+            inner: Arc::new(SpanInner {
+                op: op.to_string(),
+                tag,
+                start: Instant::now(),
+                stages: Mutex::new(Vec::new()),
+                ring,
+            }),
+        }
+    }
+
+    /// Record "stage `name` done at +elapsed µs". Stamps past
+    /// [`MAX_STAGES`] are dropped (bounded memory per span).
+    pub fn stamp(&self, name: &'static str) {
+        let us = self.inner.start.elapsed().as_micros().min(u64::MAX as u128) as u64;
+        if let Ok(mut stages) = self.inner.stages.lock() {
+            if stages.len() < MAX_STAGES {
+                stages.push((name, us));
+            }
+        }
+    }
+
+    /// Elapsed µs since the span opened (what `total_us` would be now).
+    pub fn elapsed_us(&self) -> u64 {
+        self.inner.start.elapsed().as_micros().min(u64::MAX as u128) as u64
+    }
+
+    /// The op the span was opened with (`embed`, `nearest`, …) — the
+    /// writer uses it to pick the `serve.request_us.<op>` histogram.
+    pub fn op(&self) -> &str {
+        &self.inner.op
+    }
+}
+
+/// Bounded ring of recently finished spans + bounded list of slow ones.
+/// Lock-protected (deposits are one small `VecDeque` push at request
+/// completion — far off any per-row hot path).
+pub struct SpanRing {
+    cap: usize,
+    slow_threshold_us: u64,
+    recent: Mutex<VecDeque<SpanRecord>>,
+    slow: Mutex<VecDeque<SpanRecord>>,
+    slow_emitted: AtomicU64,
+}
+
+impl SpanRing {
+    /// `slow_ms = u64::MAX` disables slow-span capture entirely;
+    /// `slow_ms = 0` (the test axis) marks *every* span slow.
+    pub fn new(cap: usize, slow_ms: u64) -> Arc<SpanRing> {
+        Arc::new(SpanRing {
+            cap: cap.max(1),
+            slow_threshold_us: slow_ms.saturating_mul(1000),
+            recent: Mutex::new(VecDeque::new()),
+            slow: Mutex::new(VecDeque::new()),
+            slow_emitted: AtomicU64::new(0),
+        })
+    }
+
+    fn deposit(&self, rec: SpanRecord) {
+        if rec.total_us >= self.slow_threshold_us {
+            // Exactly one structured line per slow span: deposit runs
+            // once per span (Drop), and this is its only emission site.
+            eprintln!("{}", Json::obj().set("slow_span", rec.to_json()));
+            self.slow_emitted.fetch_add(1, Ordering::Relaxed);
+            super::metrics::global().counter("serve.slow_spans").inc();
+            let mut slow = self.slow.lock().unwrap();
+            if slow.len() == SLOW_CAP {
+                slow.pop_front();
+            }
+            slow.push_back(rec.clone());
+        }
+        let mut recent = self.recent.lock().unwrap();
+        if recent.len() == self.cap {
+            recent.pop_front();
+        }
+        recent.push_back(rec);
+    }
+
+    /// The `n` most recent spans, oldest first.
+    pub fn recent(&self, n: usize) -> Vec<SpanRecord> {
+        let recent = self.recent.lock().unwrap();
+        let skip = recent.len().saturating_sub(n);
+        recent.iter().skip(skip).cloned().collect()
+    }
+
+    /// Captured slow spans, oldest first (bounded at [`SLOW_CAP`]).
+    pub fn slow(&self) -> Vec<SpanRecord> {
+        self.slow.lock().unwrap().iter().cloned().collect()
+    }
+
+    /// Total slow-span stderr lines emitted since creation (unbounded
+    /// counter — unlike the bounded list above, this never forgets).
+    pub fn slow_emitted(&self) -> u64 {
+        self.slow_emitted.load(Ordering::Relaxed)
+    }
+}
+
+/// The process-global ring for spans opened outside a serve daemon
+/// (`embed_dataset` batch jobs). Slow capture is disabled here — the
+/// `--slow-ms` knob belongs to the daemon, which owns its own ring.
+pub fn global_ring() -> &'static Arc<SpanRing> {
+    static RING: std::sync::OnceLock<Arc<SpanRing>> = std::sync::OnceLock::new();
+    RING.get_or_init(|| SpanRing::new(256, u64::MAX))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn span_deposits_once_on_last_drop() {
+        let ring = SpanRing::new(8, u64::MAX);
+        let t = TraceCtx::new("embed", 7, ring.clone());
+        let t2 = t.clone();
+        t.stamp("admission");
+        t2.stamp("queue_wait");
+        drop(t);
+        assert_eq!(ring.recent(8).len(), 0, "span still has a live handle");
+        drop(t2);
+        let spans = ring.recent(8);
+        assert_eq!(spans.len(), 1);
+        assert_eq!(spans[0].op, "embed");
+        assert_eq!(spans[0].tag, 7);
+        let names: Vec<_> = spans[0].stages.iter().map(|&(n, _)| n).collect();
+        assert_eq!(names, ["admission", "queue_wait"]);
+        assert_eq!(ring.slow_emitted(), 0, "slow capture disabled");
+    }
+
+    #[test]
+    fn ring_evicts_oldest_at_capacity() {
+        let ring = SpanRing::new(3, u64::MAX);
+        for tag in 0..5u64 {
+            drop(TraceCtx::new("embed", tag, ring.clone()));
+        }
+        let tags: Vec<u64> = ring.recent(10).iter().map(|s| s.tag).collect();
+        assert_eq!(tags, [2, 3, 4], "oldest evicted, order preserved");
+        let last: Vec<u64> = ring.recent(2).iter().map(|s| s.tag).collect();
+        assert_eq!(last, [3, 4], "recent(n) returns the newest n");
+    }
+
+    #[test]
+    fn slow_threshold_zero_marks_every_span() {
+        let ring = SpanRing::new(4, 0);
+        drop(TraceCtx::new("nearest", 1, ring.clone()));
+        drop(TraceCtx::new("nearest", 2, ring.clone()));
+        assert_eq!(ring.slow_emitted(), 2);
+        assert_eq!(ring.slow().len(), 2);
+    }
+
+    #[test]
+    fn stamps_are_bounded() {
+        let ring = SpanRing::new(2, u64::MAX);
+        let t = TraceCtx::new("embed", 0, ring.clone());
+        for _ in 0..(MAX_STAGES + 10) {
+            t.stamp("projection");
+        }
+        drop(t);
+        assert_eq!(ring.recent(1)[0].stages.len(), MAX_STAGES);
+    }
+
+    #[test]
+    fn span_json_shape() {
+        let ring = SpanRing::new(2, u64::MAX);
+        drop(TraceCtx::new("embed", 3, ring.clone()));
+        let j = ring.recent(1)[0].to_json();
+        assert_eq!(j.get("op").and_then(Json::as_str), Some("embed"));
+        assert_eq!(j.get("tag").and_then(Json::as_u64), Some(3));
+        assert!(j.get("total_us").and_then(Json::as_u64).is_some());
+        assert!(j.get("stages").is_some());
+    }
+}

@@ -32,6 +32,17 @@
 //! workload, so numbers are comparable across PRs; the final line of
 //! `graphlet-rf serve-bench` is one machine-readable JSON object
 //! ([`BenchRun::json`]).
+//!
+//! Every pass additionally cross-checks itself against the daemon's
+//! `metrics` op: the `serve.request_us.<op>` histogram's count delta
+//! across the pass must equal the number of requests the clients sent —
+//! the daemon observed exactly what the bench believes it sent, neither
+//! dropping requests nor double-counting. The daemon-side p50/p99 from
+//! that histogram ride along in the report (`daemon_p50_ms` /
+//! `daemon_p99_ms`) so queueing inside the daemon is distinguishable
+//! from client-side RTT. Deltas, not absolutes: the registry is
+//! process-global, so in-process restart benches (and anything else in
+//! the process) share it.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
@@ -41,6 +52,7 @@ use anyhow::{Context, Result};
 
 use crate::gen::SbmConfig;
 use crate::graph::AnyGraph;
+use crate::obs::HistoSnapshot;
 use crate::runtime::Engine;
 use crate::util::{Json, Rng, Stats, Timer};
 
@@ -59,6 +71,13 @@ pub struct BenchReport {
     /// Daemon-side `cache.l2_misses` delta: requests absent from both
     /// cache tiers (always 0 when every reply was served from cache).
     pub l2_miss_delta: u64,
+    /// Daemon-side `serve.request_us.<op>` histogram count delta —
+    /// self-checked equal to `requests` by every pass.
+    pub daemon_count_delta: u64,
+    /// Daemon-side request latency (bucket-derived, so quantized to
+    /// power-of-two upper bounds) from the same histogram delta window.
+    pub daemon_p50_ms: f64,
+    pub daemon_p99_ms: f64,
     pub wall_secs: f64,
     pub requests_per_sec: f64,
     pub p50_ms: f64,
@@ -69,7 +88,8 @@ impl BenchReport {
     pub fn line(&self) -> String {
         format!(
             "requests={} errors={} cached={} recomputed={} wall={:.2}s \
-             throughput={:.0} req/s p50={:.2}ms p99={:.2}ms",
+             throughput={:.0} req/s p50={:.2}ms p99={:.2}ms \
+             daemon_p50={:.2}ms daemon_p99={:.2}ms",
             self.requests,
             self.errors,
             self.cached_replies,
@@ -77,7 +97,9 @@ impl BenchReport {
             self.wall_secs,
             self.requests_per_sec,
             self.p50_ms,
-            self.p99_ms
+            self.p99_ms,
+            self.daemon_p50_ms,
+            self.daemon_p99_ms
         )
     }
 
@@ -89,6 +111,9 @@ impl BenchReport {
             .set("cached_replies", self.cached_replies)
             .set("recomputed_graphs", self.recomputed_graphs)
             .set("l2_miss_delta", self.l2_miss_delta)
+            .set("daemon_count_delta", self.daemon_count_delta)
+            .set("daemon_p50_ms", self.daemon_p50_ms)
+            .set("daemon_p99_ms", self.daemon_p99_ms)
             .set("wall_secs", self.wall_secs)
             .set("throughput_rps", self.requests_per_sec)
             .set("p50_ms", self.p50_ms)
@@ -268,6 +293,54 @@ fn snapshot(addr: &str) -> Result<(u64, u64)> {
     Ok((graphs, l2_misses))
 }
 
+/// Fetch the daemon's full metric registry (the `metrics` op) and
+/// reconstruct the `serve.request_us.<op>` histogram as a
+/// [`HistoSnapshot`] — zeroed when the histogram doesn't exist yet
+/// (first pass against a fresh process). Two of these bracket a pass;
+/// their bucket-wise difference is the pass's own latency distribution.
+fn request_histo(addr: &str, op: &str) -> Result<HistoSnapshot> {
+    let mut stream =
+        TcpStream::connect(addr).with_context(|| format!("connecting metrics probe to {addr}"))?;
+    stream.write_all(b"{\"op\":\"metrics\"}\n")?;
+    stream.flush()?;
+    let mut reply = String::new();
+    BufReader::new(stream).read_line(&mut reply)?;
+    let j = Json::parse(reply.trim()).map_err(|e| anyhow::anyhow!("metrics reply: {e}"))?;
+    let mut snap = HistoSnapshot {
+        count: 0,
+        sum_us: 0,
+        max_us: 0,
+        buckets: [0; crate::obs::metrics::NUM_BUCKETS],
+    };
+    let name = format!("serve.request_us.{op}");
+    let Some(h) = j.get("histograms").and_then(|hs| hs.get(&name)) else {
+        return Ok(snap);
+    };
+    snap.count = h.get("count").and_then(Json::as_u64).unwrap_or(0);
+    snap.sum_us = h.get("sum_us").and_then(Json::as_u64).unwrap_or(0);
+    snap.max_us = h.get("max_us").and_then(Json::as_u64).unwrap_or(0);
+    if let Some(buckets) = h.get("buckets").and_then(Json::as_array) {
+        for (i, b) in buckets.iter().take(snap.buckets.len()).enumerate() {
+            snap.buckets[i] = b.as_u64().unwrap_or(0);
+        }
+    }
+    Ok(snap)
+}
+
+/// `after − before`, bucket-wise: the latency distribution of exactly
+/// the requests that completed between the two probes. `max_us` keeps
+/// the cumulative max (a conservative overflow-bucket bound — exact
+/// unless an earlier window held the true max).
+fn histo_delta(before: &HistoSnapshot, after: &HistoSnapshot) -> HistoSnapshot {
+    let mut d = after.clone();
+    d.count = after.count.saturating_sub(before.count);
+    d.sum_us = after.sum_us.saturating_sub(before.sum_us);
+    for (db, bb) in d.buckets.iter_mut().zip(before.buckets.iter()) {
+        *db = db.saturating_sub(*bb);
+    }
+    d
+}
+
 /// The restarted daemon's ANN index build cost (stats
 /// `ann.last_build_ms`); `None` when the daemon runs without a store.
 fn ann_build_ms(addr: &str) -> Result<Option<f64>> {
@@ -288,7 +361,9 @@ fn run_pass(
     graphs: &[AnyGraph],
 ) -> Result<BenchReport> {
     let per_client = per_client.max(1);
-    run_pass_with(addr, clients, per_client, |c| client_loop(addr, c, per_client, graphs))
+    run_pass_with(addr, clients, per_client, "embed", |c| {
+        client_loop(addr, c, per_client, graphs)
+    })
 }
 
 /// A `nearest`-op pass: same fan-out and bracketing as [`run_pass`],
@@ -302,20 +377,30 @@ fn run_nearest_pass(
     probe: f64,
 ) -> Result<BenchReport> {
     let per_client = per_client.max(1);
-    run_pass_with(addr, clients, per_client, |c| {
+    run_pass_with(addr, clients, per_client, "nearest", |c| {
         nearest_client_loop(addr, c, per_client, graphs, k, probe)
     })
 }
 
-/// Shared pass skeleton: bracket daemon-side counters, fan `clients`
-/// copies of `job` out over scoped threads, merge latency reservoirs.
-fn run_pass_with<F>(addr: &str, clients: usize, per_client: usize, job: F) -> Result<BenchReport>
+/// Shared pass skeleton: bracket daemon-side counters *and* the
+/// `serve.request_us.<op>` histogram, fan `clients` copies of `job` out
+/// over scoped threads, merge latency reservoirs. Fails the pass if the
+/// daemon's histogram count delta disagrees with the number of requests
+/// the clients sent (the observability self-check).
+fn run_pass_with<F>(
+    addr: &str,
+    clients: usize,
+    per_client: usize,
+    op: &str,
+    job: F,
+) -> Result<BenchReport>
 where
     F: Fn(usize) -> Result<(Stats, usize, usize)> + Sync,
 {
     let clients = clients.max(1);
     let per_client = per_client.max(1);
     let (graphs0, misses0) = snapshot(addr)?;
+    let histo0 = request_histo(addr, op)?;
     let wall = Timer::start();
     let results = std::thread::scope(|scope| {
         let mut handles = Vec::with_capacity(clients);
@@ -330,6 +415,7 @@ where
     })?;
     let wall_secs = wall.elapsed_secs();
     let (graphs1, misses1) = snapshot(addr)?;
+    let histo1 = request_histo(addr, op)?;
     let mut lat = Stats::new();
     let (mut errors, mut cached) = (0usize, 0usize);
     for (s, e, h) in results {
@@ -338,12 +424,26 @@ where
         cached += h;
     }
     let requests = clients * per_client;
+    // The observability self-check: every request a client sent must be
+    // exactly one sample in the daemon's per-op request histogram. The
+    // daemon records before flushing the reply bytes, so by the time
+    // the clients have all read their replies the counts are final.
+    let delta = histo_delta(&histo0, &histo1);
+    anyhow::ensure!(
+        delta.count == requests as u64,
+        "metrics self-check ({op}): daemon counted {} requests, clients sent {requests} \
+         (is another client driving this daemon?)",
+        delta.count
+    );
     Ok(BenchReport {
         requests,
         errors,
         cached_replies: cached,
         recomputed_graphs: graphs1.saturating_sub(graphs0),
         l2_miss_delta: misses1.saturating_sub(misses0),
+        daemon_count_delta: delta.count,
+        daemon_p50_ms: delta.percentile_us(50.0) as f64 / 1e3,
+        daemon_p99_ms: delta.percentile_us(99.0) as f64 / 1e3,
         wall_secs,
         requests_per_sec: if wall_secs > 0.0 { requests as f64 / wall_secs } else { 0.0 },
         p50_ms: lat.percentile(50.0) * 1e3,

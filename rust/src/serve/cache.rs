@@ -359,6 +359,7 @@ impl AnnCell {
         cell.pending.lock().expect("ann pending lock").retain(|(k, _)| !index.contains(k));
         cell.builds.fetch_add(1, Ordering::Relaxed);
         cell.last_build_us.store(t.elapsed().as_micros() as u64, Ordering::Relaxed);
+        crate::obs::global().histo("ann.build_us").record(t.elapsed());
     }
 
     fn stats(&self) -> AnnStats {
@@ -449,13 +450,23 @@ impl TieredCache {
 
     /// Probe L1 then L2. An L2 hit is promoted into L1 (without a
     /// write-back — the row is already durable) and served bitwise as
-    /// stored.
+    /// stored. Records `cache.probe_us` (the full probe) and, inside an
+    /// L1 miss, `cache.l2_read_us` (just the store read).
     pub fn get(&self, key: &CacheKey) -> Option<Vec<f32>> {
+        let probe_start = Instant::now();
+        let out = self.get_inner(key);
+        crate::obs::global().histo("cache.probe_us").record(probe_start.elapsed());
+        out
+    }
+
+    fn get_inner(&self, key: &CacheKey) -> Option<Vec<f32>> {
         if let Some(row) = self.l1.get(key) {
             return Some(row);
         }
         let store = self.l2.as_ref()?;
+        let read_start = Instant::now();
         let found = store.lock().expect("store lock").get(key);
+        crate::obs::global().histo("cache.l2_read_us").record(read_start.elapsed());
         match found {
             Some(row) => {
                 self.l2_hits.fetch_add(1, Ordering::Relaxed);
@@ -530,6 +541,7 @@ impl TieredCache {
         let Some(cell) = &self.ann else {
             bail!("nearest requires a persistent store (start the daemon with --store-dir)");
         };
+        let probe_start = Instant::now();
         let probe = probe_override.unwrap_or(cell.cfg.probe_factor);
         let index = Arc::clone(&cell.index.read().expect("ann index lock"));
         let mut result = index.nearest(query, k, probe);
@@ -555,6 +567,7 @@ impl TieredCache {
         cell.queries.fetch_add(1, Ordering::Relaxed);
         cell.probed_lists.fetch_add(result.probed as u64, Ordering::Relaxed);
         cell.scanned_rows.fetch_add(result.scanned as u64, Ordering::Relaxed);
+        crate::obs::global().histo("ann.probe_us").record(probe_start.elapsed());
         Ok(NearestOutcome {
             neighbors: result.neighbors,
             probed: result.probed,

@@ -65,11 +65,28 @@
 //! exhaustive scan, bitwise identical to the brute-force oracle —
 //! pinned by `tests/ann.rs`.
 //!
+//! ## Ops
+//!
+//! | op | does | observability |
+//! |---|---|---|
+//! | `embed` | embed one graph (cache → pipeline) | span: cache_probe → admission → queue_wait → projection → reply_write |
+//! | `nearest` | embed query + IVFFlat k-NN | adds an `ann_search` stamp |
+//! | `stats` | counters + per-op latency summaries, uptime, engine, config fingerprint | cheap, poll-friendly |
+//! | `metrics` | full [`crate::obs`] registry snapshot (every histogram with buckets) | the scrape endpoint |
+//! | `trace` | last *n* finished request spans + captured slow spans | stage-level "where did the time go" |
+//! | `ping` / `shutdown` | liveness / clean stop | traced like any request |
+//!
+//! Every request carries a [`crate::obs::TraceCtx`] from admission to
+//! reply; spans slower than `--slow-ms` also emit one JSON line to
+//! stderr. Recording is observation-only, so tracing cannot perturb
+//! embeddings (pinned by `tests/obs.rs`).
+//!
 //! Request/reply format and per-request error semantics live in
 //! [`protocol`]; the cache key + tiering discipline in [`cache`]; the
 //! load-generator (`graphlet-rf serve-bench`, labeled
 //! `cold`/`warm_l1`/`warm_l2`/`nearest_p*` passes with throughput +
-//! p50/p99 and a machine-readable JSON line) in [`bench`].
+//! p50/p99, a per-pass daemon-side `metrics` cross-check, and a
+//! machine-readable JSON line) in [`bench`].
 //!
 //! Robustness contract (pinned by `tests/serve.rs`): malformed JSON
 //! lines, oversized graphs, unknown ops, and mid-request disconnects

@@ -8,6 +8,8 @@
 //! {"op":"nearest","id":8,"k":10,"v":60,"edges":[[0,1],...],"probe":0.5}
 //! {"op":"ping","id":1}
 //! {"op":"stats","id":2}
+//! {"op":"metrics","id":4}
+//! {"op":"trace","id":5,"n":16}
 //! {"op":"shutdown","id":3}
 //! ```
 //!
@@ -18,7 +20,9 @@
 //! | `embed`    | `v`, `edges`, [`graph_index`]            | the graph's embedding row (cached or computed) |
 //! | `nearest`  | `v`, `edges`, `k`, [`graph_index`], [`probe`] | the `k` stored keys nearest to the graph's embedding, exact L2 distances (requires `--store-dir`) |
 //! | `ping`     | —                                        | `{"ok":true}` |
-//! | `stats`    | —                                        | pipeline/cache/store/ann counters |
+//! | `stats`    | —                                        | pipeline/cache/store/ann counters + uptime/engine/config fingerprint + per-op latency summaries |
+//! | `metrics`  | —                                        | full `obs` registry snapshot: counters, gauges, every histogram's log₂ buckets + derived p50/p90/p99 |
+//! | `trace`    | [`n`]                                    | the `n` most recent finished spans (default 16) plus every captured slow span (≥ `--slow-ms`) |
 //! | `shutdown` | —                                        | ack, then the daemon drains and exits |
 //!
 //! `graph_index` selects the position in the server's per-graph seed
@@ -77,6 +81,11 @@ pub enum Request {
     },
     Ping { id: u64 },
     Stats { id: u64 },
+    /// Full observability-registry snapshot (histogram buckets +
+    /// derived percentiles), suitable for scraping.
+    Metrics { id: u64 },
+    /// The `n` most recent finished spans plus captured slow spans.
+    Trace { id: u64, n: usize },
     Shutdown { id: u64 },
 }
 
@@ -110,6 +119,16 @@ pub fn parse_request(line: &str) -> Result<Request, ProtoError> {
     match op {
         "ping" => Ok(Request::Ping { id }),
         "stats" => Ok(Request::Stats { id }),
+        "metrics" => Ok(Request::Metrics { id }),
+        "trace" => {
+            let n = match j.get("n") {
+                None => 16,
+                Some(v) => v.as_usize().filter(|&n| n >= 1).ok_or_else(|| {
+                    ProtoError::new(Some(id), "trace: \"n\" must be a positive integer")
+                })?,
+            };
+            Ok(Request::Trace { id, n })
+        }
         "shutdown" => Ok(Request::Shutdown { id }),
         "embed" => {
             let (v, edges, graph_index) = parse_graph_fields(&j, id, "embed")?;
@@ -336,6 +355,23 @@ mod tests {
             parse_request(r#"{"id":1,"op":"shutdown"}"#).unwrap(),
             Request::Shutdown { id: 1 }
         );
+    }
+
+    #[test]
+    fn metrics_and_trace_ops_parse() {
+        assert_eq!(parse_request(r#"{"op":"metrics","id":4}"#).unwrap(), Request::Metrics { id: 4 });
+        assert_eq!(
+            parse_request(r#"{"op":"trace","id":5}"#).unwrap(),
+            Request::Trace { id: 5, n: 16 },
+            "n defaults to 16"
+        );
+        assert_eq!(
+            parse_request(r#"{"op":"trace","id":5,"n":3}"#).unwrap(),
+            Request::Trace { id: 5, n: 3 }
+        );
+        let e = parse_request(r#"{"op":"trace","id":5,"n":0}"#).unwrap_err();
+        assert_eq!(e.id, Some(5));
+        assert!(e.msg.contains("positive"), "{}", e.msg);
     }
 
     #[test]

@@ -11,12 +11,14 @@ use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
 
 use anyhow::{Context, Result};
 
 use crate::ann::AnnConfig;
 use crate::coordinator::{Completed, GraphJob, GsaConfig, StreamingPipeline, SubmitOutcome};
 use crate::graph::{canonical_hash, AnyGraph, CsrGraph};
+use crate::obs::{self, SpanRing, TraceCtx};
 use crate::runtime::Engine;
 use crate::store::{EmbeddingStore, StoreConfig};
 use crate::util::Json;
@@ -74,6 +76,12 @@ pub struct ServeConfig {
     /// corpus instead of probing lists (`--ann-min-brute`) — at small n
     /// the exact scan is cheaper than the centroid ranking it skips.
     pub ann_min_brute: usize,
+    /// Slow-span threshold in ms (`--slow-ms`): any request span whose
+    /// total time is ≥ this is captured separately by the trace ring
+    /// and logged as one structured JSON line to stderr. `u64::MAX`
+    /// (the default) disables slow capture; `0` marks every request —
+    /// the CI obs axis uses that to exercise the slow path everywhere.
+    pub slow_ms: u64,
 }
 
 impl Default for ServeConfig {
@@ -90,9 +98,23 @@ impl Default for ServeConfig {
             store_dir: None,
             ann_probe: crate::ann::DEFAULT_PROBE,
             ann_min_brute: crate::ann::DEFAULT_MIN_BRUTE,
+            slow_ms: slow_ms_default(),
         }
     }
 }
+
+/// Default slow-span threshold: `GRAPHLET_RF_TEST_OBS=1` (the CI obs
+/// axis) means 0 ms — every request takes the slow path — otherwise
+/// disabled. The `--slow-ms` flag overrides either way.
+fn slow_ms_default() -> u64 {
+    match std::env::var("GRAPHLET_RF_TEST_OBS") {
+        Ok(v) if v == "1" => 0,
+        _ => u64::MAX,
+    }
+}
+
+/// Capacity of the daemon's recent-span ring (`trace` op).
+const TRACE_RING_CAP: usize = 256;
 
 /// Shared server state: the pipeline, the tiered cache, and counters.
 struct ServeCtx {
@@ -105,6 +127,10 @@ struct ServeCtx {
     connections: AtomicU64,
     requests: AtomicU64,
     errors: AtomicU64,
+    /// Finished request spans (`trace` op + slow-span stderr lines).
+    ring: Arc<SpanRing>,
+    /// Daemon start time (`stats.server.uptime_secs`).
+    started: Instant,
 }
 
 /// A bound, not-yet-running server (bind early so callers learn the
@@ -153,6 +179,7 @@ impl Server {
             store,
             ann,
         );
+        let cfg_slow_ms = cfg.slow_ms;
         Ok(Server {
             listener,
             ctx: Arc::new(ServeCtx {
@@ -165,6 +192,8 @@ impl Server {
                 connections: AtomicU64::new(0),
                 requests: AtomicU64::new(0),
                 errors: AtomicU64::new(0),
+                ring: SpanRing::new(TRACE_RING_CAP, cfg_slow_ms),
+                started: Instant::now(),
             }),
         })
     }
@@ -172,6 +201,14 @@ impl Server {
     /// The bound address (resolves ephemeral ports).
     pub fn local_addr(&self) -> SocketAddr {
         self.ctx.addr
+    }
+
+    /// Fingerprint of the *normalized* pipeline config — the value
+    /// baked into cache keys and reported by `stats` (as 16 hex
+    /// digits). Exposed so the CLI banner can print the same number a
+    /// client will see.
+    pub fn config_fp(&self) -> u64 {
+        self.ctx.config_fp
     }
 
     /// Accept loop: one reader + one writer thread per connection. Runs
@@ -213,7 +250,11 @@ enum PendingReply {
 /// the writer wakes it per written reply — or permanently via
 /// `writer_gone` when the client stops reading and the write half dies).
 struct ConnShared {
-    pending: Mutex<HashMap<u64, PendingReply>>,
+    /// tag → (how to render, the request's span). The span rides along
+    /// so the writer can stamp `reply_write` and record the per-op
+    /// request histogram; dropping the entry's last handle deposits the
+    /// finished span into the daemon's ring.
+    pending: Mutex<HashMap<u64, (PendingReply, TraceCtx)>>,
     drained: Condvar,
     writer_gone: AtomicBool,
 }
@@ -275,7 +316,14 @@ fn handle_conn(stream: TcpStream, ctx: &Arc<ServeCtx>) {
             // The rest of the oversized line is unread: the stream is no
             // longer line-synchronized, so reply and drop the connection.
             ctx.errors.fetch_add(1, Ordering::Relaxed);
-            send_raw(&shared, &reply_tx, next_tag, error_reply(None, "request line too long"));
+            let trace = TraceCtx::new("error", 0, ctx.ring.clone());
+            send_raw(
+                &shared,
+                &reply_tx,
+                next_tag,
+                error_reply(None, "request line too long"),
+                trace,
+            );
             break;
         }
         if line.trim().is_empty() {
@@ -300,12 +348,18 @@ fn handle_conn(stream: TcpStream, ctx: &Arc<ServeCtx>) {
 }
 
 /// Register a pre-rendered reply and wake the writer.
-fn send_raw(shared: &ConnShared, reply_tx: &Sender<Completed>, tag: u64, line: String) {
+fn send_raw(
+    shared: &ConnShared,
+    reply_tx: &Sender<Completed>,
+    tag: u64,
+    line: String,
+    trace: TraceCtx,
+) {
     shared
         .pending
         .lock()
         .expect("pending lock")
-        .insert(tag, PendingReply::Raw(line));
+        .insert(tag, (PendingReply::Raw(line), trace));
     let _ = reply_tx.send(synthetic(tag));
 }
 
@@ -326,24 +380,79 @@ fn handle_request(
         Ok(r) => r,
         Err(ProtoError { id, msg }) => {
             ctx.errors.fetch_add(1, Ordering::Relaxed);
-            send_raw(shared, reply_tx, tag, error_reply(id, &msg));
+            let trace = TraceCtx::new("error", id.unwrap_or(0), ctx.ring.clone());
+            send_raw(shared, reply_tx, tag, error_reply(id, &msg), trace);
             return Flow::Continue;
         }
     };
+    let op = match &req {
+        Request::Ping { .. } => "ping",
+        Request::Stats { .. } => "stats",
+        Request::Metrics { .. } => "metrics",
+        Request::Trace { .. } => "trace",
+        Request::Shutdown { .. } => "shutdown",
+        Request::Embed { .. } => "embed",
+        Request::Nearest { .. } => "nearest",
+    };
+    let req_id = match &req {
+        Request::Ping { id }
+        | Request::Stats { id }
+        | Request::Metrics { id }
+        | Request::Trace { id, .. }
+        | Request::Shutdown { id }
+        | Request::Embed { id, .. }
+        | Request::Nearest { id, .. } => *id,
+    };
+    // One span per request, whatever the op; it finishes (deposits into
+    // the ring) when its last handle drops — after the writer stamped
+    // `reply_write`, or when an error path drops the pending entry.
+    let trace = TraceCtx::new(op, req_id, ctx.ring.clone());
     match req {
         Request::Ping { id } => {
             let line = Json::obj().set("id", id).set("ok", true).set("op", "ping").to_string();
-            send_raw(shared, reply_tx, tag, line);
+            send_raw(shared, reply_tx, tag, line, trace);
             Flow::Continue
         }
         Request::Stats { id } => {
-            send_raw(shared, reply_tx, tag, stats_reply(id, ctx));
+            send_raw(shared, reply_tx, tag, stats_reply(id, ctx), trace);
+            Flow::Continue
+        }
+        Request::Metrics { id } => {
+            // The full registry snapshot: counters, gauges, and every
+            // histogram's log₂ buckets + derived percentiles.
+            let line = obs::global()
+                .snapshot_json()
+                .set("id", id)
+                .set("ok", true)
+                .set("op", "metrics")
+                .to_string();
+            send_raw(shared, reply_tx, tag, line, trace);
+            Flow::Continue
+        }
+        Request::Trace { id, n } => {
+            let mut spans = Json::arr();
+            for s in ctx.ring.recent(n) {
+                spans.push(s.to_json());
+            }
+            let mut slow = Json::arr();
+            for s in ctx.ring.slow() {
+                slow.push(s.to_json());
+            }
+            let line = Json::obj()
+                .set("id", id)
+                .set("ok", true)
+                .set("op", "trace")
+                .set("spans", spans)
+                .set("slow", slow)
+                .set("slow_emitted", ctx.ring.slow_emitted())
+                .to_string();
+            send_raw(shared, reply_tx, tag, line, trace);
             Flow::Continue
         }
         Request::Shutdown { id } => {
             let line =
                 Json::obj().set("id", id).set("ok", true).set("op", "shutdown").to_string();
-            send_raw(shared, reply_tx, tag, line);
+            send_raw(shared, reply_tx, tag, line, trace);
             ctx.stop.store(true, Ordering::SeqCst);
             // Self-connect to unblock the accept loop.
             let _ = TcpStream::connect(ctx.addr);
@@ -352,15 +461,17 @@ fn handle_request(
         Request::Embed { id, v, edges, graph_index } => {
             if let Err(msg) = validate_query(ctx, v, &edges, graph_index) {
                 ctx.errors.fetch_add(1, Ordering::Relaxed);
-                send_raw(shared, reply_tx, tag, error_reply(Some(id), &msg));
+                send_raw(shared, reply_tx, tag, error_reply(Some(id), &msg), trace);
                 return Flow::Continue;
             }
             let graph = AnyGraph::Csr(CsrGraph::from_edges(v, &edges));
             let seed = ctx.pipeline.graph_seed(graph_index);
             let key =
                 CacheKey { graph_hash: canonical_hash(&graph), config_fp: ctx.config_fp, seed };
-            if let Some(row) = ctx.cache.get(&key) {
-                send_raw(shared, reply_tx, tag, embed_reply(id, &row, true));
+            let hit = ctx.cache.get(&key);
+            trace.stamp("cache_probe");
+            if let Some(row) = hit {
+                send_raw(shared, reply_tx, tag, embed_reply(id, &row, true), trace);
                 return Flow::Continue;
             }
             // Register BEFORE submitting: the completion may race ahead.
@@ -368,14 +479,14 @@ fn handle_request(
                 .pending
                 .lock()
                 .expect("pending lock")
-                .insert(tag, PendingReply::Embed { id, key: Some(key) });
-            submit_job(ctx, shared, reply_tx, tag, id, graph, seed);
+                .insert(tag, (PendingReply::Embed { id, key: Some(key) }, trace.clone()));
+            submit_job(ctx, shared, reply_tx, tag, id, graph, seed, trace);
             Flow::Continue
         }
         Request::Nearest { id, v, edges, graph_index, k, probe } => {
             if let Err(msg) = validate_query(ctx, v, &edges, graph_index) {
                 ctx.errors.fetch_add(1, Ordering::Relaxed);
-                send_raw(shared, reply_tx, tag, error_reply(Some(id), &msg));
+                send_raw(shared, reply_tx, tag, error_reply(Some(id), &msg), trace);
                 return Flow::Continue;
             }
             // k is validated against the *stored* corpus up front so the
@@ -384,29 +495,32 @@ fn handle_request(
                 ctx.errors.fetch_add(1, Ordering::Relaxed);
                 let msg =
                     "nearest requires a persistent store (start the daemon with --store-dir)";
-                send_raw(shared, reply_tx, tag, error_reply(Some(id), msg));
+                send_raw(shared, reply_tx, tag, error_reply(Some(id), msg), trace);
                 return Flow::Continue;
             };
             if k > n {
                 ctx.errors.fetch_add(1, Ordering::Relaxed);
                 let msg = format!("nearest: k={k} exceeds the {n} stored rows");
-                send_raw(shared, reply_tx, tag, error_reply(Some(id), &msg));
+                send_raw(shared, reply_tx, tag, error_reply(Some(id), &msg), trace);
                 return Flow::Continue;
             }
             let graph = AnyGraph::Csr(CsrGraph::from_edges(v, &edges));
             let seed = ctx.pipeline.graph_seed(graph_index);
             let key =
                 CacheKey { graph_hash: canonical_hash(&graph), config_fp: ctx.config_fp, seed };
-            if let Some(row) = ctx.cache.get(&key) {
-                send_raw(shared, reply_tx, tag, render_nearest(ctx, id, &row, k, probe));
+            let hit = ctx.cache.get(&key);
+            trace.stamp("cache_probe");
+            if let Some(row) = hit {
+                let line = render_nearest(ctx, id, &row, k, probe, &trace);
+                send_raw(shared, reply_tx, tag, line, trace);
                 return Flow::Continue;
             }
             shared
                 .pending
                 .lock()
                 .expect("pending lock")
-                .insert(tag, PendingReply::Nearest { id, key, k, probe });
-            submit_job(ctx, shared, reply_tx, tag, id, graph, seed);
+                .insert(tag, (PendingReply::Nearest { id, key, k, probe }, trace.clone()));
+            submit_job(ctx, shared, reply_tx, tag, id, graph, seed, trace);
             Flow::Continue
         }
     }
@@ -414,6 +528,9 @@ fn handle_request(
 
 /// Hand an embedding job to the pipeline, mapping admission-control
 /// rejections to per-request error replies (shared by embed/nearest).
+/// The job carries a clone of the request span, so pipeline stages
+/// stamp into the same trace the writer finishes.
+#[allow(clippy::too_many_arguments)]
 fn submit_job(
     ctx: &ServeCtx,
     shared: &ConnShared,
@@ -422,8 +539,15 @@ fn submit_job(
     id: u64,
     graph: AnyGraph,
     seed: u64,
+    trace: TraceCtx,
 ) {
-    let job = GraphJob { graph: Arc::new(graph), seed, tag, done: reply_tx.clone() };
+    let job = GraphJob {
+        graph: Arc::new(graph),
+        seed,
+        tag,
+        done: reply_tx.clone(),
+        trace: Some(trace.clone()),
+    };
     match ctx.pipeline.try_submit(job) {
         Ok(SubmitOutcome::Accepted) => {}
         Ok(SubmitOutcome::Overloaded) => {
@@ -433,19 +557,29 @@ fn submit_job(
                 reply_tx,
                 tag,
                 error_reply(Some(id), "server overloaded: job queue full, retry later"),
+                trace,
             );
         }
         Err(e) => {
             ctx.errors.fetch_add(1, Ordering::Relaxed);
-            send_raw(shared, reply_tx, tag, error_reply(Some(id), &e.to_string()));
+            send_raw(shared, reply_tx, tag, error_reply(Some(id), &e.to_string()), trace);
         }
     }
 }
 
 /// Run the k-NN search for an already-embedded query row and render the
 /// reply line (used from both the cache-hit fast path and the writer).
-fn render_nearest(ctx: &ServeCtx, id: u64, row: &[f32], k: usize, probe: Option<f64>) -> String {
-    match ctx.cache.nearest(row, k, probe) {
+fn render_nearest(
+    ctx: &ServeCtx,
+    id: u64,
+    row: &[f32],
+    k: usize,
+    probe: Option<f64>,
+    trace: &TraceCtx,
+) -> String {
+    let out = ctx.cache.nearest(row, k, probe);
+    trace.stamp("ann_search");
+    match out {
         Ok(out) => nearest_reply(id, &out.neighbors, out.probed, out.scanned),
         Err(e) => {
             ctx.errors.fetch_add(1, Ordering::Relaxed);
@@ -580,12 +714,33 @@ fn stats_reply(id: u64, ctx: &ServeCtx) -> String {
         )
         .set(
             "server",
+            // uptime/engine/config_fp let a client tell daemons apart
+            // across a restart: the fingerprint hex matches the hex in
+            // stored cache keys, the engine names the CLI mode.
             Json::obj()
                 .set("connections", ctx.connections.load(Ordering::Relaxed))
                 .set("requests", ctx.requests.load(Ordering::Relaxed))
-                .set("errors", ctx.errors.load(Ordering::Relaxed)),
+                .set("errors", ctx.errors.load(Ordering::Relaxed))
+                .set("uptime_secs", ctx.started.elapsed().as_secs())
+                .set("engine", ctx.cfg.gsa.engine.name())
+                .set("config_fp", format!("{:016x}", ctx.config_fp)),
         )
+        .set("request_latency", request_latency_summaries())
         .to_string()
+}
+
+/// Per-op `serve.request_us.<op>` summaries (count + percentiles, no
+/// buckets) for the `stats` reply. The registry is process-global, so
+/// in one test process these totals span every in-process daemon —
+/// clients that need exact per-daemon numbers diff two snapshots.
+fn request_latency_summaries() -> Json {
+    let mut out = Json::obj();
+    let prefix = "serve.request_us.";
+    for (name, snap) in obs::global().histo_snapshots_prefixed(prefix) {
+        let op = &name[prefix.len()..];
+        out = out.set(op, snap.to_json(false));
+    }
+    out
 }
 
 /// Writer: the single owner of the connection's write half. Receives
@@ -602,7 +757,8 @@ fn writer_loop(
 ) {
     let mut w = BufWriter::new(stream);
     for done in rx.iter() {
-        let Some(p) = shared.pending.lock().expect("pending lock").remove(&done.tag) else {
+        let Some((p, trace)) = shared.pending.lock().expect("pending lock").remove(&done.tag)
+        else {
             continue;
         };
         let line = match p {
@@ -628,10 +784,18 @@ fn writer_loop(
                     // L1-only: repeat queries stay warm without the
                     // query row ever joining the stored corpus.
                     ctx.cache.insert_query_row(key, done.row.clone());
-                    render_nearest(ctx, id, &done.row, k, probe)
+                    render_nearest(ctx, id, &done.row, k, probe, &trace)
                 }
             },
         };
+        // Last stage + the per-op request histogram, recorded before
+        // the bytes flush so a client that reads its reply and then
+        // asks for `metrics` always sees its own request counted.
+        trace.stamp("reply_write");
+        obs::global()
+            .histo(&format!("serve.request_us.{}", trace.op()))
+            .record_us(trace.elapsed_us());
+        drop(trace);
         let wrote = w
             .write_all(line.as_bytes())
             .and_then(|()| w.write_all(b"\n"))

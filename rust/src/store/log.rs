@@ -263,12 +263,17 @@ impl EmbeddingStore {
     /// and are reclaimed by compaction); callers that want append-once
     /// semantics should check [`contains`](Self::contains) first.
     pub fn put(&mut self, key: CacheKey, row: &[f32]) -> Result<()> {
+        let t = std::time::Instant::now();
         let loc = self.append_record(&key, row)?;
         if let Some(old) = self.index.insert(key, loc) {
             self.dead_bytes += u64::from(old.len);
             self.live_bytes = self.live_bytes.saturating_sub(u64::from(old.len));
         }
         self.live_bytes += u64::from(loc.len);
+        // Recorded before any auto-compaction this put trips, so the
+        // append histogram stays an append histogram (compaction has
+        // its own in `compact`).
+        crate::obs::global().histo("store.append_us").record(t.elapsed());
         self.maybe_compact()
     }
 
@@ -319,6 +324,7 @@ impl EmbeddingStore {
     /// where the ascending-id recovery scan still prefers the rewrite),
     /// then delete the old generation. Reclaims all dead bytes.
     pub fn compact(&mut self) -> Result<()> {
+        let t = std::time::Instant::now();
         let mut entries: Vec<(CacheKey, RecordLoc)> =
             self.index.iter().map(|(k, &l)| (*k, l)).collect();
         // (segment, offset) order: sequential reads, deterministic
@@ -351,6 +357,7 @@ impl EmbeddingStore {
             let _ = std::fs::remove_file(segment_path(&self.cfg.dir, id));
         }
         self.compactions += 1;
+        crate::obs::global().histo("store.compact_us").record(t.elapsed());
         Ok(())
     }
 

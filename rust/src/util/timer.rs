@@ -2,6 +2,8 @@
 
 use std::time::{Duration, Instant};
 
+use super::Rng;
+
 /// A simple scoped stopwatch.
 pub struct Timer {
     start: Instant,
@@ -22,7 +24,9 @@ impl Timer {
 }
 
 /// Online accumulator for latency statistics (count / mean / min / max /
-/// simple percentiles from a bounded reservoir).
+/// percentiles from a bounded **uniform** reservoir: Vitter's algorithm
+/// R driven by a seeded [`Rng`], so the sample is unbiased over the
+/// whole stream yet identical across runs given the same inputs).
 #[derive(Debug, Clone)]
 pub struct Stats {
     count: u64,
@@ -32,6 +36,7 @@ pub struct Stats {
     reservoir: Vec<f64>,
     cap: usize,
     seen: u64,
+    rng: Rng,
 }
 
 impl Stats {
@@ -44,6 +49,9 @@ impl Stats {
             reservoir: Vec::new(),
             cap: 4096,
             seen: 0,
+            // Fixed seed: percentiles are a deterministic function of
+            // the recorded stream (and merge order), nothing else.
+            rng: Rng::new(0x5EED_u64),
         }
     }
 
@@ -56,12 +64,13 @@ impl Stats {
         if self.reservoir.len() < self.cap {
             self.reservoir.push(secs);
         } else {
-            // Vitter's algorithm R with a cheap deterministic hash of seen.
-            let mut h = self.seen.wrapping_mul(0x9E3779B97F4A7C15);
-            h ^= h >> 29;
-            let j = (h % self.seen) as usize;
-            if j < self.cap {
-                self.reservoir[j] = secs;
+            // Vitter's algorithm R: the i-th value enters with
+            // probability cap/i via one uniform draw over [0, i) —
+            // every element of the stream ends up in the reservoir with
+            // equal probability cap/seen.
+            let j = self.rng.gen_range(self.seen);
+            if (j as usize) < self.cap {
+                self.reservoir[j as usize] = secs;
             }
         }
     }
@@ -87,22 +96,42 @@ impl Stats {
     }
 
     /// Fold another accumulator into this one (used when merging
-    /// per-shard pipeline metrics). Exact for count/sum/min/max; the
-    /// percentile reservoir is topped up from `other` until this
-    /// reservoir's capacity is reached, which keeps percentiles
-    /// representative as long as shards see similar batch counts.
+    /// per-shard pipeline metrics). Exact for count/sum/min/max. For
+    /// the reservoir: when both sides still hold *every* value they
+    /// saw and the union fits, concatenation is the exact pooled
+    /// sample; otherwise each merged slot draws its source side with
+    /// probability proportional to that side's stream length and picks
+    /// a uniform element of that side's reservoir (with replacement —
+    /// a slight approximation that, unlike a first-come top-up, cannot
+    /// let one side's values dominate the pooled percentiles).
     pub fn merge(&mut self, other: &Stats) {
         self.count += other.count;
         self.sum += other.sum;
         self.min = self.min.min(other.min);
         self.max = self.max.max(other.max);
-        self.seen += other.seen;
-        for &x in &other.reservoir {
-            if self.reservoir.len() >= self.cap {
-                break;
-            }
-            self.reservoir.push(x);
+        if other.reservoir.is_empty() {
+            self.seen += other.seen;
+            return;
         }
+        let exact = self.reservoir.len() as u64 == self.seen
+            && other.reservoir.len() as u64 == other.seen
+            && self.reservoir.len() + other.reservoir.len() <= self.cap;
+        if exact {
+            self.reservoir.extend_from_slice(&other.reservoir);
+            self.seen += other.seen;
+            return;
+        }
+        let total = self.seen + other.seen;
+        let k = self.cap.min(self.reservoir.len() + other.reservoir.len());
+        let mut merged = Vec::with_capacity(k);
+        for _ in 0..k {
+            let from_self =
+                !self.reservoir.is_empty() && self.rng.gen_range(total) < self.seen;
+            let side = if from_self { &self.reservoir } else { &other.reservoir };
+            merged.push(side[self.rng.usize(side.len())]);
+        }
+        self.reservoir = merged;
+        self.seen = total;
     }
 
     /// Approximate percentile in [0, 100] from the reservoir.
@@ -187,6 +216,56 @@ mod tests {
         empty.merge(&a);
         assert_eq!(empty.count(), 4);
         assert_eq!(empty.min(), 0.5);
+    }
+
+    #[test]
+    fn reservoir_samples_whole_stream_uniformly() {
+        // 20k values through a 4096-slot reservoir: a first-`cap`
+        // (or otherwise biased) sampler keeps a prefix-heavy sample;
+        // algorithm R keeps ~half the slots from the upper half of the
+        // stream and puts the median where the stream's median is.
+        let mut s = Stats::new();
+        let n = 20_000;
+        for i in 0..n {
+            s.record(i as f64);
+        }
+        let upper = s.reservoir.iter().filter(|&&x| x >= (n / 2) as f64).count();
+        let frac = upper as f64 / s.reservoir.len() as f64;
+        assert!((0.42..=0.58).contains(&frac), "upper-half fraction {frac}");
+        let p50 = s.percentile(50.0);
+        let mid = (n / 2) as f64;
+        assert!((p50 - mid).abs() < 0.12 * n as f64, "p50 {p50} vs {mid}");
+    }
+
+    #[test]
+    fn reservoir_is_deterministic_across_runs() {
+        let feed = |s: &mut Stats| {
+            for i in 0..10_000u64 {
+                s.record((i as f64).sin());
+            }
+        };
+        let (mut a, mut b) = (Stats::new(), Stats::new());
+        feed(&mut a);
+        feed(&mut b);
+        assert_eq!(a.reservoir, b.reservoir, "same stream, same sample");
+        assert_eq!(a.percentile(99.0), b.percentile(99.0));
+    }
+
+    #[test]
+    fn merge_weights_sides_by_stream_length() {
+        // Two saturated accumulators over disjoint ranges: the pooled
+        // sample must represent both — the old first-come top-up kept
+        // only `a`'s values, pinning every percentile under 10_000.
+        let mut a = Stats::new();
+        let mut b = Stats::new();
+        for i in 0..10_000 {
+            a.record(i as f64);
+            b.record((100_000 + i) as f64);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), 20_000);
+        assert!(a.percentile(75.0) > 50_000.0, "p75 {}", a.percentile(75.0));
+        assert!(a.percentile(25.0) < 50_000.0, "p25 {}", a.percentile(25.0));
     }
 
     #[test]

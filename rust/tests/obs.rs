@@ -1,0 +1,441 @@
+//! Integration tests for the observability layer (`crate::obs` + the
+//! `metrics` / `trace` serve ops).
+//!
+//! Pins the PR's acceptance contract:
+//! - histogram bucket boundaries straddle powers of two exactly, and
+//!   percentiles are a deterministic function of the bucket array;
+//! - the span ring evicts oldest-first at capacity, and a span deposits
+//!   **exactly once** no matter how many threads held handles on it;
+//! - a live daemon's `metrics` op shows non-zero queue-wait /
+//!   projection / cache-probe histograms after real traffic, and the
+//!   `trace` op returns the request's stage stamps;
+//! - with `slow_ms = 0` every request is captured as a slow span,
+//!   each exactly once;
+//! - tracing on vs off is **bitwise invisible** to embeddings.
+//!
+//! The metric registry is process-global and the test harness runs
+//! tests concurrently in one process, so every daemon-side count
+//! assertion here uses before/after deltas with `>=`, never equality.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use graphlet_rf::coordinator::{
+    embed_dataset, fwht_threads_from_env_or, EngineMode, GraphJob, GsaConfig, StreamingPipeline,
+};
+use graphlet_rf::gen::SbmConfig;
+use graphlet_rf::obs::metrics::{bucket_index, bucket_upper_us, NUM_BUCKETS, OVERFLOW_BUCKET};
+use graphlet_rf::obs::{Registry, SpanRing, TraceCtx};
+use graphlet_rf::serve::{embed_request, parse_embed_reply, send_shutdown, ServeConfig, Server};
+use graphlet_rf::util::{Json, Rng};
+
+// ---------------------------------------------------------------------------
+// Histogram bucket battery
+// ---------------------------------------------------------------------------
+
+#[test]
+fn bucket_boundaries_straddle_powers_of_two() {
+    // Bucket 0 is exactly zero.
+    assert_eq!(bucket_index(0), 0);
+    assert_eq!(bucket_upper_us(0), Some(0));
+
+    // Every finite bucket i covers [2^(i-1), 2^i): both edges land
+    // inside it, and one below the lower edge lands in the previous.
+    for i in 1..OVERFLOW_BUCKET {
+        let lo = 1u64 << (i - 1);
+        let hi = (1u64 << i) - 1;
+        assert_eq!(bucket_index(lo), i, "lower edge of bucket {i}");
+        assert_eq!(bucket_index(hi), i, "upper edge of bucket {i}");
+        assert_eq!(bucket_index(lo - 1), i - 1, "just below bucket {i}");
+        assert_eq!(bucket_upper_us(i), Some(hi), "inclusive upper bound of bucket {i}");
+    }
+
+    // The overflow bucket starts at 2^39 µs and has no static bound.
+    assert_eq!(bucket_index((1u64 << 39) - 1), OVERFLOW_BUCKET - 1);
+    assert_eq!(bucket_index(1u64 << 39), OVERFLOW_BUCKET);
+    assert_eq!(bucket_index(u64::MAX), OVERFLOW_BUCKET);
+    assert_eq!(bucket_upper_us(OVERFLOW_BUCKET), None);
+    assert_eq!(NUM_BUCKETS, OVERFLOW_BUCKET + 1);
+}
+
+#[test]
+fn percentiles_are_a_pure_function_of_the_buckets() {
+    let r = Registry::new();
+
+    // Empty histogram: all percentiles 0.
+    let _ = r.histo("t.empty");
+    let snap = r.histo_snapshot("t.empty").unwrap();
+    assert_eq!(snap.percentile_us(50.0), 0);
+    assert_eq!(snap.percentile_us(99.0), 0);
+
+    // 1..=100 µs: p50 rank 50 falls in bucket [32,63] (cumulative
+    // 1+2+4+8+16+32 = 63 ≥ 50), p99 rank 99 in bucket [64,127]
+    // (cumulative 100). The exact max rides along.
+    let h = r.histo("t.lat");
+    for us in 1..=100u64 {
+        h.record_us(us);
+    }
+    let snap = r.histo_snapshot("t.lat").unwrap();
+    assert_eq!(snap.count, 100);
+    assert_eq!(snap.max_us, 100);
+    assert_eq!(snap.percentile_us(50.0), 63);
+    assert_eq!(snap.percentile_us(99.0), 127);
+    assert_eq!(snap.percentile_us(100.0), 127);
+    assert!((snap.mean_us() - 50.5).abs() < 1e-9);
+
+    // Overflow-bucket percentile reports the exact recorded max, not a
+    // fictitious power of two.
+    let h = r.histo("t.over");
+    h.record_us(1u64 << 39);
+    h.record_us((1u64 << 39) + 12345);
+    let snap = r.histo_snapshot("t.over").unwrap();
+    assert_eq!(snap.percentile_us(50.0), (1u64 << 39) + 12345);
+
+    // Same multiset, different insertion order → identical snapshots
+    // (the determinism the cross-PR perf comparisons rely on).
+    let a = r.histo("t.fwd");
+    let b = r.histo("t.rev");
+    for us in [0u64, 1, 7, 8, 100, 4096, 1_000_000] {
+        a.record_us(us);
+    }
+    for us in [1_000_000u64, 4096, 100, 8, 7, 1, 0] {
+        b.record_us(us);
+    }
+    let (sa, sb) = (r.histo_snapshot("t.fwd").unwrap(), r.histo_snapshot("t.rev").unwrap());
+    assert_eq!(sa.buckets, sb.buckets);
+    for p in [50.0, 90.0, 99.0] {
+        assert_eq!(sa.percentile_us(p), sb.percentile_us(p), "p{p}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Span ring
+// ---------------------------------------------------------------------------
+
+#[test]
+fn ring_evicts_oldest_and_recent_n_returns_newest() {
+    let ring = SpanRing::new(4, u64::MAX);
+    for tag in 0..9u64 {
+        drop(TraceCtx::new("embed", tag, ring.clone()));
+    }
+    let tags: Vec<u64> = ring.recent(100).iter().map(|s| s.tag).collect();
+    assert_eq!(tags, [5, 6, 7, 8], "capacity 4: oldest five evicted, order preserved");
+    let tail: Vec<u64> = ring.recent(2).iter().map(|s| s.tag).collect();
+    assert_eq!(tail, [7, 8]);
+    assert_eq!(ring.slow_emitted(), 0, "slow capture disabled at u64::MAX");
+    assert!(ring.slow().is_empty());
+}
+
+#[test]
+fn span_deposits_exactly_once_across_threads() {
+    // slow_ms = 0 marks every span slow, so `slow_emitted` counts
+    // deposits — the emission site runs once per span, inside Drop.
+    let ring = SpanRing::new(64, 0);
+    for tag in 0..8u64 {
+        let t = TraceCtx::new("embed", tag, ring.clone());
+        let stampers: Vec<_> = (0..4)
+            .map(|_| {
+                let c = t.clone();
+                std::thread::spawn(move || {
+                    c.stamp("projection");
+                })
+            })
+            .collect();
+        drop(t);
+        for h in stampers {
+            h.join().unwrap();
+        }
+    }
+    assert_eq!(ring.slow_emitted(), 8, "one deposit per span, however many handles");
+    assert_eq!(ring.recent(64).len(), 8);
+    let mut tags: Vec<u64> = ring.slow().iter().map(|s| s.tag).collect();
+    tags.sort_unstable();
+    assert_eq!(tags, (0..8).collect::<Vec<_>>(), "no span captured twice");
+}
+
+// ---------------------------------------------------------------------------
+// Live-daemon round trips
+// ---------------------------------------------------------------------------
+
+fn test_gsa() -> GsaConfig {
+    GsaConfig {
+        k: 3,
+        s: 100,
+        m: 64,
+        batch: 32,
+        workers: 3,
+        shards: 2,
+        // Same engine/threads matrix discipline as tests/serve.rs: the
+        // observability contract is engine-agnostic.
+        engine: EngineMode::from_env_or(EngineMode::Cpu),
+        fwht_threads: fwht_threads_from_env_or(1),
+        seed: 42,
+        ..Default::default()
+    }
+}
+
+fn start_server(cfg: ServeConfig) -> (SocketAddr, JoinHandle<()>) {
+    let server = Server::bind("127.0.0.1:0", cfg, None).unwrap();
+    let addr = server.local_addr();
+    let handle = std::thread::spawn(move || server.run().unwrap());
+    (addr, handle)
+}
+
+struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    fn connect(addr: SocketAddr) -> Client {
+        let stream = TcpStream::connect(addr).unwrap();
+        Client { reader: BufReader::new(stream.try_clone().unwrap()), writer: stream }
+    }
+
+    fn roundtrip(&mut self, line: &str) -> String {
+        self.writer.write_all(line.as_bytes()).unwrap();
+        self.writer.write_all(b"\n").unwrap();
+        self.writer.flush().unwrap();
+        let mut reply = String::new();
+        self.reader.read_line(&mut reply).unwrap();
+        assert!(!reply.is_empty(), "server closed the connection");
+        reply
+    }
+}
+
+fn histo_count(metrics: &Json, name: &str) -> u64 {
+    metrics
+        .get("histograms")
+        .and_then(|h| h.get(name))
+        .and_then(|h| h.get("count"))
+        .and_then(Json::as_u64)
+        .unwrap_or(0)
+}
+
+/// Spans deposit when the *last* handle drops — for pipeline-computed
+/// rows the shard briefly holds a clone after the client has already
+/// read its reply, so ring-content assertions poll.
+fn poll_trace<F: Fn(&Json) -> bool>(client: &mut Client, pred: F, what: &str) -> Json {
+    for _ in 0..200 {
+        // n = the daemon's full ring depth, so the polling's own trace
+        // spans can't push the spans under test out of the window.
+        let reply = client.roundtrip(r#"{"op":"trace","id":7,"n":256}"#);
+        let j = Json::parse(reply.trim()).unwrap();
+        assert_eq!(j.get("ok").and_then(Json::as_bool), Some(true), "{reply}");
+        if pred(&j) {
+            return j;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(10));
+    }
+    panic!("trace op never showed: {what}");
+}
+
+/// Does any span in the reply's `spans` array have this op and carry
+/// all of these stage stamps?
+fn has_span_with(j: &Json, op: &str, stages: &[&str]) -> bool {
+    let Some(spans) = j.get("spans").and_then(Json::as_array) else {
+        return false;
+    };
+    spans.iter().any(|s| {
+        s.get("op").and_then(Json::as_str) == Some(op)
+            && stages.iter().all(|st| {
+                s.get("stages").and_then(|m| m.get(st)).and_then(Json::as_u64).is_some()
+            })
+    })
+}
+
+#[test]
+fn metrics_and_trace_ops_roundtrip_against_a_live_daemon() {
+    let ds = SbmConfig { per_class: 3, r: 1.5, ..Default::default() }.generate(&mut Rng::new(11));
+    let (addr, server) = start_server(ServeConfig { gsa: test_gsa(), ..Default::default() });
+    let mut client = Client::connect(addr);
+
+    let before = Json::parse(client.roundtrip(r#"{"op":"metrics","id":1}"#).trim()).unwrap();
+    assert_eq!(before.get("ok").and_then(Json::as_bool), Some(true));
+    // The snapshot shape is scrapable: bucket bounds ride along once.
+    let uppers = before.get("bucket_uppers_us").and_then(Json::as_array).unwrap();
+    assert_eq!(uppers.len(), OVERFLOW_BUCKET);
+
+    // Fresh graph indices force every embed through the pipeline.
+    let n = ds.len();
+    for g in 0..n {
+        let (_, row, cached) =
+            parse_embed_reply(&client.roundtrip(&embed_request(g as u64, g, &ds.graphs[g])))
+                .unwrap();
+        assert_eq!(row.len(), 64);
+        assert!(!cached, "graph {g} must be a cold miss");
+    }
+
+    // Acceptance criterion: after real traffic the stage histograms
+    // moved. The daemon records the request histogram before flushing
+    // the reply bytes, so the embed count is already final here.
+    let after = Json::parse(client.roundtrip(r#"{"op":"metrics","id":2}"#).trim()).unwrap();
+    for name in
+        ["pipeline.queue_wait_us", "shard.projection_us", "cache.probe_us", "shard.batch_wait_us"]
+    {
+        let delta = histo_count(&after, name).saturating_sub(histo_count(&before, name));
+        assert!(delta > 0, "{name} must move under embed traffic: {after}");
+    }
+    let embeds =
+        histo_count(&after, "serve.request_us.embed") - histo_count(&before, "serve.request_us.embed");
+    assert!(embeds >= n as u64, "daemon counted {embeds} embeds, clients sent {n}");
+
+    // The trace op returns the spans with their stage stamps. The
+    // pipeline path stamps cache_probe → admission → queue_wait →
+    // projection → reply_write into one span.
+    let j = poll_trace(
+        &mut client,
+        |j| {
+            has_span_with(
+                j,
+                "embed",
+                &["cache_probe", "admission", "queue_wait", "projection", "reply_write"],
+            )
+        },
+        "an embed span with all pipeline stages",
+    );
+    assert!(j.get("slow_emitted").and_then(Json::as_u64).is_some());
+    assert!(j.get("slow").and_then(Json::as_array).is_some());
+
+    // Span totals are monotone vs their own stamps: every stage offset
+    // was taken before the span closed.
+    for s in j.get("spans").and_then(Json::as_array).unwrap() {
+        let total = s.get("total_us").and_then(Json::as_u64).unwrap();
+        if let Some(Json::Obj(stages)) = s.get("stages") {
+            for (name, at) in stages {
+                let at = at.as_u64().unwrap();
+                assert!(at <= total, "stage {name} stamped after the span closed");
+            }
+        }
+    }
+
+    // Malformed trace op: n must be positive; the error is per-request.
+    let reply = client.roundtrip(r#"{"op":"trace","id":9,"n":0}"#);
+    assert!(reply.contains("\"ok\":false"), "{reply}");
+    assert!(reply.contains("positive"), "{reply}");
+    let pong = client.roundtrip(r#"{"op":"ping","id":10}"#);
+    assert!(pong.contains("\"ok\":true"), "{pong}");
+
+    drop(client);
+    send_shutdown(&addr.to_string()).unwrap();
+    server.join().unwrap();
+}
+
+#[test]
+fn slow_ms_zero_captures_every_request_exactly_once() {
+    let ds = SbmConfig { per_class: 3, r: 1.5, ..Default::default() }.generate(&mut Rng::new(11));
+    let mut gsa = test_gsa();
+    gsa.s = 50;
+    gsa.m = 16;
+    // Every span is "slow" — the GRAPHLET_RF_TEST_OBS CI axis flips the
+    // same switch for the whole serve suite via the config default.
+    let (addr, server) = start_server(ServeConfig { gsa, slow_ms: 0, ..Default::default() });
+    let mut client = Client::connect(addr);
+
+    let n = 4usize;
+    for g in 0..n {
+        parse_embed_reply(&client.roundtrip(&embed_request(g as u64, g, &ds.graphs[g]))).unwrap();
+    }
+
+    // All n embed spans land in the slow list (deposit may lag the
+    // reply — poll), and none lands twice: request ids are unique, so
+    // duplicate (op, tag) pairs would mean a double deposit.
+    let j = poll_trace(
+        &mut client,
+        |j| {
+            let Some(slow) = j.get("slow").and_then(Json::as_array) else { return false };
+            slow.iter()
+                .filter(|s| s.get("op").and_then(Json::as_str) == Some("embed"))
+                .count()
+                >= n
+        },
+        "every embed captured as a slow span",
+    );
+    let mut embed_tags: Vec<u64> = j
+        .get("slow")
+        .and_then(Json::as_array)
+        .unwrap()
+        .iter()
+        .filter(|s| s.get("op").and_then(Json::as_str) == Some("embed"))
+        .map(|s| s.get("tag").and_then(Json::as_u64).unwrap())
+        .collect();
+    embed_tags.sort_unstable();
+    let deduped = {
+        let mut t = embed_tags.clone();
+        t.dedup();
+        t
+    };
+    assert_eq!(embed_tags, deduped, "a slow span was captured twice");
+    assert_eq!(embed_tags, (0..n as u64).collect::<Vec<_>>());
+
+    // The counter behind the stderr lines saw at least those spans
+    // (trace/metrics requests on this daemon are slow too — ≥, not ==).
+    let emitted = j.get("slow_emitted").and_then(Json::as_u64).unwrap();
+    assert!(emitted >= n as u64, "slow_emitted = {emitted}");
+
+    drop(client);
+    send_shutdown(&addr.to_string()).unwrap();
+    server.join().unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// Tracing must not move a bit
+// ---------------------------------------------------------------------------
+
+/// `embed_dataset` runs every job with a live `TraceCtx`; the same jobs
+/// submitted by hand with `trace: None` must produce bitwise-identical
+/// rows. This is the pin that lets every other layer record freely.
+#[test]
+fn tracing_on_and_off_are_bitwise_identical() {
+    let gsa = test_gsa();
+    let m = gsa.m;
+    let ds = SbmConfig { per_class: 3, r: 1.5, ..Default::default() }.generate(&mut Rng::new(11));
+    let n = ds.len();
+
+    // Traced: the production path.
+    let (want, _) = embed_dataset(&ds, &gsa, None).unwrap();
+
+    // Untraced: identical jobs, trace: None.
+    let pipeline = StreamingPipeline::new(&gsa, None).unwrap();
+    let seeds = pipeline.graph_seeds(n);
+    let (tx, rx) = mpsc::channel();
+    for (g_idx, g) in ds.graphs.iter().enumerate() {
+        pipeline
+            .submit(GraphJob {
+                graph: Arc::new(g.clone()),
+                seed: seeds[g_idx],
+                tag: g_idx as u64,
+                done: tx.clone(),
+                trace: None,
+            })
+            .unwrap();
+    }
+    drop(tx);
+    let mut got = vec![0.0f32; n * m];
+    let mut seen = 0usize;
+    for done in rx {
+        assert!(done.error.is_none(), "job {}: {:?}", done.tag, done.error);
+        let g = done.tag as usize;
+        got[g * m..(g + 1) * m].copy_from_slice(&done.row);
+        seen += 1;
+    }
+    assert_eq!(seen, n);
+    pipeline.shutdown().unwrap();
+
+    for g in 0..n {
+        for (i, (a, b)) in want[g * m..(g + 1) * m]
+            .iter()
+            .zip(&got[g * m..(g + 1) * m])
+            .enumerate()
+        {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "graph {g} dim {i}: traced {a} vs untraced {b}"
+            );
+        }
+    }
+}

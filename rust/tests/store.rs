@@ -139,6 +139,18 @@ fn daemon_restart_serves_bitwise_rows_from_disk_with_zero_recompute() {
     let stats = client.stats();
     assert_eq!(u64_at(&stats, "store", "records") as usize, ds.len());
     assert_eq!(u64_at(&stats, "store", "corrupt_skipped"), 0);
+    // Daemon identity in stats: engine mode by name, the config
+    // fingerprint as 16 hex digits (the hex baked into cache keys),
+    // and an uptime that exists from the first scrape.
+    let server_obj = stats.get("server").expect("stats.server");
+    assert_eq!(
+        server_obj.get("engine").and_then(Json::as_str),
+        Some(EngineMode::from_env_or(EngineMode::Cpu).name()),
+    );
+    let fp1 = server_obj.get("config_fp").and_then(Json::as_str).expect("config_fp").to_string();
+    assert_eq!(fp1.len(), 16, "config_fp must be 16 hex digits: {fp1}");
+    assert!(fp1.chars().all(|c| c.is_ascii_hexdigit()), "{fp1}");
+    assert!(server_obj.get("uptime_secs").and_then(Json::as_u64).is_some());
     drop(client);
     send_shutdown(&addr.to_string()).unwrap();
     server.join().unwrap();
@@ -167,6 +179,14 @@ fn daemon_restart_serves_bitwise_rows_from_disk_with_zero_recompute() {
         "the restarted daemon must not recompute anything"
     );
     assert_eq!(u64_at(&stats, "store", "corrupt_skipped"), 0);
+    // The restarted daemon reports the *same* config fingerprint — the
+    // precondition for its cache keys matching the persisted ones.
+    let fp2 = stats
+        .get("server")
+        .and_then(|s| s.get("config_fp"))
+        .and_then(Json::as_str)
+        .expect("config_fp");
+    assert_eq!(fp2, fp1, "restart changed the config fingerprint");
 
     // Promoted rows now live in L1: a re-request is a pure RAM hit and
     // the L2 counters stay put.

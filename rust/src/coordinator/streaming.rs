@@ -366,6 +366,20 @@ impl StreamingPipeline {
     /// *pipeline* (not per job). Long-lived pipelines (serve) amortize
     /// it to zero; `embed_dataset` pays it once per call.
     pub fn new(cfg: &GsaConfig, engine: Option<&Engine>) -> Result<StreamingPipeline> {
+        StreamingPipeline::with_registry(cfg, engine, obs::global_arc())
+    }
+
+    /// Like [`new`](Self::new), but every worker/shard histogram
+    /// (`pipeline.queue_wait_us`, `shard.batch_wait_us`,
+    /// `shard.projection_us`) records into the given instance-scoped
+    /// registry — the serve daemon passes its own, so two in-process
+    /// daemons never share pipeline metrics. [`new`](Self::new) is the
+    /// batch-CLI path and records into [`obs::global`].
+    pub fn with_registry(
+        cfg: &GsaConfig,
+        engine: Option<&Engine>,
+        registry: Arc<obs::Registry>,
+    ) -> Result<StreamingPipeline> {
         let mut cfg = cfg.clone();
         cfg.shards = cfg.shards.max(1);
         cfg.workers = cfg.workers.max(1);
@@ -433,8 +447,9 @@ impl StreamingPipeline {
             let cfg_cl = cfg.clone();
             let slot_cl = slot.clone();
             let occ_cl = occupancy.clone();
+            let reg_cl = registry.clone();
             shard_handles.push(std::thread::spawn(move || {
-                shard_loop(rx, spawn_spec, &params, &cfg_cl, &slot_cl, &occ_cl)
+                shard_loop(rx, spawn_spec, &params, &cfg_cl, &slot_cl, &occ_cl, &reg_cl)
             }));
             txs.push(ShardTx { tx, occupancy: occupancy.clone() });
             shard_slots.push(slot);
@@ -451,7 +466,10 @@ impl StreamingPipeline {
             let txs = txs.clone();
             let params = params.clone();
             let cfg_cl = cfg.clone();
-            workers.push(std::thread::spawn(move || worker_loop(&queue, &txs, &params, &cfg_cl)));
+            let reg_cl = registry.clone();
+            workers.push(
+                std::thread::spawn(move || worker_loop(&queue, &txs, &params, &cfg_cl, &reg_cl)),
+            );
         }
         // `txs` originals drop here: shard channels close exactly when the
         // last worker exits.
@@ -609,12 +627,18 @@ fn flush_packers(packers: &mut [Packer], txs: &[ShardTx], batch: usize, d: usize
 /// subgraphs in seed order, and pack rows into per-shard cross-request
 /// batches. Partial batches flush when the queue idles, so a lone
 /// request is never stranded behind an unfilled batch.
-fn worker_loop(queue: &JobQueue, txs: &[ShardTx], params: &ParamSet, cfg: &GsaConfig) {
+fn worker_loop(
+    queue: &JobQueue,
+    txs: &[ShardTx],
+    params: &ParamSet,
+    cfg: &GsaConfig,
+    registry: &obs::Registry,
+) {
     let sampler = sampler_by_name(&cfg.sampler);
-    let h_queue_wait = obs::global().histo("pipeline.queue_wait_us");
+    let h_queue_wait = registry.histo("pipeline.queue_wait_us");
     // Inline mode projects on the worker thread, so the projection
     // histogram is recorded here; batch modes record it in shard_loop.
-    let h_projection = obs::global().histo("shard.projection_us");
+    let h_projection = registry.histo("shard.projection_us");
     let inline_map = match (cfg.engine, params) {
         (EngineMode::CpuInline, ParamSet::Dense(p)) => Some(CpuFeatureMap::new((**p).clone())),
         _ => None,
@@ -795,6 +819,7 @@ fn shard_loop(
     cfg: &GsaConfig,
     slot: &Mutex<PipelineMetrics>,
     occupancy: &AtomicUsize,
+    registry: &obs::Registry,
 ) -> PipelineMetrics {
     let exec = match build_exec(spawn_spec, params, cfg) {
         Ok(exec) => exec,
@@ -832,8 +857,8 @@ fn shard_loop(
 
     let m = cfg.m;
     let inv = 1.0 / cfg.s as f32;
-    let h_batch_wait = obs::global().histo("shard.batch_wait_us");
-    let h_projection = obs::global().histo("shard.projection_us");
+    let h_batch_wait = registry.histo("shard.batch_wait_us");
+    let h_projection = registry.histo("shard.projection_us");
     let mut metrics = PipelineMetrics::default();
     let mut accums: HashMap<u64, Accum> = HashMap::new();
     // Tickets whose batch failed mid-run -> rows seen so far. Later

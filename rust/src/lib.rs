@@ -55,14 +55,17 @@
 //! the dataflow diagram and calibration.
 //!
 //! Where the time goes is first-class: [`obs`] is a zero-dependency
-//! observability layer — a process-wide registry of atomic counters,
-//! gauges, and log₂-bucketed latency histograms, plus per-request span
-//! tracing that stamps every stage a request crosses (admission, queue
-//! wait, projection, cache probe, L2 read, ANN search, reply write) and
-//! keeps recent spans in a ring served by the daemon's `metrics` and
-//! `trace` ops. Spans slower than `--slow-ms` log one structured JSON
-//! line to stderr. Tracing is pure observation: embeddings are bitwise
-//! identical with it on or off.
+//! observability layer — instance-scoped registries of atomic counters,
+//! gauges, and log₂-bucketed latency histograms (each serve daemon owns
+//! one; the batch CLI uses a process-wide default), plus per-request
+//! span tracing that stamps every stage a request crosses (admission,
+//! queue wait, projection, cache probe, L2 read, ANN search, reply
+//! write) and keeps recent spans in a ring served by the daemon's
+//! `metrics` and `trace` ops. With `--http-port` the daemon also serves
+//! its registry in Prometheus text format on `/metrics` (plus
+//! `/healthz` and `/readyz`). Spans slower than `--slow-ms` log one
+//! structured JSON line to stderr. Tracing is pure observation:
+//! embeddings are bitwise identical with it on or off.
 //!
 //! Quick tour: generate a dataset ([`gen`]), sample graphlets
 //! ([`sample`]), embed them with a feature map ([`features`] on CPU,

@@ -145,6 +145,7 @@ USAGE: graphlet-rf <quickstart|fig1-left|fig1-right|fig2-left|fig2-right|fig3|th
              [--data-dir DIR] [--tu-dir DIR]
              [--store-dir DIR] [--cache-policy lru|cost-aware]
              [--ann-probe F] [--ann-min-brute N] [--slow-ms N]
+             [--http-port N]
 
 --shards N runs N parallel feature-engine shards (jobs round-robin over
 shards); embeddings are bitwise identical for every shard/worker count.
@@ -182,6 +183,10 @@ serve       long-running embedding daemon: line-delimited JSON over TCP,
             last N per-request stage spans; --slow-ms N additionally
             captures any request slower than N ms and logs it as one
             JSON line to stderr (0 = every request; default off).
+            --http-port N opens a GET-only HTTP sidecar on 127.0.0.1:N
+            (0 = ephemeral) serving /metrics (Prometheus text format
+            v0.0.4, this daemon's registry only), /healthz, and /readyz;
+            without the flag no HTTP socket is opened.
 serve-bench loopback load generator: --addr HOST:PORT (default
             127.0.0.1:7878), --clients C, --requests N per client;
             reports labeled cold/warm_l1 passes (throughput, p50/p99,
@@ -311,6 +316,7 @@ fn serve_cfg_from_args(
         ann_probe: args.parse_or("ann-probe", defaults.ann_probe),
         ann_min_brute: args.parse_or("ann-min-brute", defaults.ann_min_brute),
         slow_ms: args.parse_or("slow-ms", defaults.slow_ms),
+        http_port: args.try_parse::<u16>("http-port").map_err(|e| anyhow::anyhow!(e))?,
         ..defaults
     })
 }
@@ -355,6 +361,9 @@ fn serve_cmd(ctx: &ExpContext, args: &Args, seed: u64) -> Result<()> {
         server.local_addr(),
         server.config_fp(),
     );
+    if let Some(http) = server.http_addr() {
+        println!("serve: http sidecar on http://{http} (/metrics /healthz /readyz)");
+    }
     server.run()
 }
 

@@ -1,8 +1,9 @@
-//! Process-wide metric registry: atomic counters, gauges, and
-//! fixed-boundary log₂-bucketed latency histograms. Zero dependencies,
-//! lock-free on the record path — the registry's `Mutex` guards only
-//! name → handle resolution (done once per call site and cached in an
-//! `Arc`), never a `record()`.
+//! Metric registry: atomic counters, gauges, and fixed-boundary
+//! log₂-bucketed latency histograms. Zero dependencies, lock-free on
+//! the record path — the registry's `Mutex` guards only name → handle
+//! resolution (done once per call site and cached in an `Arc`), never
+//! a `record()`. Registries are instance-scoped (one per serve
+//! daemon); [`global()`] is the batch-CLI default.
 //!
 //! ## Histogram shape
 //!
@@ -225,13 +226,25 @@ enum Metric {
     Histo(Arc<Histo>),
 }
 
+/// One metric's value in a typed registry [`export`](Registry::export)
+/// — what the Prometheus renderer consumes.
+#[derive(Clone, Debug)]
+pub enum MetricValue {
+    Counter(u64),
+    Gauge(u64),
+    Histo(HistoSnapshot),
+}
+
 /// A name → metric registry. Call sites resolve a name once (taking the
 /// map lock) and keep the returned `Arc` handle; the handle records
-/// lock-free forever after. Instantiable for unit tests; production
-/// code uses the process-wide [`global()`] instance — note that
-/// in-process multi-daemon tests (serve-bench restart mode) therefore
-/// *share* histograms, which is why every daemon-side self-check
-/// compares **before/after deltas**, never absolute counts.
+/// lock-free forever after. Registries are **instance-scoped**: every
+/// serve daemon owns its own `Arc<Registry>` (created in
+/// `Server::bind` and threaded through pipeline, cache, store, ANN
+/// cell, and span ring), so two in-process daemons never share a
+/// counter and tests assert absolute values directly. The process-wide
+/// [`global()`] instance survives as the default for the batch CLI
+/// path (`embed_dataset` and friends) and for components constructed
+/// without an explicit registry.
 #[derive(Default)]
 pub struct Registry {
     metrics: Mutex<BTreeMap<String, Metric>>,
@@ -312,6 +325,36 @@ impl Registry {
             .collect()
     }
 
+    /// Values of every counter whose name starts with `prefix`,
+    /// name-sorted. Feeds the per-op error counts in `stats`.
+    pub fn counters_prefixed(&self, prefix: &str) -> Vec<(String, u64)> {
+        let m = self.metrics.lock().unwrap();
+        m.iter()
+            .filter_map(|(name, metric)| match metric {
+                Metric::Counter(c) if name.starts_with(prefix) => Some((name.clone(), c.get())),
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// Typed point-in-time copy of the whole registry, name-sorted (the
+    /// map is a `BTreeMap`). This is the Prometheus renderer's feed —
+    /// [`snapshot_json`](Self::snapshot_json) serves the bespoke TCP
+    /// `metrics` op, this serves `/metrics`.
+    pub fn export(&self) -> Vec<(String, MetricValue)> {
+        let m = self.metrics.lock().unwrap();
+        m.iter()
+            .map(|(name, metric)| {
+                let v = match metric {
+                    Metric::Counter(c) => MetricValue::Counter(c.get()),
+                    Metric::Gauge(g) => MetricValue::Gauge(g.get()),
+                    Metric::Histo(h) => MetricValue::Histo(h.snapshot()),
+                };
+                (name.clone(), v)
+            })
+            .collect()
+    }
+
     /// Full registry snapshot as JSON — the `metrics` serve op's reply
     /// body. Deterministic shape: names are emitted in sorted order,
     /// histograms carry their full bucket arrays plus derived
@@ -342,10 +385,22 @@ impl Registry {
     }
 }
 
-/// The process-wide registry every production call site records into.
+static GLOBAL: OnceLock<Arc<Registry>> = OnceLock::new();
+
+/// The process-wide default registry: the batch CLI path
+/// (`embed_dataset`, experiments) records here, and it is the fallback
+/// for components constructed without an explicit registry. Serve
+/// daemons do **not** use it — each owns an instance-scoped
+/// [`Arc<Registry>`] (see [`global_arc`] for an owned handle).
 pub fn global() -> &'static Registry {
-    static GLOBAL: OnceLock<Registry> = OnceLock::new();
-    GLOBAL.get_or_init(Registry::new)
+    GLOBAL.get_or_init(|| Arc::new(Registry::new()))
+}
+
+/// Owned handle on the process-wide default registry, for components
+/// that thread an `Arc<Registry>` (pipeline, cache, store, span ring)
+/// and need a default when the caller didn't supply one.
+pub fn global_arc() -> Arc<Registry> {
+    GLOBAL.get_or_init(|| Arc::new(Registry::new())).clone()
 }
 
 #[cfg(test)]

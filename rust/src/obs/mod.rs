@@ -4,15 +4,22 @@
 //! every perf PR (mmap L2, replication, accelerator SORF) reports
 //! against.
 //!
-//! Two halves:
-//! - [`metrics`]: a process-wide [`Registry`] of atomic [`Counter`]s,
-//!   [`Gauge`]s, and log₂-bucketed [`Histo`]grams (µs values, fixed
-//!   power-of-two boundaries, deterministic bucket-derived p50/p90/p99).
-//!   Snapshot served whole by the `metrics` serve op.
+//! Three parts:
+//! - [`metrics`]: a [`Registry`] of atomic [`Counter`]s, [`Gauge`]s,
+//!   and log₂-bucketed [`Histo`]grams (µs values, fixed power-of-two
+//!   boundaries, deterministic bucket-derived p50/p90/p99). Registries
+//!   are **instance-scoped** — every serve daemon owns one, threaded
+//!   through its pipeline/cache/store/ANN/span-ring — with
+//!   [`global()`] as the batch-CLI default. Snapshot served whole by
+//!   the `metrics` serve op.
 //! - [`trace`]: a [`TraceCtx`] handle carried along each request's
 //!   dataflow, stamping named stages; finished spans land in a bounded
 //!   [`SpanRing`] served by the `trace` op, and spans slower than
 //!   `--slow-ms` also emit one structured JSON line to stderr.
+//! - [`prom`]: renders a registry snapshot in Prometheus text format
+//!   v0.0.4 for the daemon's HTTP `/metrics` endpoint
+//!   (`crate::serve::http`), so standard tooling can scrape what the
+//!   bespoke TCP `metrics` op serves.
 //!
 //! ## Request lifecycle and its stage stamps
 //!
@@ -42,28 +49,41 @@
 //!
 //! ## Metric catalog
 //!
-//! | name | kind | recorded by |
-//! |---|---|---|
-//! | `serve.request_us.<op>` | histo | writer_loop / direct reply, before the bytes flush |
-//! | `pipeline.queue_wait_us` | histo | worker claiming a job off the queue |
-//! | `shard.batch_wait_us` | histo | shard receiving a packed batch (time in channel) |
-//! | `shard.projection_us` | histo | shard executing one batch (any engine, incl. FWHT) |
-//! | `cache.probe_us` | histo | `TieredCache::get`, full L1+L2 probe |
-//! | `cache.l2_read_us` | histo | the store read inside an L1-miss probe |
-//! | `store.append_us` | histo | `EmbeddingStore::put` |
-//! | `store.compact_us` | histo | `EmbeddingStore::compact` |
-//! | `ann.build_us` | histo | IVFFlat index (re)build |
-//! | `ann.probe_us` | histo | `nearest` query against index + pending tail |
-//! | `serve.slow_spans` | counter | every slow-span stderr line |
+//! The Prometheus name is what `/metrics` exposes: dots become
+//! underscores and the dynamic `<op>` suffix is promoted into an
+//! `op` label (histograms additionally fan out into
+//! `_bucket`/`_sum`/`_count` series). Keep this table and the HELP
+//! catalog in [`prom`] in sync.
+//!
+//! | name | Prometheus name | kind | recorded by |
+//! |---|---|---|---|
+//! | `serve.request_us.<op>` | `serve_request_us{op=…}` | histo | writer_loop / direct reply, before the bytes flush |
+//! | `serve.errors.<op>` | `serve_errors{op=…}` | counter | every per-request error reply |
+//! | `pipeline.queue_wait_us` | `pipeline_queue_wait_us` | histo | worker claiming a job off the queue |
+//! | `shard.batch_wait_us` | `shard_batch_wait_us` | histo | shard receiving a packed batch (time in channel) |
+//! | `shard.projection_us` | `shard_projection_us` | histo | shard executing one batch (any engine, incl. FWHT) |
+//! | `cache.probe_us` | `cache_probe_us` | histo | `TieredCache::get`, full L1+L2 probe |
+//! | `cache.l2_read_us` | `cache_l2_read_us` | histo | the store read inside an L1-miss probe |
+//! | `store.append_us` | `store_append_us` | histo | `EmbeddingStore::put` |
+//! | `store.compact_us` | `store_compact_us` | histo | `EmbeddingStore::compact` |
+//! | `ann.build_us` | `ann_build_us` | histo | IVFFlat index (re)build |
+//! | `ann.probe_us` | `ann_probe_us` | histo | `nearest` query against index + pending tail |
+//! | `serve.slow_spans` | `serve_slow_spans` | counter | every slow-span stderr line |
+//!
+//! `/metrics` also serves a `graphlet_rf_build_info{engine,config_fp,version} 1`
+//! info gauge keyed to the daemon's identity.
 //!
 //! Recording is relaxed-atomic and observation-only — no RNG draws, no
 //! row arithmetic — so tracing on vs off cannot change embeddings
-//! (bitwise-pinned by `tests/obs.rs`). The registry is process-global:
-//! in-process multi-daemon tests share it, so self-checks always
-//! compare before/after **deltas**.
+//! (bitwise-pinned by `tests/obs.rs`). Registries are instance-scoped:
+//! each in-process daemon reports only its own traffic, so tests
+//! assert **absolute** values on a daemon's registry directly — no
+//! before/after delta-diffing.
 
 pub mod metrics;
+pub mod prom;
 pub mod trace;
 
-pub use metrics::{global, Counter, Gauge, Histo, HistoSnapshot, Registry};
+pub use metrics::{global, global_arc, Counter, Gauge, Histo, HistoSnapshot, MetricValue, Registry};
+pub use prom::BuildInfo;
 pub use trace::{global_ring, SpanRecord, SpanRing, TraceCtx};

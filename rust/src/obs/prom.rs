@@ -1,0 +1,386 @@
+//! Prometheus text exposition (format v0.0.4) for a [`Registry`]
+//! snapshot. Hand-rolled like everything else in the crate — no client
+//! library, no deps — so the daemon's `/metrics` endpoint (see
+//! `crate::serve::http`) is scrapeable by stock Prometheus while the
+//! build stays hermetic.
+//!
+//! Mapping from the registry's dotted names:
+//!
+//! - Dots (and any other character outside `[a-zA-Z0-9_:]`) become
+//!   underscores: `pipeline.queue_wait_us` → `pipeline_queue_wait_us`.
+//! - Dynamic suffixes are **promoted into labels**, so per-op metrics
+//!   form one family instead of an unbounded name set:
+//!   `serve.request_us.embed` → `serve_request_us{op="embed"}`,
+//!   `serve.errors.nearest` → `serve_errors{op="nearest"}`.
+//! - Log₂ histograms become cumulative `le` series with `_sum` and
+//!   `_count`: finite buckets expose their inclusive upper bound (µs)
+//!   as the `le` value, the overflow bucket becomes `le="+Inf"`, and
+//!   the `+Inf` sample always equals `_count` (both are computed from
+//!   the same bucket sum, so the invariant holds structurally, not by
+//!   luck).
+//! - Every family gets `# HELP`/`# TYPE` headers from the metric
+//!   catalog (the table in [`crate::obs`]); families are emitted in
+//!   sorted name order and label values escape `\`, `"`, and newline,
+//!   so output is stable and lintable.
+//!
+//! A `graphlet_rf_build_info{config_fp,engine,version} 1` gauge rides
+//! along (the standard "info metric" idiom) so dashboards can key every
+//! series to the daemon's engine and config fingerprint.
+
+use std::collections::BTreeMap;
+
+use super::metrics::{bucket_upper_us, MetricValue, Registry, NUM_BUCKETS};
+
+/// Static identity labels for the `graphlet_rf_build_info` metric.
+#[derive(Clone, Debug)]
+pub struct BuildInfo {
+    /// Engine mode name (`cpu`, `cpu-sorf`, `pjrt`, …).
+    pub engine: String,
+    /// 16-hex config fingerprint (same value the `stats` op reports).
+    pub config_fp: String,
+    /// Crate version baked in at compile time.
+    pub version: String,
+}
+
+/// Dotted-name prefixes whose trailing segment is a dynamic suffix
+/// (one entry per request op), promoted into the named label.
+const DYNAMIC_SUFFIXES: &[(&str, &str)] = &[
+    ("serve.request_us.", "op"),
+    ("serve.errors.", "op"),
+];
+
+/// Metric catalog: dotted family name → HELP text. Mirrors the table
+/// in the [`crate::obs`] module docs — update both together.
+const CATALOG: &[(&str, &str)] = &[
+    ("ann.build_us", "IVFFlat index (re)build time over the stored corpus"),
+    ("ann.probe_us", "IVFFlat k-NN search time per nearest query"),
+    ("cache.l2_read_us", "Segment-log (L2) read time on an L1 miss"),
+    ("cache.probe_us", "Tiered-cache probe time (L1, then optional L2)"),
+    ("pipeline.queue_wait_us", "Time a job waits in the bounded queue before a worker claims it"),
+    ("serve.errors", "Per-request error replies, by op"),
+    ("serve.request_us", "End-to-end request time from admission to reply write, by op"),
+    ("serve.slow_spans", "Request spans that exceeded the --slow-ms threshold"),
+    ("shard.batch_wait_us", "Time a shard's partial batch waits before dispatch"),
+    ("shard.projection_us", "Feature-map projection time per dispatched batch"),
+    ("store.append_us", "Segment-log append time per stored row"),
+    ("store.compact_us", "Segment-log compaction pass time"),
+];
+
+/// Sanitize a dotted metric name into a Prometheus metric name:
+/// `[a-zA-Z_:][a-zA-Z0-9_:]*`.
+fn sanitize(name: &str) -> String {
+    let mut out = String::with_capacity(name.len() + 1);
+    for (i, c) in name.chars().enumerate() {
+        let ok = c.is_ascii_alphabetic() || c == '_' || c == ':' || (i > 0 && c.is_ascii_digit());
+        if ok {
+            out.push(c);
+        } else if i == 0 && c.is_ascii_digit() {
+            out.push('_');
+            out.push(c);
+        } else {
+            out.push('_');
+        }
+    }
+    out
+}
+
+/// Escape a label value per the exposition format: backslash, double
+/// quote, and line feed.
+fn escape_label(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Escape HELP text: backslash and line feed only (quotes are legal).
+fn escape_help(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Split a dotted registry name into (dotted family, promoted label).
+fn family_and_label(name: &str) -> (String, Option<(&'static str, String)>) {
+    for &(prefix, label) in DYNAMIC_SUFFIXES {
+        if let Some(suffix) = name.strip_prefix(prefix) {
+            if !suffix.is_empty() {
+                let family = prefix.trim_end_matches('.').to_string();
+                return (family, Some((label, suffix.to_string())));
+            }
+        }
+    }
+    (name.to_string(), None)
+}
+
+fn help_for(dotted_family: &str) -> &'static str {
+    CATALOG
+        .iter()
+        .find(|(n, _)| *n == dotted_family)
+        .map(|(_, h)| *h)
+        .unwrap_or("(uncataloged metric)")
+}
+
+/// One family's accumulated samples, keyed by promoted label value
+/// (`None` for label-less metrics).
+struct Family {
+    dotted: String,
+    samples: Vec<(Option<(&'static str, String)>, MetricValue)>,
+}
+
+fn label_selector(label: &Option<(&'static str, String)>) -> String {
+    match label {
+        Some((k, v)) => format!("{k}=\"{}\"", escape_label(v)),
+        None => String::new(),
+    }
+}
+
+/// Join a promoted label with an extra `le` label for bucket samples.
+fn bucket_selector(label: &Option<(&'static str, String)>, le: &str) -> String {
+    match label {
+        Some((k, v)) => format!("{{{k}=\"{}\",le=\"{le}\"}}", escape_label(v)),
+        None => format!("{{le=\"{le}\"}}"),
+    }
+}
+
+fn braced(selector: &str) -> String {
+    if selector.is_empty() {
+        String::new()
+    } else {
+        format!("{{{selector}}}")
+    }
+}
+
+/// Render a registry snapshot as Prometheus text format v0.0.4.
+///
+/// Output is deterministic for a given registry state: families sorted
+/// by name, samples within a family sorted by label value, `HELP` and
+/// `TYPE` immediately preceding each family's samples.
+pub fn render(registry: &Registry, build_info: Option<&BuildInfo>) -> String {
+    // Group the name-sorted export into families (BTreeMap keeps the
+    // emission order sorted by *sanitized* family name).
+    let mut families: BTreeMap<String, Family> = BTreeMap::new();
+    for (name, value) in registry.export() {
+        let (dotted, label) = family_and_label(&name);
+        let fam = families
+            .entry(sanitize(&dotted))
+            .or_insert_with(|| Family { dotted: dotted.clone(), samples: Vec::new() });
+        fam.samples.push((label, value));
+    }
+
+    let mut out = String::new();
+    for (fam_name, fam) in &families {
+        let help = escape_help(help_for(&fam.dotted));
+        // A family's type comes from its first sample; the registry
+        // guarantees one kind per name, and promoted families only
+        // group same-kind metrics (same instrumentation site).
+        let type_str = match fam.samples[0].1 {
+            MetricValue::Counter(_) => "counter",
+            MetricValue::Gauge(_) => "gauge",
+            MetricValue::Histo(_) => "histogram",
+        };
+        out.push_str(&format!("# HELP {fam_name} {help}\n"));
+        out.push_str(&format!("# TYPE {fam_name} {type_str}\n"));
+        for (label, value) in &fam.samples {
+            match value {
+                MetricValue::Counter(v) | MetricValue::Gauge(v) => {
+                    out.push_str(&format!(
+                        "{fam_name}{} {v}\n",
+                        braced(&label_selector(label))
+                    ));
+                }
+                MetricValue::Histo(s) => {
+                    let mut cum = 0u64;
+                    for i in 0..NUM_BUCKETS {
+                        cum += s.buckets[i];
+                        let le = match bucket_upper_us(i) {
+                            Some(u) => u.to_string(),
+                            None => "+Inf".to_string(),
+                        };
+                        out.push_str(&format!(
+                            "{fam_name}_bucket{} {cum}\n",
+                            bucket_selector(label, &le)
+                        ));
+                    }
+                    // `cum` now holds the full bucket sum: emitting it
+                    // as _count (rather than the snapshot's separate
+                    // count field) makes `+Inf == _count` structural.
+                    out.push_str(&format!(
+                        "{fam_name}_sum{} {}\n",
+                        braced(&label_selector(label)),
+                        s.sum_us
+                    ));
+                    out.push_str(&format!(
+                        "{fam_name}_count{} {cum}\n",
+                        braced(&label_selector(label))
+                    ));
+                }
+            }
+        }
+    }
+
+    if let Some(info) = build_info {
+        out.push_str(
+            "# HELP graphlet_rf_build_info Daemon identity labels; the value is always 1\n",
+        );
+        out.push_str("# TYPE graphlet_rf_build_info gauge\n");
+        out.push_str(&format!(
+            "graphlet_rf_build_info{{config_fp=\"{}\",engine=\"{}\",version=\"{}\"}} 1\n",
+            escape_label(&info.config_fp),
+            escape_label(&info.engine),
+            escape_label(&info.version),
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fixed_registry() -> Registry {
+        let r = Registry::new();
+        r.counter("serve.errors.embed").add(2);
+        r.counter("serve.slow_spans").add(1);
+        r.gauge("pipeline.queue_depth").set(3);
+        let h = r.histo("serve.request_us.embed");
+        h.record_us(0);
+        h.record_us(3);
+        h.record_us(5);
+        r
+    }
+
+    /// Golden test: the fixed registry above renders to exactly this
+    /// text, byte for byte. The bucket tail (cumulative count frozen at
+    /// 3 past the 4..7 µs bucket) is generated by the same
+    /// `bucket_upper_us` the recorder uses, so the expectation is
+    /// independent of the renderer's own cumulation loop.
+    #[test]
+    fn golden_render_of_a_fixed_registry() {
+        let info = BuildInfo {
+            engine: "cpu".into(),
+            config_fp: "00000000c0ffee00".into(),
+            version: "1.2.3".into(),
+        };
+        let mut want = String::new();
+        want.push_str("# HELP pipeline_queue_depth (uncataloged metric)\n");
+        want.push_str("# TYPE pipeline_queue_depth gauge\n");
+        want.push_str("pipeline_queue_depth 3\n");
+        want.push_str("# HELP serve_errors Per-request error replies, by op\n");
+        want.push_str("# TYPE serve_errors counter\n");
+        want.push_str("serve_errors{op=\"embed\"} 2\n");
+        want.push_str(
+            "# HELP serve_request_us End-to-end request time from admission to reply write, by op\n",
+        );
+        want.push_str("# TYPE serve_request_us histogram\n");
+        // Recorded 0, 3, 5 µs -> bucket 0 (le 0) holds 1, bucket 2
+        // (le 3) brings the cumulation to 2, bucket 3 (le 7) to 3,
+        // every later bucket stays at 3.
+        for i in 0..NUM_BUCKETS {
+            let cum = match i {
+                0 | 1 => 1,
+                2 => 2,
+                _ => 3,
+            };
+            let le = bucket_upper_us(i).map_or("+Inf".into(), |u| u.to_string());
+            want.push_str(&format!("serve_request_us_bucket{{op=\"embed\",le=\"{le}\"}} {cum}\n"));
+        }
+        want.push_str("serve_request_us_sum{op=\"embed\"} 8\n");
+        want.push_str("serve_request_us_count{op=\"embed\"} 3\n");
+        want.push_str("# HELP serve_slow_spans Request spans that exceeded the --slow-ms threshold\n");
+        want.push_str("# TYPE serve_slow_spans counter\n");
+        want.push_str("serve_slow_spans 1\n");
+        want.push_str("# HELP graphlet_rf_build_info Daemon identity labels; the value is always 1\n");
+        want.push_str("# TYPE graphlet_rf_build_info gauge\n");
+        want.push_str(
+            "graphlet_rf_build_info{config_fp=\"00000000c0ffee00\",engine=\"cpu\",version=\"1.2.3\"} 1\n",
+        );
+        let got = render(&fixed_registry(), Some(&info));
+        assert_eq!(got, want, "renderer drifted from the golden text");
+    }
+
+    #[test]
+    fn multiple_ops_stay_one_family_with_one_header_pair() {
+        let r = Registry::new();
+        r.histo("serve.request_us.embed").record_us(1);
+        r.histo("serve.request_us.nearest").record_us(2);
+        let text = render(&r, None);
+        assert_eq!(text.matches("# TYPE serve_request_us histogram").count(), 1);
+        assert!(text.contains("serve_request_us_count{op=\"embed\"} 1"));
+        assert!(text.contains("serve_request_us_count{op=\"nearest\"} 1"));
+        // Headers precede every sample of the family.
+        let type_at = text.find("# TYPE serve_request_us histogram").unwrap();
+        let first_sample = text.find("serve_request_us_bucket").unwrap();
+        assert!(type_at < first_sample);
+    }
+
+    #[test]
+    fn label_values_escape_backslash_quote_and_newline() {
+        assert_eq!(escape_label("a\\b\"c\nd"), "a\\\\b\\\"c\\nd");
+        let info = BuildInfo {
+            engine: "cp\"u".into(),
+            config_fp: "a\\b".into(),
+            version: "1\n2".into(),
+        };
+        let text = render(&Registry::new(), Some(&info));
+        assert!(
+            text.contains("config_fp=\"a\\\\b\",engine=\"cp\\\"u\",version=\"1\\n2\""),
+            "{text}"
+        );
+        // The rendered body is still one sample per line: the newline
+        // in the version label must not split the line.
+        let info_line =
+            text.lines().find(|l| l.starts_with("graphlet_rf_build_info{")).unwrap();
+        assert!(info_line.ends_with("} 1"));
+    }
+
+    #[test]
+    fn inf_bucket_equals_count_and_buckets_are_monotone() {
+        let r = Registry::new();
+        let h = r.histo("cache.probe_us");
+        for us in [0u64, 1, 1, 7, 1_000_000, u64::MAX / 2] {
+            h.record_us(us);
+        }
+        let text = render(&r, None);
+        let mut prev = 0u64;
+        let mut inf = None;
+        for line in text.lines().filter(|l| l.starts_with("cache_probe_us_bucket")) {
+            let v: u64 = line.rsplit(' ').next().unwrap().parse().unwrap();
+            assert!(v >= prev, "cumulative buckets must be monotone: {line}");
+            prev = v;
+            if line.contains("le=\"+Inf\"") {
+                inf = Some(v);
+            }
+        }
+        let count: u64 = text
+            .lines()
+            .find(|l| l.starts_with("cache_probe_us_count"))
+            .unwrap()
+            .rsplit(' ')
+            .next()
+            .unwrap()
+            .parse()
+            .unwrap();
+        assert_eq!(inf, Some(count), "+Inf bucket must equal _count");
+        assert_eq!(count, 6);
+    }
+
+    #[test]
+    fn sanitize_maps_dots_and_leading_digits() {
+        assert_eq!(sanitize("serve.request_us"), "serve_request_us");
+        assert_eq!(sanitize("9lives"), "_9lives");
+        assert_eq!(sanitize("a-b c"), "a_b_c");
+    }
+}

@@ -149,18 +149,35 @@ pub struct SpanRing {
     recent: Mutex<VecDeque<SpanRecord>>,
     slow: Mutex<VecDeque<SpanRecord>>,
     slow_emitted: AtomicU64,
+    /// Where `serve.slow_spans` lands: the owning daemon's registry
+    /// (via [`with_registry`](Self::with_registry)), so two in-process
+    /// daemons never cross-contaminate each other's slow-span counts.
+    registry: Arc<super::metrics::Registry>,
 }
 
 impl SpanRing {
     /// `slow_ms = u64::MAX` disables slow-span capture entirely;
-    /// `slow_ms = 0` (the test axis) marks *every* span slow.
+    /// `slow_ms = 0` (the test axis) marks *every* span slow. Slow-span
+    /// counting lands in the process-global registry — daemons use
+    /// [`with_registry`](Self::with_registry) instead.
     pub fn new(cap: usize, slow_ms: u64) -> Arc<SpanRing> {
+        SpanRing::with_registry(cap, slow_ms, super::metrics::global_arc())
+    }
+
+    /// Like [`new`](Self::new), but `serve.slow_spans` increments in the
+    /// given instance-scoped registry.
+    pub fn with_registry(
+        cap: usize,
+        slow_ms: u64,
+        registry: Arc<super::metrics::Registry>,
+    ) -> Arc<SpanRing> {
         Arc::new(SpanRing {
             cap: cap.max(1),
             slow_threshold_us: slow_ms.saturating_mul(1000),
             recent: Mutex::new(VecDeque::new()),
             slow: Mutex::new(VecDeque::new()),
             slow_emitted: AtomicU64::new(0),
+            registry,
         })
     }
 
@@ -170,7 +187,7 @@ impl SpanRing {
             // once per span (Drop), and this is its only emission site.
             eprintln!("{}", Json::obj().set("slow_span", rec.to_json()));
             self.slow_emitted.fetch_add(1, Ordering::Relaxed);
-            super::metrics::global().counter("serve.slow_spans").inc();
+            self.registry.counter("serve.slow_spans").inc();
             let mut slow = self.slow.lock().unwrap();
             if slow.len() == SLOW_CAP {
                 slow.pop_front();

@@ -40,11 +40,18 @@
 //! dropping requests nor double-counting. The daemon-side p50/p99 from
 //! that histogram ride along in the report (`daemon_p50_ms` /
 //! `daemon_p99_ms`) so queueing inside the daemon is distinguishable
-//! from client-side RTT. Deltas, not absolutes: the registry is
-//! process-global, so in-process restart benches (and anything else in
-//! the process) share it.
+//! from client-side RTT. The deltas bracket a pass *window*; the
+//! registry itself is instance-scoped to the daemon, so no other
+//! in-process daemon (restart mode hosts two) can leak into the window.
+//!
+//! Restart mode also attaches an ephemeral HTTP sidecar to its hosted
+//! daemons and ends with a **scrape cross-check**: in the quiesced
+//! window after the last pass (all client threads joined), the
+//! Prometheus `/metrics` exposition must agree with the TCP `metrics`
+//! op on every per-op request count — one fact, two wire formats. The
+//! scrape latency rides along in the JSON line as `scrape_ms`.
 
-use std::io::{BufRead, BufReader, Write};
+use std::io::{BufRead, BufReader, Read, Write};
 use std::net::TcpStream;
 use std::thread::JoinHandle;
 
@@ -130,6 +137,10 @@ pub struct BenchRun {
     /// persisted corpus, in milliseconds (restart mode with a store
     /// only; `None` for [`run_bench`]).
     pub ann_build_ms: Option<f64>,
+    /// Wall time of the final `/metrics` HTTP scrape in the quiesced
+    /// cross-check window (restart mode only; `None` for [`run_bench`],
+    /// which has no hosted daemon to attach a sidecar to).
+    pub scrape_ms: Option<f64>,
 }
 
 impl BenchRun {
@@ -146,6 +157,9 @@ impl BenchRun {
         let mut out = Json::obj().set("bench", "serve").set("passes", passes);
         if let Some(ms) = self.ann_build_ms {
             out = out.set("ann_build_ms", ms);
+        }
+        if let Some(ms) = self.scrape_ms {
+            out = out.set("scrape_ms", ms);
         }
         out
     }
@@ -164,6 +178,7 @@ pub fn run_bench(addr: &str, clients: usize, per_client: usize, seed: u64) -> Re
     Ok(BenchRun {
         passes: vec![("cold".to_string(), cold), ("warm_l1".to_string(), warm_l1)],
         ann_build_ms: None,
+        scrape_ms: None,
     })
 }
 
@@ -191,7 +206,7 @@ pub fn run_restart_bench(
     );
     let graphs = workload(seed);
 
-    let (addr, handle) = host(cfg.clone(), engine)?;
+    let (addr, _http, handle) = host(cfg.clone(), engine)?;
     let cold = run_pass(&addr, clients, per_client, &graphs)?;
     let warm_l1 = run_pass(&addr, clients, per_client, &graphs)?;
     stop(&addr, handle)?;
@@ -199,7 +214,7 @@ pub fn run_restart_bench(
     // "Restart": a brand-new daemon process-equivalent — fresh pipeline,
     // empty L1 — over the store directory the first daemon populated.
     // Its open-time ANN build covers the whole persisted corpus.
-    let (addr, handle) = host(cfg.clone(), engine)?;
+    let (addr, http, handle) = host(cfg.clone(), engine)?;
     let ann_build = ann_build_ms(&addr)?;
     let warm_l2 = run_pass(&addr, clients, per_client, &graphs)?;
 
@@ -224,6 +239,13 @@ pub fn run_restart_bench(
         );
         nearest_passes.push((label, pass));
     }
+    // The scrape cross-check runs in a quiesced window — every client
+    // thread above has joined, nothing is in flight — so the HTTP
+    // exposition and the TCP snapshot must agree exactly.
+    let scrape_ms = match &http {
+        Some(h) => Some(scrape_crosscheck(&addr, h)?),
+        None => None,
+    };
     stop(&addr, handle)?;
 
     anyhow::ensure!(
@@ -248,7 +270,7 @@ pub fn run_restart_bench(
         ("warm_l2".to_string(), warm_l2),
     ];
     passes.extend(nearest_passes);
-    Ok(BenchRun { passes, ann_build_ms: ann_build })
+    Ok(BenchRun { passes, ann_build_ms: ann_build, scrape_ms })
 }
 
 /// The fixed bench workload: a seed-deterministic SBM set.
@@ -256,12 +278,76 @@ fn workload(seed: u64) -> Vec<AnyGraph> {
     SbmConfig { per_class: 4, ..Default::default() }.generate(&mut Rng::new(seed)).graphs
 }
 
-/// Bind + run a daemon on an ephemeral loopback port.
-fn host(cfg: ServeConfig, engine: Option<&Engine>) -> Result<(String, JoinHandle<Result<()>>)> {
+/// Bind + run a daemon on an ephemeral loopback port. Hosted daemons
+/// always get an ephemeral HTTP sidecar (unless the caller pinned a
+/// port) so the restart bench can run the scrape cross-check without
+/// any configuration.
+fn host(
+    mut cfg: ServeConfig,
+    engine: Option<&Engine>,
+) -> Result<(String, Option<String>, JoinHandle<Result<()>>)> {
+    if cfg.http_port.is_none() {
+        cfg.http_port = Some(0);
+    }
     let server = Server::bind("127.0.0.1:0", cfg, engine)?;
     let addr = server.local_addr().to_string();
+    let http = server.http_addr().map(|a| a.to_string());
     let handle = std::thread::spawn(move || server.run());
-    Ok((addr, handle))
+    Ok((addr, http, handle))
+}
+
+/// One-shot HTTP GET against the daemon's sidecar; returns the body of
+/// a 200 reply.
+fn http_get(http_addr: &str, path: &str) -> Result<String> {
+    let mut stream = TcpStream::connect(http_addr)
+        .with_context(|| format!("connecting scrape probe to {http_addr}"))?;
+    write!(stream, "GET {path} HTTP/1.1\r\nHost: {http_addr}\r\nAccept: text/plain\r\n\r\n")?;
+    stream.flush()?;
+    let mut raw = String::new();
+    stream.read_to_string(&mut raw)?;
+    anyhow::ensure!(
+        raw.starts_with("HTTP/1.1 200"),
+        "GET {path}: expected 200, got {:?}",
+        raw.lines().next().unwrap_or("")
+    );
+    let (_, body) = raw
+        .split_once("\r\n\r\n")
+        .ok_or_else(|| anyhow::anyhow!("GET {path}: malformed HTTP reply"))?;
+    Ok(body.to_string())
+}
+
+/// One sample out of a Prometheus text body: the value of the line that
+/// starts with exactly `series` (name plus its full label selector).
+fn prom_value(body: &str, series: &str) -> Option<u64> {
+    body.lines()
+        .filter(|l| !l.starts_with('#'))
+        .find_map(|l| l.strip_prefix(series)?.strip_prefix(' ')?.trim().parse().ok())
+}
+
+/// The scrape cross-check: with the daemon quiesced, `/metrics` and the
+/// TCP `metrics` op are two wire formats over the same registry, so
+/// their per-op request counts must be equal — not merely close.
+/// Returns the scrape's wall time in milliseconds for the JSON line.
+fn scrape_crosscheck(addr: &str, http_addr: &str) -> Result<f64> {
+    let t = Timer::start();
+    let body = http_get(http_addr, "/metrics")?;
+    let scrape_ms = t.elapsed_secs() * 1e3;
+    for op in ["embed", "nearest"] {
+        let tcp = request_histo(addr, op)?;
+        let series = format!("serve_request_us_count{{op=\"{op}\"}}");
+        let http_count = prom_value(&body, &series).unwrap_or(0);
+        anyhow::ensure!(
+            http_count == tcp.count,
+            "scrape cross-check ({op}): /metrics says {http_count} requests, the TCP \
+             metrics op says {}",
+            tcp.count
+        );
+    }
+    anyhow::ensure!(
+        body.contains("graphlet_rf_build_info{"),
+        "scrape cross-check: graphlet_rf_build_info series missing from /metrics"
+    );
+    Ok(scrape_ms)
 }
 
 fn stop(addr: &str, handle: JoinHandle<Result<()>>) -> Result<()> {

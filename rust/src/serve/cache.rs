@@ -326,10 +326,13 @@ struct AnnCell {
     queries: AtomicU64,
     probed_lists: AtomicU64,
     scanned_rows: AtomicU64,
+    /// Where `ann.build_us` records — owned (not borrowed) because the
+    /// background rebuild thread outlives any caller frame.
+    registry: Arc<crate::obs::Registry>,
 }
 
 impl AnnCell {
-    fn new(cfg: AnnConfig, dim: usize) -> AnnCell {
+    fn new(cfg: AnnConfig, dim: usize, registry: Arc<crate::obs::Registry>) -> AnnCell {
         let empty = Arc::new(AnnIndex::build(Vec::new(), dim, &cfg));
         AnnCell {
             cfg,
@@ -342,6 +345,7 @@ impl AnnCell {
             queries: AtomicU64::new(0),
             probed_lists: AtomicU64::new(0),
             scanned_rows: AtomicU64::new(0),
+            registry,
         }
     }
 
@@ -359,7 +363,7 @@ impl AnnCell {
         cell.pending.lock().expect("ann pending lock").retain(|(k, _)| !index.contains(k));
         cell.builds.fetch_add(1, Ordering::Relaxed);
         cell.last_build_us.store(t.elapsed().as_micros() as u64, Ordering::Relaxed);
-        crate::obs::global().histo("ann.build_us").record(t.elapsed());
+        cell.registry.histo("ann.build_us").record(t.elapsed());
     }
 
     fn stats(&self) -> AnnStats {
@@ -396,6 +400,11 @@ pub struct TieredCache {
     l2_hits: AtomicU64,
     l2_misses: AtomicU64,
     l2_promotions: AtomicU64,
+    /// Where `cache.probe_us` / `cache.l2_read_us` / `ann.probe_us`
+    /// record: the owning daemon's instance-scoped registry, or the
+    /// process-global default for caches built via [`TieredCache::new`]
+    /// / [`TieredCache::with_ann`].
+    registry: Arc<crate::obs::Registry>,
 }
 
 impl TieredCache {
@@ -424,10 +433,31 @@ impl TieredCache {
         store: Option<EmbeddingStore>,
         ann: Option<(AnnConfig, usize)>,
     ) -> TieredCache {
+        TieredCache::with_ann_registry(
+            l1_capacity,
+            policy,
+            row_cost,
+            store,
+            ann,
+            crate::obs::global_arc(),
+        )
+    }
+
+    /// Like [`TieredCache::with_ann`], but every cache/ANN histogram
+    /// records into the given instance-scoped registry (the serve
+    /// daemon passes its own).
+    pub fn with_ann_registry(
+        l1_capacity: usize,
+        policy: EvictPolicy,
+        row_cost: f64,
+        store: Option<EmbeddingStore>,
+        ann: Option<(AnnConfig, usize)>,
+        registry: Arc<crate::obs::Registry>,
+    ) -> TieredCache {
         let l2 = store.map(|s| Arc::new(Mutex::new(s)));
         let ann = match (&l2, ann) {
             (Some(store), Some((cfg, dim))) => {
-                let cell = Arc::new(AnnCell::new(cfg, dim));
+                let cell = Arc::new(AnnCell::new(cfg, dim, registry.clone()));
                 AnnCell::rebuild(&cell, store);
                 Some(cell)
             }
@@ -441,6 +471,7 @@ impl TieredCache {
             l2_hits: AtomicU64::new(0),
             l2_misses: AtomicU64::new(0),
             l2_promotions: AtomicU64::new(0),
+            registry,
         }
     }
 
@@ -455,7 +486,7 @@ impl TieredCache {
     pub fn get(&self, key: &CacheKey) -> Option<Vec<f32>> {
         let probe_start = Instant::now();
         let out = self.get_inner(key);
-        crate::obs::global().histo("cache.probe_us").record(probe_start.elapsed());
+        self.registry.histo("cache.probe_us").record(probe_start.elapsed());
         out
     }
 
@@ -466,7 +497,7 @@ impl TieredCache {
         let store = self.l2.as_ref()?;
         let read_start = Instant::now();
         let found = store.lock().expect("store lock").get(key);
-        crate::obs::global().histo("cache.l2_read_us").record(read_start.elapsed());
+        self.registry.histo("cache.l2_read_us").record(read_start.elapsed());
         match found {
             Some(row) => {
                 self.l2_hits.fetch_add(1, Ordering::Relaxed);
@@ -567,7 +598,7 @@ impl TieredCache {
         cell.queries.fetch_add(1, Ordering::Relaxed);
         cell.probed_lists.fetch_add(result.probed as u64, Ordering::Relaxed);
         cell.scanned_rows.fetch_add(result.scanned as u64, Ordering::Relaxed);
-        crate::obs::global().histo("ann.probe_us").record(probe_start.elapsed());
+        self.registry.histo("ann.probe_us").record(probe_start.elapsed());
         Ok(NearestOutcome {
             neighbors: result.neighbors,
             probed: result.probed,

@@ -1,0 +1,292 @@
+//! Minimal GET-only HTTP/1.1 sidecar for the serve daemon: the
+//! Prometheus scrape endpoint plus health/readiness probes, hand-rolled
+//! over [`TcpListener`] so the build stays zero-dependency.
+//!
+//! | path | reply |
+//! |---|---|
+//! | `/metrics` | [`crate::obs::prom::render`] of **this daemon's** registry, `Content-Type: text/plain; version=0.0.4` |
+//! | `/healthz` | `200 ok` — the process is alive and accepting |
+//! | `/readyz` | `200 ready` / `503 not ready` per the flag handed to [`HttpServer::spawn`] |
+//!
+//! Scope is deliberately tiny: GET only (anything else → 405), no
+//! keep-alive (`Connection: close` on every reply), request line + a
+//! drained header block and nothing more. Monitoring traffic stays off
+//! the TCP protocol port, and scraping is observation-only — reading
+//! `/metrics` in a loop cannot perturb embeddings (pinned by
+//! `tests/obs.rs`).
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use anyhow::{Context, Result};
+
+use crate::obs::{prom, BuildInfo, Registry};
+
+/// Shared state the accept loop and every connection handler read.
+struct HttpState {
+    registry: Arc<Registry>,
+    build_info: BuildInfo,
+    /// `/readyz` gate. The daemon's `Server::bind` is synchronous
+    /// (pipeline spawned, store recovered, ANN cell built) so it spawns
+    /// this listener with `ready = true`; the flag stays dynamic so the
+    /// not-ready reply is testable and a future async-recovery daemon
+    /// can flip it late.
+    ready: AtomicBool,
+    stop: AtomicBool,
+}
+
+/// A running HTTP sidecar listener. Dropping it does **not** stop the
+/// accept thread; call [`HttpServer::stop`] for a clean join (the
+/// daemon's `run` does this on shutdown).
+pub struct HttpServer {
+    state: Arc<HttpState>,
+    addr: SocketAddr,
+    accept: JoinHandle<()>,
+}
+
+impl HttpServer {
+    /// Bind `127.0.0.1:<port>` (0 picks an ephemeral port) and spawn
+    /// the accept loop.
+    pub fn spawn(
+        port: u16,
+        registry: Arc<Registry>,
+        build_info: BuildInfo,
+        ready: bool,
+    ) -> Result<HttpServer> {
+        let listener = TcpListener::bind(("127.0.0.1", port))
+            .with_context(|| format!("http: bind 127.0.0.1:{port}"))?;
+        let addr = listener.local_addr().context("http: local_addr")?;
+        let state = Arc::new(HttpState {
+            registry,
+            build_info,
+            ready: AtomicBool::new(ready),
+            stop: AtomicBool::new(false),
+        });
+        let st = state.clone();
+        let accept = std::thread::Builder::new()
+            .name("http-accept".into())
+            .spawn(move || accept_loop(&listener, &st))
+            .context("http: spawn accept thread")?;
+        Ok(HttpServer { state, addr, accept })
+    }
+
+    /// The bound address (useful with port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Flip the `/readyz` gate.
+    pub fn set_ready(&self, ready: bool) {
+        self.state.ready.store(ready, Ordering::Release);
+    }
+
+    /// Stop accepting and join the accept thread. In-flight connection
+    /// handlers finish on their own (each serves exactly one request).
+    pub fn stop(self) {
+        self.state.stop.store(true, Ordering::Release);
+        // Unblock the accept() call with a throwaway connection.
+        let _ = TcpStream::connect(self.addr);
+        let _ = self.accept.join();
+    }
+}
+
+fn accept_loop(listener: &TcpListener, state: &Arc<HttpState>) {
+    for conn in listener.incoming() {
+        if state.stop.load(Ordering::Acquire) {
+            break;
+        }
+        let Ok(stream) = conn else { continue };
+        let st = state.clone();
+        // One short-lived thread per connection, mirroring the TCP
+        // protocol server; scrape traffic is low-rate by construction.
+        let _ = std::thread::Builder::new()
+            .name("http-conn".into())
+            .spawn(move || handle_conn(stream, &st));
+    }
+}
+
+/// Serve exactly one request on `stream`, then close. Any parse or I/O
+/// failure just drops the connection — probes retry, nothing to unwind.
+fn handle_conn(stream: TcpStream, state: &HttpState) {
+    let Ok(peer) = stream.try_clone() else { return };
+    let mut reader = BufReader::new(peer);
+    let mut line = String::new();
+    if reader.read_line(&mut line).is_err() || line.is_empty() {
+        return;
+    }
+    // "GET /path HTTP/1.1" — keep only method + path.
+    let mut parts = line.split_whitespace();
+    let method = parts.next().unwrap_or("");
+    let path = parts.next().unwrap_or("");
+    // Drain headers to the blank line; we act on none of them.
+    let mut hdr = String::new();
+    loop {
+        hdr.clear();
+        match reader.read_line(&mut hdr) {
+            Ok(0) => break,
+            Ok(_) if hdr == "\r\n" || hdr == "\n" => break,
+            Ok(_) => continue,
+            Err(_) => return,
+        }
+    }
+    let mut stream = stream;
+    if method != "GET" {
+        let _ = write_response(&mut stream, 405, "Method Not Allowed", TEXT_PLAIN, "method not allowed\n");
+        return;
+    }
+    let _ = match path {
+        "/metrics" => {
+            let body = prom::render(&state.registry, Some(&state.build_info));
+            write_response(&mut stream, 200, "OK", PROM_TEXT, &body)
+        }
+        "/healthz" => write_response(&mut stream, 200, "OK", TEXT_PLAIN, "ok\n"),
+        "/readyz" => {
+            if state.ready.load(Ordering::Acquire) {
+                write_response(&mut stream, 200, "OK", TEXT_PLAIN, "ready\n")
+            } else {
+                write_response(&mut stream, 503, "Service Unavailable", TEXT_PLAIN, "not ready\n")
+            }
+        }
+        _ => write_response(&mut stream, 404, "Not Found", TEXT_PLAIN, "not found\n"),
+    };
+}
+
+/// The exposition-format content type Prometheus' scraper negotiates.
+const PROM_TEXT: &str = "text/plain; version=0.0.4; charset=utf-8";
+const TEXT_PLAIN: &str = "text/plain; charset=utf-8";
+
+fn write_response(
+    stream: &mut TcpStream,
+    code: u16,
+    reason: &str,
+    content_type: &str,
+    body: &str,
+) -> std::io::Result<()> {
+    let head = format!(
+        "HTTP/1.1 {code} {reason}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body.as_bytes())?;
+    stream.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Read;
+
+    fn test_build_info() -> BuildInfo {
+        BuildInfo {
+            engine: "cpu".to_string(),
+            config_fp: "00000000deadbeef".to_string(),
+            version: "0.0.0-test".to_string(),
+        }
+    }
+
+    /// Raw one-shot GET: returns (status line, headers, body).
+    fn get(addr: SocketAddr, path: &str) -> (String, String, String) {
+        let mut s = TcpStream::connect(addr).unwrap();
+        write!(s, "GET {path} HTTP/1.1\r\nHost: localhost\r\nAccept: */*\r\n\r\n").unwrap();
+        let mut raw = String::new();
+        s.read_to_string(&mut raw).unwrap();
+        let (head, body) = raw.split_once("\r\n\r\n").expect("header/body split");
+        let (status, headers) = head.split_once("\r\n").unwrap_or((head, ""));
+        (status.to_string(), headers.to_string(), body.to_string())
+    }
+
+    fn spawn_test_server(ready: bool) -> (HttpServer, Arc<Registry>) {
+        let registry = Arc::new(Registry::new());
+        let srv = HttpServer::spawn(0, registry.clone(), test_build_info(), ready).unwrap();
+        (srv, registry)
+    }
+
+    #[test]
+    fn healthz_and_readyz_when_ready() {
+        let (srv, _reg) = spawn_test_server(true);
+        let addr = srv.local_addr();
+        let (status, _, body) = get(addr, "/healthz");
+        assert_eq!(status, "HTTP/1.1 200 OK");
+        assert_eq!(body, "ok\n");
+        let (status, _, body) = get(addr, "/readyz");
+        assert_eq!(status, "HTTP/1.1 200 OK");
+        assert_eq!(body, "ready\n");
+        srv.stop();
+    }
+
+    #[test]
+    fn readyz_is_503_until_ready_flips() {
+        let (srv, _reg) = spawn_test_server(false);
+        let addr = srv.local_addr();
+        let (status, _, body) = get(addr, "/readyz");
+        assert_eq!(status, "HTTP/1.1 503 Service Unavailable");
+        assert_eq!(body, "not ready\n");
+        srv.set_ready(true);
+        let (status, _, _) = get(addr, "/readyz");
+        assert_eq!(status, "HTTP/1.1 200 OK");
+        srv.stop();
+    }
+
+    #[test]
+    fn metrics_serves_the_instance_registry_in_prom_format() {
+        let (srv, registry) = spawn_test_server(true);
+        registry.counter("serve.errors.embed").add(3);
+        registry.histo("serve.request_us.embed").record_us(7);
+        let (status, headers, body) = get(srv.local_addr(), "/metrics");
+        assert_eq!(status, "HTTP/1.1 200 OK");
+        assert!(
+            headers.contains("Content-Type: text/plain; version=0.0.4; charset=utf-8"),
+            "exposition content type missing: {headers}"
+        );
+        assert!(body.contains("serve_errors{op=\"embed\"} 3"), "counter missing:\n{body}");
+        assert!(body.contains("serve_request_us_count{op=\"embed\"} 1"), "histo missing:\n{body}");
+        assert!(
+            body.contains(
+                "graphlet_rf_build_info{config_fp=\"00000000deadbeef\",engine=\"cpu\",version=\"0.0.0-test\"} 1"
+            ),
+            "build info missing:\n{body}"
+        );
+        // Content-Length must match the body byte count the client read.
+        let len: usize = headers
+            .lines()
+            .find_map(|l| l.strip_prefix("Content-Length: "))
+            .expect("Content-Length header")
+            .parse()
+            .unwrap();
+        assert_eq!(len, body.len());
+        srv.stop();
+    }
+
+    #[test]
+    fn unknown_path_is_404_and_post_is_405() {
+        let (srv, _reg) = spawn_test_server(true);
+        let addr = srv.local_addr();
+        let (status, _, _) = get(addr, "/nope");
+        assert_eq!(status, "HTTP/1.1 404 Not Found");
+        let mut s = TcpStream::connect(addr).unwrap();
+        write!(s, "POST /metrics HTTP/1.1\r\nHost: x\r\nContent-Length: 0\r\n\r\n").unwrap();
+        let mut raw = String::new();
+        s.read_to_string(&mut raw).unwrap();
+        assert!(raw.starts_with("HTTP/1.1 405 "), "want 405, got: {raw}");
+        srv.stop();
+    }
+
+    #[test]
+    fn two_listeners_serve_isolated_registries() {
+        let (a, reg_a) = spawn_test_server(true);
+        let (b, reg_b) = spawn_test_server(true);
+        reg_a.counter("serve.errors.embed").add(5);
+        reg_b.counter("serve.errors.nearest").inc();
+        let (_, _, body_a) = get(a.local_addr(), "/metrics");
+        let (_, _, body_b) = get(b.local_addr(), "/metrics");
+        assert!(body_a.contains("serve_errors{op=\"embed\"} 5"));
+        assert!(!body_a.contains("op=\"nearest\""), "a leaked b's counter:\n{body_a}");
+        assert!(body_b.contains("serve_errors{op=\"nearest\"} 1"));
+        assert!(!body_b.contains("op=\"embed\""), "b leaked a's counter:\n{body_b}");
+        a.stop();
+        b.stop();
+    }
+}

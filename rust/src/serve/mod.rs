@@ -79,7 +79,23 @@
 //! Every request carries a [`crate::obs::TraceCtx`] from admission to
 //! reply; spans slower than `--slow-ms` also emit one JSON line to
 //! stderr. Recording is observation-only, so tracing cannot perturb
-//! embeddings (pinned by `tests/obs.rs`).
+//! embeddings (pinned by `tests/obs.rs`). Each daemon owns its own
+//! [`crate::obs::Registry`] — two in-process daemons report fully
+//! isolated numbers.
+//!
+//! ## HTTP endpoints (`--http-port`, module [`http`])
+//!
+//! A minimal GET-only HTTP/1.1 sidecar listener (still zero deps) so
+//! standard tooling can scrape without speaking the TCP protocol:
+//!
+//! | path | reply |
+//! |---|---|
+//! | `/metrics` | this daemon's registry in Prometheus text format v0.0.4 ([`crate::obs::prom`]), plus `graphlet_rf_build_info` |
+//! | `/healthz` | `200 ok` while the process accepts connections |
+//! | `/readyz` | `200 ready` once pipeline is up, store recovered, and the ANN cell initialized; `503` before that |
+//!
+//! Without `--http-port` no HTTP socket is opened and the daemon is
+//! exactly the historical TCP-only service.
 //!
 //! Request/reply format and per-request error semantics live in
 //! [`protocol`]; the cache key + tiering discipline in [`cache`]; the
@@ -97,10 +113,12 @@
 
 pub mod bench;
 pub mod cache;
+pub mod http;
 pub mod protocol;
 pub mod server;
 
 pub use bench::{run_bench, run_restart_bench, send_shutdown, BenchReport, BenchRun};
+pub use http::HttpServer;
 pub use cache::{
     config_fingerprint, recompute_cost_estimate, AnnStats, CacheKey, CacheStats, EmbeddingCache,
     EvictPolicy, NearestOutcome, TieredCache, TieredStats,

@@ -82,6 +82,12 @@ pub struct ServeConfig {
     /// (the default) disables slow capture; `0` marks every request —
     /// the CI obs axis uses that to exercise the slow path everywhere.
     pub slow_ms: u64,
+    /// HTTP observability port (`--http-port`): serves `GET /metrics`
+    /// (Prometheus text format), `/healthz`, and `/readyz` on
+    /// `127.0.0.1:<port>` next to the TCP protocol socket. `Some(0)`
+    /// binds an ephemeral port (tests); `None` (the default) disables
+    /// the listener entirely.
+    pub http_port: Option<u16>,
 }
 
 impl Default for ServeConfig {
@@ -99,6 +105,7 @@ impl Default for ServeConfig {
             ann_probe: crate::ann::DEFAULT_PROBE,
             ann_min_brute: crate::ann::DEFAULT_MIN_BRUTE,
             slow_ms: slow_ms_default(),
+            http_port: None,
         }
     }
 }
@@ -127,16 +134,32 @@ struct ServeCtx {
     connections: AtomicU64,
     requests: AtomicU64,
     errors: AtomicU64,
+    /// This daemon's instance-scoped metric registry: every recording
+    /// site in its pipeline/cache/store/ANN/span-ring lands here, so
+    /// two in-process daemons report fully isolated metrics. The
+    /// process-global registry is only the batch-CLI default.
+    registry: Arc<obs::Registry>,
     /// Finished request spans (`trace` op + slow-span stderr lines).
     ring: Arc<SpanRing>,
     /// Daemon start time (`stats.server.uptime_secs`).
     started: Instant,
 }
 
+/// Count one per-request error reply: the coarse total (`stats.server.
+/// errors`) plus the per-op `serve.errors.<op>` counter surfaced by
+/// `stats` and `/metrics`.
+fn record_error(ctx: &ServeCtx, op: &str) {
+    ctx.errors.fetch_add(1, Ordering::Relaxed);
+    ctx.registry.counter(&format!("serve.errors.{op}")).inc();
+}
+
 /// A bound, not-yet-running server (bind early so callers learn the
 /// ephemeral port before spawning `run`).
 pub struct Server {
     listener: TcpListener,
+    /// The observability HTTP listener (`--http-port`), if enabled;
+    /// stopped when `run` returns.
+    http: Option<super::http::HttpServer>,
     ctx: Arc<ServeCtx>,
 }
 
@@ -147,16 +170,21 @@ impl Server {
     /// opened (recovering whatever a previous daemon left, torn tails
     /// skipped) and tiered under the in-RAM cache.
     pub fn bind(addr: &str, cfg: ServeConfig, engine: Option<&Engine>) -> Result<Server> {
-        let pipeline = StreamingPipeline::new(&cfg.gsa, engine)?;
+        // One registry per daemon: everything constructed below records
+        // into it, never into the process-global default.
+        let registry = Arc::new(obs::Registry::new());
+        let pipeline = StreamingPipeline::with_registry(&cfg.gsa, engine, registry.clone())?;
         let listener =
             TcpListener::bind(addr).with_context(|| format!("binding serve socket {addr}"))?;
         let local = listener.local_addr()?;
         let config_fp = config_fingerprint(pipeline.cfg());
         let store = match &cfg.store_dir {
-            Some(dir) => Some(
-                EmbeddingStore::open(StoreConfig::new(dir.clone()))
-                    .with_context(|| format!("opening embedding store {}", dir.display()))?,
-            ),
+            Some(dir) => {
+                let mut s = EmbeddingStore::open(StoreConfig::new(dir.clone()))
+                    .with_context(|| format!("opening embedding store {}", dir.display()))?;
+                s.set_registry(registry.clone());
+                Some(s)
+            }
             None => None,
         };
         // The ANN side-car rides on the persistent tier: without a
@@ -172,16 +200,35 @@ impl Server {
                 cfg.gsa.m,
             )
         });
-        let cache = TieredCache::with_ann(
+        let cache = TieredCache::with_ann_registry(
             cfg.cache_capacity,
             cfg.cache_policy,
             recompute_cost_estimate(pipeline.cfg()),
             store,
             ann,
+            registry.clone(),
         );
+        // Everything /readyz vouches for is now up: the pipeline's
+        // worker/shard threads are spawned, the store (if any) finished
+        // its recovery scan, and the ANN cell (if any) completed its
+        // synchronous first build — so the HTTP listener starts ready.
+        let http = match cfg.http_port {
+            Some(port) => Some(super::http::HttpServer::spawn(
+                port,
+                registry.clone(),
+                obs::BuildInfo {
+                    engine: cfg.gsa.engine.name().to_string(),
+                    config_fp: format!("{config_fp:016x}"),
+                    version: env!("CARGO_PKG_VERSION").to_string(),
+                },
+                true,
+            )?),
+            None => None,
+        };
         let cfg_slow_ms = cfg.slow_ms;
         Ok(Server {
             listener,
+            http,
             ctx: Arc::new(ServeCtx {
                 cfg,
                 pipeline,
@@ -192,7 +239,8 @@ impl Server {
                 connections: AtomicU64::new(0),
                 requests: AtomicU64::new(0),
                 errors: AtomicU64::new(0),
-                ring: SpanRing::new(TRACE_RING_CAP, cfg_slow_ms),
+                ring: SpanRing::with_registry(TRACE_RING_CAP, cfg_slow_ms, registry.clone()),
+                registry,
                 started: Instant::now(),
             }),
         })
@@ -201,6 +249,12 @@ impl Server {
     /// The bound address (resolves ephemeral ports).
     pub fn local_addr(&self) -> SocketAddr {
         self.ctx.addr
+    }
+
+    /// The observability HTTP address, when `--http-port` is set
+    /// (resolves ephemeral ports).
+    pub fn http_addr(&self) -> Option<SocketAddr> {
+        self.http.as_ref().map(|h| h.local_addr())
     }
 
     /// Fingerprint of the *normalized* pipeline config — the value
@@ -226,6 +280,10 @@ impl Server {
                 }
                 Err(e) => eprintln!("serve: accept error: {e}"),
             }
+        }
+        // The daemon is going down: take the scrape endpoint with it.
+        if let Some(http) = self.http {
+            http.stop();
         }
         Ok(())
     }
@@ -315,7 +373,7 @@ fn handle_conn(stream: TcpStream, ctx: &Arc<ServeCtx>) {
         if line.len() > ctx.cfg.max_line_bytes {
             // The rest of the oversized line is unread: the stream is no
             // longer line-synchronized, so reply and drop the connection.
-            ctx.errors.fetch_add(1, Ordering::Relaxed);
+            record_error(ctx, "error");
             let trace = TraceCtx::new("error", 0, ctx.ring.clone());
             send_raw(
                 &shared,
@@ -379,7 +437,7 @@ fn handle_request(
     let req = match parse_request(line) {
         Ok(r) => r,
         Err(ProtoError { id, msg }) => {
-            ctx.errors.fetch_add(1, Ordering::Relaxed);
+            record_error(ctx, "error");
             let trace = TraceCtx::new("error", id.unwrap_or(0), ctx.ring.clone());
             send_raw(shared, reply_tx, tag, error_reply(id, &msg), trace);
             return Flow::Continue;
@@ -418,9 +476,10 @@ fn handle_request(
             Flow::Continue
         }
         Request::Metrics { id } => {
-            // The full registry snapshot: counters, gauges, and every
-            // histogram's log₂ buckets + derived percentiles.
-            let line = obs::global()
+            // This daemon's full registry snapshot: counters, gauges,
+            // and every histogram's log₂ buckets + derived percentiles.
+            let line = ctx
+                .registry
                 .snapshot_json()
                 .set("id", id)
                 .set("ok", true)
@@ -460,7 +519,7 @@ fn handle_request(
         }
         Request::Embed { id, v, edges, graph_index } => {
             if let Err(msg) = validate_query(ctx, v, &edges, graph_index) {
-                ctx.errors.fetch_add(1, Ordering::Relaxed);
+                record_error(ctx, "embed");
                 send_raw(shared, reply_tx, tag, error_reply(Some(id), &msg), trace);
                 return Flow::Continue;
             }
@@ -485,21 +544,21 @@ fn handle_request(
         }
         Request::Nearest { id, v, edges, graph_index, k, probe } => {
             if let Err(msg) = validate_query(ctx, v, &edges, graph_index) {
-                ctx.errors.fetch_add(1, Ordering::Relaxed);
+                record_error(ctx, "nearest");
                 send_raw(shared, reply_tx, tag, error_reply(Some(id), &msg), trace);
                 return Flow::Continue;
             }
             // k is validated against the *stored* corpus up front so the
             // obvious misuses fail fast, before the query is embedded.
             let Some(n) = ctx.cache.store_len() else {
-                ctx.errors.fetch_add(1, Ordering::Relaxed);
+                record_error(ctx, "nearest");
                 let msg =
                     "nearest requires a persistent store (start the daemon with --store-dir)";
                 send_raw(shared, reply_tx, tag, error_reply(Some(id), msg), trace);
                 return Flow::Continue;
             };
             if k > n {
-                ctx.errors.fetch_add(1, Ordering::Relaxed);
+                record_error(ctx, "nearest");
                 let msg = format!("nearest: k={k} exceeds the {n} stored rows");
                 send_raw(shared, reply_tx, tag, error_reply(Some(id), &msg), trace);
                 return Flow::Continue;
@@ -551,7 +610,7 @@ fn submit_job(
     match ctx.pipeline.try_submit(job) {
         Ok(SubmitOutcome::Accepted) => {}
         Ok(SubmitOutcome::Overloaded) => {
-            ctx.errors.fetch_add(1, Ordering::Relaxed);
+            record_error(ctx, trace.op());
             send_raw(
                 shared,
                 reply_tx,
@@ -561,7 +620,7 @@ fn submit_job(
             );
         }
         Err(e) => {
-            ctx.errors.fetch_add(1, Ordering::Relaxed);
+            record_error(ctx, trace.op());
             send_raw(shared, reply_tx, tag, error_reply(Some(id), &e.to_string()), trace);
         }
     }
@@ -582,7 +641,7 @@ fn render_nearest(
     match out {
         Ok(out) => nearest_reply(id, &out.neighbors, out.probed, out.scanned),
         Err(e) => {
-            ctx.errors.fetch_add(1, Ordering::Relaxed);
+            record_error(ctx, trace.op());
             error_reply(Some(id), &e.to_string())
         }
     }
@@ -723,22 +782,35 @@ fn stats_reply(id: u64, ctx: &ServeCtx) -> String {
                 .set("errors", ctx.errors.load(Ordering::Relaxed))
                 .set("uptime_secs", ctx.started.elapsed().as_secs())
                 .set("engine", ctx.cfg.gsa.engine.name())
-                .set("config_fp", format!("{:016x}", ctx.config_fp)),
+                .set("config_fp", format!("{:016x}", ctx.config_fp))
+                .set("errors_by_op", errors_by_op(&ctx.registry)),
         )
-        .set("request_latency", request_latency_summaries())
+        .set("request_latency", request_latency_summaries(&ctx.registry))
         .to_string()
 }
 
 /// Per-op `serve.request_us.<op>` summaries (count + percentiles, no
-/// buckets) for the `stats` reply. The registry is process-global, so
-/// in one test process these totals span every in-process daemon —
-/// clients that need exact per-daemon numbers diff two snapshots.
-fn request_latency_summaries() -> Json {
+/// buckets) for the `stats` reply. The registry is instance-scoped, so
+/// these are exactly this daemon's requests — absolute values, no
+/// cross-daemon contamination to diff away.
+fn request_latency_summaries(registry: &obs::Registry) -> Json {
     let mut out = Json::obj();
     let prefix = "serve.request_us.";
-    for (name, snap) in obs::global().histo_snapshots_prefixed(prefix) {
+    for (name, snap) in registry.histo_snapshots_prefixed(prefix) {
         let op = &name[prefix.len()..];
         out = out.set(op, snap.to_json(false));
+    }
+    out
+}
+
+/// Per-op `serve.errors.<op>` counts for the `stats` reply (empty
+/// object until the first error).
+fn errors_by_op(registry: &obs::Registry) -> Json {
+    let mut out = Json::obj();
+    let prefix = "serve.errors.";
+    for (name, count) in registry.counters_prefixed(prefix) {
+        let op = &name[prefix.len()..];
+        out = out.set(op, count);
     }
     out
 }
@@ -765,7 +837,7 @@ fn writer_loop(
             PendingReply::Raw(s) => s,
             PendingReply::Embed { id, key } => match done.error {
                 Some(e) => {
-                    ctx.errors.fetch_add(1, Ordering::Relaxed);
+                    record_error(ctx, trace.op());
                     error_reply(Some(id), &e)
                 }
                 None => {
@@ -777,7 +849,7 @@ fn writer_loop(
             },
             PendingReply::Nearest { id, key, k, probe } => match done.error {
                 Some(e) => {
-                    ctx.errors.fetch_add(1, Ordering::Relaxed);
+                    record_error(ctx, trace.op());
                     error_reply(Some(id), &e)
                 }
                 None => {
@@ -792,7 +864,7 @@ fn writer_loop(
         // the bytes flush so a client that reads its reply and then
         // asks for `metrics` always sees its own request counted.
         trace.stamp("reply_write");
-        obs::global()
+        ctx.registry
             .histo(&format!("serve.request_us.{}", trace.op()))
             .record_us(trace.elapsed_us());
         drop(trace);

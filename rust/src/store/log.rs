@@ -107,6 +107,11 @@ pub struct EmbeddingStore {
     corrupt_skipped: u64,
     compactions: u64,
     scratch: Vec<u8>,
+    /// Where `store.append_us` / `store.compact_us` record. Defaults to
+    /// the process-global registry; the serve daemon swaps in its own
+    /// instance via [`set_registry`](Self::set_registry) right after
+    /// open, so two in-process daemons never share store histograms.
+    registry: std::sync::Arc<crate::obs::Registry>,
 }
 
 fn segment_path(dir: &Path, id: u64) -> PathBuf {
@@ -238,7 +243,15 @@ impl EmbeddingStore {
             corrupt_skipped,
             compactions: 0,
             scratch: Vec::new(),
+            registry: crate::obs::global_arc(),
         })
+    }
+
+    /// Route this store's latency histograms into an instance-scoped
+    /// registry (the owning daemon's) instead of the process-global
+    /// default.
+    pub fn set_registry(&mut self, registry: std::sync::Arc<crate::obs::Registry>) {
+        self.registry = registry;
     }
 
     /// Look up a row by content address. A record that fails its
@@ -273,7 +286,7 @@ impl EmbeddingStore {
         // Recorded before any auto-compaction this put trips, so the
         // append histogram stays an append histogram (compaction has
         // its own in `compact`).
-        crate::obs::global().histo("store.append_us").record(t.elapsed());
+        self.registry.histo("store.append_us").record(t.elapsed());
         self.maybe_compact()
     }
 
@@ -357,7 +370,7 @@ impl EmbeddingStore {
             let _ = std::fs::remove_file(segment_path(&self.cfg.dir, id));
         }
         self.compactions += 1;
-        crate::obs::global().histo("store.compact_us").record(t.elapsed());
+        self.registry.histo("store.compact_us").record(t.elapsed());
         Ok(())
     }
 

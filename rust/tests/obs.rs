@@ -11,14 +11,21 @@
 //!   `trace` op returns the request's stage stamps;
 //! - with `slow_ms = 0` every request is captured as a slow span,
 //!   each exactly once;
-//! - tracing on vs off is **bitwise invisible** to embeddings.
+//! - tracing on vs off is **bitwise invisible** to embeddings, and so
+//!   is a client hammering the HTTP `/metrics` endpoint during traffic;
+//! - two in-process daemons report fully isolated registries;
+//! - a live daemon's `/metrics` scrape passes a Prometheus text-format
+//!   lint (HELP/TYPE before samples, cumulative monotone `le` series,
+//!   `+Inf` == `_count`).
 //!
-//! The metric registry is process-global and the test harness runs
-//! tests concurrently in one process, so every daemon-side count
-//! assertion here uses before/after deltas with `>=`, never equality.
+//! Registries are **instance-scoped** — every daemon owns one — so the
+//! daemon-side count assertions here are direct equalities on exact
+//! values against a fresh daemon, no before/after delta-diffing, even
+//! though the harness runs tests concurrently in one process.
 
-use std::io::{BufRead, BufReader, Write};
+use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{SocketAddr, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -184,6 +191,29 @@ fn start_server(cfg: ServeConfig) -> (SocketAddr, JoinHandle<()>) {
     (addr, handle)
 }
 
+/// Like [`start_server`] but with an ephemeral HTTP sidecar attached;
+/// also returns the sidecar's address.
+fn start_server_http(cfg: ServeConfig) -> (SocketAddr, SocketAddr, JoinHandle<()>) {
+    let server =
+        Server::bind("127.0.0.1:0", ServeConfig { http_port: Some(0), ..cfg }, None).unwrap();
+    let addr = server.local_addr();
+    let http = server.http_addr().expect("http sidecar requested");
+    let handle = std::thread::spawn(move || server.run().unwrap());
+    (addr, http, handle)
+}
+
+/// One-shot GET against the HTTP sidecar: returns (status line, body).
+fn http_get(http: SocketAddr, path: &str) -> (String, String) {
+    let mut stream = TcpStream::connect(http).unwrap();
+    write!(stream, "GET {path} HTTP/1.1\r\nHost: test\r\nAccept: text/plain\r\n\r\n").unwrap();
+    stream.flush().unwrap();
+    let mut raw = String::new();
+    stream.read_to_string(&mut raw).unwrap();
+    let (head, body) = raw.split_once("\r\n\r\n").expect("malformed HTTP reply");
+    let status = head.lines().next().unwrap_or("").to_string();
+    (status, body.to_string())
+}
+
 struct Client {
     reader: BufReader<TcpStream>,
     writer: TcpStream,
@@ -213,6 +243,10 @@ fn histo_count(metrics: &Json, name: &str) -> u64 {
         .and_then(|h| h.get("count"))
         .and_then(Json::as_u64)
         .unwrap_or(0)
+}
+
+fn counter_value(metrics: &Json, name: &str) -> u64 {
+    metrics.get("counters").and_then(|c| c.get(name)).and_then(Json::as_u64).unwrap_or(0)
 }
 
 /// Spans deposit when the *last* handle drops — for pipeline-computed
@@ -258,6 +292,9 @@ fn metrics_and_trace_ops_roundtrip_against_a_live_daemon() {
     // The snapshot shape is scrapable: bucket bounds ride along once.
     let uppers = before.get("bucket_uppers_us").and_then(Json::as_array).unwrap();
     assert_eq!(uppers.len(), OVERFLOW_BUCKET);
+    // The registry is this daemon's own: a fresh daemon starts at zero,
+    // whatever the other tests in this process are doing concurrently.
+    assert_eq!(histo_count(&before, "serve.request_us.embed"), 0);
 
     // Fresh graph indices force every embed through the pipeline.
     let n = ds.len();
@@ -270,18 +307,18 @@ fn metrics_and_trace_ops_roundtrip_against_a_live_daemon() {
     }
 
     // Acceptance criterion: after real traffic the stage histograms
-    // moved. The daemon records the request histogram before flushing
-    // the reply bytes, so the embed count is already final here.
+    // moved — direct values, no deltas (instance-scoped registry). The
+    // daemon records the request histogram before flushing the reply
+    // bytes, so the embed count is already final here: exactly n, this
+    // client being the daemon's only traffic source.
     let after = Json::parse(client.roundtrip(r#"{"op":"metrics","id":2}"#).trim()).unwrap();
     for name in
         ["pipeline.queue_wait_us", "shard.projection_us", "cache.probe_us", "shard.batch_wait_us"]
     {
-        let delta = histo_count(&after, name).saturating_sub(histo_count(&before, name));
-        assert!(delta > 0, "{name} must move under embed traffic: {after}");
+        assert!(histo_count(&after, name) > 0, "{name} must move under embed traffic: {after}");
     }
-    let embeds =
-        histo_count(&after, "serve.request_us.embed") - histo_count(&before, "serve.request_us.embed");
-    assert!(embeds >= n as u64, "daemon counted {embeds} embeds, clients sent {n}");
+    let embeds = histo_count(&after, "serve.request_us.embed");
+    assert_eq!(embeds, n as u64, "daemon counted {embeds} embeds, client sent exactly {n}");
 
     // The trace op returns the spans with their stage stamps. The
     // pipeline path stamps cache_probe → admission → queue_wait →
@@ -379,6 +416,256 @@ fn slow_ms_zero_captures_every_request_exactly_once() {
     drop(client);
     send_shutdown(&addr.to_string()).unwrap();
     server.join().unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// Instance-scoped registries + the HTTP scrape endpoint
+// ---------------------------------------------------------------------------
+
+/// Two in-process daemons must report fully isolated numbers: direct
+/// value asserts on each one's registry, no delta-diffing. If the
+/// registries were shared, A would see B's errors and B would see A's
+/// embeds.
+#[test]
+fn two_daemons_report_fully_isolated_registries() {
+    let ds = SbmConfig { per_class: 3, r: 1.5, ..Default::default() }.generate(&mut Rng::new(11));
+    let mk_gsa = || {
+        let mut g = test_gsa();
+        g.s = 50;
+        g.m = 16;
+        g
+    };
+    let (addr_a, server_a) = start_server(ServeConfig { gsa: mk_gsa(), ..Default::default() });
+    let (addr_b, server_b) = start_server(ServeConfig { gsa: mk_gsa(), ..Default::default() });
+    let mut a = Client::connect(addr_a);
+    let mut b = Client::connect(addr_b);
+
+    // A: exactly 3 clean embeds. B: exactly 1 embed plus 2 parse
+    // errors (op "error" — the request never parsed far enough to name
+    // one).
+    for g in 0..3 {
+        parse_embed_reply(&a.roundtrip(&embed_request(g as u64, g, &ds.graphs[g]))).unwrap();
+    }
+    parse_embed_reply(&b.roundtrip(&embed_request(0, 0, &ds.graphs[0]))).unwrap();
+    for _ in 0..2 {
+        let reply = b.roundtrip("this is not json");
+        assert!(reply.contains("\"ok\":false"), "{reply}");
+    }
+
+    let ma = Json::parse(a.roundtrip(r#"{"op":"metrics","id":50}"#).trim()).unwrap();
+    let mb = Json::parse(b.roundtrip(r#"{"op":"metrics","id":51}"#).trim()).unwrap();
+    assert_eq!(histo_count(&ma, "serve.request_us.embed"), 3, "A's exact embed count");
+    assert_eq!(histo_count(&mb, "serve.request_us.embed"), 1, "B's exact embed count");
+    assert_eq!(counter_value(&ma, "serve.errors.error"), 0, "A saw no errors");
+    assert_eq!(counter_value(&mb, "serve.errors.error"), 2, "B's exact error count");
+
+    // The stats op surfaces the same per-op error counts.
+    let errs = |j: &Json, op: &str| {
+        j.get("server")
+            .and_then(|s| s.get("errors_by_op"))
+            .and_then(|e| e.get(op))
+            .and_then(Json::as_u64)
+            .unwrap_or(0)
+    };
+    let sa = Json::parse(a.roundtrip(r#"{"op":"stats","id":52}"#).trim()).unwrap();
+    let sb = Json::parse(b.roundtrip(r#"{"op":"stats","id":53}"#).trim()).unwrap();
+    assert_eq!(errs(&sa, "error"), 0);
+    assert_eq!(errs(&sb, "error"), 2);
+
+    drop(a);
+    drop(b);
+    send_shutdown(&addr_a.to_string()).unwrap();
+    send_shutdown(&addr_b.to_string()).unwrap();
+    server_a.join().unwrap();
+    server_b.join().unwrap();
+}
+
+/// Scraping `/metrics` in a tight loop for the whole traffic window
+/// must not move an embedding bit: the scraped daemon's rows are
+/// bitwise identical to an unscraped reference daemon's.
+#[test]
+fn continuous_metrics_scraping_changes_no_embedding_bits() {
+    let ds = SbmConfig { per_class: 3, r: 1.5, ..Default::default() }.generate(&mut Rng::new(11));
+    let n = ds.len();
+
+    // Reference rows from a plain daemon, no HTTP sidecar.
+    let (addr, server) = start_server(ServeConfig { gsa: test_gsa(), ..Default::default() });
+    let mut client = Client::connect(addr);
+    let mut want = Vec::with_capacity(n);
+    for g in 0..n {
+        let (_, row, _) =
+            parse_embed_reply(&client.roundtrip(&embed_request(g as u64, g, &ds.graphs[g])))
+                .unwrap();
+        want.push(row);
+    }
+    drop(client);
+    send_shutdown(&addr.to_string()).unwrap();
+    server.join().unwrap();
+
+    // The same config with a sidecar being hammered concurrently.
+    let (addr, http, server) =
+        start_server_http(ServeConfig { gsa: test_gsa(), ..Default::default() });
+    let stop = Arc::new(AtomicBool::new(false));
+    let scraper = {
+        let stop = stop.clone();
+        std::thread::spawn(move || {
+            let mut scrapes = 0u64;
+            while !stop.load(Ordering::Relaxed) {
+                let (status, body) = http_get(http, "/metrics");
+                assert_eq!(status, "HTTP/1.1 200 OK", "scrape {scrapes} failed");
+                assert!(body.contains("graphlet_rf_build_info{"), "scrape {scrapes} lost build info");
+                scrapes += 1;
+            }
+            scrapes
+        })
+    };
+    let mut client = Client::connect(addr);
+    for g in 0..n {
+        let (_, row, _) =
+            parse_embed_reply(&client.roundtrip(&embed_request(g as u64, g, &ds.graphs[g])))
+                .unwrap();
+        for (i, (a, b)) in want[g].iter().zip(&row).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "graph {g} dim {i}: scraping moved a bit");
+        }
+    }
+    stop.store(true, Ordering::Relaxed);
+    let scrapes = scraper.join().unwrap();
+    assert!(scrapes > 0, "the scraper never completed a scrape");
+    drop(client);
+    send_shutdown(&addr.to_string()).unwrap();
+    server.join().unwrap();
+}
+
+/// A live daemon's `/metrics` scrape, after a little of everything
+/// (embeds, an error), must pass the exposition-format lint.
+#[test]
+fn live_scrape_passes_the_exposition_format_lint() {
+    let ds = SbmConfig { per_class: 3, r: 1.5, ..Default::default() }.generate(&mut Rng::new(11));
+    let mut gsa = test_gsa();
+    gsa.s = 50;
+    gsa.m = 16;
+    let (addr, http, server) = start_server_http(ServeConfig { gsa, ..Default::default() });
+    let mut client = Client::connect(addr);
+    for g in 0..2 {
+        parse_embed_reply(&client.roundtrip(&embed_request(g as u64, g, &ds.graphs[g]))).unwrap();
+    }
+    let reply = client.roundtrip("not json");
+    assert!(reply.contains("\"ok\":false"), "{reply}");
+
+    let (status, body) = http_get(http, "/metrics");
+    assert_eq!(status, "HTTP/1.1 200 OK");
+    // Exact counts — this client is the daemon's only traffic source.
+    assert!(
+        body.contains(r#"serve_request_us_count{op="embed"} 2"#),
+        "exact embed count missing:\n{body}"
+    );
+    assert!(
+        body.contains(r#"serve_errors{op="error"} 1"#),
+        "exact error count missing:\n{body}"
+    );
+    lint_prometheus_text(&body);
+
+    drop(client);
+    send_shutdown(&addr.to_string()).unwrap();
+    server.join().unwrap();
+}
+
+/// Structural lint for Prometheus text format v0.0.4: every sample's
+/// family has `# HELP` and `# TYPE` lines before its first sample;
+/// histogram `le` series are strictly increasing with monotone
+/// cumulative values, end at `+Inf`, and the `+Inf` value equals the
+/// `_count` sample for the same label set. Label parsing here splits on
+/// commas, which is fine for the daemon's label values (op names never
+/// contain commas or quotes).
+fn lint_prometheus_text(body: &str) {
+    use std::collections::{BTreeMap, HashSet};
+    let mut helped: HashSet<String> = HashSet::new();
+    let mut typed: HashSet<String> = HashSet::new();
+    let mut buckets: BTreeMap<(String, String), Vec<(f64, u64)>> = BTreeMap::new();
+    let mut counts: BTreeMap<(String, String), u64> = BTreeMap::new();
+    for line in body.lines() {
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# HELP ") {
+            helped.insert(rest.split_whitespace().next().unwrap().to_string());
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# TYPE ") {
+            typed.insert(rest.split_whitespace().next().unwrap().to_string());
+            continue;
+        }
+        assert!(!line.starts_with('#'), "unknown comment form: {line}");
+        let name_end = line
+            .find(|c| c == '{' || c == ' ')
+            .unwrap_or_else(|| panic!("unparseable sample: {line}"));
+        let name = &line[..name_end];
+        // `_bucket`/`_sum`/`_count` suffixes belong to a histogram
+        // family; anything else (or a genuine metric ending in one of
+        // those words with its own headers) is its own family.
+        let family = name
+            .strip_suffix("_bucket")
+            .or_else(|| name.strip_suffix("_sum"))
+            .or_else(|| name.strip_suffix("_count"))
+            .filter(|f| typed.contains(*f))
+            .unwrap_or(name)
+            .to_string();
+        assert!(helped.contains(&family), "sample before # HELP {family}: {line}");
+        assert!(typed.contains(&family), "sample before # TYPE {family}: {line}");
+        let (labels, value) = match line[name_end..].strip_prefix('{') {
+            Some(rest) => {
+                let close =
+                    rest.rfind('}').unwrap_or_else(|| panic!("unclosed label braces: {line}"));
+                (&rest[..close], rest[close + 1..].trim())
+            }
+            None => ("", line[name_end..].trim()),
+        };
+        let value: f64 =
+            value.parse().unwrap_or_else(|_| panic!("unparseable sample value: {line}"));
+        if name.ends_with("_bucket") {
+            let (le, others) =
+                split_le(labels).unwrap_or_else(|| panic!("bucket sample without le: {line}"));
+            let le = if le == "+Inf" {
+                f64::INFINITY
+            } else {
+                le.parse().unwrap_or_else(|_| panic!("unparseable le {le:?}: {line}"))
+            };
+            buckets.entry((family, others)).or_default().push((le, value as u64));
+        } else if name.ends_with("_count") && typed.contains(&family) && family != name {
+            counts.insert((family, labels.to_string()), value as u64);
+        }
+    }
+    assert!(!buckets.is_empty(), "no histogram series in the scrape");
+    for ((family, labels), series) in &buckets {
+        let mut prev_le = f64::NEG_INFINITY;
+        let mut prev_v = 0u64;
+        for (le, v) in series {
+            assert!(*le > prev_le, "{family}{{{labels}}}: le not strictly increasing");
+            assert!(*v >= prev_v, "{family}{{{labels}}}: cumulative value decreased at le={le}");
+            prev_le = *le;
+            prev_v = *v;
+        }
+        let (last_le, last_v) = series.last().unwrap();
+        assert!(last_le.is_infinite(), "{family}{{{labels}}}: series does not end at +Inf");
+        let count = counts
+            .get(&(family.clone(), labels.clone()))
+            .unwrap_or_else(|| panic!("{family}{{{labels}}}: no matching _count sample"));
+        assert_eq!(last_v, count, "{family}{{{labels}}}: +Inf bucket != _count");
+    }
+}
+
+/// Pull `le="…"` out of a bucket sample's label selector, returning the
+/// value and the selector with the le pair removed.
+fn split_le(labels: &str) -> Option<(String, String)> {
+    let mut le = None;
+    let mut others = Vec::new();
+    for pair in labels.split(',') {
+        match pair.strip_prefix("le=\"").and_then(|v| v.strip_suffix('"')) {
+            Some(v) => le = Some(v.to_string()),
+            None => others.push(pair),
+        }
+    }
+    Some((le?, others.join(",")))
 }
 
 // ---------------------------------------------------------------------------

@@ -8,7 +8,7 @@
 //! - malformed JSON, oversized graphs, and mid-request disconnects fail
 //!   per-request without killing the daemon.
 
-use std::io::{BufRead, BufReader, Write};
+use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{SocketAddr, TcpStream};
 use std::thread::JoinHandle;
 
@@ -69,11 +69,45 @@ fn start_server(tag: &str, mut cfg: ServeConfig) -> (SocketAddr, JoinHandle<()>)
 /// whose assertions pin L1-only semantics — with an L2 tier an
 /// L1-evicted row is *still* served `cached:true` from disk, which is
 /// the tiering working as designed, not an eviction bug.
-fn start_server_ram_only(cfg: ServeConfig) -> (SocketAddr, JoinHandle<()>) {
+///
+/// With `GRAPHLET_RF_TEST_HTTP=1` (the CI HTTP axis) every daemon also
+/// carries an ephemeral HTTP sidecar and must scrape clean right after
+/// bind: `/readyz` reports ready (bind is synchronous — pipeline up,
+/// store recovered, ANN cell built) and `/metrics` serves the
+/// exposition format with the build-info series. The TCP-side
+/// assertions of every test then run against a scraped daemon.
+fn start_server_ram_only(mut cfg: ServeConfig) -> (SocketAddr, JoinHandle<()>) {
+    let http_axis = std::env::var("GRAPHLET_RF_TEST_HTTP").as_deref() == Ok("1");
+    if http_axis && cfg.http_port.is_none() {
+        cfg.http_port = Some(0);
+    }
     let server = Server::bind("127.0.0.1:0", cfg, None).unwrap();
     let addr = server.local_addr();
+    if let Some(http) = server.http_addr() {
+        let (status, body) = http_get(http, "/readyz");
+        assert!(status.starts_with("HTTP/1.1 200"), "/readyz after bind: {status} {body}");
+        let (status, body) = http_get(http, "/metrics");
+        assert!(status.starts_with("HTTP/1.1 200"), "/metrics after bind: {status}");
+        assert!(
+            body.contains("graphlet_rf_build_info{"),
+            "/metrics missing the build-info series:\n{body}"
+        );
+        let (status, _) = http_get(http, "/healthz");
+        assert!(status.starts_with("HTTP/1.1 200"), "/healthz after bind: {status}");
+    }
     let handle = std::thread::spawn(move || server.run().unwrap());
     (addr, handle)
+}
+
+/// One-shot GET against a daemon's HTTP sidecar: (status line, body).
+fn http_get(http: SocketAddr, path: &str) -> (String, String) {
+    let mut stream = TcpStream::connect(http).unwrap();
+    write!(stream, "GET {path} HTTP/1.1\r\nHost: test\r\nAccept: text/plain\r\n\r\n").unwrap();
+    stream.flush().unwrap();
+    let mut raw = String::new();
+    stream.read_to_string(&mut raw).unwrap();
+    let (head, body) = raw.split_once("\r\n\r\n").expect("malformed HTTP reply");
+    (head.lines().next().unwrap_or("").to_string(), body.to_string())
 }
 
 /// A tiny blocking request/reply client.

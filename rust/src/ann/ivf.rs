@@ -15,9 +15,9 @@
 
 use std::cmp::Ordering;
 
-use crate::store::CacheKey;
+use crate::store::{CacheKey, RowData};
 
-use super::kmeans::lloyd;
+use super::kmeans::lloyd_rows;
 
 /// Default fraction of posting lists scanned per query.
 pub const DEFAULT_PROBE: f64 = 0.25;
@@ -111,8 +111,13 @@ pub struct AnnIndex {
     dim: usize,
     /// Row keys, ascending — `rows[i]` belongs to `keys[i]`.
     keys: Vec<CacheKey>,
-    /// Flat `n × dim` row-major copy of the indexed rows.
-    rows: Vec<f32>,
+    /// The indexed rows, referenced in place: zero-copy views into
+    /// mapped sealed segments when the store feed provides them, owned
+    /// copies only for active-tail rows and legacy callers. Views pin
+    /// their segment mappings (`Arc`), so this index stays valid after
+    /// compaction deletes the files it was built from — that is the
+    /// atomic generation swap.
+    rows: Vec<RowData>,
     /// Flat `nlist × dim` centroids.
     centroids: Vec<f32>,
     /// Per-centroid posting lists of row indices.
@@ -122,13 +127,22 @@ pub struct AnnIndex {
 }
 
 impl AnnIndex {
-    /// Build an index over `entries`. Rows whose length differs from
-    /// `dim` are dropped (counted in [`AnnIndex::skipped`]); duplicate
-    /// keys keep their first row. Entries are sorted by key so the
-    /// build is a pure function of (row set, cfg) regardless of input
-    /// order — store snapshots and in-memory corpora build bitwise-
-    /// identical indexes.
-    pub fn build(mut entries: Vec<(CacheKey, Vec<f32>)>, dim: usize, cfg: &AnnConfig) -> AnnIndex {
+    /// Build an index over `entries` — owned rows (`Vec<f32>`) or
+    /// zero-copy [`RowData`] views, anything `Into<RowData>`. Rows
+    /// whose length differs from `dim` are dropped (counted in
+    /// [`AnnIndex::skipped`]); duplicate keys keep their first row.
+    /// Entries are sorted by key so the build is a pure function of
+    /// (row set, cfg) regardless of input order — store snapshots and
+    /// in-memory corpora build bitwise-identical indexes, and (via the
+    /// accessor-generic [`lloyd_rows`]) view-backed and copy-backed
+    /// feeds cluster bitwise identically too.
+    pub fn build<R: Into<RowData>>(
+        entries: Vec<(CacheKey, R)>,
+        dim: usize,
+        cfg: &AnnConfig,
+    ) -> AnnIndex {
+        let mut entries: Vec<(CacheKey, RowData)> =
+            entries.into_iter().map(|(k, r)| (k, r.into())).collect();
         let mut skipped = 0usize;
         entries.retain(|(_, row)| {
             let ok = dim > 0 && row.len() == dim;
@@ -142,17 +156,18 @@ impl AnnIndex {
 
         let n = entries.len();
         let mut keys = Vec::with_capacity(n);
-        let mut rows = Vec::with_capacity(n * dim);
+        let mut rows = Vec::with_capacity(n);
         for (key, row) in entries {
             keys.push(key);
-            rows.extend_from_slice(&row);
+            rows.push(row);
         }
 
         let (centroids, lists) = if n == 0 {
             (Vec::new(), Vec::new())
         } else {
             let nlist = isqrt(n).clamp(1, cfg.centroid_cap.max(1)).min(n);
-            let km = lloyd(&rows, dim, nlist, cfg.seed, cfg.kmeans_iters);
+            let km =
+                lloyd_rows(n, dim, |i| rows[i].as_slice(), nlist, cfg.seed, cfg.kmeans_iters);
             let mut lists = vec![Vec::new(); nlist];
             for (i, &a) in km.assign.iter().enumerate() {
                 lists[a as usize].push(i as u32);
@@ -222,7 +237,7 @@ impl AnnIndex {
                 let i = i as usize;
                 Neighbor {
                     key: self.keys[i],
-                    distance: l2_distance(query, &self.rows[i * self.dim..(i + 1) * self.dim]),
+                    distance: l2_distance(query, self.rows[i].as_slice()),
                 }
             })
             .collect();
@@ -260,6 +275,14 @@ impl AnnIndex {
     pub fn skipped(&self) -> usize {
         self.skipped
     }
+
+    /// Heap bytes this index *owns* for row storage. Zero-copy views
+    /// own nothing, so an index built over a fully sealed mmap'd store
+    /// reports ≈ 0 — the RSS-proxy assert that pins "the ANN build no
+    /// longer copies every row".
+    pub fn indexed_bytes(&self) -> u64 {
+        self.rows.iter().map(|r| r.owned_bytes() as u64).sum()
+    }
 }
 
 /// ⌊√n⌋ without pulling in integer-sqrt from unstable std. Exact for
@@ -290,7 +313,7 @@ mod tests {
 
     #[test]
     fn empty_index_answers_empty() {
-        let idx = AnnIndex::build(Vec::new(), 8, &AnnConfig::default());
+        let idx = AnnIndex::build(Vec::<(CacheKey, Vec<f32>)>::new(), 8, &AnnConfig::default());
         assert!(idx.is_empty());
         assert_eq!(idx.nlist(), 0);
         let q = idx.nearest(&[0.0; 8], 5, 1.0);
@@ -372,6 +395,58 @@ mod tests {
         assert_eq!((q.probed, q.scanned), (0, 80), "probe 1.0 must brute-scan");
         let q = large.nearest(&[0.0; 8], 5, 0.25);
         assert!(q.probed > 0, "above min_brute at probe<1 must take the IVF path");
+    }
+
+    #[test]
+    fn view_backed_build_is_bitwise_the_vec_backed_build_and_owns_nothing() {
+        use crate::store::{RowView, SegmentMap};
+        use std::sync::Arc;
+
+        let (n, dim) = (40usize, 8usize);
+        let cfg = AnnConfig::default();
+        let entries = corpus(n, dim, 0xFEED);
+        // Lay the rows out in one file exactly as a sealed segment
+        // would (4-aligned f32 LE bits) and build from views into it.
+        let mut bytes = Vec::new();
+        for (_, row) in &entries {
+            for v in row {
+                bytes.extend_from_slice(&v.to_bits().to_le_bytes());
+            }
+        }
+        let path = std::env::temp_dir()
+            .join(format!("graphlet_ivf_view_{}", std::process::id()));
+        std::fs::write(&path, &bytes).unwrap();
+        let map = Arc::new(SegmentMap::map(&path).unwrap());
+        let _ = std::fs::remove_file(&path);
+        let view_entries: Vec<(CacheKey, RowData)> = entries
+            .iter()
+            .enumerate()
+            .map(|(i, (k, row))| match RowView::new(Arc::clone(&map), i * dim * 4, dim) {
+                Some(v) => (*k, RowData::View(v)),
+                // Big-endian fallback: the comparison below still holds.
+                None => (*k, RowData::Owned(row.clone())),
+            })
+            .collect();
+
+        let owned_idx = AnnIndex::build(entries.clone(), dim, &cfg);
+        let view_idx = AnnIndex::build(view_entries, dim, &cfg);
+        assert_eq!(owned_idx.indexed_bytes(), (n * dim * 4) as u64);
+        if cfg!(target_endian = "little") {
+            assert_eq!(view_idx.indexed_bytes(), 0, "a view-backed index owns no row bytes");
+        }
+        assert_eq!(owned_idx.nlist(), view_idx.nlist());
+        for (_, qrow) in entries.iter().take(8) {
+            for probe in [0.25, 1.0] {
+                let a = owned_idx.nearest(qrow, 5, probe);
+                let b = view_idx.nearest(qrow, 5, probe);
+                assert_eq!((a.probed, a.scanned), (b.probed, b.scanned));
+                let abits: Vec<(CacheKey, u32)> =
+                    a.neighbors.iter().map(|nb| (nb.key, nb.distance.to_bits())).collect();
+                let bbits: Vec<(CacheKey, u32)> =
+                    b.neighbors.iter().map(|nb| (nb.key, nb.distance.to_bits())).collect();
+                assert_eq!(abits, bbits, "probe {probe}: row storage must not move a bit");
+            }
+        }
     }
 
     #[test]

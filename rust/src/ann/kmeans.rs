@@ -1,4 +1,6 @@
-//! Seeded Lloyd's k-means over flat row-major `f32` rows.
+//! Seeded Lloyd's k-means over `f32` rows — flat row-major slices
+//! ([`lloyd`]) or any indexed row storage ([`lloyd_rows`], which the
+//! IVF builder feeds zero-copy mmap views).
 //!
 //! This is the clustering stage of the IVFFlat index: deliberately
 //! small, dependency-free, and **deterministic** — same rows, same
@@ -56,7 +58,28 @@ fn dist_sq(a: &[f32], b: &[f32]) -> f64 {
 pub fn lloyd(rows: &[f32], dim: usize, k: usize, seed: u64, max_iters: usize) -> Kmeans {
     assert!(dim > 0, "kmeans: dim must be positive");
     assert_eq!(rows.len() % dim, 0, "kmeans: rows not a multiple of dim");
-    let n = rows.len() / dim;
+    lloyd_rows(rows.len() / dim, dim, |i| &rows[i * dim..(i + 1) * dim], k, seed, max_iters)
+}
+
+/// The generic core of [`lloyd`]: rows are reached through an accessor
+/// (`row(i)` → the i-th row, length `dim`) instead of one flat slice,
+/// so the IVF builder can cluster zero-copy [`crate::store::RowData`]
+/// views without first flattening them into an owned buffer. Iteration
+/// order, accumulation order, and every comparison are identical to the
+/// flat-slice path — `lloyd` delegates here — so results stay bitwise
+/// reproducible regardless of how rows are stored.
+///
+/// Contract: `dim > 0`, `1 <= k <= n`, and every `row(i)` for
+/// `i < n` has length `dim`.
+pub fn lloyd_rows<'a>(
+    n: usize,
+    dim: usize,
+    row: impl Fn(usize) -> &'a [f32],
+    k: usize,
+    seed: u64,
+    max_iters: usize,
+) -> Kmeans {
+    assert!(dim > 0, "kmeans: dim must be positive");
     assert!(k >= 1 && k <= n, "kmeans: need 1 <= k={k} <= n={n}");
 
     // Deterministic init: k distinct row indices, sorted so centroid
@@ -66,7 +89,9 @@ pub fn lloyd(rows: &[f32], dim: usize, k: usize, seed: u64, max_iters: usize) ->
     picks.sort_unstable();
     let mut centroids = Vec::with_capacity(k * dim);
     for &i in &picks {
-        centroids.extend_from_slice(&rows[i * dim..(i + 1) * dim]);
+        let r = row(i);
+        debug_assert_eq!(r.len(), dim, "kmeans: row {i} has the wrong length");
+        centroids.extend_from_slice(r);
     }
 
     let mut assign = vec![0u32; n];
@@ -77,11 +102,12 @@ pub fn lloyd(rows: &[f32], dim: usize, k: usize, seed: u64, max_iters: usize) ->
         // Assignment: nearest centroid, strict `<` so ties resolve to
         // the lowest centroid index.
         let mut changed = false;
-        for (row, a) in rows.chunks_exact(dim).zip(assign.iter_mut()) {
+        for (i, a) in assign.iter_mut().enumerate() {
+            let r = row(i);
             let mut best = 0u32;
             let mut best_d = f64::INFINITY;
             for (c, cent) in centroids.chunks_exact(dim).enumerate() {
-                let d = dist_sq(row, cent);
+                let d = dist_sq(r, cent);
                 if d < best_d {
                     best_d = d;
                     best = c as u32;
@@ -101,10 +127,10 @@ pub fn lloyd(rows: &[f32], dim: usize, k: usize, seed: u64, max_iters: usize) ->
         // Update: f64 accumulators in fixed row order.
         let mut sums = vec![0.0f64; k * dim];
         let mut counts = vec![0u32; k];
-        for (row, &a) in rows.chunks_exact(dim).zip(assign.iter()) {
+        for (i, &a) in assign.iter().enumerate() {
             let a = a as usize;
             counts[a] += 1;
-            for (s, &x) in sums[a * dim..(a + 1) * dim].iter_mut().zip(row) {
+            for (s, &x) in sums[a * dim..(a + 1) * dim].iter_mut().zip(row(i)) {
                 *s += f64::from(x);
             }
         }
@@ -132,12 +158,12 @@ pub fn lloyd(rows: &[f32], dim: usize, k: usize, seed: u64, max_iters: usize) ->
                     continue;
                 }
                 let mut best: Option<(f64, usize)> = None;
-                for (i, row) in rows.chunks_exact(dim).enumerate() {
+                for i in 0..n {
                     if claimed[i] {
                         continue;
                     }
                     let a = assign[i] as usize;
-                    let d = dist_sq(row, &centroids[a * dim..(a + 1) * dim]);
+                    let d = dist_sq(row(i), &centroids[a * dim..(a + 1) * dim]);
                     let farther = match best {
                         None => true,
                         Some((bd, _)) => d > bd,
@@ -148,8 +174,7 @@ pub fn lloyd(rows: &[f32], dim: usize, k: usize, seed: u64, max_iters: usize) ->
                 }
                 if let Some((_, i)) = best {
                     claimed[i] = true;
-                    centroids[c * dim..(c + 1) * dim]
-                        .copy_from_slice(&rows[i * dim..(i + 1) * dim]);
+                    centroids[c * dim..(c + 1) * dim].copy_from_slice(row(i));
                 }
             }
             // A reseed moved a centroid: the next assignment pass must
@@ -235,6 +260,24 @@ mod tests {
         assert_eq!(km.centroids.len(), dim);
         assert_eq!(km.centroids, vec![1.0, 2.0, 3.0]);
         assert_eq!(km.assign, vec![0, 0]);
+    }
+
+    #[test]
+    fn lloyd_rows_over_scattered_storage_is_bitwise_lloyd() {
+        // The accessor-generic core must not depend on rows being one
+        // contiguous buffer: hand it individually-boxed rows and demand
+        // bitwise-identical centroids and assignments.
+        let dim = 16;
+        let flat = gaussian_rows(70, dim, 0xBEE5);
+        let scattered: Vec<Vec<f32>> =
+            flat.chunks_exact(dim).map(|r| r.to_vec()).collect();
+        let a = lloyd(&flat, dim, 8, 11, 12);
+        let b = lloyd_rows(70, dim, |i| scattered[i].as_slice(), 8, 11, 12);
+        assert_eq!(a.iters, b.iters);
+        assert_eq!(a.assign, b.assign);
+        let abits: Vec<u32> = a.centroids.iter().map(|x| x.to_bits()).collect();
+        let bbits: Vec<u32> = b.centroids.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(abits, bbits, "row storage must be invisible to the math");
     }
 
     #[test]

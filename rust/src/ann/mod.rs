@@ -1,16 +1,21 @@
 //! ann: approximate nearest-neighbor retrieval (IVFFlat) over the
 //! persistent embedding store — the `nearest` serve op's engine.
 //!
-//! Dataflow:
+//! Dataflow (zero-copy since the mmap refactor):
 //!
 //! ```text
-//!   EmbeddingStore (live rows)
-//!        | snapshot_rows()          brief store lock, key-sorted
+//!   EmbeddingStore (live rows; sealed segments mmap'd)
+//!        | snapshot_row_data()      &self under a brief store lock:
+//!        |                          RowData::View per sealed row
+//!        v                          (no copy), RowData::Owned only
+//!        |                          for the active-segment tail
 //!        v
-//!   seeded Lloyd's k-means         kmeans::lloyd, runs OFF the lock
+//!   seeded Lloyd's k-means         kmeans::lloyd_rows, runs OFF the
+//!        |                         lock, reads rows in place
 //!        | nlist = min(isqrt(n), centroid_cap) centroids
 //!        v
-//!   AnnIndex: centroids + per-centroid posting lists of row ids
+//!   AnnIndex: centroids + per-centroid posting lists of row ids;
+//!   rows[i] is a view into the page cache (indexed_bytes ≈ 0)
 //!        |
 //!        |   query row (embedded by the pipeline)
 //!        |        |
@@ -24,6 +29,15 @@
 //!   sort by (distance, key) -> top-k Neighbors
 //! ```
 //!
+//! Generation lifecycle: every view holds an `Arc` to its segment's
+//! mapping, so a built index is self-contained — when compaction
+//! rewrites the store into a new generation and unlinks the old files,
+//! the *current* index keeps serving bitwise-correct rows out of the
+//! old (still-mapped) pages, and the single-flight rebuild then swaps
+//! in an index over the new generation atomically (one `Arc` store
+//! under `AnnCell`'s lock). Readers never observe a mix: a query runs
+//! entirely against whichever index generation it grabbed.
+//!
 //! The serve cache layers a **pending tail** on top: rows persisted
 //! after the last build are brute-scanned alongside the index until a
 //! background rebuild absorbs them, so `index ∪ pending` always covers
@@ -31,7 +45,8 @@
 //! Distances are exact on every path (the "approximate" part is only
 //! *which rows are considered* at probe < 1.0); ids and distances at
 //! probe 1.0 are pinned bitwise to a brute-force oracle by
-//! `tests/ann.rs`.
+//! `tests/ann.rs`, and view-backed vs copy-backed builds are pinned
+//! bitwise-identical by `tests/mmap.rs`.
 
 mod ivf;
 mod kmeans;
@@ -40,4 +55,4 @@ pub use ivf::{
     l2_distance, neighbor_cmp, AnnConfig, AnnIndex, AnnQuery, Neighbor, DEFAULT_CENTROID_CAP,
     DEFAULT_KMEANS_ITERS, DEFAULT_MIN_BRUTE, DEFAULT_PROBE, DEFAULT_REBUILD_PENDING,
 };
-pub use kmeans::{lloyd, Kmeans};
+pub use kmeans::{lloyd, lloyd_rows, Kmeans};

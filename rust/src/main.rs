@@ -170,6 +170,10 @@ serve       long-running embedding daemon: line-delimited JSON over TCP,
             weighs victims by row size x recompute cost),
             --store-dir DIR (persistent L2 segment log — rows survive
             daemon restarts and are served bitwise identical from disk),
+            --store-mmap true|false (memory-map sealed segments so L2
+            reads and ANN index rows are zero-copy views into the page
+            cache; default true on unix, or the GRAPHLET_RF_TEST_MMAP
+            env override),
             --max-nodes N, --max-edges N, plus the usual embedding
             flags (--k --s --m --variant --shards --workers).
             With a store the daemon also answers the nearest op (k-NN
@@ -192,12 +196,17 @@ serve-bench loopback load generator: --addr HOST:PORT (default
             reports labeled cold/warm_l1 passes (throughput, p50/p99,
             daemon-verified recompute counts) plus one JSON result
             line. With --store-dir DIR it instead hosts the daemon
-            itself and adds the warm_l2 restart pass — kill the daemon,
-            reopen the store, and measure zero-recompute throughput
-            (self-checked: any recompute or full miss fails the run) —
-            plus nearest_p10/p50/p100 retrieval passes (k-NN queries at
-            probe factors 0.1/0.5/1.0 over the persisted corpus, with
-            the index build cost reported as ann_build_ms).
+            itself and adds two restart passes — kill the daemon, then
+            reopen the store once with --store-mmap false (warm_l2, the
+            legacy read+copy path) and once with it true (warm_l2_mmap,
+            zero-copy page-cache views) — measuring zero-recompute
+            throughput and ns/row for both read paths (self-checked:
+            any recompute or full miss fails the run; the mmap pass
+            also requires store.mmap_reads == requests and a zero-owned
+            ANN index) — plus nearest_p10/p50/p100 retrieval passes
+            (k-NN queries at probe factors 0.1/0.5/1.0 over the
+            persisted corpus, with the index build cost reported as
+            ann_build_ms).
 
 fig3 --data-dir DIR loads the real TU-format dataset (e.g. D&D,
 REDDIT-BINARY; see rust/src/data/mod.rs for the expected file layout)
@@ -313,6 +322,7 @@ fn serve_cfg_from_args(
             None => defaults.cache_policy,
         },
         store_dir: args.get("store-dir").map(std::path::PathBuf::from),
+        store_mmap: args.parse_or("store-mmap", defaults.store_mmap),
         ann_probe: args.parse_or("ann-probe", defaults.ann_probe),
         ann_min_brute: args.parse_or("ann-min-brute", defaults.ann_min_brute),
         slow_ms: args.parse_or("slow-ms", defaults.slow_ms),
@@ -332,7 +342,7 @@ fn serve_cmd(ctx: &ExpContext, args: &Args, seed: u64) -> Result<()> {
     let cfg = serve_cfg_from_args(ctx, args, seed)?;
     println!(
         "serve: k={} s={} m={} variant={} engine={} shards={} workers={} fwht_threads={} \
-         cache_cap={} cache_policy={} store={} slow_ms={}",
+         cache_cap={} cache_policy={} store={} store_mmap={} slow_ms={}",
         cfg.gsa.k,
         cfg.gsa.s,
         cfg.gsa.m,
@@ -346,6 +356,7 @@ fn serve_cmd(ctx: &ExpContext, args: &Args, seed: u64) -> Result<()> {
         cfg.store_dir
             .as_ref()
             .map_or("none (RAM-only cache)".to_string(), |d| d.display().to_string()),
+        cfg.store_mmap,
         if cfg.slow_ms == u64::MAX { "off".to_string() } else { cfg.slow_ms.to_string() },
     );
     if cfg.store_dir.is_some() {
@@ -370,8 +381,9 @@ fn serve_cmd(ctx: &ExpContext, args: &Args, seed: u64) -> Result<()> {
 /// `graphlet-rf serve-bench`: drive a daemon over loopback and print
 /// labeled pass reports (throughput + latency percentiles) plus one
 /// machine-readable JSON line. With `--store-dir` the daemons are
-/// hosted in-process and a third restart-warm (`warm_l2`) pass measures
-/// zero-recompute serving off the reopened segment log.
+/// hosted in-process and restart-warm passes (`warm_l2` with mmap off,
+/// `warm_l2_mmap` with it on) measure zero-recompute serving off the
+/// reopened segment log through both read paths.
 fn serve_bench_cmd(ctx: &ExpContext, args: &Args, seed: u64) -> Result<()> {
     let clients = args.parse_or("clients", 4usize).max(1);
     let per_client = args.parse_or("requests", 32usize).max(1);
@@ -405,6 +417,12 @@ fn serve_bench_cmd(ctx: &ExpContext, args: &Args, seed: u64) -> Result<()> {
     };
     for (label, report) in &run.passes {
         println!("{label}: {}", report.line());
+    }
+    if let Some((legacy, mmap)) = run.l2_read_ns_per_row {
+        println!(
+            "l2 read path: warm_l2={legacy:.0} ns/row (read+copy) vs \
+             warm_l2_mmap={mmap:.0} ns/row (zero-copy view)"
+        );
     }
     println!("{}", run.json());
     Ok(())

@@ -66,6 +66,9 @@
 //! | `cache.l2_read_us` | `cache_l2_read_us` | histo | the store read inside an L1-miss probe |
 //! | `store.append_us` | `store_append_us` | histo | `EmbeddingStore::put` |
 //! | `store.compact_us` | `store_compact_us` | histo | `EmbeddingStore::compact` |
+//! | `store.mmap_segments` | `store_mmap_segments` | gauge | sealed segments currently mapped (set on seal/compact) |
+//! | `store.mmap_bytes` | `store_mmap_bytes` | gauge | bytes of sealed data currently mapped |
+//! | `store.mmap_reads` | `store_mmap_reads` | counter | every zero-copy row read off a mapped segment |
 //! | `ann.build_us` | `ann_build_us` | histo | IVFFlat index (re)build |
 //! | `ann.probe_us` | `ann_probe_us` | histo | `nearest` query against index + pending tail |
 //! | `serve.slow_spans` | `serve_slow_spans` | counter | every slow-span stderr line |

@@ -64,6 +64,9 @@ const CATALOG: &[(&str, &str)] = &[
     ("shard.projection_us", "Feature-map projection time per dispatched batch"),
     ("store.append_us", "Segment-log append time per stored row"),
     ("store.compact_us", "Segment-log compaction pass time"),
+    ("store.mmap_bytes", "Bytes of sealed segment data currently memory-mapped"),
+    ("store.mmap_reads", "Row reads served zero-copy from a mapped sealed segment"),
+    ("store.mmap_segments", "Sealed segments currently memory-mapped"),
 ];
 
 /// Sanitize a dotted metric name into a Prometheus metric name:

@@ -10,11 +10,19 @@
 //!   embedding is computed by the pipeline;
 //! - **warm_l1**: the identical requests replayed against the same
 //!   daemon, so every reply should come from the in-RAM cache;
-//! - **warm_l2** ([`run_restart_bench`] only): the daemon is shut down,
-//!   a *new* daemon reopens the same `--store-dir`, and the requests
-//!   replay once more — every reply should come off the segment log
-//!   with **zero pipeline recomputes** (self-checked: the pass fails if
-//!   the daemon computed any graph or took any full miss);
+//! - **warm_l2 / warm_l2_mmap** ([`run_restart_bench`] only): the
+//!   daemon is shut down and *two* fresh daemons reopen the same
+//!   `--store-dir` in turn — one with `--store-mmap false` (the legacy
+//!   seek+read+copy path), one with it on (zero-copy page-cache views)
+//!   — and the requests replay against each. Every reply must come off
+//!   the segment log with **zero pipeline recomputes** (self-checked
+//!   per pass: any computed graph or full miss fails the run); the mmap
+//!   pass additionally requires the daemon's `store.mmap_reads` delta
+//!   to equal the request count (every read really took the mapped
+//!   path) and, where views are supported, its ANN index to own zero
+//!   row bytes. Both passes bracket the daemon's `cache.l2_read_us`
+//!   histogram, so the JSON line reports the two read paths' ns/row
+//!   side by side (`l2_read_ns_per_row`);
 //! - **nearest_p10 / nearest_p50 / nearest_p100** ([`run_restart_bench`]
 //!   only): k-NN `nearest` queries against the restarted daemon's ANN
 //!   index at probe factors 0.1 / 0.5 / 1.0, replaying the same
@@ -141,6 +149,11 @@ pub struct BenchRun {
     /// cross-check window (restart mode only; `None` for [`run_bench`],
     /// which has no hosted daemon to attach a sidecar to).
     pub scrape_ms: Option<f64>,
+    /// Mean store-read cost per row, ns/row, of the two restart-warm
+    /// passes as `(warm_l2, warm_l2_mmap)` — legacy copy path vs mmap
+    /// view path — derived from each daemon's `cache.l2_read_us`
+    /// histogram delta (restart mode only).
+    pub l2_read_ns_per_row: Option<(f64, f64)>,
 }
 
 impl BenchRun {
@@ -161,6 +174,12 @@ impl BenchRun {
         if let Some(ms) = self.scrape_ms {
             out = out.set("scrape_ms", ms);
         }
+        if let Some((legacy, mmap)) = self.l2_read_ns_per_row {
+            out = out.set(
+                "l2_read_ns_per_row",
+                Json::obj().set("warm_l2", legacy).set("warm_l2_mmap", mmap),
+            );
+        }
         out
     }
 }
@@ -179,16 +198,22 @@ pub fn run_bench(addr: &str, clients: usize, per_client: usize, seed: u64) -> Re
         passes: vec![("cold".to_string(), cold), ("warm_l1".to_string(), warm_l1)],
         ann_build_ms: None,
         scrape_ms: None,
+        l2_read_ns_per_row: None,
     })
 }
 
-/// The three-pass restart benchmark (requires `cfg.store_dir`): host a
-/// daemon in-process, run `cold` + `warm_l1`, shut it down, host a
-/// *fresh* daemon over the same store directory, and measure `warm_l2`
-/// — restart-warm throughput where every row is served off the segment
-/// log. Self-checks that the L2 pass recomputed nothing: any
-/// `pipeline.graphs` or `cache.l2_misses` movement fails the run
-/// (an L1 hit or a recompute can never be mislabeled as L2).
+/// The restart benchmark (requires `cfg.store_dir`): host a daemon
+/// in-process, run `cold` + `warm_l1`, shut it down, then host *two*
+/// fresh daemons over the same store directory in turn — one with the
+/// mmap read path disabled (`warm_l2`, the legacy seek+read+copy), one
+/// with it enabled (`warm_l2_mmap`, zero-copy page-cache views) — and
+/// measure restart-warm throughput on each. Self-checks that neither L2
+/// pass recomputed anything (any `pipeline.graphs` or `cache.l2_misses`
+/// movement fails the run), that the mmap pass served *every* read off
+/// a mapping (`store.mmap_reads` delta == requests), and — where view
+/// support exists — that the mmap daemon's ANN index owns zero row
+/// bytes. Each L2 pass also brackets `cache.l2_read_us`, so the run
+/// reports both read paths' ns/row head to head.
 ///
 /// `engine` is the PJRT template exactly as for `Server::bind` — pass
 /// it when `cfg.gsa.engine` is PJRT (the CLI forwards its detected
@@ -211,16 +236,45 @@ pub fn run_restart_bench(
     let warm_l1 = run_pass(&addr, clients, per_client, &graphs)?;
     stop(&addr, handle)?;
 
-    // "Restart": a brand-new daemon process-equivalent — fresh pipeline,
-    // empty L1 — over the store directory the first daemon populated.
-    // Its open-time ANN build covers the whole persisted corpus.
-    let (addr, http, handle) = host(cfg.clone(), engine)?;
+    // "Restart" #1: a brand-new daemon process-equivalent — fresh
+    // pipeline, empty L1 — over the store directory the first daemon
+    // populated, with the mmap path OFF: the legacy read+copy baseline.
+    let legacy_cfg = ServeConfig { store_mmap: false, ..cfg.clone() };
+    let (addr, _http, handle) = host(legacy_cfg, engine)?;
+    let (warm_l2, legacy_ns) =
+        run_l2_pass(&addr, clients, per_client, &graphs, "warm_l2")?;
+    stop(&addr, handle)?;
+
+    // "Restart" #2: same store, mmap path ON — every sealed row is
+    // served as a zero-copy view. Its open-time ANN build (reported as
+    // ann_build_ms) covers the whole persisted corpus through views.
+    let mmap_cfg = ServeConfig { store_mmap: true, ..cfg.clone() };
+    let (addr, http, handle) = host(mmap_cfg, engine)?;
     let ann_build = ann_build_ms(&addr)?;
-    let warm_l2 = run_pass(&addr, clients, per_client, &graphs)?;
+    let reads0 = store_mmap_reads(&addr)?;
+    let (warm_l2_mmap, mmap_ns) =
+        run_l2_pass(&addr, clients, per_client, &graphs, "warm_l2_mmap")?;
+    let reads1 = store_mmap_reads(&addr)?;
+    let requests = (clients.max(1) * per_client.max(1)) as u64;
+    anyhow::ensure!(
+        reads1.saturating_sub(reads0) == requests,
+        "warm_l2_mmap self-check: store.mmap_reads moved by {} for {requests} requests — \
+         every L2 read must take the mapped path",
+        reads1.saturating_sub(reads0)
+    );
+    if cfg!(all(unix, target_endian = "little", target_pointer_width = "64")) {
+        let owned = ann_indexed_bytes(&addr)?;
+        anyhow::ensure!(
+            owned == 0,
+            "warm_l2_mmap self-check: the ANN index owns {owned} row bytes — with mmap on \
+             it must reference rows in place"
+        );
+    }
 
     // k-NN retrieval over that corpus: replaying the same
     // (graph, graph_index) pairs means every query row is already in
-    // L1 after warm_l2, so these passes time the IVFFlat search alone.
+    // L1 after warm_l2_mmap, so these passes time the IVFFlat search
+    // alone.
     let k = 10.min(clients.max(1) * per_client.max(1));
     let mut nearest_passes = Vec::new();
     for probe in [0.1, 0.5, 1.0] {
@@ -248,29 +302,63 @@ pub fn run_restart_bench(
     };
     stop(&addr, handle)?;
 
-    anyhow::ensure!(
-        warm_l2.errors == 0,
-        "restart-warm self-check: {} requests errored",
-        warm_l2.errors
-    );
-    anyhow::ensure!(
-        warm_l2.recomputed_graphs == 0,
-        "restart-warm self-check: the daemon recomputed {} graphs — the L2 pass must be \
-         served entirely from the store",
-        warm_l2.recomputed_graphs
-    );
-    anyhow::ensure!(
-        warm_l2.l2_miss_delta == 0,
-        "restart-warm self-check: {} full misses — every key must be on the segment log",
-        warm_l2.l2_miss_delta
-    );
     let mut passes = vec![
         ("cold".to_string(), cold),
         ("warm_l1".to_string(), warm_l1),
         ("warm_l2".to_string(), warm_l2),
+        ("warm_l2_mmap".to_string(), warm_l2_mmap),
     ];
     passes.extend(nearest_passes);
-    Ok(BenchRun { passes, ann_build_ms: ann_build, scrape_ms })
+    Ok(BenchRun {
+        passes,
+        ann_build_ms: ann_build,
+        scrape_ms,
+        l2_read_ns_per_row: Some((legacy_ns, mmap_ns)),
+    })
+}
+
+/// One restart-warm pass against a freshly hosted daemon (empty L1, so
+/// every request is exactly one store read): runs the standard embed
+/// pass bracketed by the daemon's `cache.l2_read_us` histogram, applies
+/// the zero-recompute self-checks, and returns the pass plus the mean
+/// store-read cost in ns/row.
+fn run_l2_pass(
+    addr: &str,
+    clients: usize,
+    per_client: usize,
+    graphs: &[AnyGraph],
+    label: &str,
+) -> Result<(BenchReport, f64)> {
+    let read0 = fetch_histo(addr, "cache.l2_read_us")?;
+    let pass = run_pass(addr, clients, per_client, graphs)?;
+    let read1 = fetch_histo(addr, "cache.l2_read_us")?;
+    anyhow::ensure!(
+        pass.errors == 0,
+        "{label} self-check: {} requests errored",
+        pass.errors
+    );
+    anyhow::ensure!(
+        pass.recomputed_graphs == 0,
+        "{label} self-check: the daemon recomputed {} graphs — the pass must be served \
+         entirely from the store",
+        pass.recomputed_graphs
+    );
+    anyhow::ensure!(
+        pass.l2_miss_delta == 0,
+        "{label} self-check: {} full misses — every key must be on the segment log",
+        pass.l2_miss_delta
+    );
+    // Unique (client, i) → graph_index pairs mean unique keys: every
+    // request of the pass is exactly one L2 read, no more, no fewer.
+    let delta = histo_delta(&read0, &read1);
+    anyhow::ensure!(
+        delta.count == pass.requests as u64,
+        "{label} self-check: {} L2 reads for {} requests — each key must be read once",
+        delta.count,
+        pass.requests
+    );
+    let ns_per_row = delta.sum_us as f64 * 1e3 / delta.count.max(1) as f64;
+    Ok((pass, ns_per_row))
 }
 
 /// The fixed bench workload: a seed-deterministic SBM set.
@@ -355,17 +443,22 @@ fn stop(addr: &str, handle: JoinHandle<Result<()>>) -> Result<()> {
     handle.join().map_err(|_| anyhow::anyhow!("serve daemon panicked"))?
 }
 
-/// Daemon-side counters a pass brackets itself with: cumulative
-/// `pipeline.graphs` (computed embeddings) and `cache.l2_misses` (full
-/// misses), read through the `stats` op on a throwaway connection.
-fn snapshot(addr: &str) -> Result<(u64, u64)> {
+/// One `stats` op round-trip on a throwaway connection.
+fn stats_json(addr: &str) -> Result<Json> {
     let mut stream =
         TcpStream::connect(addr).with_context(|| format!("connecting stats probe to {addr}"))?;
     stream.write_all(b"{\"op\":\"stats\"}\n")?;
     stream.flush()?;
     let mut reply = String::new();
     BufReader::new(stream).read_line(&mut reply)?;
-    let j = Json::parse(reply.trim()).map_err(|e| anyhow::anyhow!("stats reply: {e}"))?;
+    Json::parse(reply.trim()).map_err(|e| anyhow::anyhow!("stats reply: {e}"))
+}
+
+/// Daemon-side counters a pass brackets itself with: cumulative
+/// `pipeline.graphs` (computed embeddings) and `cache.l2_misses` (full
+/// misses), read through the `stats` op on a throwaway connection.
+fn snapshot(addr: &str) -> Result<(u64, u64)> {
+    let j = stats_json(addr)?;
     let graphs = j
         .get("pipeline")
         .and_then(|p| p.get("graphs"))
@@ -379,12 +472,18 @@ fn snapshot(addr: &str) -> Result<(u64, u64)> {
     Ok((graphs, l2_misses))
 }
 
-/// Fetch the daemon's full metric registry (the `metrics` op) and
-/// reconstruct the `serve.request_us.<op>` histogram as a
-/// [`HistoSnapshot`] — zeroed when the histogram doesn't exist yet
-/// (first pass against a fresh process). Two of these bracket a pass;
-/// their bucket-wise difference is the pass's own latency distribution.
+/// Fetch the daemon's `serve.request_us.<op>` histogram (see
+/// [`fetch_histo`]). Two of these bracket a pass; their bucket-wise
+/// difference is the pass's own latency distribution.
 fn request_histo(addr: &str, op: &str) -> Result<HistoSnapshot> {
+    fetch_histo(addr, &format!("serve.request_us.{op}"))
+}
+
+/// Fetch the daemon's full metric registry (the `metrics` op) and
+/// reconstruct the named histogram as a [`HistoSnapshot`] — zeroed when
+/// the histogram doesn't exist yet (first probe against a fresh
+/// process).
+fn fetch_histo(addr: &str, name: &str) -> Result<HistoSnapshot> {
     let mut stream =
         TcpStream::connect(addr).with_context(|| format!("connecting metrics probe to {addr}"))?;
     stream.write_all(b"{\"op\":\"metrics\"}\n")?;
@@ -398,8 +497,7 @@ fn request_histo(addr: &str, op: &str) -> Result<HistoSnapshot> {
         max_us: 0,
         buckets: [0; crate::obs::metrics::NUM_BUCKETS],
     };
-    let name = format!("serve.request_us.{op}");
-    let Some(h) = j.get("histograms").and_then(|hs| hs.get(&name)) else {
+    let Some(h) = j.get("histograms").and_then(|hs| hs.get(name)) else {
         return Ok(snap);
     };
     snap.count = h.get("count").and_then(Json::as_u64).unwrap_or(0);
@@ -430,14 +528,23 @@ fn histo_delta(before: &HistoSnapshot, after: &HistoSnapshot) -> HistoSnapshot {
 /// The restarted daemon's ANN index build cost (stats
 /// `ann.last_build_ms`); `None` when the daemon runs without a store.
 fn ann_build_ms(addr: &str) -> Result<Option<f64>> {
-    let mut stream =
-        TcpStream::connect(addr).with_context(|| format!("connecting stats probe to {addr}"))?;
-    stream.write_all(b"{\"op\":\"stats\"}\n")?;
-    stream.flush()?;
-    let mut reply = String::new();
-    BufReader::new(stream).read_line(&mut reply)?;
-    let j = Json::parse(reply.trim()).map_err(|e| anyhow::anyhow!("stats reply: {e}"))?;
+    let j = stats_json(addr)?;
     Ok(j.get("ann").and_then(|a| a.get("last_build_ms")).and_then(Json::as_f64))
+}
+
+/// Cumulative `store.mmap_reads` (stats `store.mmap_reads`): rows the
+/// daemon served through a mapped segment. Two of these bracket the
+/// `warm_l2_mmap` pass.
+fn store_mmap_reads(addr: &str) -> Result<u64> {
+    let j = stats_json(addr)?;
+    Ok(j.get("store").and_then(|s| s.get("mmap_reads")).and_then(Json::as_u64).unwrap_or(0))
+}
+
+/// Bytes of row data the daemon's ANN index owns (stats
+/// `ann.indexed_bytes`): 0 when every indexed row is a zero-copy view.
+fn ann_indexed_bytes(addr: &str) -> Result<u64> {
+    let j = stats_json(addr)?;
+    Ok(j.get("ann").and_then(|a| a.get("indexed_bytes")).and_then(Json::as_u64).unwrap_or(0))
 }
 
 fn run_pass(

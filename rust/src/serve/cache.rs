@@ -293,6 +293,11 @@ pub struct AnnStats {
     pub probed_lists: u64,
     /// Rows distance-computed across all queries (index + pending).
     pub scanned_rows: u64,
+    /// Bytes of row data the current index *owns* (copied into RAM).
+    /// View-backed rows (mmap'd sealed segments) count zero, so with
+    /// the store's mmap path on this sits at ≈ 0 — the index reads rows
+    /// in place out of the page cache.
+    pub indexed_bytes: u64,
 }
 
 /// Result of one tiered `nearest` query (index ∪ pending tail).
@@ -333,7 +338,7 @@ struct AnnCell {
 
 impl AnnCell {
     fn new(cfg: AnnConfig, dim: usize, registry: Arc<crate::obs::Registry>) -> AnnCell {
-        let empty = Arc::new(AnnIndex::build(Vec::new(), dim, &cfg));
+        let empty = Arc::new(AnnIndex::build(Vec::<(CacheKey, Vec<f32>)>::new(), dim, &cfg));
         AnnCell {
             cfg,
             dim,
@@ -350,14 +355,17 @@ impl AnnCell {
     }
 
     /// Rebuild the index from a store snapshot. The store mutex is held
-    /// only for the row snapshot — the k-means (the expensive part)
-    /// runs on this thread's own copy, then the fresh index is swapped
-    /// in and the pending rows it covers are pruned. Swap-then-prune
-    /// order matters: between the two a query may see a row in both
-    /// places (deduped), but never in neither.
+    /// only for the row snapshot — and the snapshot itself is zero-copy
+    /// for sealed segments ([`crate::store::RowData::View`]s into the
+    /// mmap'd pages; only the active tail is copied), so the lock is
+    /// held for an index walk, not a data copy. The k-means (the
+    /// expensive part) runs off the lock against the views, then the
+    /// fresh index is swapped in and the pending rows it covers are
+    /// pruned. Swap-then-prune order matters: between the two a query
+    /// may see a row in both places (deduped), but never in neither.
     fn rebuild(cell: &AnnCell, store: &Mutex<EmbeddingStore>) {
         let t = Instant::now();
-        let entries = store.lock().expect("store lock").snapshot_rows();
+        let entries = store.lock().expect("store lock").snapshot_row_data();
         let index = Arc::new(AnnIndex::build(entries, cell.dim, &cell.cfg));
         *cell.index.write().expect("ann index lock") = Arc::clone(&index);
         cell.pending.lock().expect("ann pending lock").retain(|(k, _)| !index.contains(k));
@@ -377,6 +385,7 @@ impl AnnCell {
             queries: self.queries.load(Ordering::Relaxed),
             probed_lists: self.probed_lists.load(Ordering::Relaxed),
             scanned_rows: self.scanned_rows.load(Ordering::Relaxed),
+            indexed_bytes: index.indexed_bytes(),
         }
     }
 }
@@ -495,13 +504,19 @@ impl TieredCache {
             return Some(row);
         }
         let store = self.l2.as_ref()?;
+        // `get_row` hands back a RowData: for a sealed (mmap'd) segment
+        // that is a zero-copy view whose Arc keeps the mapping alive
+        // after the store lock drops, so `l2_read_us` measures the
+        // probe, not a row copy — the one copy happens below, on L1
+        // promotion.
         let read_start = Instant::now();
-        let found = store.lock().expect("store lock").get(key);
+        let found = store.lock().expect("store lock").get_row(key);
         self.registry.histo("cache.l2_read_us").record(read_start.elapsed());
         match found {
-            Some(row) => {
+            Some(data) => {
                 self.l2_hits.fetch_add(1, Ordering::Relaxed);
                 self.l2_promotions.fetch_add(1, Ordering::Relaxed);
+                let row = data.to_vec();
                 self.l1.insert_with_cost(*key, row.clone(), self.weight(&row));
                 Some(row)
             }
@@ -985,6 +1000,15 @@ mod tests {
         let s = t.stats().ann.unwrap();
         assert_eq!((s.indexed, s.pending, s.builds), (2, 0, 1));
         assert_eq!(t.store_len(), Some(2));
+        // Seal-on-open made both pre-existing rows view-backed, so the
+        // open-time index owns no row bytes; with mmap off (or no view
+        // support on this target) it owns both rows outright.
+        let st = t.stats().store.unwrap();
+        if st.mmap_segments > 0 && cfg!(all(unix, target_endian = "little")) {
+            assert_eq!(s.indexed_bytes, 0, "view-backed index must own nothing");
+        } else {
+            assert!(s.indexed_bytes <= 2 * 2 * 4, "{}", s.indexed_bytes);
+        }
 
         // …while a fresh insert lands in the pending tail and is
         // immediately searchable, exactly like an indexed row.

@@ -67,6 +67,13 @@ pub struct ServeConfig {
     /// rows computed by a previous daemon process are served bitwise
     /// identical from disk after a restart instead of being recomputed.
     pub store_dir: Option<std::path::PathBuf>,
+    /// Memory-map sealed store segments (`--store-mmap true|false`) so
+    /// L2 probes and ANN index rows are zero-copy views into the page
+    /// cache instead of read+copy. Defaults to
+    /// [`crate::store::mmap_default`] (on for unix unless the
+    /// `GRAPHLET_RF_TEST_MMAP` axis overrides it); only meaningful with
+    /// `store_dir` set.
+    pub store_mmap: bool,
     /// IVFFlat probe factor (`--ann-probe`) for `nearest` queries that
     /// do not carry an explicit `probe`: the fraction of inverted lists
     /// scanned, in (0, 1]. At 1.0 every query is an exhaustive (exact)
@@ -102,6 +109,7 @@ impl Default for ServeConfig {
             cache_capacity: 4096,
             cache_policy: EvictPolicy::Lru,
             store_dir: None,
+            store_mmap: crate::store::mmap_default(),
             ann_probe: crate::ann::DEFAULT_PROBE,
             ann_min_brute: crate::ann::DEFAULT_MIN_BRUTE,
             slow_ms: slow_ms_default(),
@@ -180,7 +188,9 @@ impl Server {
         let config_fp = config_fingerprint(pipeline.cfg());
         let store = match &cfg.store_dir {
             Some(dir) => {
-                let mut s = EmbeddingStore::open(StoreConfig::new(dir.clone()))
+                let store_cfg =
+                    StoreConfig { mmap: cfg.store_mmap, ..StoreConfig::new(dir.clone()) };
+                let mut s = EmbeddingStore::open(store_cfg)
                     .with_context(|| format!("opening embedding store {}", dir.display()))?;
                 s.set_registry(registry.clone());
                 Some(s)
@@ -734,7 +744,10 @@ fn stats_reply(id: u64, ctx: &ServeCtx) -> String {
                 .set("live_bytes", st.live_bytes)
                 .set("dead_bytes", st.dead_bytes)
                 .set("corrupt_skipped", st.corrupt_skipped)
-                .set("compactions", st.compactions),
+                .set("compactions", st.compactions)
+                .set("mmap_segments", st.mmap_segments)
+                .set("mmap_bytes", st.mmap_bytes)
+                .set("mmap_reads", st.mmap_reads),
         );
     }
     if let Some(ann) = tiered.ann {
@@ -753,6 +766,7 @@ fn stats_reply(id: u64, ctx: &ServeCtx) -> String {
                 .set("queries", ann.queries)
                 .set("probed_lists", ann.probed_lists)
                 .set("scanned_rows", ann.scanned_rows)
+                .set("indexed_bytes", ann.indexed_bytes)
                 .set("probe_factor", ctx.cfg.ann_probe)
                 .set("min_brute", ctx.cfg.ann_min_brute),
         );

@@ -1,6 +1,7 @@
-//! The append-only segment log: rotation, recovery scan, and
-//! compaction. See [`super`] (the module docs) for the on-disk layout
-//! diagram; the record codec lives in [`super::codec`].
+//! The append-only segment log: rotation, recovery scan, compaction,
+//! and the memory-mapped sealed-segment read path. See [`super`] (the
+//! module docs) for the on-disk layout diagram; the record codec lives
+//! in [`super::codec`] and the mapping layer in [`super::mmap`].
 //!
 //! Durability model: every [`put`](EmbeddingStore::put) is one
 //! unbuffered `write_all` straight to the active segment file, so a
@@ -16,21 +17,56 @@
 //! contract is "crash-tolerant", not "power-loss-proof per row" — a
 //! lost tail row is recomputed and rewritten on the next request.)
 //!
+//! Read model (`mmap: true`, the unix default): only the **active**
+//! segment is ever appended to; every other segment is **sealed** —
+//! immutable after rotation — and memory-mapped, so a `get` that
+//! resolves into a sealed segment returns a zero-copy
+//! [`RowData::View`] into the page cache. Sealed records were either
+//! verified by the open-time recovery scan or written (and checksummed)
+//! by this very process, so the mapped fast path does a structural key
+//! check only — re-hashing every read would give up most of the win.
+//! To make *recovered* data sealed too, open rotates once when the
+//! scanned tail segment holds any records: verified bytes become
+//! mappable, appends start in a fresh segment. Active-segment reads
+//! (and every read with `mmap: false`) take the legacy
+//! seek+read+verify path through a pooled read handle.
+//!
 //! Single-writer contract: exactly one [`EmbeddingStore`] (one daemon)
 //! may own a directory at a time — there is no cross-process lock, and
 //! two writers would interleave appends into the same active segment.
 //! (A lock file is deliberately absent for now: a stale lock left by a
 //! SIGKILLed daemon would block the restart-recovery path this store
-//! exists for; a liveness-checked lock is a ROADMAP follow-up.)
+//! exists for; a liveness-checked lock is a ROADMAP follow-up.) The
+//! mapped read path additionally *requires* this: truncating a mapped
+//! file under a live store is the one way to SIGBUS a view (see
+//! [`super::mmap`] module docs).
 
 use std::collections::{btree_map, BTreeMap, BTreeSet, HashMap};
 use std::fs::{File, OpenOptions};
 use std::io::{Read, Seek, SeekFrom, Write};
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
 
 use anyhow::{bail, Context, Result};
 
-use super::codec::{decode_record, encode_record, CacheKey, Decoded, SEGMENT_MAGIC};
+use super::codec::{
+    decode_record, encode_record, read_u64, CacheKey, Decoded, PAYLOAD_HEADER, RECORD_OVERHEAD,
+    SEGMENT_MAGIC,
+};
+use super::mmap::{decode_floats, RowData, RowView, SegmentMap};
+
+/// Default for [`StoreConfig::mmap`]: on for unix targets (where the
+/// hand-rolled `mmap(2)` wrapper is real), overridable either way with
+/// `GRAPHLET_RF_TEST_MMAP=0|1` — the CI axis that runs every leg down
+/// both read paths.
+pub fn mmap_default() -> bool {
+    match std::env::var("GRAPHLET_RF_TEST_MMAP") {
+        Ok(v) if v.trim() == "0" => false,
+        Ok(v) if v.trim() == "1" => true,
+        _ => cfg!(unix),
+    }
+}
 
 /// Tunables for one store directory.
 #[derive(Clone, Debug)]
@@ -46,6 +82,10 @@ pub struct StoreConfig {
     /// …and the log holds at least this many bytes (tiny logs are never
     /// worth rewriting).
     pub compact_min_bytes: u64,
+    /// Memory-map sealed segments and serve zero-copy row views out of
+    /// them (see the module docs). `false` keeps every read on the
+    /// legacy seek+read+verify path.
+    pub mmap: bool,
 }
 
 impl StoreConfig {
@@ -55,6 +95,7 @@ impl StoreConfig {
             segment_bytes: 8 << 20,
             compact_dead_ratio: 0.5,
             compact_min_bytes: 1 << 20,
+            mmap: mmap_default(),
         }
     }
 }
@@ -85,17 +126,32 @@ pub struct StoreStats {
     pub corrupt_skipped: u64,
     /// Compaction passes completed since open.
     pub compactions: u64,
+    /// Sealed segments currently memory-mapped.
+    pub mmap_segments: usize,
+    /// Bytes of sealed segment data currently memory-mapped.
+    pub mmap_bytes: u64,
+    /// Reads served zero-copy out of a mapped sealed segment.
+    pub mmap_reads: u64,
 }
 
 /// A content-addressed, append-only embedding store over numbered
 /// segment files, with an in-memory offset index rebuilt by scanning
 /// the segments on open. Not internally synchronized — the serve tier
-/// wraps it in a `Mutex` (one store per daemon).
+/// wraps it in a `Mutex` (one store per daemon) — but the *read* path
+/// over sealed segments is `&self`, so a snapshot holds that mutex
+/// only as long as view construction plus the active-segment tail scan.
 pub struct EmbeddingStore {
     cfg: StoreConfig,
     index: HashMap<CacheKey, RecordLoc>,
-    /// Lazily opened read handles, one per segment.
-    readers: BTreeMap<u64, File>,
+    /// Lazily opened read handles, one per segment, for the non-mapped
+    /// read path (active segment; everything when `mmap: false`).
+    /// Behind a `Mutex` so reads are `&self`.
+    readers: Mutex<BTreeMap<u64, File>>,
+    /// Memory maps of sealed segments, keyed by id. Mutated only by
+    /// `&mut self` lifecycle methods (open/rotate/compact); reads
+    /// clone out `Arc`s, which keep a generation's pages alive after
+    /// compaction unlinks its files.
+    maps: BTreeMap<u64, Arc<SegmentMap>>,
     /// Ids of the segment files currently on disk.
     segment_ids: BTreeSet<u64>,
     /// Append handle for the active (highest-id) segment.
@@ -104,14 +160,17 @@ pub struct EmbeddingStore {
     active_len: u64,
     live_bytes: u64,
     dead_bytes: u64,
-    corrupt_skipped: u64,
+    /// Atomic so the `&self` read paths (`snapshot_row_data`) can count.
+    corrupt_skipped: AtomicU64,
     compactions: u64,
+    mmap_reads: AtomicU64,
     scratch: Vec<u8>,
-    /// Where `store.append_us` / `store.compact_us` record. Defaults to
-    /// the process-global registry; the serve daemon swaps in its own
-    /// instance via [`set_registry`](Self::set_registry) right after
-    /// open, so two in-process daemons never share store histograms.
-    registry: std::sync::Arc<crate::obs::Registry>,
+    /// Where `store.append_us` / `store.compact_us` / `store.mmap_*`
+    /// record. Defaults to the process-global registry; the serve
+    /// daemon swaps in its own instance via
+    /// [`set_registry`](Self::set_registry) right after open, so two
+    /// in-process daemons never share store metrics.
+    registry: Arc<crate::obs::Registry>,
 }
 
 fn segment_path(dir: &Path, id: u64) -> PathBuf {
@@ -138,6 +197,8 @@ impl EmbeddingStore {
     /// and truncate the active segment past its last intact record.
     /// Torn or corrupt data is skipped with a counter — never an error,
     /// never a panic: losing a tail row only costs one recompute.
+    /// With `cfg.mmap`, a recovered tail segment holding records is
+    /// then sealed by one rotation and every sealed segment is mapped.
     pub fn open(cfg: StoreConfig) -> Result<EmbeddingStore> {
         std::fs::create_dir_all(&cfg.dir)
             .with_context(|| format!("creating store dir {}", cfg.dir.display()))?;
@@ -230,45 +291,94 @@ impl EmbeddingStore {
             }
         };
         let active_len = active.metadata()?.len();
-        Ok(EmbeddingStore {
+        let mut store = EmbeddingStore {
             cfg,
             index,
-            readers: BTreeMap::new(),
+            readers: Mutex::new(BTreeMap::new()),
+            maps: BTreeMap::new(),
             segment_ids: ids.into_iter().collect(),
             active,
             active_id,
             active_len,
             live_bytes,
             dead_bytes,
-            corrupt_skipped,
+            corrupt_skipped: AtomicU64::new(corrupt_skipped),
             compactions: 0,
+            mmap_reads: AtomicU64::new(0),
             scratch: Vec::new(),
             registry: crate::obs::global_arc(),
-        })
+        };
+        if store.cfg.mmap {
+            if store.active_len > SEGMENT_MAGIC.len() as u64 {
+                // Seal the recovered tail: its records are
+                // scan-verified, so one rotation makes them mappable
+                // and leaves a fresh empty active segment for appends.
+                store.rotate()?;
+            }
+            store.map_sealed_segments()?;
+        }
+        Ok(store)
     }
 
-    /// Route this store's latency histograms into an instance-scoped
-    /// registry (the owning daemon's) instead of the process-global
-    /// default.
-    pub fn set_registry(&mut self, registry: std::sync::Arc<crate::obs::Registry>) {
+    /// Route this store's metrics into an instance-scoped registry (the
+    /// owning daemon's) instead of the process-global default.
+    pub fn set_registry(&mut self, registry: Arc<crate::obs::Registry>) {
         self.registry = registry;
+        if self.cfg.mmap {
+            self.publish_mmap_gauges();
+        }
     }
 
-    /// Look up a row by content address. A record that fails its
-    /// checksum at read time is dropped from the index and counted in
-    /// `corrupt_skipped` — the caller sees a miss and recomputes.
-    pub fn get(&mut self, key: &CacheKey) -> Option<Vec<f32>> {
+    /// Whether this store maps sealed segments (the
+    /// [`StoreConfig::mmap`] it was opened with).
+    pub fn mmap_enabled(&self) -> bool {
+        self.cfg.mmap
+    }
+
+    /// Map every sealed (non-active) segment that is not mapped yet.
+    fn map_sealed_segments(&mut self) -> Result<()> {
+        let missing: Vec<u64> = self
+            .segment_ids
+            .iter()
+            .copied()
+            .filter(|&id| id != self.active_id && !self.maps.contains_key(&id))
+            .collect();
+        for id in missing {
+            let map = SegmentMap::map(&segment_path(&self.cfg.dir, id))?;
+            self.maps.insert(id, Arc::new(map));
+        }
+        self.publish_mmap_gauges();
+        Ok(())
+    }
+
+    fn publish_mmap_gauges(&self) {
+        let bytes: u64 = self.maps.values().map(|m| m.len() as u64).sum();
+        self.registry.gauge("store.mmap_segments").set(self.maps.len() as u64);
+        self.registry.gauge("store.mmap_bytes").set(bytes);
+    }
+
+    /// Look up a row by content address, zero-copy when it lives in a
+    /// mapped sealed segment. A record that fails verification at read
+    /// time is dropped from the index and counted in `corrupt_skipped`
+    /// — the caller sees a miss and recomputes.
+    pub fn get_row(&mut self, key: &CacheKey) -> Option<RowData> {
         let loc = *self.index.get(key)?;
-        match self.read_at(loc) {
-            Ok((k, row)) if k == *key => Some(row),
-            _ => {
-                self.corrupt_skipped += 1;
+        match self.read_row(loc, key) {
+            Some(row) => Some(row),
+            None => {
+                self.corrupt_skipped.fetch_add(1, Ordering::Relaxed);
                 self.index.remove(key);
                 self.live_bytes = self.live_bytes.saturating_sub(u64::from(loc.len));
                 self.dead_bytes += u64::from(loc.len);
                 None
             }
         }
+    }
+
+    /// [`get_row`](Self::get_row) materialized to an owned `Vec` — the
+    /// compatibility shape for callers that need ownership anyway.
+    pub fn get(&mut self, key: &CacheKey) -> Option<Vec<f32>> {
+        self.get_row(key).map(|row| row.to_vec())
     }
 
     /// Append a row (write-through from the cache tier). Re-putting an
@@ -294,22 +404,38 @@ impl EmbeddingStore {
         self.index.contains_key(key)
     }
 
-    /// Every live row, **sorted by key**. This is the ANN index's feed:
-    /// the offset index is a `HashMap` (unordered), so the sort is what
-    /// makes an index build a pure function of the row *set* — the
+    /// Every live row, **sorted by key**, as [`RowData`] — views for
+    /// sealed mapped segments, owned copies only for records still in
+    /// the active-segment tail (and for everything with `mmap: false`).
+    /// This is the ANN index's feed, and it is `&self`: under the serve
+    /// tier's store mutex, a rebuild snapshot now costs view
+    /// construction plus the active-tail reads, not a full-copy scan.
+    /// The sort is what makes an index build a pure function of the row
+    /// *set* (the offset index is an unordered `HashMap`) — the
     /// determinism the differential battery and the restart test pin.
-    /// Rows that fail their checksum are dropped (counted in
-    /// `corrupt_skipped`) exactly as in [`get`](Self::get).
-    pub fn snapshot_rows(&mut self) -> Vec<(CacheKey, Vec<f32>)> {
-        let mut keys: Vec<CacheKey> = self.index.keys().copied().collect();
-        keys.sort_unstable();
-        let mut out = Vec::with_capacity(keys.len());
-        for key in keys {
-            if let Some(row) = self.get(&key) {
-                out.push((key, row));
+    /// Rows that fail verification are dropped and counted in
+    /// `corrupt_skipped`; being `&self`, the index entry itself is
+    /// repaired later by the next [`get_row`](Self::get_row).
+    pub fn snapshot_row_data(&self) -> Vec<(CacheKey, RowData)> {
+        let mut entries: Vec<(CacheKey, RecordLoc)> =
+            self.index.iter().map(|(k, &l)| (*k, l)).collect();
+        entries.sort_unstable_by_key(|&(k, _)| k);
+        let mut out = Vec::with_capacity(entries.len());
+        for (key, loc) in entries {
+            match self.read_row(loc, &key) {
+                Some(row) => out.push((key, row)),
+                None => {
+                    self.corrupt_skipped.fetch_add(1, Ordering::Relaxed);
+                }
             }
         }
         out
+    }
+
+    /// [`snapshot_row_data`](Self::snapshot_row_data) materialized to
+    /// owned rows — the legacy shape.
+    pub fn snapshot_rows(&self) -> Vec<(CacheKey, Vec<f32>)> {
+        self.snapshot_row_data().into_iter().map(|(k, r)| (k, r.to_vec())).collect()
     }
 
     /// Live (indexed) record count.
@@ -327,15 +453,23 @@ impl EmbeddingStore {
             records: self.index.len(),
             live_bytes: self.live_bytes,
             dead_bytes: self.dead_bytes,
-            corrupt_skipped: self.corrupt_skipped,
+            corrupt_skipped: self.corrupt_skipped.load(Ordering::Relaxed),
             compactions: self.compactions,
+            mmap_segments: self.maps.len(),
+            mmap_bytes: self.maps.values().map(|m| m.len() as u64).sum(),
+            mmap_reads: self.mmap_reads.load(Ordering::Relaxed),
         }
     }
 
     /// Rewrite every live record into fresh segments (numbered after
     /// the current active, so a crash mid-compaction leaves a directory
     /// where the ascending-id recovery scan still prefers the rewrite),
-    /// then delete the old generation. Reclaims all dead bytes.
+    /// then delete the old generation. Reclaims all dead bytes. The old
+    /// generation's *mappings* are merely released here: any
+    /// outstanding [`RowData::View`] (e.g. inside a live ANN index)
+    /// holds its own `Arc` and keeps reading valid pages until dropped
+    /// — that is what makes a rebuild's generation swap atomic for
+    /// readers.
     pub fn compact(&mut self) -> Result<()> {
         let t = std::time::Instant::now();
         let mut entries: Vec<(CacheKey, RecordLoc)> =
@@ -348,12 +482,14 @@ impl EmbeddingStore {
         let mut new_index = HashMap::with_capacity(entries.len());
         let mut new_live = 0u64;
         for (key, loc) in entries {
+            // Full read+verify (not the mapped fast path): compaction
+            // is the one chance to re-prove every surviving byte.
             let row = match self.read_at(loc) {
                 Ok((k, row)) if k == key => row,
                 // A record that went bad between index build and
                 // rewrite: skip it, like any other corrupt read.
                 _ => {
-                    self.corrupt_skipped += 1;
+                    self.corrupt_skipped.fetch_add(1, Ordering::Relaxed);
                     continue;
                 }
             };
@@ -364,10 +500,19 @@ impl EmbeddingStore {
         self.index = new_index;
         self.live_bytes = new_live;
         self.dead_bytes = 0;
+        {
+            let mut readers = self.readers.lock().expect("store reader lock");
+            for id in &old_ids {
+                readers.remove(id);
+            }
+        }
         for id in old_ids {
-            self.readers.remove(&id);
+            self.maps.remove(&id);
             self.segment_ids.remove(&id);
             let _ = std::fs::remove_file(segment_path(&self.cfg.dir, id));
+        }
+        if self.cfg.mmap {
+            self.publish_mmap_gauges();
         }
         self.compactions += 1;
         self.registry.histo("store.compact_us").record(t.elapsed());
@@ -415,19 +560,76 @@ impl EmbeddingStore {
         Ok(loc)
     }
 
+    /// Seal the active segment and start a fresh one. With `cfg.mmap`
+    /// the just-sealed segment is mapped here — from this point on it
+    /// is immutable and its rows are served zero-copy.
     fn rotate(&mut self) -> Result<()> {
+        let sealed_id = self.active_id;
         let id = self.active_id + 1;
         self.active = create_segment(&self.cfg.dir, id)?;
         self.active_id = id;
         self.active_len = SEGMENT_MAGIC.len() as u64;
         self.segment_ids.insert(id);
+        if self.cfg.mmap && self.segment_ids.contains(&sealed_id) {
+            let map = SegmentMap::map(&segment_path(&self.cfg.dir, sealed_id))?;
+            self.maps.insert(sealed_id, Arc::new(map));
+            self.publish_mmap_gauges();
+        }
         Ok(())
     }
 
+    /// Resolve `loc` to its row. Mapped sealed segments serve a
+    /// zero-copy view after a structural key check (their records are
+    /// already verified — see the module docs); everything else takes
+    /// the read+decode+verify file path. `None` means "don't trust
+    /// this record"; counting/repair policy belongs to the caller.
+    fn read_row(&self, loc: RecordLoc, key: &CacheKey) -> Option<RowData> {
+        if let Some(map) = self.maps.get(&loc.segment) {
+            return self.read_mapped(map, loc, key);
+        }
+        match self.read_at(loc) {
+            Ok((k, row)) if k == *key => Some(RowData::Owned(row)),
+            _ => None,
+        }
+    }
+
+    /// The zero-copy fast path: bounds-check the location against the
+    /// mapping (never trusting `loc` enough to fault), confirm the
+    /// stored key, and hand out a view of the f32 payload in place.
+    fn read_mapped(&self, map: &Arc<SegmentMap>, loc: RecordLoc, key: &CacheKey) -> Option<RowData> {
+        let bytes = map.as_bytes();
+        let start = usize::try_from(loc.offset).ok()?;
+        let len = loc.len as usize;
+        if len < RECORD_OVERHEAD + PAYLOAD_HEADER || start.checked_add(len)? > bytes.len() {
+            return None;
+        }
+        let payload = &bytes[start + 4..start + len - 8];
+        let stored = CacheKey {
+            graph_hash: read_u64(&payload[0..8]),
+            config_fp: read_u64(&payload[8..16]),
+            seed: read_u64(&payload[16..24]),
+        };
+        if stored != *key {
+            return None;
+        }
+        let row_len = (len - RECORD_OVERHEAD - PAYLOAD_HEADER) / 4;
+        let row_off = start + 4 + PAYLOAD_HEADER;
+        self.mmap_reads.fetch_add(1, Ordering::Relaxed);
+        self.registry.counter("store.mmap_reads").inc();
+        Some(match RowView::new(Arc::clone(map), row_off, row_len) {
+            Some(view) => RowData::View(view),
+            // Misaligned or big-endian: reinterpretation is unsound,
+            // decode an owned copy instead (never hit with the real
+            // record layout on little-endian targets).
+            None => RowData::Owned(decode_floats(&bytes[row_off..row_off + 4 * row_len])),
+        })
+    }
+
     /// Read + verify the record at `loc` through this segment's (lazily
-    /// opened) read handle.
-    fn read_at(&mut self, loc: RecordLoc) -> Result<(CacheKey, Vec<f32>)> {
-        let file = match self.readers.entry(loc.segment) {
+    /// opened, pooled) read handle.
+    fn read_at(&self, loc: RecordLoc) -> Result<(CacheKey, Vec<f32>)> {
+        let mut readers = self.readers.lock().expect("store reader lock");
+        let file = match readers.entry(loc.segment) {
             btree_map::Entry::Occupied(e) => e.into_mut(),
             btree_map::Entry::Vacant(e) => {
                 let path = segment_path(&self.cfg.dir, loc.segment);
@@ -502,6 +704,98 @@ mod tests {
             assert_eq!(s.get(&key(n)).unwrap(), row(n, 16), "row {n} lost across reopen");
         }
         assert_eq!(s.stats().corrupt_skipped, 0);
+        cleanup(&cfg);
+    }
+
+    #[test]
+    fn reopen_with_mmap_seals_recovered_rows_and_serves_views() {
+        let mut cfg = temp_store("sealviews");
+        cfg.mmap = true;
+        {
+            let mut s = EmbeddingStore::open(cfg.clone()).unwrap();
+            for n in 0..8u64 {
+                s.put(key(n), &row(n, 16)).unwrap();
+            }
+            // Rows written this session sit in the active segment:
+            // reads come back owned, no mmap reads yet.
+            assert_eq!(s.stats().mmap_reads, 0);
+            let snap = s.snapshot_row_data();
+            assert!(snap.iter().all(|(_, r)| matches!(r, RowData::Owned(_))));
+        }
+        let mut s = EmbeddingStore::open(cfg.clone()).unwrap();
+        let st = s.stats();
+        assert_eq!(st.records, 8);
+        assert_eq!(
+            st.mmap_segments, 1,
+            "open must seal + map the recovered segment: {st:?}"
+        );
+        assert!(st.mmap_bytes > SEGMENT_MAGIC.len() as u64);
+        for n in 0..8u64 {
+            let got = s.get_row(&key(n)).unwrap();
+            if cfg!(all(unix, target_endian = "little", target_pointer_width = "64")) {
+                assert!(
+                    matches!(got, RowData::View(_)),
+                    "sealed row {n} must be served zero-copy"
+                );
+            }
+            assert_eq!(got.to_vec(), row(n, 16), "sealed row {n} must be bitwise");
+        }
+        assert_eq!(s.stats().mmap_reads, 8);
+        let snap = s.snapshot_row_data();
+        let owned: usize = snap.iter().map(|(_, r)| r.owned_bytes()).sum();
+        if cfg!(all(unix, target_endian = "little", target_pointer_width = "64")) {
+            assert_eq!(owned, 0, "a fully sealed store snapshots without copying");
+        }
+        cleanup(&cfg);
+    }
+
+    #[test]
+    fn views_outlive_compaction_of_their_segment() {
+        let mut cfg = temp_store("genpin");
+        cfg.mmap = true;
+        cfg.compact_min_bytes = u64::MAX; // manual compaction only
+        {
+            let mut s = EmbeddingStore::open(cfg.clone()).unwrap();
+            for n in 0..5u64 {
+                s.put(key(n), &row(n, 8)).unwrap();
+            }
+        }
+        let mut s = EmbeddingStore::open(cfg.clone()).unwrap();
+        let snap = s.snapshot_row_data(); // views into the sealed generation
+        s.compact().unwrap(); // unlinks the files those views point into
+        for (k, r) in &snap {
+            assert_eq!(
+                r.to_vec(),
+                row(k.graph_hash, 8),
+                "view into a compacted-away segment must stay readable"
+            );
+        }
+        // And the store itself serves the new generation correctly.
+        for n in 0..5u64 {
+            assert_eq!(s.get(&key(n)).unwrap(), row(n, 8));
+        }
+        cleanup(&cfg);
+    }
+
+    #[test]
+    fn mmap_disabled_never_maps_or_counts() {
+        let mut cfg = temp_store("nommap");
+        cfg.mmap = false;
+        {
+            let mut s = EmbeddingStore::open(cfg.clone()).unwrap();
+            for n in 0..6u64 {
+                s.put(key(n), &row(n, 8)).unwrap();
+            }
+        }
+        let mut s = EmbeddingStore::open(cfg.clone()).unwrap();
+        let st = s.stats();
+        assert_eq!((st.mmap_segments, st.mmap_bytes, st.mmap_reads), (0, 0, 0));
+        for n in 0..6u64 {
+            let got = s.get_row(&key(n)).unwrap();
+            assert!(matches!(got, RowData::Owned(_)), "legacy path must copy");
+            assert_eq!(got.to_vec(), row(n, 8));
+        }
+        assert_eq!(s.stats().mmap_reads, 0);
         cleanup(&cfg);
     }
 
@@ -588,8 +882,13 @@ mod tests {
             assert_eq!(s.get(&key(n)).unwrap(), row(n, 4));
         }
         drop(s);
-        let mut s = EmbeddingStore::open(cfg.clone()).unwrap();
-        assert_eq!(s.stats().segments, st.segments, "reopen must see the same segments");
+        let s2 = EmbeddingStore::open(cfg.clone()).unwrap();
+        // An mmap reopen seals the recovered tail segment, adding
+        // exactly one fresh (empty) active segment; the legacy path
+        // reopens in place.
+        let expect = st.segments + usize::from(s2.mmap_enabled());
+        let mut s = s2;
+        assert_eq!(s.stats().segments, expect, "reopen must see the same data segments");
         for n in 0..20u64 {
             assert_eq!(s.get(&key(n)).unwrap(), row(n, 4));
         }
@@ -626,10 +925,12 @@ mod tests {
         for n in 1..4u64 {
             assert_eq!(s.get(&key(n)).unwrap(), row(n, 8));
         }
-        // The old generation's files are actually gone from disk.
+        // The old generation's files are actually gone from disk, and
+        // no stale mapping lingers for a deleted segment.
         let on_disk = std::fs::read_dir(&cfg.dir).unwrap().count();
         assert_eq!(on_disk, s.stats().segments, "deleted segments must not linger");
         assert!(on_disk < segments_before + 2);
+        assert!(s.stats().mmap_segments < on_disk, "the active segment is never mapped");
 
         // And the compacted layout survives a reopen.
         drop(s);
@@ -670,6 +971,7 @@ mod tests {
         assert!(s.get(&key(0)).is_none());
         let st = s.stats();
         assert_eq!((st.segments, st.records, st.live_bytes), (1, 0, 0));
+        assert_eq!(st.mmap_segments, 0, "an empty store has nothing sealed to map");
         cleanup(&cfg);
     }
 

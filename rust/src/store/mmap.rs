@@ -1,0 +1,419 @@
+//! Memory-mapped sealed segments and zero-copy row views.
+//!
+//! Sealed segments (every segment except the active one) are
+//! **immutable after rotation**: the recovery scan verified their
+//! records at open, or this process wrote and sealed them itself, and
+//! no code path appends to or rewrites a sealed file in place
+//! (compaction writes a *new* generation and deletes the old files).
+//! That invariant is what makes it safe to map a sealed segment once
+//! and serve `&[f32]` views straight out of the page cache — no
+//! syscall, no copy, no per-read checksum.
+//!
+//! The mapping is hand-rolled: `mmap(2)`/`munmap(2)` are declared as
+//! direct `extern "C"` symbols (std already links libc on unix), so the
+//! zero-dependency rule holds. The raw-syscall path is gated to
+//! 64-bit unix targets where `off_t` is 64-bit and the constants below
+//! (`PROT_READ = 1`, `MAP_PRIVATE = 2` on both Linux and the BSDs)
+//! match the ABI; everywhere else — and whenever the syscall itself
+//! fails — [`SegmentMap::map`] degrades to reading the file into an
+//! owned buffer behind the same API, so behavior differs only in cost.
+//!
+//! ## Generation lifetime
+//!
+//! A [`RowView`] holds an `Arc<SegmentMap>`, so a view handed to the
+//! ANN index keeps its segment's mapping alive even after compaction
+//! unlinks the file (on unix, unlinking a mapped file is safe: the
+//! pages stay valid until the last mapping is dropped). Swapping the
+//! ANN index generation under `AnnCell`'s single-flight is therefore
+//! atomic from a reader's point of view: old views stay readable until
+//! the last `Arc` drops, then `munmap` + the kernel reclaim the pages.
+//!
+//! ## `SIGBUS` caveat
+//!
+//! A memory map is a promise about file *length*: if some other
+//! process truncates a mapped segment file, touching pages past the
+//! new end of file raises `SIGBUS` — there is no way to catch that
+//! from safe Rust. The store's own code never shrinks a sealed file
+//! (immutable-after-rotation), so this can only happen under external
+//! interference with a live store directory, which the single-writer
+//! contract already forbids. Crash/corruption damage to files *at
+//! rest* is handled fine: the open-time recovery scan runs on `read`,
+//! not on the map, and only verified records are ever resolved through
+//! a mapping. The fault-injection battery in `tests/store.rs` pins
+//! exactly this: damage, reopen, serve — no panic, no `SIGBUS`.
+
+use std::fs::File;
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+#[cfg(all(unix, target_pointer_width = "64"))]
+mod sys {
+    use std::fs::File;
+    use std::os::unix::io::AsRawFd;
+
+    // Stable across Linux and the BSDs/macOS for the read-only private
+    // mapping we need; see the module docs for the target gating.
+    const PROT_READ: i32 = 1;
+    const MAP_PRIVATE: i32 = 2;
+
+    extern "C" {
+        fn mmap(
+            addr: *mut core::ffi::c_void,
+            len: usize,
+            prot: i32,
+            flags: i32,
+            fd: i32,
+            offset: i64,
+        ) -> *mut core::ffi::c_void;
+        fn munmap(addr: *mut core::ffi::c_void, len: usize) -> i32;
+    }
+
+    /// Map `len` bytes of `file` read-only; `None` on syscall failure
+    /// (the caller falls back to an owned read).
+    pub fn map_readonly(file: &File, len: usize) -> Option<*const u8> {
+        // SAFETY: a fresh private read-only mapping of a file we hold
+        // open; the kernel validates every argument and reports
+        // MAP_FAILED ((void*)-1) on error.
+        let ptr = unsafe {
+            mmap(std::ptr::null_mut(), len, PROT_READ, MAP_PRIVATE, file.as_raw_fd(), 0)
+        };
+        if ptr.is_null() || ptr as isize == -1 {
+            None
+        } else {
+            Some(ptr as *const u8)
+        }
+    }
+
+    /// Release a mapping made by [`map_readonly`].
+    pub fn unmap(ptr: *const u8, len: usize) {
+        // SAFETY: `ptr`/`len` came from a successful map_readonly and
+        // are unmapped exactly once (SegmentMap::drop).
+        unsafe {
+            munmap(ptr as *mut core::ffi::c_void, len);
+        }
+    }
+}
+
+#[derive(Debug)]
+enum Backing {
+    /// A live `mmap(2)` region (64-bit unix only).
+    #[cfg(all(unix, target_pointer_width = "64"))]
+    Mapped { ptr: *const u8, len: usize },
+    /// Fallback: the whole file read into memory. Same API, same
+    /// semantics, no page-cache sharing.
+    Owned(Vec<u8>),
+}
+
+/// One sealed segment's bytes, mapped read-only (or owned, on targets
+/// and error paths where mapping is unavailable). Immutable for its
+/// whole lifetime — see the module docs for the invariant that makes
+/// this sound.
+#[derive(Debug)]
+pub struct SegmentMap {
+    backing: Backing,
+}
+
+// SAFETY: the backing bytes are immutable and never aliased mutably;
+// a raw pointer into a read-only file mapping is as shareable as the
+// &[u8] it denotes.
+unsafe impl Send for SegmentMap {}
+unsafe impl Sync for SegmentMap {}
+
+impl SegmentMap {
+    /// Map the file at `path` read-only. Zero-length files (and any
+    /// target or syscall that cannot map) come back `Owned`.
+    pub fn map(path: &Path) -> Result<SegmentMap> {
+        let file =
+            File::open(path).with_context(|| format!("mapping segment {}", path.display()))?;
+        let len = file.metadata()?.len() as usize;
+        #[cfg(all(unix, target_pointer_width = "64"))]
+        if len > 0 {
+            // (mmap of zero bytes is EINVAL — empty files go owned.)
+            if let Some(ptr) = sys::map_readonly(&file, len) {
+                return Ok(SegmentMap { backing: Backing::Mapped { ptr, len } });
+            }
+        }
+        let bytes =
+            std::fs::read(path).with_context(|| format!("reading segment {}", path.display()))?;
+        Ok(SegmentMap { backing: Backing::Owned(bytes) })
+    }
+
+    /// The mapped (or owned) file contents.
+    pub fn as_bytes(&self) -> &[u8] {
+        match &self.backing {
+            #[cfg(all(unix, target_pointer_width = "64"))]
+            Backing::Mapped { ptr, len } => {
+                // SAFETY: ptr/len denote a live read-only mapping that
+                // outlives this borrow (dropped only in Drop).
+                unsafe { std::slice::from_raw_parts(*ptr, *len) }
+            }
+            Backing::Owned(bytes) => bytes,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match &self.backing {
+            #[cfg(all(unix, target_pointer_width = "64"))]
+            Backing::Mapped { len, .. } => *len,
+            Backing::Owned(bytes) => bytes.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// `true` when backed by a real `mmap` region (vs the owned-read
+    /// fallback).
+    pub fn is_mapped(&self) -> bool {
+        match &self.backing {
+            #[cfg(all(unix, target_pointer_width = "64"))]
+            Backing::Mapped { .. } => true,
+            Backing::Owned(_) => false,
+        }
+    }
+}
+
+impl Drop for SegmentMap {
+    fn drop(&mut self) {
+        #[cfg(all(unix, target_pointer_width = "64"))]
+        if let Backing::Mapped { ptr, len } = self.backing {
+            sys::unmap(ptr, len);
+        }
+    }
+}
+
+/// A zero-copy `&[f32]` window into a mapped sealed segment: the row
+/// payload of one record, reinterpreted in place. Constructible only
+/// when the reinterpretation is sound (little-endian target, 4-aligned
+/// offset, in-bounds) — [`RowView::new`] returns `None` otherwise and
+/// the caller falls back to an owned copy. Holding the `Arc` pins the
+/// mapping across compaction (see the module docs on generations).
+#[derive(Clone, Debug)]
+pub struct RowView {
+    map: Arc<SegmentMap>,
+    /// Byte offset of the first f32 within the segment.
+    off: usize,
+    /// Row length in floats.
+    len: usize,
+}
+
+impl RowView {
+    /// `off` is the byte offset of the row's f32 data inside `map`;
+    /// `len` counts floats. Returns `None` unless an in-place
+    /// `&[f32]` reinterpretation is valid here: rows are stored as
+    /// little-endian `f32::to_bits`, so the target must be
+    /// little-endian and the start address 4-byte aligned (which the
+    /// record layout guarantees — every record length is a multiple of
+    /// 4 and segments start with an 8-byte magic — but is re-checked
+    /// rather than assumed).
+    pub fn new(map: Arc<SegmentMap>, off: usize, len: usize) -> Option<RowView> {
+        let end = off.checked_add(len.checked_mul(4)?)?;
+        if end > map.len() {
+            return None;
+        }
+        if !cfg!(target_endian = "little") {
+            return None;
+        }
+        if (map.as_bytes().as_ptr() as usize + off) % std::mem::align_of::<f32>() != 0 {
+            return None;
+        }
+        Some(RowView { map, off, len })
+    }
+
+    pub fn as_slice(&self) -> &[f32] {
+        // SAFETY: new() proved bounds, alignment, and endianness; the
+        // bytes are immutable for the mapping's lifetime, and any bit
+        // pattern is a valid f32.
+        unsafe {
+            std::slice::from_raw_parts(
+                self.map.as_bytes().as_ptr().add(self.off) as *const f32,
+                self.len,
+            )
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+}
+
+/// One embedding row, either borrowed in place from a mapped sealed
+/// segment or owned (active-segment reads, legacy path, and every
+/// fallback). The ANN index stores these instead of flattened
+/// `Vec<f32>` copies; `owned_bytes` is the "did we actually stop
+/// copying?" accounting the `indexed_bytes` stat surfaces.
+#[derive(Clone, Debug)]
+pub enum RowData {
+    View(RowView),
+    Owned(Vec<f32>),
+}
+
+impl RowData {
+    pub fn as_slice(&self) -> &[f32] {
+        match self {
+            RowData::View(v) => v.as_slice(),
+            RowData::Owned(v) => v,
+        }
+    }
+
+    pub fn to_vec(&self) -> Vec<f32> {
+        self.as_slice().to_vec()
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            RowData::View(v) => v.len(),
+            RowData::Owned(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Heap bytes owned by this row (0 for a view).
+    pub fn owned_bytes(&self) -> usize {
+        match self {
+            RowData::View(_) => 0,
+            RowData::Owned(v) => 4 * v.len(),
+        }
+    }
+}
+
+impl From<Vec<f32>> for RowData {
+    fn from(v: Vec<f32>) -> RowData {
+        RowData::Owned(v)
+    }
+}
+
+/// Decode little-endian f32 bits from raw bytes — the fallback when a
+/// view cannot be constructed (big-endian target or a misaligned
+/// offset, neither of which occurs with the real record layout).
+pub(crate) fn decode_floats(bytes: &[u8]) -> Vec<f32> {
+    bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_bits(u32::from_le_bytes([c[0], c[1], c[2], c[3]])))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn temp_file(tag: &str, bytes: &[u8]) -> std::path::PathBuf {
+        let path = std::env::temp_dir()
+            .join(format!("graphlet_mmap_{tag}_{}", std::process::id()));
+        std::fs::write(&path, bytes).unwrap();
+        path
+    }
+
+    #[test]
+    fn map_round_trips_file_bytes() {
+        let bytes: Vec<u8> = (0..=255u8).cycle().take(1000).collect();
+        let path = temp_file("roundtrip", &bytes);
+        let map = SegmentMap::map(&path).unwrap();
+        assert_eq!(map.len(), bytes.len());
+        assert_eq!(map.as_bytes(), &bytes[..]);
+        if cfg!(all(unix, target_pointer_width = "64")) {
+            assert!(map.is_mapped(), "64-bit unix must take the real mmap path");
+        }
+        drop(map);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn empty_file_maps_as_owned_empty() {
+        let path = temp_file("empty", &[]);
+        let map = SegmentMap::map(&path).unwrap();
+        assert!(map.is_empty());
+        assert!(!map.is_mapped(), "zero-length files cannot be mapped");
+        assert_eq!(map.as_bytes(), &[] as &[u8]);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn mapping_survives_unlink_of_the_backing_file() {
+        // The generation-safety property compaction relies on: views
+        // into a deleted segment stay readable until the Arc drops.
+        let bytes = vec![7u8; 4096];
+        let path = temp_file("unlink", &bytes);
+        let map = SegmentMap::map(&path).unwrap();
+        std::fs::remove_file(&path).unwrap();
+        assert_eq!(map.as_bytes(), &bytes[..]);
+    }
+
+    #[test]
+    fn row_view_reinterprets_le_f32_bits_in_place() {
+        let row = [1.5f32, -0.0, f32::NAN, 3.25e-7];
+        let mut bytes = vec![0u8; 8]; // 8-byte "magic" keeps the row 4-aligned
+        for v in row {
+            bytes.extend_from_slice(&v.to_bits().to_le_bytes());
+        }
+        let path = temp_file("rowview", &bytes);
+        let map = Arc::new(SegmentMap::map(&path).unwrap());
+        let _ = std::fs::remove_file(&path);
+        match RowView::new(Arc::clone(&map), 8, row.len()) {
+            Some(view) => {
+                let got: Vec<u32> = view.as_slice().iter().map(|v| v.to_bits()).collect();
+                let want: Vec<u32> = row.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(got, want, "view must be bitwise the encoded floats");
+            }
+            // Big-endian targets legitimately refuse; the store then
+            // serves owned copies everywhere.
+            None => assert!(!cfg!(target_endian = "little")),
+        }
+    }
+
+    #[test]
+    fn row_view_rejects_out_of_bounds_and_misalignment() {
+        let path = temp_file("bounds", &[0u8; 64]);
+        let map = Arc::new(SegmentMap::map(&path).unwrap());
+        let _ = std::fs::remove_file(&path);
+        assert!(RowView::new(Arc::clone(&map), 0, 17).is_none(), "68 bytes > 64");
+        assert!(RowView::new(Arc::clone(&map), 64, 1).is_none(), "starts past the end");
+        assert!(RowView::new(Arc::clone(&map), usize::MAX, 1).is_none(), "offset overflow");
+        assert!(RowView::new(Arc::clone(&map), 0, usize::MAX).is_none(), "length overflow");
+        if cfg!(target_endian = "little") {
+            assert!(RowView::new(Arc::clone(&map), 0, 16).is_some());
+            // An mmap region is page-aligned, so offset alignment is
+            // offset % 4 here.
+            assert!(RowView::new(Arc::clone(&map), 2, 2).is_none(), "misaligned offset");
+        }
+    }
+
+    #[test]
+    fn row_data_accounts_owned_bytes() {
+        let owned = RowData::from(vec![1.0f32; 10]);
+        assert_eq!(owned.owned_bytes(), 40);
+        assert_eq!(owned.len(), 10);
+        assert_eq!(owned.to_vec(), vec![1.0f32; 10]);
+
+        let path = temp_file("owned_bytes", &3.5f32.to_bits().to_le_bytes());
+        let map = Arc::new(SegmentMap::map(&path).unwrap());
+        let _ = std::fs::remove_file(&path);
+        if let Some(view) = RowView::new(map, 0, 1) {
+            let data = RowData::View(view);
+            assert_eq!(data.owned_bytes(), 0, "views own nothing");
+            assert_eq!(data.to_vec(), vec![3.5f32]);
+        }
+    }
+
+    #[test]
+    fn decode_floats_matches_from_bits() {
+        let vals = [0.0f32, -1.0, f32::INFINITY, 1.25e-12];
+        let mut bytes = Vec::new();
+        for v in vals {
+            bytes.extend_from_slice(&v.to_bits().to_le_bytes());
+        }
+        let got: Vec<u32> = decode_floats(&bytes).iter().map(|v| v.to_bits()).collect();
+        let want: Vec<u32> = vals.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(got, want);
+    }
+}

@@ -1,5 +1,6 @@
 //! `store`: the persistent tier of the embedding cache — a
-//! content-addressed, append-only **segment log** for embedding rows.
+//! content-addressed, append-only **segment log** for embedding rows,
+//! with sealed segments memory-mapped for zero-copy reads.
 //!
 //! The paper's economics make embeddings worth keeping: computing one
 //! is the expensive part of the graphlet pipeline, and once computed a
@@ -13,9 +14,10 @@
 //!
 //! ```text
 //!  <dir>/
-//!    seg-00000000.log     ┐ numbered segments, scanned in id order on
-//!    seg-00000001.log     │ open; the highest id is the active segment
-//!    seg-00000002.log  ◄──┘ (appends go here; rotate at segment_bytes)
+//!    seg-00000000.log  ┐ SEALED: immutable after rotation, verified by
+//!    seg-00000001.log  ┘ the open scan, mmap'd → zero-copy row views
+//!    seg-00000002.log  ◄─ ACTIVE: highest id; appends go here (rotate
+//!                         at segment_bytes); reads seek+copy+verify
 //!
 //!  one segment:
 //!    ┌──────────┬────────────┬────────────┬─ ─ ─┬─(torn tail)─┐
@@ -26,6 +28,16 @@
 //!  one record:
 //!    [u32 payload_len][u64 graph_hash][u64 config_fp][u64 seed]
 //!    [u32 row_len][row_len × f32 bits][u64 FNV-1a(payload)]
+//!
+//!  segment lifecycle (mmap: true):
+//!
+//!     appends          rotate            compact
+//!    ┌────────┐   seal + mmap   ┌────────┐   rewrite live rows into a
+//!    │ ACTIVE │ ──────────────► │ SEALED │ ─► new generation, unlink
+//!    └────────┘                 └────────┘   old files; outstanding
+//!                                  │ get     RowViews pin the old
+//!                                  ▼         mapping (Arc) until the
+//!                              &[f32] view   last reader drops it
 //! ```
 //!
 //! Properties the serve tier builds on:
@@ -39,27 +51,48 @@
 //!   just that record — and the active segment is truncated back to its
 //!   last intact record. One store owns a directory at a time (no
 //!   cross-process lock; see [`log`]'s module docs).
+//! - **Immutable after rotation**: once a segment stops being active it
+//!   is never appended to or rewritten in place — compaction writes a
+//!   *new* generation. That invariant is what lets [`mmap`] map sealed
+//!   segments once and serve [`mmap::RowData::View`]s (`&[f32]`
+//!   straight into the page cache) without per-read verification:
+//!   sealed records were proven intact by the open scan or written by
+//!   this very process. With `mmap`, open seals a recovered tail
+//!   segment by rotating once, so *everything* scanned becomes
+//!   mappable. Caveat: truncating a mapped file under a live store is
+//!   the one way to `SIGBUS` a view — forbidden by the single-writer
+//!   contract and impossible from the store's own code; see [`mmap`]'s
+//!   module docs.
 //! - **Supersede, then compact**: re-putting a key makes the old record
 //!   dead; when `dead/(live+dead)` crosses `compact_dead_ratio`,
 //!   [`EmbeddingStore::compact`] rewrites live records into a fresh
 //!   segment generation (numbered after the old one, so the ascending
 //!   recovery scan prefers the rewrite even after a mid-compaction
-//!   crash) and deletes the old files.
+//!   crash) and deletes the old files. Mappings of the old generation
+//!   are released store-side, but any outstanding view (e.g. inside a
+//!   live ANN index) holds an `Arc` to its mapping and stays readable —
+//!   unlinking a mapped file is safe on unix.
 //! - **Bitwise fidelity**: rows are stored as raw `f32` bits; what the
 //!   pipeline computed is exactly what a later daemon serves (pinned by
-//!   `tests/store.rs` against a fresh `embed_dataset` run).
+//!   `tests/store.rs` against a fresh `embed_dataset` run, and mmap vs
+//!   legacy path by the `tests/mmap.rs` differential battery).
 //!
 //! The serve layer tiers this store *under* its in-RAM LRU
 //! ([`crate::serve::cache::TieredCache`]): L1 misses probe the store
+//! (zero-copy for sealed rows — the copy happens only on L1 promotion)
 //! and promote hits; inserts write through. The ANN retrieval index
-//! ([`crate::ann`]) feeds on [`EmbeddingStore::snapshot_rows`] — a
-//! key-sorted dump of every live row — taken under a brief lock at
-//! daemon open, after compaction, and when the pending tail overflows.
-//! No new dependencies — the codec is hand-rolled, checksums share
-//! [`crate::util::fnv`].
+//! ([`crate::ann`]) feeds on [`EmbeddingStore::snapshot_row_data`] — a
+//! key-sorted dump of every live row as views-or-copies — taken under
+//! a brief `&self` lock at daemon open, after compaction, and when the
+//! pending tail overflows; only active-tail rows are copied. No new
+//! dependencies — the codec is hand-rolled, checksums share
+//! [`crate::util::fnv`], and `mmap(2)`/`munmap(2)` are direct
+//! `extern "C"` declarations.
 
 pub mod codec;
 pub mod log;
+pub mod mmap;
 
 pub use codec::CacheKey;
-pub use log::{EmbeddingStore, StoreConfig, StoreStats};
+pub use log::{mmap_default, EmbeddingStore, StoreConfig, StoreStats};
+pub use mmap::{RowData, RowView, SegmentMap};

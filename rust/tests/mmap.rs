@@ -1,0 +1,401 @@
+//! The mmap differential battery: the zero-copy sealed-segment read
+//! path pinned bitwise against the legacy seek+read+verify path, plus a
+//! compaction/rotation race hammered by concurrent readers.
+//!
+//! Contracts pinned here (the PR's acceptance criteria):
+//! - two stores fed identical operations — one `mmap: true`, one
+//!   `mmap: false`, both set explicitly so the `GRAPHLET_RF_TEST_MMAP`
+//!   CI axis cannot skew this file — answer every `get`,
+//!   `snapshot_row_data`, and ANN `nearest` **bitwise identically**,
+//!   across corpus sizes {0, 1, 63, 500} × dims {64, 128} × three
+//!   compaction generations;
+//! - an ANN index built from view-backed rows is the same index as one
+//!   built from owned rows: identical neighbors, bitwise distances, and
+//!   identical probed/scanned effort — and at probe 1.0 both stay the
+//!   exact brute-force oracle;
+//! - on the mapped store every post-reopen read is served off a sealed
+//!   mapping (`mmap_reads` counts them all) and the view-backed index
+//!   owns ~zero row bytes, while the legacy index owns every row;
+//! - readers holding `RowData` views across the store lock — including
+//!   an ANN index built from a snapshot — stay valid and bitwise-intact
+//!   while a writer thread supersedes rows, rotates segments, and
+//!   compacts generations out from under them: a row is always exactly
+//!   one generation, never a mix, and never a torn read.
+//!
+//! Every assert carries the corpus seed so a failure is replayable.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+
+use graphlet_rf::ann::{l2_distance, neighbor_cmp, AnnConfig, AnnIndex, Neighbor};
+use graphlet_rf::store::codec::record_len;
+use graphlet_rf::store::{CacheKey, EmbeddingStore, RowData, StoreConfig};
+use graphlet_rf::util::Rng;
+
+fn key(i: u64) -> CacheKey {
+    CacheKey { graph_hash: i.wrapping_mul(0x9E37_79B9_7F4A_7C15), config_fp: 0x33A9, seed: i }
+}
+
+/// A seeded gaussian corpus with adversarial float bit patterns planted
+/// in row 0 — negative zero, the smallest normal, a subnormal, and
+/// `f32::MAX` — the values a lossy read path would normalize away.
+fn corpus(n: usize, dim: usize, seed: u64) -> Vec<(CacheKey, Vec<f32>)> {
+    let mut rng = Rng::new(seed);
+    let mut rows: Vec<(CacheKey, Vec<f32>)> = (0..n)
+        .map(|i| (key(i as u64), (0..dim).map(|_| rng.gaussian_f32()).collect()))
+        .collect();
+    if n > 0 && dim >= 4 {
+        rows[0].1[0] = -0.0;
+        rows[0].1[1] = f32::MIN_POSITIVE;
+        rows[0].1[2] = 1.0e-42; // subnormal
+        rows[0].1[3] = f32::MAX;
+    }
+    rows
+}
+
+fn bits(row: &[f32]) -> Vec<u32> {
+    row.iter().map(|v| v.to_bits()).collect()
+}
+
+/// Independent oracle: sort ALL rows by `(distance, key)`, keep k.
+fn brute_oracle(entries: &BTreeMap<CacheKey, Vec<f32>>, query: &[f32], k: usize) -> Vec<Neighbor> {
+    let mut all: Vec<Neighbor> = entries
+        .iter()
+        .map(|(key, row)| Neighbor { key: *key, distance: l2_distance(query, row) })
+        .collect();
+    all.sort_unstable_by(neighbor_cmp);
+    all.truncate(k);
+    all
+}
+
+/// Both read paths can reinterpret mapped bytes as `&[f32]` here; other
+/// targets fall back to owned decoding (still differentially checked,
+/// just not zero-copy), so the ownership asserts are gated on this.
+fn zero_copy_target() -> bool {
+    cfg!(all(unix, target_endian = "little", target_pointer_width = "64"))
+}
+
+/// One generation's full differential sweep over freshly reopened
+/// stores: stats, every `get`, the snapshot, and ANN at probe 1.0.
+fn check_generation(
+    mapped: &mut EmbeddingStore,
+    legacy: &mut EmbeddingStore,
+    expected: &BTreeMap<CacheKey, Vec<f32>>,
+    dim: usize,
+    ctx: &str,
+) {
+    assert_eq!(mapped.len(), expected.len(), "{ctx}: mapped live records");
+    assert_eq!(legacy.len(), expected.len(), "{ctx}: legacy live records");
+    assert_eq!(legacy.stats().mmap_segments, 0, "{ctx}: legacy store must map nothing");
+
+    // Every get: bitwise identical on both paths, and — because the
+    // reopen sealed everything — every mapped-store read comes off a
+    // mapping (the counter is the proof the fast path actually ran).
+    let reads0 = mapped.stats().mmap_reads;
+    for (k, want) in expected {
+        let a = mapped.get_row(k).unwrap_or_else(|| panic!("{ctx}: mapped miss {k:?}"));
+        let b = legacy.get_row(k).unwrap_or_else(|| panic!("{ctx}: legacy miss {k:?}"));
+        if zero_copy_target() {
+            assert!(matches!(a, RowData::View(_)), "{ctx}: sealed row must be a view");
+        }
+        assert!(matches!(b, RowData::Owned(_)), "{ctx}: legacy row must be owned");
+        assert_eq!(bits(&a.to_vec()), bits(want), "{ctx}: mapped get {k:?}");
+        assert_eq!(bits(&b.to_vec()), bits(want), "{ctx}: legacy get {k:?}");
+    }
+    assert_eq!(
+        mapped.stats().mmap_reads - reads0,
+        expected.len() as u64,
+        "{ctx}: every post-reopen get must take the mapped path"
+    );
+
+    // Snapshots: same key order (sorted), same bits, complete.
+    let snap_m = mapped.snapshot_row_data();
+    let snap_l = legacy.snapshot_row_data();
+    assert_eq!(snap_m.len(), expected.len(), "{ctx}: mapped snapshot size");
+    assert_eq!(snap_l.len(), expected.len(), "{ctx}: legacy snapshot size");
+    for (((km, rm), (kl, rl)), (ke, re)) in snap_m.iter().zip(&snap_l).zip(expected) {
+        assert_eq!((km, kl), (ke, ke), "{ctx}: snapshot key order");
+        assert_eq!(bits(&rm.to_vec()), bits(re), "{ctx}: mapped snapshot row {ke:?}");
+        assert_eq!(bits(&rl.to_vec()), bits(re), "{ctx}: legacy snapshot row {ke:?}");
+    }
+
+    // ANN over the two snapshots: the view-backed index owns (nearly)
+    // nothing, the owned-backed one owns everything — and both answer
+    // every query identically, pinned to the brute-force oracle at
+    // probe 1.0.
+    let cfg = AnnConfig::default();
+    let index_m = AnnIndex::build(snap_m, dim, &cfg);
+    let index_l = AnnIndex::build(snap_l, dim, &cfg);
+    if zero_copy_target() {
+        assert_eq!(index_m.indexed_bytes(), 0, "{ctx}: view-backed index must own no rows");
+    }
+    assert_eq!(
+        index_l.indexed_bytes(),
+        (expected.len() * dim * 4) as u64,
+        "{ctx}: owned-backed index must own every row"
+    );
+
+    let mut rng = Rng::new(0x0FF5E7 ^ expected.len() as u64 ^ (dim as u64) << 32);
+    let mut queries: Vec<Vec<f32>> = (0..4)
+        .map(|_| (0..dim).map(|_| rng.gaussian_f32()).collect())
+        .collect();
+    if let Some(row) = expected.values().next() {
+        queries.push(row.clone()); // exact hit: distance-0 tiebreak
+    }
+    for (qi, q) in queries.iter().enumerate() {
+        for k in [1usize, 10] {
+            let want = brute_oracle(expected, q, k);
+            let a = index_m.nearest(q, k, 1.0);
+            let b = index_l.nearest(q, k, 1.0);
+            let qctx = format!("{ctx} query={qi} k={k}");
+            assert_eq!(a.probed, b.probed, "{qctx}: probed lists");
+            assert_eq!(a.scanned, b.scanned, "{qctx}: scanned rows");
+            for (rank, pair) in a.neighbors.iter().zip(&want).enumerate() {
+                assert_eq!(pair.0.key, pair.1.key, "{qctx}: mapped key at rank {rank}");
+                assert_eq!(
+                    pair.0.distance.to_bits(),
+                    pair.1.distance.to_bits(),
+                    "{qctx}: mapped distance at rank {rank}"
+                );
+            }
+            for (rank, pair) in b.neighbors.iter().zip(&want).enumerate() {
+                assert_eq!(pair.0.key, pair.1.key, "{qctx}: legacy key at rank {rank}");
+                assert_eq!(
+                    pair.0.distance.to_bits(),
+                    pair.1.distance.to_bits(),
+                    "{qctx}: legacy distance at rank {rank}"
+                );
+            }
+            assert_eq!(a.neighbors.len(), want.len(), "{qctx}: mapped count");
+            assert_eq!(b.neighbors.len(), want.len(), "{qctx}: legacy count");
+        }
+    }
+}
+
+fn temp_dir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("graphlet_mmap_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// The tentpole differential: identical operation streams into a mapped
+/// and a legacy store, swept across sizes × dims × three generations
+/// (fresh, one compaction, two compactions), checked after a reopen so
+/// the mapped store genuinely serves sealed views.
+#[test]
+fn mmap_and_legacy_read_paths_are_bitwise_identical_across_generations() {
+    for dim in [64usize, 128] {
+        for n in [0usize, 1, 63, 500] {
+            let seed = 0x33A9_5EED ^ ((n as u64) << 8) ^ dim as u64;
+            // Small segments: the corpus spans many sealed segments and
+            // compaction's rewrite re-rotates mid-stream, so each
+            // generation mixes mapped and tail rows before its reopen.
+            let segment_bytes = 8 + 16 * record_len(dim) as u64;
+            let base = StoreConfig {
+                segment_bytes,
+                compact_min_bytes: u64::MAX, // compaction is driven manually
+                ..StoreConfig::new(temp_dir(&format!("diff_m_{n}_{dim}")))
+            };
+            let cfg_m = StoreConfig { mmap: true, ..base.clone() };
+            let cfg_l = StoreConfig {
+                mmap: false,
+                dir: temp_dir(&format!("diff_l_{n}_{dim}")),
+                ..base
+            };
+
+            let mut expected: BTreeMap<CacheKey, Vec<f32>> = BTreeMap::new();
+            let mut entries = corpus(n, dim, seed);
+            Rng::new(seed ^ 7).shuffle(&mut entries);
+            {
+                let mut sm = EmbeddingStore::open(cfg_m.clone()).unwrap();
+                let mut sl = EmbeddingStore::open(cfg_l.clone()).unwrap();
+                for (k, row) in &entries {
+                    sm.put(*k, row).unwrap();
+                    sl.put(*k, row).unwrap();
+                    expected.insert(*k, row.clone());
+                }
+            }
+
+            for gen in 0u64..3 {
+                let ctx = format!("n={n} dim={dim} gen={gen} seed={seed:#x}");
+                let mut sm = EmbeddingStore::open(cfg_m.clone()).unwrap();
+                let mut sl = EmbeddingStore::open(cfg_l.clone()).unwrap();
+                check_generation(&mut sm, &mut sl, &expected, dim, &ctx);
+
+                // Next generation: supersede a third of the keys with
+                // fresh rows, then compact both stores — the mapped one
+                // unlinks and remaps a whole generation of files.
+                let fresh = corpus(n, dim, seed ^ (gen + 1).wrapping_mul(0x9E37));
+                for (i, (k, row)) in fresh.iter().enumerate() {
+                    if i as u64 % 3 == gen % 3 {
+                        sm.put(*k, row).unwrap();
+                        sl.put(*k, row).unwrap();
+                        expected.insert(*k, row.clone());
+                    }
+                }
+                sm.compact().unwrap();
+                sl.compact().unwrap();
+                assert_eq!(sm.stats().dead_bytes, 0, "{ctx}: mapped compaction reclaims");
+                assert_eq!(sl.stats().dead_bytes, 0, "{ctx}: legacy compaction reclaims");
+            }
+            let _ = std::fs::remove_dir_all(&cfg_m.dir);
+            let _ = std::fs::remove_dir_all(&cfg_l.dir);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Concurrency: reader threads hold views (and whole view-backed ANN
+// indexes) across the store lock while a writer supersedes every key,
+// rotates segments, and compacts generations away. Rows are generation-
+// uniform by construction, so any torn or mixed-generation read — and
+// any SIGBUS from a view into an unlinked segment — fails loudly.
+// ---------------------------------------------------------------------------
+
+const RACE_SEED: u64 = 0x52ACE;
+const RACE_KEYS: u64 = 32;
+const RACE_DIM: usize = 16;
+const RACE_GENS: u64 = 24;
+
+fn race_key(i: u64) -> CacheKey {
+    CacheKey { graph_hash: i, config_fp: RACE_SEED, seed: i ^ 0xF00D }
+}
+
+/// Generation-uniform row: every element is `i*1000 + gen` (exact in
+/// f32 for these ranges), so a single out-of-place element convicts a
+/// torn read and the decoded value names the generation it came from.
+fn race_row(i: u64, gen: u64) -> Vec<f32> {
+    vec![(i * 1000 + gen) as f32; RACE_DIM]
+}
+
+/// Assert `row` is exactly ONE generation of key `i`, and return it.
+fn race_generation_of(row: &[f32], i: u64, who: &str) -> u64 {
+    assert_eq!(row.len(), RACE_DIM, "{who}: row width (seed={RACE_SEED:#x})");
+    let head = row[0];
+    for (j, v) in row.iter().enumerate() {
+        assert_eq!(
+            v.to_bits(),
+            head.to_bits(),
+            "{who}: torn row for key {i} at elem {j} (seed={RACE_SEED:#x})"
+        );
+    }
+    let raw = head as u64;
+    assert!(
+        raw >= i * 1000 && raw <= i * 1000 + RACE_GENS,
+        "{who}: key {i} decoded {raw}, not one of its generations (seed={RACE_SEED:#x})"
+    );
+    raw - i * 1000
+}
+
+#[test]
+fn views_stay_single_generation_while_compaction_races_readers() {
+    let cfg = StoreConfig {
+        // ~8 records per segment: the writer's churn rotates constantly.
+        segment_bytes: 8 + 8 * record_len(RACE_DIM) as u64,
+        compact_min_bytes: u64::MAX,
+        mmap: true,
+        ..StoreConfig::new(temp_dir("race"))
+    };
+    {
+        let mut s = EmbeddingStore::open(cfg.clone()).unwrap();
+        for i in 0..RACE_KEYS {
+            s.put(race_key(i), &race_row(i, 0)).unwrap();
+        }
+    }
+    // Reopen seals generation 0: readers start on real mapped views.
+    let store = Arc::new(Mutex::new(EmbeddingStore::open(cfg.clone()).unwrap()));
+    let done = Arc::new(AtomicBool::new(false));
+
+    let mut readers = Vec::new();
+    for t in 0..2u64 {
+        let store = Arc::clone(&store);
+        let done = Arc::clone(&done);
+        readers.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(RACE_SEED ^ t);
+            let who = format!("get-reader-{t}");
+            while !done.load(Ordering::Relaxed) {
+                let i = rng.gen_range(RACE_KEYS);
+                // Take the view under the lock, read it AFTER release:
+                // the writer may compact its segment away in between —
+                // the view's Arc must keep the pages valid.
+                let data = store
+                    .lock()
+                    .unwrap()
+                    .get_row(&race_key(i))
+                    .unwrap_or_else(|| panic!("{who}: key {i} vanished (seed={RACE_SEED:#x})"));
+                race_generation_of(&data.to_vec(), i, &who);
+            }
+        }));
+    }
+    {
+        let store = Arc::clone(&store);
+        let done = Arc::clone(&done);
+        readers.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(RACE_SEED ^ 0xA22);
+            let who = "ann-reader";
+            while !done.load(Ordering::Relaxed) {
+                // Snapshot under the lock (one consistent cut), build
+                // and query the index outside it while the writer moves
+                // the store generations ahead.
+                let snap = store.lock().unwrap().snapshot_row_data();
+                assert_eq!(snap.len() as u64, RACE_KEYS, "{who} (seed={RACE_SEED:#x})");
+                let index = AnnIndex::build(snap, RACE_DIM, &AnnConfig::default());
+                let qi = rng.gen_range(RACE_KEYS);
+                let q = race_row(qi, 0);
+                let res = index.nearest(&q, 5, 1.0);
+                assert_eq!(res.neighbors.len(), 5, "{who} (seed={RACE_SEED:#x})");
+                for nb in &res.neighbors {
+                    // The distance must be explainable by exactly one
+                    // generation of the neighbor's key — recomputed with
+                    // the same kernel, so an untorn row matches bitwise.
+                    let i = nb.key.graph_hash;
+                    let ok = (0..=RACE_GENS).any(|g| {
+                        l2_distance(&q, &race_row(i, g)).to_bits() == nb.distance.to_bits()
+                    });
+                    assert!(
+                        ok,
+                        "{who}: neighbor {i} distance {} matches no single generation \
+                         (seed={RACE_SEED:#x})",
+                        nb.distance
+                    );
+                }
+            }
+        }));
+    }
+
+    let writer = {
+        let store = Arc::clone(&store);
+        std::thread::spawn(move || {
+            for gen in 1..=RACE_GENS {
+                for i in 0..RACE_KEYS {
+                    // Lock per put: readers interleave with every append.
+                    store.lock().unwrap().put(race_key(i), &race_row(i, gen)).unwrap();
+                }
+                if gen % 4 == 0 {
+                    store.lock().unwrap().compact().unwrap();
+                }
+            }
+        })
+    };
+    writer.join().unwrap();
+    done.store(true, Ordering::Relaxed);
+    for r in readers {
+        r.join().unwrap();
+    }
+
+    // Quiesced: every key sits at the final generation, and survives a
+    // fresh recovery scan + reseal bitwise.
+    let mut s = Arc::try_unwrap(store).ok().expect("sole owner").into_inner().unwrap();
+    for i in 0..RACE_KEYS {
+        let row = s.get(&race_key(i)).unwrap();
+        assert_eq!(bits(&row), bits(&race_row(i, RACE_GENS)), "final gen, key {i}");
+    }
+    drop(s);
+    let mut s = EmbeddingStore::open(cfg.clone()).unwrap();
+    for i in 0..RACE_KEYS {
+        let row = s.get(&race_key(i)).unwrap();
+        assert_eq!(bits(&row), bits(&race_row(i, RACE_GENS)), "reopen, key {i}");
+    }
+    let _ = std::fs::remove_dir_all(&cfg.dir);
+}

@@ -8,7 +8,12 @@
 //!   `embed_dataset` run;
 //! - a torn final record (crash mid-append) is skipped gracefully with
 //!   `corrupt_skipped` visible in `stats` — never a panic — and the
-//!   lost row is recomputed and re-persisted on the next request.
+//!   lost row is recomputed and re-persisted on the next request;
+//! - a fault-injection battery (direct `EmbeddingStore`, mmap on)
+//!   corrupts sealed segments at every record boundary and mid-payload
+//!   — truncations and single-byte flips — and pins the exact
+//!   `corrupt_skipped` count, the precise lost-key set, and bitwise
+//!   survivors for every scenario.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpStream};
@@ -22,6 +27,8 @@ use graphlet_rf::serve::{
     embed_request, nearest_request, parse_embed_reply, parse_nearest_reply, send_shutdown,
     ServeConfig, Server,
 };
+use graphlet_rf::store::codec::{record_len, SEGMENT_MAGIC};
+use graphlet_rf::store::{CacheKey, EmbeddingStore, StoreConfig};
 use graphlet_rf::util::{Json, Rng};
 
 fn test_ds() -> Dataset {
@@ -274,6 +281,177 @@ fn restart_rebuilds_ann_index_and_serves_identical_neighbors() {
     send_shutdown(&addr.to_string()).unwrap();
     server.join().unwrap();
     let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---------------------------------------------------------------------------
+// Fault-injection battery (direct store, no daemon): corrupt segment files
+// at every record boundary and mid-payload — truncations and single-byte
+// flips — then reopen with mmap and pin the EXACT recovery outcome: the
+// `corrupt_skipped` count, the precise set of lost keys, bitwise-intact
+// survivors through both `get` and `snapshot_row_data`, and an appendable
+// store afterwards. No scenario may panic, fail the open, or SIGBUS.
+//
+// Corruption is only ever applied to a CLOSED store. A sealed segment under
+// a live store is immutable by the single-writer contract — external
+// mutation of a mapped file is the one fault class documented as out of
+// scope (see store::mmap) — so the battery models what crashes actually
+// produce: damaged bytes discovered at the NEXT open.
+// ---------------------------------------------------------------------------
+
+const FB_DIM: usize = 8;
+const FB_ROWS: u64 = 12;
+const FB_PER_SEG: usize = 4;
+
+fn fb_key(n: u64) -> CacheKey {
+    CacheKey { graph_hash: 0x9A00 + n, config_fp: 0xFB17, seed: n ^ 0x5A }
+}
+
+fn fb_row(n: u64) -> Vec<f32> {
+    (0..FB_DIM as u64).map(|j| (n * 31 + j) as f32 * 0.5 - 3.0).collect()
+}
+
+fn fb_bits(row: &[f32]) -> Vec<u32> {
+    row.iter().map(|v| v.to_bits()).collect()
+}
+
+/// Build a closed 12-row store forced into three 4-record segments, and
+/// return its layout read back off disk: `(segment path, record count,
+/// ordinal of its first key)`. Appends are sequential and segment ids
+/// ascend, so key ordinals run left-to-right across the sorted files.
+fn fb_build(tag: &str) -> (StoreConfig, Vec<(PathBuf, usize, u64)>) {
+    let rec = record_len(FB_DIM) as u64;
+    let dir = temp_dir(&format!("fault_{tag}"));
+    let cfg = StoreConfig {
+        segment_bytes: SEGMENT_MAGIC.len() as u64 + FB_PER_SEG as u64 * rec,
+        mmap: true,
+        ..StoreConfig::new(dir.clone())
+    };
+    let mut s = EmbeddingStore::open(cfg.clone()).unwrap();
+    for n in 0..FB_ROWS {
+        s.put(fb_key(n), &fb_row(n)).unwrap();
+    }
+    drop(s);
+    let mut paths: Vec<PathBuf> = std::fs::read_dir(&dir)
+        .unwrap()
+        .map(|e| e.unwrap().path())
+        .filter(|p| p.extension().is_some_and(|e| e == "log"))
+        .collect();
+    paths.sort(); // zero-padded ids: name order == id order == append order
+    let mut layout = Vec::new();
+    let mut first = 0u64;
+    for path in paths {
+        let data = std::fs::metadata(&path).unwrap().len() - SEGMENT_MAGIC.len() as u64;
+        assert_eq!(data % rec, 0, "a clean build must end on a record boundary");
+        let count = (data / rec) as usize;
+        layout.push((path, count, first));
+        first += count as u64;
+    }
+    assert_eq!(first, FB_ROWS, "every appended record must be on disk");
+    assert_eq!(layout.len(), 3, "12 rows at 4/segment must span 3 files");
+    (cfg, layout)
+}
+
+/// Reopen the damaged store (mmap on) and pin the exact outcome.
+fn fb_check(cfg: &StoreConfig, lost: &[u64], skipped: u64, ctx: &str) {
+    let mut s = EmbeddingStore::open(cfg.clone())
+        .unwrap_or_else(|e| panic!("open must survive damage, got {e} [{ctx}]"));
+    let st = s.stats();
+    assert_eq!(st.corrupt_skipped, skipped, "corrupt_skipped [{ctx}]");
+    assert_eq!(st.records as u64 + lost.len() as u64, FB_ROWS, "live records [{ctx}]");
+    assert!(st.mmap_segments >= 2, "reopen must map the sealed segments [{ctx}]");
+    for n in 0..FB_ROWS {
+        let got = s.get(&fb_key(n));
+        if lost.contains(&n) {
+            assert!(got.is_none(), "damaged row {n} must read as a miss [{ctx}]");
+        } else {
+            let row = got.unwrap_or_else(|| panic!("intact row {n} lost [{ctx}]"));
+            assert_eq!(fb_bits(&row), fb_bits(&fb_row(n)), "survivor {n} bitwise [{ctx}]");
+        }
+    }
+    let snap = s.snapshot_row_data();
+    assert_eq!(snap.len() as u64 + lost.len() as u64, FB_ROWS, "snapshot size [{ctx}]");
+    for (k, r) in &snap {
+        let n = k.graph_hash - 0x9A00;
+        assert_eq!(fb_bits(&r.to_vec()), fb_bits(&fb_row(n)), "snapshot row {n} [{ctx}]");
+    }
+    // Recovery leaves the store appendable: a damaged row recomputes and
+    // re-persists exactly like the daemon's miss path would.
+    if let Some(&n) = lost.first() {
+        s.put(fb_key(n), &fb_row(n)).unwrap();
+        let row = s.get(&fb_key(n)).unwrap_or_else(|| panic!("re-persist lost [{ctx}]"));
+        assert_eq!(fb_bits(&row), fb_bits(&fb_row(n)), "re-persisted row [{ctx}]");
+    }
+    let _ = std::fs::remove_dir_all(&cfg.dir);
+}
+
+#[test]
+fn fault_battery_truncation_at_every_record_boundary() {
+    let rec = record_len(FB_DIM) as u64;
+    for file_idx in 0..3usize {
+        for cut in 0..=FB_PER_SEG {
+            let (cfg, layout) = fb_build(&format!("bnd{file_idx}_{cut}"));
+            let (path, count, first) = &layout[file_idx];
+            let f = std::fs::OpenOptions::new().write(true).open(path).unwrap();
+            f.set_len(SEGMENT_MAGIC.len() as u64 + cut as u64 * rec).unwrap();
+            drop(f);
+            // A cut on a record boundary looks like a segment that simply
+            // ended there: no torn bytes, so nothing is *counted* — the
+            // records past the cut are cleanly gone and recomputable.
+            let lost: Vec<u64> = (*first + cut as u64..*first + *count as u64).collect();
+            let ctx = format!("boundary cut: file={file_idx} after record {cut}");
+            fb_check(&cfg, &lost, 0, &ctx);
+        }
+    }
+}
+
+#[test]
+fn fault_battery_mid_payload_truncation_tears_the_segment_tail() {
+    let rec = record_len(FB_DIM);
+    for file_idx in 0..3usize {
+        for i in 0..FB_PER_SEG {
+            // Tear inside the length prefix, the float payload, and the
+            // trailing checksum — every torn shape a crash can leave.
+            for (name, delta) in [("len-prefix", 2), ("payload", rec / 2), ("checksum", rec - 1)]
+            {
+                let (cfg, layout) = fb_build(&format!("mid{file_idx}_{i}_{delta}"));
+                let (path, count, first) = &layout[file_idx];
+                let at = SEGMENT_MAGIC.len() + i * rec + delta;
+                let f = std::fs::OpenOptions::new().write(true).open(path).unwrap();
+                f.set_len(at as u64).unwrap();
+                drop(f);
+                // One counted Truncated skip; record i and everything after
+                // it in this file is unreachable (framing cannot resume past
+                // a tear). Records in the other files are untouched.
+                let lost: Vec<u64> = (*first + i as u64..*first + *count as u64).collect();
+                let ctx = format!("mid-record tear: file={file_idx} record={i} in {name}");
+                fb_check(&cfg, &lost, 1, &ctx);
+            }
+        }
+    }
+}
+
+#[test]
+fn fault_battery_single_byte_flips_lose_exactly_one_record() {
+    let rec = record_len(FB_DIM);
+    for file_idx in 0..3usize {
+        for i in 0..FB_PER_SEG {
+            // Flip a byte of the stored key and a byte of the float data —
+            // both under the checksum, leaving the framing intact.
+            for (name, delta) in [("key", 4 + 3), ("floats", 4 + 28 + 5)] {
+                let (cfg, layout) = fb_build(&format!("flip{file_idx}_{i}_{delta}"));
+                let (path, _, first) = &layout[file_idx];
+                let at = SEGMENT_MAGIC.len() + i * rec + delta;
+                let mut bytes = std::fs::read(path).unwrap();
+                bytes[at] ^= 0x40;
+                std::fs::write(path, &bytes).unwrap();
+                // Checksum fails with intact framing: the scan resyncs past
+                // exactly this record — one flipped bit costs one row, and
+                // the rows AFTER it in the same segment survive.
+                let ctx = format!("bit flip: file={file_idx} record={i} in {name}");
+                fb_check(&cfg, &[*first + i as u64], 1, &ctx);
+            }
+        }
+    }
 }
 
 #[test]

@@ -44,9 +44,11 @@
 //!   in flight to each shard) feed the serve `stats` op.
 //! - **Observability is observation-only**: the [`crate::obs`] wiring
 //!   (queue-wait / batch-wait / projection histograms, per-job
-//!   [`TraceCtx`] stage stamps) reads clocks and atomics but never an
-//!   RNG or a row, so embeddings are bitwise identical with tracing on
-//!   or off — pinned by `tests/obs.rs`.
+//!   [`TraceCtx`] stage stamps, and the sampling profiler's per-thread
+//!   stage slots — workers register as role `worker`, shards as `shard`)
+//!   reads clocks and atomics but never an RNG or a row, so embeddings
+//!   are bitwise identical with tracing or profiling on or off — pinned
+//!   by `tests/obs.rs`.
 //!
 //! [`embed_dataset`]: super::pipeline::embed_dataset
 
@@ -438,7 +440,7 @@ impl StreamingPipeline {
         let mut shard_handles = Vec::with_capacity(cfg.shards);
         let mut shard_slots = Vec::with_capacity(cfg.shards);
         let mut shard_occupancy = Vec::with_capacity(cfg.shards);
-        for _q in 0..cfg.shards {
+        for q in 0..cfg.shards {
             let (tx, rx) = sync_channel::<Msg>(cfg.queue_cap);
             let slot = Arc::new(Mutex::new(PipelineMetrics::default()));
             let occupancy = Arc::new(AtomicUsize::new(0));
@@ -449,7 +451,7 @@ impl StreamingPipeline {
             let occ_cl = occupancy.clone();
             let reg_cl = registry.clone();
             shard_handles.push(std::thread::spawn(move || {
-                shard_loop(rx, spawn_spec, &params, &cfg_cl, &slot_cl, &occ_cl, &reg_cl)
+                shard_loop(rx, spawn_spec, &params, &cfg_cl, &slot_cl, &occ_cl, &reg_cl, q)
             }));
             txs.push(ShardTx { tx, occupancy: occupancy.clone() });
             shard_slots.push(slot);
@@ -461,15 +463,15 @@ impl StreamingPipeline {
         // the per-shard channels it caps pipeline memory.
         let jobs = Arc::new(JobQueue::new(cfg.queue_cap * cfg.workers));
         let mut workers = Vec::with_capacity(cfg.workers);
-        for _w in 0..cfg.workers {
+        for w in 0..cfg.workers {
             let queue = jobs.clone();
             let txs = txs.clone();
             let params = params.clone();
             let cfg_cl = cfg.clone();
             let reg_cl = registry.clone();
-            workers.push(
-                std::thread::spawn(move || worker_loop(&queue, &txs, &params, &cfg_cl, &reg_cl)),
-            );
+            workers.push(std::thread::spawn(move || {
+                worker_loop(&queue, &txs, &params, &cfg_cl, &reg_cl, w)
+            }));
         }
         // `txs` originals drop here: shard channels close exactly when the
         // last worker exits.
@@ -633,7 +635,13 @@ fn worker_loop(
     params: &ParamSet,
     cfg: &GsaConfig,
     registry: &obs::Registry,
+    worker_idx: usize,
 ) {
+    // Register with the sampling profiler: "queue_wait" while blocked on
+    // the job queue, "sample" while sampling subgraphs, "projection"
+    // during inline feature maps. Stage publication is two atomic ops —
+    // observation-only, never touches an RNG or a row.
+    let prof = registry.threads().register("worker", worker_idx);
     let sampler = sampler_by_name(&cfg.sampler);
     let h_queue_wait = registry.histo("pipeline.queue_wait_us");
     // Inline mode projects on the worker thread, so the projection
@@ -661,8 +669,10 @@ fn worker_loop(
         // `pop` runs the flush hook (lock released) before sleeping, so
         // in-flight requests complete instead of waiting on future
         // traffic — and a sleeping worker never pins the queue lock.
+        prof.set_stage("queue_wait");
         let job = queue.pop(|| flush_packers(&mut packers, txs, cfg.batch, d));
         let Some(job) = job else { break };
+        prof.set_stage("sample");
         h_queue_wait.record(job.queued.elapsed());
         if let Some(tr) = &job.state.trace {
             tr.stamp("queue_wait");
@@ -694,7 +704,9 @@ fn worker_loop(
                         cfg.variant.write_input(&gl, &mut inline_x[r * d..(r + 1) * d]);
                     }
                     let proj = Instant::now();
+                    prof.set_stage("projection");
                     map.map_batch(&inline_x[..chunk * d], chunk, &mut inline_feat[..chunk * cfg.m]);
+                    prof.set_stage("sample");
                     h_projection.record(proj.elapsed());
                     for r in 0..chunk {
                         for (acc, &v) in
@@ -812,6 +824,7 @@ fn publish(slot: &Mutex<PipelineMetrics>, metrics: &PipelineMetrics) {
 /// scatter rows into per-job accumulators (arrival order == sample
 /// order, the determinism invariant), and deliver each job's mean row on
 /// its `done` channel the moment its s-th sample lands.
+#[allow(clippy::too_many_arguments)]
 fn shard_loop(
     rx: Receiver<Msg>,
     spawn_spec: Option<PjrtSpawn>,
@@ -820,7 +833,14 @@ fn shard_loop(
     slot: &Mutex<PipelineMetrics>,
     occupancy: &AtomicUsize,
     registry: &obs::Registry,
+    shard_idx: usize,
 ) -> PipelineMetrics {
+    // Register with the sampling profiler under the "shard" role — the
+    // role whose per-thread busy fraction feeds the `shard.busy_permille`
+    // gauges and serve-bench's per-pass CPU attribution. "batch_wait"
+    // while blocked on the channel, "projection" while executing.
+    let prof = registry.threads().register("shard", shard_idx);
+    prof.set_stage("batch_wait");
     let exec = match build_exec(spawn_spec, params, cfg) {
         Ok(exec) => exec,
         Err(e) => {
@@ -869,6 +889,7 @@ fn shard_loop(
     let mut cpu_out = vec![0.0f32; cfg.batch * m];
     for msg in rx {
         occupancy.fetch_sub(1, Ordering::Relaxed);
+        prof.set_stage("projection");
         match msg {
             Msg::Sum(js) => {
                 h_batch_wait.record(js.sent_at.elapsed());
@@ -994,6 +1015,7 @@ fn shard_loop(
                 publish(slot, &metrics);
             }
         }
+        prof.set_stage("batch_wait");
     }
     publish(slot, &metrics);
     metrics

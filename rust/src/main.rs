@@ -145,7 +145,7 @@ USAGE: graphlet-rf <quickstart|fig1-left|fig1-right|fig2-left|fig2-right|fig3|th
              [--data-dir DIR] [--tu-dir DIR]
              [--store-dir DIR] [--cache-policy lru|cost-aware]
              [--ann-probe F] [--ann-min-brute N] [--slow-ms N]
-             [--http-port N]
+             [--profile-hz N] [--http-port N]
 
 --shards N runs N parallel feature-engine shards (jobs round-robin over
 shards); embeddings are bitwise identical for every shard/worker count.
@@ -187,10 +187,17 @@ serve       long-running embedding daemon: line-delimited JSON over TCP,
             last N per-request stage spans; --slow-ms N additionally
             captures any request slower than N ms and logs it as one
             JSON line to stderr (0 = every request; default off).
-            --http-port N opens a GET-only HTTP sidecar on 127.0.0.1:N
-            (0 = ephemeral) serving /metrics (Prometheus text format
-            v0.0.4, this daemon's registry only), /healthz, and /readyz;
-            without the flag no HTTP socket is opened.
+            --profile-hz N sets the always-on sampling profiler's rate
+            (default 19 Hz, 0 = off): every registered daemon thread
+            publishes its current stage and the sampler attributes
+            per-thread CPU time to (role, stage) pairs — read it via
+            the profile op, and observe it never moves an embedding
+            bit. --http-port N opens a GET-only HTTP sidecar on
+            127.0.0.1:N (0 = ephemeral) serving /metrics (Prometheus
+            text format v0.0.4, this daemon's registry only), /healthz,
+            /readyz, /profile (collapsed-stack flame text; ?seconds=N
+            profiles a window), and /debug/threads; without the flag no
+            HTTP socket is opened.
 serve-bench loopback load generator: --addr HOST:PORT (default
             127.0.0.1:7878), --clients C, --requests N per client;
             reports labeled cold/warm_l1 passes (throughput, p50/p99,
@@ -326,6 +333,7 @@ fn serve_cfg_from_args(
         ann_probe: args.parse_or("ann-probe", defaults.ann_probe),
         ann_min_brute: args.parse_or("ann-min-brute", defaults.ann_min_brute),
         slow_ms: args.parse_or("slow-ms", defaults.slow_ms),
+        profile_hz: args.parse_or("profile-hz", defaults.profile_hz),
         http_port: args.try_parse::<u16>("http-port").map_err(|e| anyhow::anyhow!(e))?,
         ..defaults
     })
@@ -342,7 +350,7 @@ fn serve_cmd(ctx: &ExpContext, args: &Args, seed: u64) -> Result<()> {
     let cfg = serve_cfg_from_args(ctx, args, seed)?;
     println!(
         "serve: k={} s={} m={} variant={} engine={} shards={} workers={} fwht_threads={} \
-         cache_cap={} cache_policy={} store={} store_mmap={} slow_ms={}",
+         cache_cap={} cache_policy={} store={} store_mmap={} slow_ms={} profile_hz={}",
         cfg.gsa.k,
         cfg.gsa.s,
         cfg.gsa.m,
@@ -358,6 +366,7 @@ fn serve_cmd(ctx: &ExpContext, args: &Args, seed: u64) -> Result<()> {
             .map_or("none (RAM-only cache)".to_string(), |d| d.display().to_string()),
         cfg.store_mmap,
         if cfg.slow_ms == u64::MAX { "off".to_string() } else { cfg.slow_ms.to_string() },
+        if cfg.profile_hz == 0 { "off".to_string() } else { cfg.profile_hz.to_string() },
     );
     if cfg.store_dir.is_some() {
         println!(
@@ -373,7 +382,10 @@ fn serve_cmd(ctx: &ExpContext, args: &Args, seed: u64) -> Result<()> {
         server.config_fp(),
     );
     if let Some(http) = server.http_addr() {
-        println!("serve: http sidecar on http://{http} (/metrics /healthz /readyz)");
+        println!(
+            "serve: http sidecar on http://{http} \
+             (/metrics /healthz /readyz /profile /debug/threads)"
+        );
     }
     server.run()
 }

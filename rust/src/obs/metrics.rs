@@ -248,11 +248,22 @@ pub enum MetricValue {
 #[derive(Default)]
 pub struct Registry {
     metrics: Mutex<BTreeMap<String, Metric>>,
+    /// The sampling profiler's thread registry + profile table rides on
+    /// the metric registry because the same `Arc<Registry>` already
+    /// reaches every thread spawn site (pipeline, cache, ANN, serve
+    /// loops) — registering a thread needs no new plumbing.
+    threads: super::profile::ThreadRegistry,
 }
 
 impl Registry {
     pub fn new() -> Registry {
         Registry::default()
+    }
+
+    /// This registry's profiler-facing thread registry (see
+    /// [`super::profile`]).
+    pub fn threads(&self) -> &super::profile::ThreadRegistry {
+        &self.threads
     }
 
     /// Resolve (or create) a counter. Asking for a name that is already

@@ -20,6 +20,22 @@
 //!   v0.0.4 for the daemon's HTTP `/metrics` endpoint
 //!   (`crate::serve::http`), so standard tooling can scrape what the
 //!   bespoke TCP `metrics` op serves.
+//! - [`profile`]: an always-on sampling profiler. Every long-lived
+//!   daemon thread registers itself (role label + a lock-free
+//!   *current stage* slot reusing the stamp vocabulary below) on the
+//!   registry's [`profile::ThreadRegistry`]; a sampler thread
+//!   (`--profile-hz`, default on at a low rate, 0 = off) walks the
+//!   registry each tick, reads each thread's CPU clock
+//!   (`pthread_getcpuclockid` + `clock_gettime` via a hand-rolled
+//!   shim, gated like `store::mmap`, wall-clock fallback elsewhere),
+//!   and aggregates `(role, stage) → {samples, cpu_delta_us}`. Served
+//!   by the `profile` op, the `/profile` collapsed-stack endpoint
+//!   (flamegraph-ready `role;stage N` lines), and `/debug/threads`.
+//!   Wall histograms say how long a stage took; the profile says
+//!   whether the thread was *on CPU* for it — a compute-bound shard
+//!   and a descheduled one finally look different. The sampler tick
+//!   also refreshes process self-metrics (`proc.*` below) parsed from
+//!   `/proc/self/{statm,status,fd}`.
 //!
 //! ## Request lifecycle and its stage stamps
 //!
@@ -72,21 +88,30 @@
 //! | `ann.build_us` | `ann_build_us` | histo | IVFFlat index (re)build |
 //! | `ann.probe_us` | `ann_probe_us` | histo | `nearest` query against index + pending tail |
 //! | `serve.slow_spans` | `serve_slow_spans` | counter | every slow-span stderr line |
+//! | `profile.samples` | `profile_samples` | counter | sampler tick, one per live registered thread seen |
+//! | `shard.busy_permille.<i>` | `shard_busy_permille{shard=…}` | gauge | sampler tick: shard i's CPU µs / wall µs since registration, ×1000 |
+//! | `proc.rss_bytes` | `proc_rss_bytes` | gauge | sampler tick (and `stats` on demand) from `/proc/self/statm` |
+//! | `proc.threads` | `proc_threads` | gauge | sampler tick (and `stats` on demand) from `/proc/self/status` |
+//! | `proc.open_fds` | `proc_open_fds` | gauge | sampler tick (and `stats` on demand) from `/proc/self/fd` |
 //!
 //! `/metrics` also serves a `graphlet_rf_build_info{engine,config_fp,version} 1`
 //! info gauge keyed to the daemon's identity.
 //!
 //! Recording is relaxed-atomic and observation-only — no RNG draws, no
-//! row arithmetic — so tracing on vs off cannot change embeddings
-//! (bitwise-pinned by `tests/obs.rs`). Registries are instance-scoped:
+//! row arithmetic — so tracing on vs off cannot change embeddings, and
+//! neither can the sampler at full rate (both bitwise-pinned by
+//! `tests/obs.rs`; stage publication is two relaxed atomic stores per
+//! transition, and the sampler only ever *reads* thread state). Registries are instance-scoped:
 //! each in-process daemon reports only its own traffic, so tests
 //! assert **absolute** values on a daemon's registry directly — no
 //! before/after delta-diffing.
 
 pub mod metrics;
+pub mod profile;
 pub mod prom;
 pub mod trace;
 
 pub use metrics::{global, global_arc, Counter, Gauge, Histo, HistoSnapshot, MetricValue, Registry};
+pub use profile::{cpu_clock_supported, Profiler, ThreadGuard, ThreadRegistry, STAGES};
 pub use prom::BuildInfo;
 pub use trace::{global_ring, SpanRecord, SpanRing, TraceCtx};

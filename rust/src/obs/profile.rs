@@ -1,0 +1,767 @@
+//! Always-on sampling profiler: per-thread CPU-time attribution over
+//! the same stage vocabulary the tracer stamps.
+//!
+//! Histograms ([`super::metrics`]) and spans ([`super::trace`]) are
+//! wall-clock only: a long `queue_wait` span cannot tell a shard that
+//! is compute-bound from one that is descheduled. This module closes
+//! that gap with three pieces:
+//!
+//! - A [`ThreadRegistry`] (one per [`Registry`], so it reaches every
+//!   spawn site the metrics already reach): each long-lived thread —
+//!   sampler workers, feature shards, connection reader/writer loops,
+//!   the ANN rebuild thread, HTTP connections — calls
+//!   [`ThreadRegistry::register`] **on itself** with a role label and
+//!   publishes its *current stage* into a lock-free atomic slot via
+//!   [`ThreadGuard::set_stage`]. Stages come from the fixed [`STAGES`]
+//!   vocabulary (the same names `TraceCtx` stamps: `cache_probe`,
+//!   `queue_wait`, `projection`, `ann_search`, `reply_write`, …), so
+//!   flame output and span output speak one language.
+//! - A per-thread **CPU clock**: registration resolves the calling
+//!   thread's clock id via `pthread_getcpuclockid(pthread_self())`
+//!   through a hand-rolled `extern "C"` shim (same pattern and
+//!   unix/64-bit gating as `crate::store::mmap`); the sampler then
+//!   reads it with `clock_gettime` from its own thread. Where the
+//!   shim is unavailable ([`cpu_clock_supported`] returns false) the
+//!   fallback is wall time since registration — busy fractions then
+//!   read as 1.0 ("unknown, assumed on-CPU") and the CPU-sensitive
+//!   tests gate themselves off.
+//! - A sampler thread ([`Profiler`], `--profile-hz N`, default on at a
+//!   low rate, 0 = off): each tick walks the registry once and
+//!   aggregates `(role, stage) → {samples, cpu_delta_us}` into the
+//!   profile table, refreshes the `proc.*` self-metric gauges from
+//!   `/proc/self/{statm,status,fd}`, and publishes per-shard busy
+//!   fractions (`shard.busy_permille.<i>` gauges, cumulative CPU µs /
+//!   wall µs since registration, clamped to [0, 1]).
+//!
+//! ## Collapsed-stack output
+//!
+//! [`ThreadRegistry::collapsed`] renders the table as one
+//! `role;stage N` line per pair — the collapsed-stack format standard
+//! flamegraph tooling consumes — where `N` is the number of sampler
+//! ticks that caught the pair. Alongside samples, `set_stage` bumps a
+//! per-slot **entry counter** (a fixed atomic array, still lock-free),
+//! and the rendered table is the union of sampled pairs and entered
+//! pairs: a stage a pass exercised appears in the output even when
+//! every visit slipped between ticks (with weight 0). That makes
+//! "collapsed output covers every stage the pass exercised" a
+//! deterministic contract rather than sampling luck — serve-bench
+//! self-checks exactly that.
+//!
+//! ## Overhead and the observation-only contract
+//!
+//! Request threads pay two relaxed atomic stores per stage transition
+//! (slot index + entry counter); the sampler's tick cost (one mutex'd
+//! walk, one `clock_gettime` per thread) lands on its own thread. No
+//! RNG draws, no row arithmetic: sampling at full rate is bitwise
+//! invisible to embeddings, pinned by `tests/obs.rs` the same way
+//! tracing is.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use super::metrics::Registry;
+
+/// The closed stage vocabulary. `set_stage` accepts only these (an
+/// unknown name debug-asserts and maps to `idle`), which is what makes
+/// "every `(role, stage)` pair in `/profile` output is in the
+/// vocabulary" a structural guarantee.
+///
+/// `idle` (index 0) is every thread's initial stage; `spin`/`sleep`
+/// exist for the busy-fraction sanity tests; the rest are the stamps
+/// the request lifecycle already uses (see [`crate::obs`] docs).
+pub const STAGES: &[&str] = &[
+    "idle",
+    "read_request",
+    "cache_probe",
+    "admission",
+    "queue_wait",
+    "batch_wait",
+    "projection",
+    "ann_search",
+    "ann_rebuild",
+    "reply_write",
+    "http",
+    "sample",
+    "spin",
+    "sleep",
+];
+
+const STAGE_COUNT: usize = STAGES.len();
+
+/// Is `name` in the registered stage vocabulary? (Format lints in the
+/// test suite check `/profile` lines against this.)
+pub fn is_stage(name: &str) -> bool {
+    STAGES.contains(&name)
+}
+
+fn stage_index(name: &str) -> usize {
+    match STAGES.iter().position(|s| *s == name) {
+        Some(i) => i,
+        None => {
+            debug_assert!(false, "unknown profile stage {name:?}");
+            0
+        }
+    }
+}
+
+/// Hand-rolled libc shim for per-thread CPU clocks and the page size,
+/// gated exactly like `crate::store::mmap`: 64-bit unix gets the real
+/// syscalls, everything else gets the fallback module below.
+#[cfg(all(unix, target_pointer_width = "64"))]
+mod sys {
+    // 64-bit unix timespec: two 64-bit fields.
+    #[repr(C)]
+    struct Timespec {
+        tv_sec: i64,
+        tv_nsec: i64,
+    }
+
+    // glibc and musl agree on this value; non-Linux unixes just take
+    // the 4 KiB fallback in `page_size`.
+    #[cfg(target_os = "linux")]
+    const SC_PAGESIZE: i32 = 30;
+
+    extern "C" {
+        fn pthread_self() -> usize;
+        fn pthread_getcpuclockid(thread: usize, clockid: *mut i32) -> i32;
+        fn clock_gettime(clockid: i32, tp: *mut Timespec) -> i32;
+        #[cfg(target_os = "linux")]
+        fn sysconf(name: i32) -> i64;
+    }
+
+    /// The calling thread's CPU clock id; `None` where the libc call
+    /// fails (the slot then falls back to wall time).
+    pub fn self_cpu_clock() -> Option<i32> {
+        let mut id: i32 = 0;
+        // SAFETY: pthread_self() is always a valid handle for the
+        // calling thread; libc validates and returns non-zero on error.
+        let rc = unsafe { pthread_getcpuclockid(pthread_self(), &mut id) };
+        if rc == 0 {
+            Some(id)
+        } else {
+            None
+        }
+    }
+
+    /// Cumulative CPU microseconds on `clockid`; `None` on failure
+    /// (e.g. the owning thread already exited).
+    pub fn clock_us(clockid: i32) -> Option<u64> {
+        let mut ts = Timespec { tv_sec: 0, tv_nsec: 0 };
+        // SAFETY: `ts` is a valid out-pointer; failure reports -1.
+        let rc = unsafe { clock_gettime(clockid, &mut ts) };
+        if rc != 0 || ts.tv_sec < 0 {
+            return None;
+        }
+        Some(ts.tv_sec as u64 * 1_000_000 + ts.tv_nsec as u64 / 1_000)
+    }
+
+    pub fn page_size() -> u64 {
+        #[cfg(target_os = "linux")]
+        {
+            // SAFETY: sysconf is a constant lookup with no out-params.
+            let v = unsafe { sysconf(SC_PAGESIZE) };
+            if v > 0 {
+                return v as u64;
+            }
+        }
+        4096
+    }
+}
+
+#[cfg(not(all(unix, target_pointer_width = "64")))]
+mod sys {
+    pub fn self_cpu_clock() -> Option<i32> {
+        None
+    }
+    pub fn clock_us(_clockid: i32) -> Option<u64> {
+        None
+    }
+    pub fn page_size() -> u64 {
+        4096
+    }
+}
+
+/// Does this target expose working per-thread CPU clocks? When false,
+/// per-thread `cpu_us` is wall time since registration (busy reads as
+/// 1.0) and the CPU-sensitive tests skip their assertions.
+pub fn cpu_clock_supported() -> bool {
+    match sys::self_cpu_clock() {
+        Some(c) => sys::clock_us(c).is_some(),
+        None => false,
+    }
+}
+
+/// One registered thread's published state. Shared between the owning
+/// thread (stage stores via its [`ThreadGuard`]) and the sampler
+/// (everything else) — all cross-thread fields are atomics.
+struct ThreadSlot {
+    role: &'static str,
+    index: usize,
+    /// Index into [`STAGES`]; the owning thread stores, readers load.
+    stage: AtomicUsize,
+    alive: AtomicBool,
+    /// CPU clock id resolved at registration *on the owning thread*;
+    /// `None` → wall fallback.
+    clock: Option<i32>,
+    registered: Instant,
+    /// Cumulative CPU µs at the previous sampler visit (delta base).
+    last_cpu_us: AtomicU64,
+    /// Latest cumulative CPU µs reading (what `/debug/threads` shows).
+    cpu_us: AtomicU64,
+    /// How many times each stage was entered (`set_stage` calls) —
+    /// merged into the collapsed output so unsampled stages still
+    /// appear (see module docs).
+    entered: [AtomicU64; STAGE_COUNT],
+}
+
+impl ThreadSlot {
+    fn cpu_now_us(&self) -> u64 {
+        self.clock
+            .and_then(sys::clock_us)
+            .unwrap_or_else(|| self.registered.elapsed().as_micros() as u64)
+    }
+
+    fn wall_us(&self) -> u64 {
+        self.registered.elapsed().as_micros() as u64
+    }
+}
+
+/// RAII registration handle: the owning thread publishes its stage
+/// through it and deregisters by dropping it. After the drop the
+/// sampler attributes nothing further to the thread (pinned by test).
+pub struct ThreadGuard {
+    slot: Arc<ThreadSlot>,
+}
+
+impl ThreadGuard {
+    /// Publish the thread's current stage (lock-free: two relaxed-ish
+    /// atomic ops). `stage` must be in [`STAGES`].
+    pub fn set_stage(&self, stage: &'static str) {
+        let i = stage_index(stage);
+        self.slot.stage.store(i, Ordering::Release);
+        self.slot.entered[i].fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+impl Drop for ThreadGuard {
+    fn drop(&mut self) {
+        self.slot.alive.store(false, Ordering::Release);
+    }
+}
+
+/// Per-`(role, stage)` accumulator cell. `samples`/`cpu_us` come from
+/// sampler ticks; `entered` holds entry counts folded in from threads
+/// that already deregistered (live threads' counts merge at read
+/// time).
+#[derive(Clone, Copy, Default)]
+struct StageCell {
+    samples: u64,
+    cpu_us: u64,
+    entered: u64,
+}
+
+/// One row of the rendered profile table.
+#[derive(Clone, Debug)]
+pub struct StageRow {
+    pub role: &'static str,
+    pub stage: &'static str,
+    /// Sampler ticks that caught the pair.
+    pub samples: u64,
+    /// CPU µs attributed to the pair across those ticks.
+    pub cpu_us: u64,
+    /// Times the pair was entered (≥ 1 even when never sampled).
+    pub entered: u64,
+}
+
+/// A live registered thread, as `/debug/threads` reports it.
+#[derive(Clone, Debug)]
+pub struct ThreadInfo {
+    pub role: &'static str,
+    pub index: usize,
+    pub stage: &'static str,
+    pub cpu_us: u64,
+    pub wall_us: u64,
+    /// Cumulative CPU / wall since registration, clamped to [0, 1].
+    pub busy: f64,
+}
+
+/// The thread registry + profile table. One per [`Registry`] (reach it
+/// via [`Registry::threads`]), so every component that can record a
+/// metric can also register its threads, and two in-process daemons
+/// profile in full isolation.
+#[derive(Default)]
+pub struct ThreadRegistry {
+    slots: Mutex<Vec<Arc<ThreadSlot>>>,
+    /// `(role, stage index)` → accumulated cell. Lock order: `slots`
+    /// before `table`, everywhere.
+    table: Mutex<BTreeMap<(&'static str, usize), StageCell>>,
+    ticks: AtomicU64,
+    samples: AtomicU64,
+}
+
+impl ThreadRegistry {
+    /// Register the **calling** thread (the CPU clock id is resolved
+    /// on it) under a role label. Keep the guard alive for the
+    /// thread's working lifetime; drop it to deregister.
+    pub fn register(&self, role: &'static str, index: usize) -> ThreadGuard {
+        let slot = Arc::new(ThreadSlot {
+            role,
+            index,
+            stage: AtomicUsize::new(0),
+            alive: AtomicBool::new(true),
+            clock: sys::self_cpu_clock(),
+            registered: Instant::now(),
+            last_cpu_us: AtomicU64::new(0),
+            cpu_us: AtomicU64::new(0),
+            entered: std::array::from_fn(|_| AtomicU64::new(0)),
+        });
+        // Anchor the CPU delta base at registration, and count the
+        // initial "idle" entry so every registered thread has at least
+        // one row in the collapsed output.
+        let cpu = slot.cpu_now_us();
+        slot.last_cpu_us.store(cpu, Ordering::Relaxed);
+        slot.cpu_us.store(cpu, Ordering::Relaxed);
+        slot.entered[0].fetch_add(1, Ordering::Relaxed);
+        self.slots.lock().expect("thread registry lock").push(Arc::clone(&slot));
+        ThreadGuard { slot }
+    }
+
+    /// One sampler tick: read every live thread's CPU clock, attribute
+    /// the delta to its current `(role, stage)`, and prune threads
+    /// that deregistered since the last tick (folding their stage
+    /// entry counts into the table first). Returns how many threads
+    /// were sampled.
+    pub fn sample_once(&self) -> u64 {
+        let mut slots = self.slots.lock().expect("thread registry lock");
+        let mut table = self.table.lock().expect("profile table lock");
+        let mut sampled = 0u64;
+        slots.retain(|slot| {
+            if !slot.alive.load(Ordering::Acquire) {
+                for (i, e) in slot.entered.iter().enumerate() {
+                    let n = e.load(Ordering::Relaxed);
+                    if n > 0 {
+                        table.entry((slot.role, i)).or_default().entered += n;
+                    }
+                }
+                return false;
+            }
+            let cpu = slot.cpu_now_us();
+            let last = slot.last_cpu_us.swap(cpu, Ordering::Relaxed);
+            slot.cpu_us.store(cpu, Ordering::Relaxed);
+            let stage = slot.stage.load(Ordering::Acquire).min(STAGE_COUNT - 1);
+            let cell = table.entry((slot.role, stage)).or_default();
+            cell.samples += 1;
+            cell.cpu_us += cpu.saturating_sub(last);
+            sampled += 1;
+            true
+        });
+        self.ticks.fetch_add(1, Ordering::Relaxed);
+        self.samples.fetch_add(sampled, Ordering::Relaxed);
+        sampled
+    }
+
+    /// Sampler ticks so far.
+    pub fn ticks(&self) -> u64 {
+        self.ticks.load(Ordering::Relaxed)
+    }
+
+    /// Thread-samples attributed so far (sum over ticks of live
+    /// threads seen).
+    pub fn samples(&self) -> u64 {
+        self.samples.load(Ordering::Relaxed)
+    }
+
+    /// The profile table: sampled pairs unioned with every pair any
+    /// thread (live or retired) ever entered. Sorted by role then
+    /// stage index, so output is stable.
+    pub fn stage_table(&self) -> Vec<StageRow> {
+        let slots = self.slots.lock().expect("thread registry lock");
+        let table = self.table.lock().expect("profile table lock");
+        let mut merged = table.clone();
+        // Unpruned slots merge here whether or not they are still alive:
+        // a dead slot's counts move into the stored table at prune time,
+        // and this merge is ephemeral, so the union is gapless without
+        // ever double-counting.
+        for slot in slots.iter() {
+            for (i, e) in slot.entered.iter().enumerate() {
+                let n = e.load(Ordering::Relaxed);
+                if n > 0 {
+                    merged.entry((slot.role, i)).or_default().entered += n;
+                }
+            }
+        }
+        merged
+            .into_iter()
+            .map(|((role, i), c)| StageRow {
+                role,
+                stage: STAGES[i],
+                samples: c.samples,
+                cpu_us: c.cpu_us,
+                entered: c.entered,
+            })
+            .collect()
+    }
+
+    /// Live registered threads, CPU readings refreshed at call time
+    /// (so a `--profile-hz 0` daemon still reports real numbers).
+    pub fn snapshot(&self) -> Vec<ThreadInfo> {
+        let slots = self.slots.lock().expect("thread registry lock");
+        slots
+            .iter()
+            .filter(|s| s.alive.load(Ordering::Acquire))
+            .map(|s| {
+                let cpu = s.cpu_now_us();
+                s.cpu_us.store(cpu, Ordering::Relaxed);
+                let wall = s.wall_us();
+                let busy = if wall == 0 {
+                    0.0
+                } else {
+                    (cpu as f64 / wall as f64).clamp(0.0, 1.0)
+                };
+                ThreadInfo {
+                    role: s.role,
+                    index: s.index,
+                    stage: STAGES[s.stage.load(Ordering::Acquire).min(STAGE_COUNT - 1)],
+                    cpu_us: cpu,
+                    wall_us: wall,
+                    busy,
+                }
+            })
+            .collect()
+    }
+
+    /// Cumulative collapsed-stack text: one `role;stage N` line per
+    /// table row, N = samples (0 for entered-but-never-sampled pairs;
+    /// see module docs).
+    pub fn collapsed(&self) -> String {
+        render_collapsed(&self.stage_table())
+    }
+}
+
+fn render_collapsed(rows: &[StageRow]) -> String {
+    let mut out = String::new();
+    for r in rows {
+        out.push_str(&format!("{};{} {}\n", r.role, r.stage, r.samples));
+    }
+    out
+}
+
+/// Collapsed-stack text for the window between two [`stage_table`]
+/// snapshots (the `/profile?seconds=N` path): rows whose samples or
+/// entry counts advanced, weighted by the sample delta.
+///
+/// [`stage_table`]: ThreadRegistry::stage_table
+pub fn collapsed_between(before: &[StageRow], after: &[StageRow]) -> String {
+    let mut base: BTreeMap<(&str, &str), (u64, u64)> = BTreeMap::new();
+    for r in before {
+        base.insert((r.role, r.stage), (r.samples, r.entered));
+    }
+    let mut out = String::new();
+    for r in after {
+        let (s0, e0) = base.get(&(r.role, r.stage)).copied().unwrap_or((0, 0));
+        if r.samples > s0 || r.entered > e0 {
+            out.push_str(&format!("{};{} {}\n", r.role, r.stage, r.samples - s0));
+        }
+    }
+    out
+}
+
+/// Resident set size in bytes, from `/proc/self/statm` (resident
+/// pages × page size). `None` off Linux.
+pub fn proc_rss_bytes() -> Option<u64> {
+    let statm = std::fs::read_to_string("/proc/self/statm").ok()?;
+    let resident: u64 = statm.split_whitespace().nth(1)?.parse().ok()?;
+    Some(resident * sys::page_size())
+}
+
+/// Kernel thread count, from the `Threads:` line of
+/// `/proc/self/status`. `None` off Linux.
+pub fn proc_thread_count() -> Option<u64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    status
+        .lines()
+        .find_map(|l| l.strip_prefix("Threads:"))
+        .and_then(|v| v.trim().parse().ok())
+}
+
+/// Open file descriptors, counted from `/proc/self/fd`. `None` off
+/// Linux. (The count includes the descriptor the walk itself opens.)
+pub fn proc_open_fds() -> Option<u64> {
+    Some(std::fs::read_dir("/proc/self/fd").ok()?.count() as u64)
+}
+
+/// Refresh the `proc.*` self-metric gauges. Missing procfs (non-Linux)
+/// leaves the gauges untouched rather than zeroing them.
+pub fn refresh_proc_gauges(registry: &Registry) {
+    if let Some(v) = proc_rss_bytes() {
+        registry.gauge("proc.rss_bytes").set(v);
+    }
+    if let Some(v) = proc_thread_count() {
+        registry.gauge("proc.threads").set(v);
+    }
+    if let Some(v) = proc_open_fds() {
+        registry.gauge("proc.open_fds").set(v);
+    }
+}
+
+/// One sampler tick against a registry: walk the thread registry, bump
+/// the `profile.samples` counter, publish per-shard busy gauges, and
+/// refresh the `proc.*` gauges. The [`Profiler`] thread calls this at
+/// `--profile-hz`; tests call it directly for determinism.
+pub fn tick(registry: &Registry) {
+    let sampled = registry.threads().sample_once();
+    if sampled > 0 {
+        registry.counter("profile.samples").add(sampled);
+    }
+    for t in registry.threads().snapshot() {
+        if t.role == "shard" {
+            registry
+                .gauge(&format!("shard.busy_permille.{}", t.index))
+                .set((t.busy * 1000.0).round() as u64);
+        }
+    }
+    refresh_proc_gauges(registry);
+}
+
+/// The sampler thread: calls [`tick`] at a fixed rate until stopped or
+/// dropped. `Profiler::start` with `hz == 0` returns `None` (profiling
+/// off — the registry still works, it just never accumulates samples).
+pub struct Profiler {
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Profiler {
+    pub fn start(registry: Arc<Registry>, hz: u64) -> Option<Profiler> {
+        if hz == 0 {
+            return None;
+        }
+        let period = Duration::from_nanos(1_000_000_000 / hz);
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop_flag = Arc::clone(&stop);
+        let handle = std::thread::Builder::new()
+            .name("profiler".into())
+            .spawn(move || {
+                let guard = registry.threads().register("profiler", 0);
+                guard.set_stage("sample");
+                while !stop_flag.load(Ordering::Acquire) {
+                    tick(&registry);
+                    // Sleep in short chunks so stop() never waits a
+                    // full low-rate period.
+                    let mut left = period;
+                    while !left.is_zero() && !stop_flag.load(Ordering::Acquire) {
+                        let chunk = left.min(Duration::from_millis(20));
+                        std::thread::sleep(chunk);
+                        left = left.saturating_sub(chunk);
+                    }
+                }
+            })
+            .expect("spawn profiler thread");
+        Some(Profiler { stop, handle: Some(handle) })
+    }
+
+    /// Stop and join the sampler thread (idempotent).
+    pub fn stop(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Profiler {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stage_vocabulary_is_unique_and_indexed() {
+        for (i, s) in STAGES.iter().enumerate() {
+            assert!(is_stage(s));
+            assert_eq!(stage_index(s), i, "stage {s} maps back to its index");
+        }
+        let mut sorted: Vec<&str> = STAGES.to_vec();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), STAGES.len(), "duplicate stage names");
+        assert_eq!(STAGES[0], "idle", "index 0 is the default stage");
+    }
+
+    #[test]
+    fn cpu_clock_reads_advance_under_load() {
+        if !cpu_clock_supported() {
+            return;
+        }
+        let clock = sys::self_cpu_clock().unwrap();
+        let before = sys::clock_us(clock).unwrap();
+        // Burn ~10ms of CPU; the thread clock must advance.
+        let mut acc = 0u64;
+        let t = Instant::now();
+        while t.elapsed() < Duration::from_millis(10) {
+            acc = acc.wrapping_mul(6364136223846793005).wrapping_add(1);
+        }
+        std::hint::black_box(acc);
+        let after = sys::clock_us(clock).unwrap();
+        assert!(after >= before, "thread CPU clock went backwards");
+        assert!(after > before, "10ms of spinning registered no CPU time");
+    }
+
+    #[test]
+    fn register_sample_deregister_lifecycle() {
+        let reg = ThreadRegistry::default();
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let reg2: &'static ThreadRegistry = Box::leak(Box::new(reg));
+        let h = std::thread::spawn(move || {
+            let g = reg2.register("spin_test", 3);
+            g.set_stage("spin");
+            while !stop2.load(Ordering::Acquire) {
+                std::hint::spin_loop();
+            }
+        });
+        // Wait for registration, then tick a few times.
+        while reg2.snapshot().is_empty() {
+            std::thread::yield_now();
+        }
+        for _ in 0..5 {
+            reg2.sample_once();
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        let spin_samples = |rows: &[StageRow]| {
+            rows.iter()
+                .find(|r| r.role == "spin_test" && r.stage == "spin")
+                .map(|r| r.samples)
+                .unwrap_or(0)
+        };
+        let rows = reg2.stage_table();
+        assert!(spin_samples(&rows) >= 1, "live spin thread was never sampled");
+        let snap = reg2.snapshot();
+        let info = &snap[0];
+        assert_eq!((info.role, info.index, info.stage), ("spin_test", 3, "spin"));
+        assert!((0.0..=1.0).contains(&info.busy), "busy {} out of range", info.busy);
+
+        stop.store(true, Ordering::Release);
+        h.join().unwrap();
+        // The prune tick folds the dead thread out of the registry …
+        reg2.sample_once();
+        assert!(reg2.snapshot().is_empty(), "deregistered thread still listed");
+        let frozen = spin_samples(&reg2.stage_table());
+        // … and later ticks attribute nothing further to it.
+        for _ in 0..3 {
+            reg2.sample_once();
+        }
+        assert_eq!(
+            spin_samples(&reg2.stage_table()),
+            frozen,
+            "samples attributed after deregistration"
+        );
+        // Entered pairs survive retirement: idle (initial) + spin.
+        let rows = reg2.stage_table();
+        for stage in ["idle", "spin"] {
+            let row = rows.iter().find(|r| r.role == "spin_test" && r.stage == stage);
+            assert!(row.is_some_and(|r| r.entered >= 1), "retired {stage} entry lost");
+        }
+    }
+
+    #[test]
+    fn collapsed_lines_are_role_stage_weight() {
+        let reg = ThreadRegistry::default();
+        let g = reg.register("fmt_test", 0);
+        g.set_stage("projection");
+        reg.sample_once();
+        let text = reg.collapsed();
+        assert!(!text.is_empty());
+        for line in text.lines() {
+            let (frames, weight) = line.rsplit_once(' ').expect("weight separator");
+            let (role, stage) = frames.split_once(';').expect("role;stage");
+            assert_eq!(role, "fmt_test");
+            assert!(is_stage(stage), "unknown stage {stage:?} in {line:?}");
+            weight.parse::<u64>().expect("numeric weight");
+        }
+        // The sampled pair carries weight ≥ 1.
+        assert!(
+            text.lines().any(|l| l.starts_with("fmt_test;projection ")
+                && !l.ends_with(" 0")),
+            "{text}"
+        );
+    }
+
+    #[test]
+    fn entered_but_unsampled_stages_still_appear() {
+        let reg = ThreadRegistry::default();
+        let g = reg.register("cover_test", 0);
+        // Enter three stages between ticks; none is ever sampled.
+        for s in ["cache_probe", "ann_search", "reply_write"] {
+            g.set_stage(s);
+        }
+        let text = reg.collapsed();
+        for s in ["cache_probe", "ann_search", "reply_write"] {
+            assert!(
+                text.contains(&format!("cover_test;{s} ")),
+                "entered stage {s} missing from {text:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn collapsed_between_reports_only_window_activity() {
+        let reg = ThreadRegistry::default();
+        let g = reg.register("win_test", 0);
+        g.set_stage("projection");
+        reg.sample_once();
+        let before = reg.stage_table();
+        assert_eq!(collapsed_between(&before, &before), "", "empty window has no lines");
+        g.set_stage("ann_search");
+        reg.sample_once();
+        reg.sample_once();
+        let after = reg.stage_table();
+        let text = collapsed_between(&before, &after);
+        assert!(text.contains("win_test;ann_search 2"), "{text}");
+        assert!(!text.contains("win_test;projection"), "stale stage leaked: {text}");
+    }
+
+    #[cfg(target_os = "linux")]
+    #[test]
+    fn proc_self_metrics_parse_on_linux() {
+        assert!(proc_rss_bytes().unwrap() > 0);
+        assert!(proc_thread_count().unwrap() >= 1);
+        assert!(proc_open_fds().unwrap() >= 1);
+        let r = Registry::new();
+        refresh_proc_gauges(&r);
+        let j = r.snapshot_json();
+        // All three gauges land in the registry.
+        for name in ["proc.rss_bytes", "proc.threads", "proc.open_fds"] {
+            assert!(j.to_string().contains(name), "{name} missing from snapshot");
+        }
+    }
+
+    #[test]
+    fn profiler_thread_starts_ticks_and_stops() {
+        let registry = Arc::new(Registry::new());
+        assert!(Profiler::start(Arc::clone(&registry), 0).is_none(), "hz 0 is off");
+        let mut p = Profiler::start(Arc::clone(&registry), 500).expect("hz 500 starts");
+        let t = Instant::now();
+        while registry.threads().ticks() < 3 && t.elapsed() < Duration::from_secs(5) {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert!(registry.threads().ticks() >= 3, "sampler never ticked");
+        p.stop();
+        let ticks = registry.threads().ticks();
+        std::thread::sleep(Duration::from_millis(30));
+        assert_eq!(registry.threads().ticks(), ticks, "sampler ticked after stop");
+        // The profiler registered itself and sampled its own role.
+        assert!(
+            registry.threads().collapsed().contains("profiler;sample "),
+            "{}",
+            registry.threads().collapsed()
+        );
+        assert!(registry.counter("profile.samples").get() >= 1);
+    }
+}

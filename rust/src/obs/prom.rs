@@ -47,6 +47,7 @@ pub struct BuildInfo {
 const DYNAMIC_SUFFIXES: &[(&str, &str)] = &[
     ("serve.request_us.", "op"),
     ("serve.errors.", "op"),
+    ("shard.busy_permille.", "shard"),
 ];
 
 /// Metric catalog: dotted family name → HELP text. Mirrors the table
@@ -57,10 +58,15 @@ const CATALOG: &[(&str, &str)] = &[
     ("cache.l2_read_us", "Segment-log (L2) read time on an L1 miss"),
     ("cache.probe_us", "Tiered-cache probe time (L1, then optional L2)"),
     ("pipeline.queue_wait_us", "Time a job waits in the bounded queue before a worker claims it"),
+    ("proc.open_fds", "Open file descriptors, from /proc/self/fd"),
+    ("proc.rss_bytes", "Resident set size in bytes, from /proc/self/statm"),
+    ("proc.threads", "Kernel thread count, from /proc/self/status"),
+    ("profile.samples", "Thread samples taken by the profiler (one per live thread per tick)"),
     ("serve.errors", "Per-request error replies, by op"),
     ("serve.request_us", "End-to-end request time from admission to reply write, by op"),
     ("serve.slow_spans", "Request spans that exceeded the --slow-ms threshold"),
     ("shard.batch_wait_us", "Time a shard's partial batch waits before dispatch"),
+    ("shard.busy_permille", "Per-shard busy fraction (CPU us / wall us since registration) x1000, by shard"),
     ("shard.projection_us", "Feature-map projection time per dispatched batch"),
     ("store.append_us", "Segment-log append time per stored row"),
     ("store.compact_us", "Segment-log compaction pass time"),
@@ -327,6 +333,17 @@ mod tests {
         let type_at = text.find("# TYPE serve_request_us histogram").unwrap();
         let first_sample = text.find("serve_request_us_bucket").unwrap();
         assert!(type_at < first_sample);
+    }
+
+    #[test]
+    fn shard_busy_gauges_promote_into_a_shard_label() {
+        let r = Registry::new();
+        r.gauge("shard.busy_permille.0").set(700);
+        r.gauge("shard.busy_permille.3").set(12);
+        let text = render(&r, None);
+        assert_eq!(text.matches("# TYPE shard_busy_permille gauge").count(), 1);
+        assert!(text.contains("shard_busy_permille{shard=\"0\"} 700"), "{text}");
+        assert!(text.contains("shard_busy_permille{shard=\"3\"} 12"), "{text}");
     }
 
     #[test]

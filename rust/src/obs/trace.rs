@@ -37,6 +37,11 @@ const SLOW_CAP: usize = 64;
 /// differences.
 #[derive(Clone, Debug)]
 pub struct SpanRecord {
+    /// Ring-scoped monotonically increasing id (starts at 1), assigned
+    /// at span *open*. It appears in the slow-span stderr line and the
+    /// `trace` op output, and `trace` can fetch a span by it — so a
+    /// slow request lines up against the profile window containing it.
+    pub span_id: u64,
     pub op: String,
     pub tag: u64,
     pub total_us: u64,
@@ -52,6 +57,7 @@ impl SpanRecord {
             stages = stages.set(name, us);
         }
         Json::obj()
+            .set("span_id", self.span_id)
             .set("op", self.op.as_str())
             .set("tag", self.tag)
             .set("total_us", self.total_us)
@@ -60,6 +66,7 @@ impl SpanRecord {
 }
 
 struct SpanInner {
+    span_id: u64,
     op: String,
     tag: u64,
     start: Instant,
@@ -77,6 +84,7 @@ impl Drop for SpanInner {
             self.stages.get_mut().unwrap_or_else(|e| e.into_inner()),
         );
         let rec = SpanRecord {
+            span_id: self.span_id,
             op: std::mem::take(&mut self.op),
             tag: self.tag,
             total_us: self.start.elapsed().as_micros().min(u64::MAX as u128) as u64,
@@ -106,8 +114,10 @@ impl TraceCtx {
     /// Open a span. `op` names the request kind (`embed`, `nearest`,
     /// `embed_dataset`); `tag` disambiguates (request id / graph index).
     pub fn new(op: &str, tag: u64, ring: Arc<SpanRing>) -> TraceCtx {
+        let span_id = ring.next_span_id.fetch_add(1, Ordering::Relaxed);
         TraceCtx {
             inner: Arc::new(SpanInner {
+                span_id,
                 op: op.to_string(),
                 tag,
                 start: Instant::now(),
@@ -115,6 +125,11 @@ impl TraceCtx {
                 ring,
             }),
         }
+    }
+
+    /// This span's ring-scoped id (see [`SpanRecord::span_id`]).
+    pub fn span_id(&self) -> u64 {
+        self.inner.span_id
     }
 
     /// Record "stage `name` done at +elapsed µs". Stamps past
@@ -149,6 +164,9 @@ pub struct SpanRing {
     recent: Mutex<VecDeque<SpanRecord>>,
     slow: Mutex<VecDeque<SpanRecord>>,
     slow_emitted: AtomicU64,
+    /// Next [`SpanRecord::span_id`] to hand out (ids start at 1, so 0
+    /// is never a valid id and reads as "no span" in client tooling).
+    next_span_id: AtomicU64,
     /// Where `serve.slow_spans` lands: the owning daemon's registry
     /// (via [`with_registry`](Self::with_registry)), so two in-process
     /// daemons never cross-contaminate each other's slow-span counts.
@@ -177,6 +195,7 @@ impl SpanRing {
             recent: Mutex::new(VecDeque::new()),
             slow: Mutex::new(VecDeque::new()),
             slow_emitted: AtomicU64::new(0),
+            next_span_id: AtomicU64::new(1),
             registry,
         })
     }
@@ -217,6 +236,18 @@ impl SpanRing {
     /// counter — unlike the bounded list above, this never forgets).
     pub fn slow_emitted(&self) -> u64 {
         self.slow_emitted.load(Ordering::Relaxed)
+    }
+
+    /// Fetch a finished span by id, searching the slow list first (slow
+    /// spans outlive the recent ring's churn) and then the recent ring.
+    /// `None` once the span has aged out of both bounded buffers.
+    pub fn find(&self, span_id: u64) -> Option<SpanRecord> {
+        if let Some(rec) =
+            self.slow.lock().unwrap().iter().find(|r| r.span_id == span_id).cloned()
+        {
+            return Some(rec);
+        }
+        self.recent.lock().unwrap().iter().find(|r| r.span_id == span_id).cloned()
     }
 }
 
@@ -288,9 +319,35 @@ mod tests {
         let ring = SpanRing::new(2, u64::MAX);
         drop(TraceCtx::new("embed", 3, ring.clone()));
         let j = ring.recent(1)[0].to_json();
+        assert_eq!(j.get("span_id").and_then(Json::as_u64), Some(1));
         assert_eq!(j.get("op").and_then(Json::as_str), Some("embed"));
         assert_eq!(j.get("tag").and_then(Json::as_u64), Some(3));
         assert!(j.get("total_us").and_then(Json::as_u64).is_some());
         assert!(j.get("stages").is_some());
+    }
+
+    #[test]
+    fn span_ids_are_monotone_and_findable() {
+        let ring = SpanRing::new(2, u64::MAX);
+        for tag in 0..4u64 {
+            let t = TraceCtx::new("embed", tag, ring.clone());
+            assert_eq!(t.span_id(), tag + 1, "ids assigned at open, starting at 1");
+        }
+        // cap 2: spans 3 and 4 survive, 1 and 2 aged out.
+        assert!(ring.find(4).is_some_and(|r| r.tag == 3));
+        assert!(ring.find(3).is_some());
+        assert!(ring.find(1).is_none(), "evicted span is gone");
+        assert!(ring.find(0).is_none(), "0 is never a valid id");
+    }
+
+    #[test]
+    fn slow_spans_stay_findable_past_recent_churn() {
+        let ring = SpanRing::new(1, 0); // every span slow, tiny recent ring
+        drop(TraceCtx::new("nearest", 7, ring.clone()));
+        for tag in 0..5u64 {
+            drop(TraceCtx::new("embed", tag, ring.clone()));
+        }
+        // Span 1 left the recent ring long ago but lives on the slow list.
+        assert!(ring.find(1).is_some_and(|r| r.op == "nearest"));
     }
 }

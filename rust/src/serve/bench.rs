@@ -58,6 +58,21 @@
 //! Prometheus `/metrics` exposition must agree with the TCP `metrics`
 //! op on every per-op request count — one fact, two wire formats. The
 //! scrape latency rides along in the JSON line as `scrape_ms`.
+//!
+//! Every pass additionally brackets the daemon's `profile` op (the
+//! sampling profiler's per-thread CPU attribution): the JSON line
+//! reports each feature shard's **busy fraction** over the pass window
+//! (per-shard CPU µs delta / pass wall time, in [0, 1]) and the
+//! daemon's **CPU-ms-per-row** (total CPU delta across registered
+//! threads / requests) alongside the wall p50/p99 — so "the daemon got
+//! slower" is separable into "it burned more CPU per request" vs "it
+//! waited longer". When the hosted daemon profiles (`profile_hz > 0`),
+//! restart mode ends with a **flame coverage self-check**: the
+//! `/profile` collapsed-stack output must be format-clean and contain
+//! every stage the passes exercised (connection read/probe/write,
+//! worker queue-wait, shard batch-wait, the profiler's own sample
+//! stage) — deterministic because entered-stage counts are unioned
+//! into the collapsed output regardless of sampling luck.
 
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::TcpStream;
@@ -93,6 +108,16 @@ pub struct BenchReport {
     /// power-of-two upper bounds) from the same histogram delta window.
     pub daemon_p50_ms: f64,
     pub daemon_p99_ms: f64,
+    /// Each feature shard's busy fraction over the pass window, indexed
+    /// by shard id: per-thread CPU µs delta (from the `profile` op) over
+    /// the pass wall time, clamped to [0, 1]. Without per-thread CPU
+    /// clocks the delta is wall-based, so the fractions read high.
+    pub shard_busy: Vec<f64>,
+    /// Daemon CPU burned per request over the pass window: total CPU µs
+    /// delta across the daemon's registered threads / requests, in ms.
+    /// Threads that deregistered mid-pass (short-lived connection loops)
+    /// drop out of the total, so this tracks the persistent pipeline.
+    pub cpu_ms_per_row: f64,
     pub wall_secs: f64,
     pub requests_per_sec: f64,
     pub p50_ms: f64,
@@ -104,7 +129,7 @@ impl BenchReport {
         format!(
             "requests={} errors={} cached={} recomputed={} wall={:.2}s \
              throughput={:.0} req/s p50={:.2}ms p99={:.2}ms \
-             daemon_p50={:.2}ms daemon_p99={:.2}ms",
+             daemon_p50={:.2}ms daemon_p99={:.2}ms cpu_per_row={:.3}ms",
             self.requests,
             self.errors,
             self.cached_replies,
@@ -114,11 +139,16 @@ impl BenchReport {
             self.p50_ms,
             self.p99_ms,
             self.daemon_p50_ms,
-            self.daemon_p99_ms
+            self.daemon_p99_ms,
+            self.cpu_ms_per_row
         )
     }
 
     fn json(&self, label: &str) -> Json {
+        let mut busy = Json::arr();
+        for b in &self.shard_busy {
+            busy.push(*b);
+        }
         Json::obj()
             .set("label", label)
             .set("requests", self.requests)
@@ -129,6 +159,8 @@ impl BenchReport {
             .set("daemon_count_delta", self.daemon_count_delta)
             .set("daemon_p50_ms", self.daemon_p50_ms)
             .set("daemon_p99_ms", self.daemon_p99_ms)
+            .set("shard_busy", busy)
+            .set("cpu_ms_per_row", self.cpu_ms_per_row)
             .set("wall_secs", self.wall_secs)
             .set("throughput_rps", self.requests_per_sec)
             .set("p50_ms", self.p50_ms)
@@ -300,6 +332,13 @@ pub fn run_restart_bench(
         Some(h) => Some(scrape_crosscheck(&addr, h)?),
         None => None,
     };
+    // Flame coverage: a profiling daemon's collapsed-stack output must
+    // name every stage the passes above exercised (see module docs).
+    if cfg.profile_hz > 0 {
+        if let Some(h) = &http {
+            profile_coverage_check(h)?;
+        }
+    }
     stop(&addr, handle)?;
 
     let mut passes = vec![
@@ -547,6 +586,115 @@ fn ann_indexed_bytes(addr: &str) -> Result<u64> {
     Ok(j.get("ann").and_then(|a| a.get("indexed_bytes")).and_then(Json::as_u64).unwrap_or(0))
 }
 
+/// One `profile` op round-trip: the daemon's per-thread CPU attribution
+/// snapshot. Two of these bracket every pass.
+fn profile_json(addr: &str) -> Result<Json> {
+    let mut stream =
+        TcpStream::connect(addr).with_context(|| format!("connecting profile probe to {addr}"))?;
+    stream.write_all(b"{\"op\":\"profile\"}\n")?;
+    stream.flush()?;
+    let mut reply = String::new();
+    BufReader::new(stream).read_line(&mut reply)?;
+    Json::parse(reply.trim()).map_err(|e| anyhow::anyhow!("profile reply: {e}"))
+}
+
+/// Per-thread cumulative CPU µs out of a `profile` reply, keyed by
+/// `(role, index)`.
+fn thread_cpu(j: &Json) -> Vec<(String, u64, u64)> {
+    let mut out = Vec::new();
+    let Some(threads) = j.get("threads").and_then(Json::as_array) else {
+        return out;
+    };
+    for t in threads {
+        let role = t.get("role").and_then(Json::as_str).unwrap_or("").to_string();
+        let index = t.get("index").and_then(Json::as_u64).unwrap_or(0);
+        let cpu = t.get("cpu_us").and_then(Json::as_u64).unwrap_or(0);
+        out.push((role, index, cpu));
+    }
+    out
+}
+
+/// Per-shard busy fractions and total daemon CPU ms across a pass
+/// window, from the two bracketing `profile` replies. A thread present
+/// only in `after` (registered mid-pass) contributes its full reading;
+/// one present only in `before` (deregistered mid-pass) contributes
+/// nothing.
+fn cpu_window(before: &Json, after: &Json, wall_secs: f64) -> (Vec<f64>, f64) {
+    let mut base = std::collections::HashMap::new();
+    for (role, index, cpu) in thread_cpu(before) {
+        base.insert((role, index), cpu);
+    }
+    let mut shard_delta: std::collections::BTreeMap<u64, u64> = std::collections::BTreeMap::new();
+    let mut total_us = 0u64;
+    for (role, index, cpu) in thread_cpu(after) {
+        let delta = cpu.saturating_sub(base.get(&(role.clone(), index)).copied().unwrap_or(0));
+        total_us += delta;
+        if role == "shard" {
+            *shard_delta.entry(index).or_default() += delta;
+        }
+    }
+    let wall_us = (wall_secs * 1e6).max(1.0);
+    let shards = match shard_delta.keys().next_back() {
+        Some(&max) => (0..=max)
+            .map(|i| (*shard_delta.get(&i).unwrap_or(&0) as f64 / wall_us).clamp(0.0, 1.0))
+            .collect(),
+        None => Vec::new(),
+    };
+    (shards, total_us as f64 / 1e3)
+}
+
+/// Every `(role, stage)` frame the restart bench's passes exercise by
+/// construction: connection loops touch read/probe/write on any
+/// request, workers and shards enter their wait stages at spawn, and a
+/// profiling daemon always has its sampler. Entered-stage counts are
+/// unioned into the collapsed output, so these appear deterministically.
+const EXPECTED_FRAMES: &[&str] = &[
+    "conn_reader;read_request",
+    "conn_reader;cache_probe",
+    "conn_writer;reply_write",
+    "worker;queue_wait",
+    "shard;batch_wait",
+    "profiler;sample",
+];
+
+/// The flame coverage self-check (restart mode, profiling daemons
+/// only): `/profile` must emit format-clean `role;stage N` lines whose
+/// stages are all in the registered vocabulary, covering every frame in
+/// [`EXPECTED_FRAMES`]. Dead connection threads fold into the table on
+/// the sampler tick after they exit, so the check polls briefly.
+fn profile_coverage_check(http_addr: &str) -> Result<()> {
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+    loop {
+        let body = http_get(http_addr, "/profile")?;
+        anyhow::ensure!(!body.trim().is_empty(), "flame self-check: /profile body is empty");
+        for line in body.lines() {
+            let frames_weight = line
+                .rsplit_once(' ')
+                .and_then(|(frames, w)| Some((frames.split_once(';')?, w)));
+            let Some(((_, stage), weight)) = frames_weight else {
+                anyhow::bail!("flame self-check: malformed collapsed line {line:?}");
+            };
+            anyhow::ensure!(
+                crate::obs::profile::is_stage(stage) && weight.parse::<u64>().is_ok(),
+                "flame self-check: unknown stage or weight in {line:?}"
+            );
+        }
+        let missing: Vec<&str> = EXPECTED_FRAMES
+            .iter()
+            .filter(|f| !body.lines().any(|l| l.starts_with(&format!("{f} "))))
+            .copied()
+            .collect();
+        if missing.is_empty() {
+            return Ok(());
+        }
+        anyhow::ensure!(
+            std::time::Instant::now() < deadline,
+            "flame self-check: /profile never covered {missing:?}; output:\n{body}"
+        );
+        std::thread::sleep(std::time::Duration::from_millis(50));
+    }
+}
+
 fn run_pass(
     addr: &str,
     clients: usize,
@@ -594,6 +742,7 @@ where
     let per_client = per_client.max(1);
     let (graphs0, misses0) = snapshot(addr)?;
     let histo0 = request_histo(addr, op)?;
+    let prof0 = profile_json(addr)?;
     let wall = Timer::start();
     let results = std::thread::scope(|scope| {
         let mut handles = Vec::with_capacity(clients);
@@ -609,6 +758,8 @@ where
     let wall_secs = wall.elapsed_secs();
     let (graphs1, misses1) = snapshot(addr)?;
     let histo1 = request_histo(addr, op)?;
+    let prof1 = profile_json(addr)?;
+    let (shard_busy, cpu_ms) = cpu_window(&prof0, &prof1, wall_secs);
     let mut lat = Stats::new();
     let (mut errors, mut cached) = (0usize, 0usize);
     for (s, e, h) in results {
@@ -637,6 +788,8 @@ where
         daemon_count_delta: delta.count,
         daemon_p50_ms: delta.percentile_us(50.0) as f64 / 1e3,
         daemon_p99_ms: delta.percentile_us(99.0) as f64 / 1e3,
+        shard_busy,
+        cpu_ms_per_row: cpu_ms / requests.max(1) as f64,
         wall_secs,
         requests_per_sec: if wall_secs > 0.0 { requests as f64 / wall_secs } else { 0.0 },
         p50_ms: lat.percentile(50.0) * 1e3,

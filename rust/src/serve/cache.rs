@@ -647,6 +647,10 @@ impl TieredCache {
         let store = Arc::clone(store);
         let cell = Arc::clone(cell);
         std::thread::spawn(move || {
+            // Visible to the sampling profiler for its lifetime: k-means
+            // CPU burn shows up as (ann_rebuild, ann_rebuild) in /profile.
+            let prof = cell.registry.threads().register("ann_rebuild", 0);
+            prof.set_stage("ann_rebuild");
             AnnCell::rebuild(&cell, &store);
             cell.rebuilding.store(false, Ordering::Release);
         });

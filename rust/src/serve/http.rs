@@ -7,13 +7,17 @@
 //! | `/metrics` | [`crate::obs::prom::render`] of **this daemon's** registry, `Content-Type: text/plain; version=0.0.4` |
 //! | `/healthz` | `200 ok` — the process is alive and accepting |
 //! | `/readyz` | `200 ready` / `503 not ready` per the flag handed to [`HttpServer::spawn`] |
+//! | `/profile` | collapsed-stack text (`role;stage N`, flamegraph-ready) from the sampling profiler's cumulative table |
+//! | `/profile?seconds=N` | same format, but only activity inside an N-second window measured on this request (capped at 10 s) |
+//! | `/debug/threads` | JSON list of registered threads: role, index, current stage, cpu_us, wall_us, busy fraction |
 //!
 //! Scope is deliberately tiny: GET only (anything else → 405), no
 //! keep-alive (`Connection: close` on every reply), request line + a
-//! drained header block and nothing more. Monitoring traffic stays off
+//! drained header block and nothing more (a `?query` is split off the
+//! path and only `/profile` reads it). Monitoring traffic stays off
 //! the TCP protocol port, and scraping is observation-only — reading
-//! `/metrics` in a loop cannot perturb embeddings (pinned by
-//! `tests/obs.rs`).
+//! `/metrics` or `/profile` in a loop cannot perturb embeddings
+//! (pinned by `tests/obs.rs`).
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
@@ -23,7 +27,13 @@ use std::thread::JoinHandle;
 
 use anyhow::{Context, Result};
 
-use crate::obs::{prom, BuildInfo, Registry};
+use crate::obs::{profile, prom, BuildInfo, Registry};
+use crate::util::Json;
+
+/// Longest `/profile?seconds=N` window honored: the handler sleeps on
+/// its own connection thread for the window, so cap how long a client
+/// can park one.
+const MAX_PROFILE_WINDOW_SECS: u64 = 10;
 
 /// Shared state the accept loop and every connection handler read.
 struct HttpState {
@@ -94,6 +104,11 @@ impl HttpServer {
 }
 
 fn accept_loop(listener: &TcpListener, state: &Arc<HttpState>) {
+    // The accept thread is long-lived, so it shows up in /debug/threads
+    // like every other daemon thread; it spends its life blocked in
+    // accept(), i.e. parked on the "http" stage with ~zero CPU.
+    let prof = state.registry.threads().register("http", 0);
+    prof.set_stage("http");
     for conn in listener.incoming() {
         if state.stop.load(Ordering::Acquire) {
             break;
@@ -120,7 +135,9 @@ fn handle_conn(stream: TcpStream, state: &HttpState) {
     // "GET /path HTTP/1.1" — keep only method + path.
     let mut parts = line.split_whitespace();
     let method = parts.next().unwrap_or("");
-    let path = parts.next().unwrap_or("");
+    let target = parts.next().unwrap_or("");
+    // Split off the query string; only /profile reads it.
+    let (path, query) = target.split_once('?').map_or((target, ""), |(p, q)| (p, q));
     // Drain headers to the blank line; we act on none of them.
     let mut hdr = String::new();
     loop {
@@ -142,6 +159,14 @@ fn handle_conn(stream: TcpStream, state: &HttpState) {
             let body = prom::render(&state.registry, Some(&state.build_info));
             write_response(&mut stream, 200, "OK", PROM_TEXT, &body)
         }
+        "/profile" => {
+            let body = profile_body(state, query);
+            write_response(&mut stream, 200, "OK", TEXT_PLAIN, &body)
+        }
+        "/debug/threads" => {
+            let body = threads_body(state);
+            write_response(&mut stream, 200, "OK", APP_JSON, &body)
+        }
         "/healthz" => write_response(&mut stream, 200, "OK", TEXT_PLAIN, "ok\n"),
         "/readyz" => {
             if state.ready.load(Ordering::Acquire) {
@@ -154,9 +179,52 @@ fn handle_conn(stream: TcpStream, state: &HttpState) {
     };
 }
 
+/// Collapsed-stack reply for `/profile`. With no (or a zero) `seconds`
+/// query the cumulative table since daemon start is rendered; with
+/// `seconds=N` two snapshots bracket an N-second sleep **on this
+/// connection's thread** (capped so a client cannot park one forever)
+/// and only the window's activity is reported.
+fn profile_body(state: &HttpState, query: &str) -> String {
+    let secs = query
+        .split('&')
+        .find_map(|kv| kv.strip_prefix("seconds="))
+        .and_then(|v| v.parse::<u64>().ok())
+        .unwrap_or(0)
+        .min(MAX_PROFILE_WINDOW_SECS);
+    let threads = state.registry.threads();
+    if secs == 0 {
+        return threads.collapsed();
+    }
+    let before = threads.stage_table();
+    std::thread::sleep(std::time::Duration::from_secs(secs));
+    let after = threads.stage_table();
+    profile::collapsed_between(&before, &after)
+}
+
+/// JSON reply for `/debug/threads`: one object per registered thread.
+fn threads_body(state: &HttpState) -> String {
+    let mut arr = Json::arr();
+    for t in state.registry.threads().snapshot() {
+        arr.push(
+            Json::obj()
+                .set("role", t.role)
+                .set("index", t.index as u64)
+                .set("stage", t.stage)
+                .set("cpu_us", t.cpu_us)
+                .set("wall_us", t.wall_us)
+                .set("busy", t.busy),
+        );
+    }
+    Json::obj()
+        .set("cpu_clock", profile::cpu_clock_supported())
+        .set("threads", arr)
+        .to_string()
+}
+
 /// The exposition-format content type Prometheus' scraper negotiates.
 const PROM_TEXT: &str = "text/plain; version=0.0.4; charset=utf-8";
 const TEXT_PLAIN: &str = "text/plain; charset=utf-8";
+const APP_JSON: &str = "application/json";
 
 fn write_response(
     stream: &mut TcpStream,
@@ -271,6 +339,82 @@ mod tests {
         let mut raw = String::new();
         s.read_to_string(&mut raw).unwrap();
         assert!(raw.starts_with("HTTP/1.1 405 "), "want 405, got: {raw}");
+        srv.stop();
+    }
+
+    #[test]
+    fn profile_returns_collapsed_stack_lines() {
+        let (srv, registry) = spawn_test_server(true);
+        // Register a fake worker and publish a stage so the cumulative
+        // table has at least one (role, stage) pair beyond the accept
+        // thread's own "http" entry.
+        let guard = registry.threads().register("worker", 3);
+        guard.set_stage("projection");
+        registry.threads().sample_once();
+        let (status, _, body) = get(srv.local_addr(), "/profile");
+        assert_eq!(status, "HTTP/1.1 200 OK");
+        assert!(!body.trim().is_empty(), "empty collapsed output");
+        for line in body.lines() {
+            let (frames, weight) = line.rsplit_once(' ').expect("`role;stage N` shape");
+            let (role, stage) = frames.split_once(';').expect("role;stage frames");
+            assert!(!role.is_empty() && profile::is_stage(stage), "bad line: {line}");
+            weight.parse::<u64>().expect("numeric weight");
+        }
+        assert!(
+            body.lines().any(|l| l.starts_with("worker;projection ")),
+            "worker stage missing:\n{body}"
+        );
+        drop(guard);
+        srv.stop();
+    }
+
+    #[test]
+    fn profile_window_query_reports_only_window_activity() {
+        let (srv, registry) = spawn_test_server(true);
+        let guard = registry.threads().register("worker", 0);
+        guard.set_stage("projection");
+        registry.threads().sample_once();
+        // Windowed scrape: nothing advances during the 1 s window, so
+        // the pre-window "projection" entry must not reappear.
+        let (status, _, body) = get(srv.local_addr(), "/profile?seconds=1");
+        assert_eq!(status, "HTTP/1.1 200 OK");
+        assert!(
+            !body.lines().any(|l| l.starts_with("worker;projection ")),
+            "stale pre-window activity leaked:\n{body}"
+        );
+        drop(guard);
+        srv.stop();
+    }
+
+    #[test]
+    fn debug_threads_lists_registered_threads_as_json() {
+        let (srv, registry) = spawn_test_server(true);
+        let guard = registry.threads().register("worker", 7);
+        guard.set_stage("queue_wait");
+        let (status, headers, body) = get(srv.local_addr(), "/debug/threads");
+        assert_eq!(status, "HTTP/1.1 200 OK");
+        assert!(headers.contains("Content-Type: application/json"), "{headers}");
+        let doc = Json::parse(&body).expect("valid json");
+        let threads = doc.get("threads").and_then(|t| t.as_array()).expect("threads array");
+        let worker = threads
+            .iter()
+            .find(|t| t.get("role").and_then(|r| r.as_str()) == Some("worker"))
+            .expect("worker row");
+        assert_eq!(worker.get("index").and_then(|v| v.as_u64()), Some(7));
+        assert_eq!(worker.get("stage").and_then(|v| v.as_str()), Some("queue_wait"));
+        let busy = worker.get("busy").and_then(|v| v.as_f64()).expect("busy fraction");
+        assert!((0.0..=1.0).contains(&busy), "busy out of range: {busy}");
+        drop(guard);
+        srv.stop();
+    }
+
+    #[test]
+    fn query_strings_do_not_break_path_routing() {
+        let (srv, _reg) = spawn_test_server(true);
+        let (status, _, _) = get(srv.local_addr(), "/metrics?foo=bar");
+        assert_eq!(status, "HTTP/1.1 200 OK");
+        let (status, _, _) = get(srv.local_addr(), "/nope?seconds=3");
+        assert_eq!(status, "HTTP/1.1 404 Not Found");
         srv.stop();
     }
 

@@ -73,14 +73,19 @@
 //! | `nearest` | embed query + IVFFlat k-NN | adds an `ann_search` stamp |
 //! | `stats` | counters + per-op latency summaries, uptime, engine, config fingerprint | cheap, poll-friendly |
 //! | `metrics` | full [`crate::obs`] registry snapshot (every histogram with buckets) | the scrape endpoint |
-//! | `trace` | last *n* finished request spans + captured slow spans | stage-level "where did the time go" |
+//! | `trace` | last *n* finished request spans + captured slow spans; `"span_id": N` fetches one span by id | stage-level "where did the time go" |
+//! | `profile` | the sampling profiler's `(role, stage) → {samples, cpu_us, entered}` table + live registered threads with busy fractions | per-thread CPU attribution |
 //! | `ping` / `shutdown` | liveness / clean stop | traced like any request |
 //!
 //! Every request carries a [`crate::obs::TraceCtx`] from admission to
 //! reply; spans slower than `--slow-ms` also emit one JSON line to
-//! stderr. Recording is observation-only, so tracing cannot perturb
-//! embeddings (pinned by `tests/obs.rs`). Each daemon owns its own
-//! [`crate::obs::Registry`] — two in-process daemons report fully
+//! stderr, carrying the span's monotone `span_id` so it can be fetched
+//! later via `trace`. A sampling profiler (`--profile-hz`, default on
+//! at 19 Hz) attributes per-thread CPU time to the same stage
+//! vocabulary — see [`crate::obs::profile`]. Recording is
+//! observation-only, so neither tracing nor full-rate profiling can
+//! perturb embeddings (pinned by `tests/obs.rs`). Each daemon owns its
+//! own [`crate::obs::Registry`] — two in-process daemons report fully
 //! isolated numbers.
 //!
 //! ## HTTP endpoints (`--http-port`, module [`http`])
@@ -93,6 +98,8 @@
 //! | `/metrics` | this daemon's registry in Prometheus text format v0.0.4 ([`crate::obs::prom`]), plus `graphlet_rf_build_info` |
 //! | `/healthz` | `200 ok` while the process accepts connections |
 //! | `/readyz` | `200 ready` once pipeline is up, store recovered, and the ANN cell initialized; `503` before that |
+//! | `/profile` | cumulative collapsed-stack flame text (`role;stage N`); `?seconds=N` profiles an N-second window on the request |
+//! | `/debug/threads` | JSON list of registered threads (role, index, stage, cpu_us, wall_us, busy) |
 //!
 //! Without `--http-port` no HTTP socket is opened and the daemon is
 //! exactly the historical TCP-only service.

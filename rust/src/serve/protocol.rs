@@ -10,6 +10,8 @@
 //! {"op":"stats","id":2}
 //! {"op":"metrics","id":4}
 //! {"op":"trace","id":5,"n":16}
+//! {"op":"trace","id":5,"span_id":42}
+//! {"op":"profile","id":6}
 //! {"op":"shutdown","id":3}
 //! ```
 //!
@@ -20,9 +22,10 @@
 //! | `embed`    | `v`, `edges`, [`graph_index`]            | the graph's embedding row (cached or computed) |
 //! | `nearest`  | `v`, `edges`, `k`, [`graph_index`], [`probe`] | the `k` stored keys nearest to the graph's embedding, exact L2 distances (requires `--store-dir`) |
 //! | `ping`     | —                                        | `{"ok":true}` |
-//! | `stats`    | —                                        | pipeline/cache/store/ann counters + uptime/engine/config fingerprint + per-op latency summaries |
+//! | `stats`    | —                                        | pipeline/cache/store/ann counters + proc self-metrics + uptime/engine/config fingerprint + per-op latency summaries |
 //! | `metrics`  | —                                        | full `obs` registry snapshot: counters, gauges, every histogram's log₂ buckets + derived p50/p90/p99 |
-//! | `trace`    | [`n`]                                    | the `n` most recent finished spans (default 16) plus every captured slow span (≥ `--slow-ms`) |
+//! | `trace`    | [`n`], [`span_id`]                       | the `n` most recent finished spans (default 16) plus every captured slow span (≥ `--slow-ms`); with `span_id`, that single span (error once it aged out) |
+//! | `profile`  | —                                        | the sampling profiler's `(role, stage) → {samples, cpu_us}` table plus the live thread list with per-thread busy fractions |
 //! | `shutdown` | —                                        | ack, then the daemon drains and exits |
 //!
 //! `graph_index` selects the position in the server's per-graph seed
@@ -84,8 +87,12 @@ pub enum Request {
     /// Full observability-registry snapshot (histogram buckets +
     /// derived percentiles), suitable for scraping.
     Metrics { id: u64 },
-    /// The `n` most recent finished spans plus captured slow spans.
-    Trace { id: u64, n: usize },
+    /// The `n` most recent finished spans plus captured slow spans —
+    /// or, with `span_id`, that single span fetched by id.
+    Trace { id: u64, n: usize, span_id: Option<u64> },
+    /// The sampling profiler's aggregated `(role, stage)` table and
+    /// registered-thread list (see `crate::obs::profile`).
+    Profile { id: u64 },
     Shutdown { id: u64 },
 }
 
@@ -127,8 +134,15 @@ pub fn parse_request(line: &str) -> Result<Request, ProtoError> {
                     ProtoError::new(Some(id), "trace: \"n\" must be a positive integer")
                 })?,
             };
-            Ok(Request::Trace { id, n })
+            let span_id = match j.get("span_id") {
+                None => None,
+                Some(v) => Some(v.as_u64().filter(|&s| s >= 1).ok_or_else(|| {
+                    ProtoError::new(Some(id), "trace: \"span_id\" must be a positive integer")
+                })?),
+            };
+            Ok(Request::Trace { id, n, span_id })
         }
+        "profile" => Ok(Request::Profile { id }),
         "shutdown" => Ok(Request::Shutdown { id }),
         "embed" => {
             let (v, edges, graph_index) = parse_graph_fields(&j, id, "embed")?;
@@ -362,16 +376,31 @@ mod tests {
         assert_eq!(parse_request(r#"{"op":"metrics","id":4}"#).unwrap(), Request::Metrics { id: 4 });
         assert_eq!(
             parse_request(r#"{"op":"trace","id":5}"#).unwrap(),
-            Request::Trace { id: 5, n: 16 },
+            Request::Trace { id: 5, n: 16, span_id: None },
             "n defaults to 16"
         );
         assert_eq!(
             parse_request(r#"{"op":"trace","id":5,"n":3}"#).unwrap(),
-            Request::Trace { id: 5, n: 3 }
+            Request::Trace { id: 5, n: 3, span_id: None }
         );
         let e = parse_request(r#"{"op":"trace","id":5,"n":0}"#).unwrap_err();
         assert_eq!(e.id, Some(5));
         assert!(e.msg.contains("positive"), "{}", e.msg);
+    }
+
+    #[test]
+    fn trace_by_span_id_and_profile_parse() {
+        assert_eq!(
+            parse_request(r#"{"op":"trace","id":5,"span_id":42}"#).unwrap(),
+            Request::Trace { id: 5, n: 16, span_id: Some(42) }
+        );
+        let e = parse_request(r#"{"op":"trace","id":5,"span_id":0}"#).unwrap_err();
+        assert_eq!(e.id, Some(5));
+        assert!(e.msg.contains("span_id"), "{}", e.msg);
+        let e = parse_request(r#"{"op":"trace","id":5,"span_id":-1}"#).unwrap_err();
+        assert!(e.msg.contains("span_id"), "{}", e.msg);
+        let parsed = parse_request(r#"{"op":"profile","id":6}"#).unwrap();
+        assert_eq!(parsed, Request::Profile { id: 6 });
     }
 
     #[test]

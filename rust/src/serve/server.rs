@@ -95,6 +95,15 @@ pub struct ServeConfig {
     /// binds an ephemeral port (tests); `None` (the default) disables
     /// the listener entirely.
     pub http_port: Option<u16>,
+    /// Sampling-profiler rate in Hz (`--profile-hz`): the sampler
+    /// thread walks the thread registry this many times per second,
+    /// attributing per-thread CPU time to `(role, stage)` pairs (see
+    /// [`crate::obs::profile`]). `0` disables the sampler (the
+    /// registry still tracks threads; `profile` / `/profile` then
+    /// report entered stages with zero samples). Defaults to a low
+    /// always-on rate; the `GRAPHLET_RF_TEST_PROFILE` CI axis
+    /// overrides it.
+    pub profile_hz: u64,
 }
 
 impl Default for ServeConfig {
@@ -114,6 +123,7 @@ impl Default for ServeConfig {
             ann_min_brute: crate::ann::DEFAULT_MIN_BRUTE,
             slow_ms: slow_ms_default(),
             http_port: None,
+            profile_hz: profile_hz_default(),
         }
     }
 }
@@ -125,6 +135,19 @@ fn slow_ms_default() -> u64 {
     match std::env::var("GRAPHLET_RF_TEST_OBS") {
         Ok(v) if v == "1" => 0,
         _ => u64::MAX,
+    }
+}
+
+/// Default sampler rate: always on at a deliberately low 19 Hz (a
+/// prime, so ticks don't phase-lock with millisecond-periodic work;
+/// per tick the sampler does one registry walk — observation-only
+/// either way). The `GRAPHLET_RF_TEST_PROFILE` CI axis overrides it
+/// outright (`0` = off, `997` = the aggressive full-rate legs), and
+/// `--profile-hz` overrides both.
+fn profile_hz_default() -> u64 {
+    match std::env::var("GRAPHLET_RF_TEST_PROFILE") {
+        Ok(v) => v.trim().parse().unwrap_or(19),
+        Err(_) => 19,
     }
 }
 
@@ -168,6 +191,9 @@ pub struct Server {
     /// The observability HTTP listener (`--http-port`), if enabled;
     /// stopped when `run` returns.
     http: Option<super::http::HttpServer>,
+    /// The sampling-profiler thread (`--profile-hz`), if enabled;
+    /// stopped when `run` returns (and on drop).
+    profiler: Option<obs::Profiler>,
     ctx: Arc<ServeCtx>,
 }
 
@@ -235,10 +261,15 @@ impl Server {
             )?),
             None => None,
         };
+        // The sampler rides on the same instance-scoped registry every
+        // thread registers with, so two in-process daemons profile in
+        // full isolation.
+        let profiler = obs::Profiler::start(registry.clone(), cfg.profile_hz);
         let cfg_slow_ms = cfg.slow_ms;
         Ok(Server {
             listener,
             http,
+            profiler,
             ctx: Arc::new(ServeCtx {
                 cfg,
                 pipeline,
@@ -284,16 +315,20 @@ impl Server {
             }
             match stream {
                 Ok(s) => {
-                    self.ctx.connections.fetch_add(1, Ordering::Relaxed);
+                    let conn_id = self.ctx.connections.fetch_add(1, Ordering::Relaxed);
                     let ctx = self.ctx.clone();
-                    std::thread::spawn(move || handle_conn(s, &ctx));
+                    std::thread::spawn(move || handle_conn(s, &ctx, conn_id as usize));
                 }
                 Err(e) => eprintln!("serve: accept error: {e}"),
             }
         }
-        // The daemon is going down: take the scrape endpoint with it.
+        // The daemon is going down: take the scrape endpoint and the
+        // sampler with it.
         if let Some(http) = self.http {
             http.stop();
+        }
+        if let Some(mut profiler) = self.profiler {
+            profiler.stop();
         }
         Ok(())
     }
@@ -347,7 +382,7 @@ fn wait_for_capacity(shared: &ConnShared, cap: usize) -> bool {
     !shared.writer_gone.load(Ordering::Acquire)
 }
 
-fn handle_conn(stream: TcpStream, ctx: &Arc<ServeCtx>) {
+fn handle_conn(stream: TcpStream, ctx: &Arc<ServeCtx>, conn_id: usize) {
     let read_half = match stream.try_clone() {
         Ok(s) => s,
         Err(_) => return,
@@ -361,14 +396,18 @@ fn handle_conn(stream: TcpStream, ctx: &Arc<ServeCtx>) {
     let writer = {
         let shared = shared.clone();
         let ctx = ctx.clone();
-        std::thread::spawn(move || writer_loop(stream, &reply_rx, &shared, &ctx))
+        std::thread::spawn(move || writer_loop(stream, &reply_rx, &shared, &ctx, conn_id))
     };
 
+    // Register with the profiler: blocked on the socket the thread is
+    // `read_request`; handling a parsed line starts at the cache probe.
+    let prof = ctx.registry.threads().register("conn_reader", conn_id);
     let mut reader = BufReader::new(read_half);
     let mut line = String::new();
     let mut next_tag: u64 = 0;
     loop {
         line.clear();
+        prof.set_stage("read_request");
         // Cap line length so one hostile request cannot exhaust memory.
         let n = match (&mut reader)
             .take(ctx.cfg.max_line_bytes as u64 + 1)
@@ -405,6 +444,7 @@ fn handle_conn(stream: TcpStream, ctx: &Arc<ServeCtx>) {
         ctx.requests.fetch_add(1, Ordering::Relaxed);
         let tag = next_tag;
         next_tag += 1;
+        prof.set_stage("cache_probe");
         if handle_request(&line, tag, ctx, &shared, &reply_tx) == Flow::Shutdown {
             break;
         }
@@ -458,6 +498,7 @@ fn handle_request(
         Request::Stats { .. } => "stats",
         Request::Metrics { .. } => "metrics",
         Request::Trace { .. } => "trace",
+        Request::Profile { .. } => "profile",
         Request::Shutdown { .. } => "shutdown",
         Request::Embed { .. } => "embed",
         Request::Nearest { .. } => "nearest",
@@ -467,6 +508,7 @@ fn handle_request(
         | Request::Stats { id }
         | Request::Metrics { id }
         | Request::Trace { id, .. }
+        | Request::Profile { id }
         | Request::Shutdown { id }
         | Request::Embed { id, .. }
         | Request::Nearest { id, .. } => *id,
@@ -498,24 +540,49 @@ fn handle_request(
             send_raw(shared, reply_tx, tag, line, trace);
             Flow::Continue
         }
-        Request::Trace { id, n } => {
-            let mut spans = Json::arr();
-            for s in ctx.ring.recent(n) {
-                spans.push(s.to_json());
-            }
-            let mut slow = Json::arr();
-            for s in ctx.ring.slow() {
-                slow.push(s.to_json());
-            }
-            let line = Json::obj()
-                .set("id", id)
-                .set("ok", true)
-                .set("op", "trace")
-                .set("spans", spans)
-                .set("slow", slow)
-                .set("slow_emitted", ctx.ring.slow_emitted())
-                .to_string();
+        Request::Trace { id, n, span_id } => {
+            let line = match span_id {
+                // Point lookup: line a slow-span stderr line (which
+                // carries its span_id) up against the full span.
+                Some(sid) => match ctx.ring.find(sid) {
+                    Some(rec) => Json::obj()
+                        .set("id", id)
+                        .set("ok", true)
+                        .set("op", "trace")
+                        .set("span", rec.to_json())
+                        .to_string(),
+                    None => {
+                        record_error(ctx, "trace");
+                        error_reply(
+                            Some(id),
+                            &format!("trace: span {sid} not found (aged out of both buffers)"),
+                        )
+                    }
+                },
+                None => {
+                    let mut spans = Json::arr();
+                    for s in ctx.ring.recent(n) {
+                        spans.push(s.to_json());
+                    }
+                    let mut slow = Json::arr();
+                    for s in ctx.ring.slow() {
+                        slow.push(s.to_json());
+                    }
+                    Json::obj()
+                        .set("id", id)
+                        .set("ok", true)
+                        .set("op", "trace")
+                        .set("spans", spans)
+                        .set("slow", slow)
+                        .set("slow_emitted", ctx.ring.slow_emitted())
+                        .to_string()
+                }
+            };
             send_raw(shared, reply_tx, tag, line, trace);
+            Flow::Continue
+        }
+        Request::Profile { id } => {
+            send_raw(shared, reply_tx, tag, profile_reply(id, ctx), trace);
             Flow::Continue
         }
         Request::Shutdown { id } => {
@@ -702,7 +769,52 @@ fn validate_graph(ctx: &ServeCtx, v: usize, edges: &[(usize, usize)]) -> Result<
     Ok(())
 }
 
+/// The `profile` op reply: the aggregated `(role, stage)` table, the
+/// live thread list with busy fractions, and enough metadata (`hz`,
+/// tick/sample totals, CPU-clock availability) for a client to judge
+/// how much signal the numbers carry.
+fn profile_reply(id: u64, ctx: &ServeCtx) -> String {
+    let threads = ctx.registry.threads();
+    let mut stages = Json::arr();
+    for r in threads.stage_table() {
+        stages.push(
+            Json::obj()
+                .set("role", r.role)
+                .set("stage", r.stage)
+                .set("samples", r.samples)
+                .set("cpu_us", r.cpu_us)
+                .set("entered", r.entered),
+        );
+    }
+    let mut listed = Json::arr();
+    for t in threads.snapshot() {
+        listed.push(
+            Json::obj()
+                .set("role", t.role)
+                .set("index", t.index)
+                .set("stage", t.stage)
+                .set("cpu_us", t.cpu_us)
+                .set("wall_us", t.wall_us)
+                .set("busy", t.busy),
+        );
+    }
+    Json::obj()
+        .set("id", id)
+        .set("ok", true)
+        .set("op", "profile")
+        .set("profile_hz", ctx.cfg.profile_hz)
+        .set("ticks", threads.ticks())
+        .set("samples", threads.samples())
+        .set("cpu_clock", obs::cpu_clock_supported())
+        .set("stages", stages)
+        .set("threads", listed)
+        .to_string()
+}
+
 fn stats_reply(id: u64, ctx: &ServeCtx) -> String {
+    // Refresh the proc.* gauges on demand so a --profile-hz 0 daemon
+    // still reports live process numbers here and in /metrics.
+    obs::profile::refresh_proc_gauges(&ctx.registry);
     let tiered = ctx.cache.stats();
     let cache = tiered.l1;
     let pipe = ctx.pipeline.metrics_snapshot();
@@ -799,6 +911,14 @@ fn stats_reply(id: u64, ctx: &ServeCtx) -> String {
                 .set("config_fp", format!("{:016x}", ctx.config_fp))
                 .set("errors_by_op", errors_by_op(&ctx.registry)),
         )
+        .set(
+            "proc",
+            // Process self-metrics (refreshed above; zero off Linux).
+            Json::obj()
+                .set("rss_bytes", ctx.registry.gauge("proc.rss_bytes").get())
+                .set("threads", ctx.registry.gauge("proc.threads").get())
+                .set("open_fds", ctx.registry.gauge("proc.open_fds").get()),
+        )
         .set("request_latency", request_latency_summaries(&ctx.registry))
         .to_string()
 }
@@ -840,11 +960,17 @@ fn writer_loop(
     rx: &Receiver<Completed>,
     shared: &ConnShared,
     ctx: &ServeCtx,
+    conn_id: usize,
 ) {
+    // Blocked on the completion channel the writer is `idle`; rendering
+    // + flushing a reply is `reply_write` — matching the span stamp.
+    let prof = ctx.registry.threads().register("conn_writer", conn_id);
     let mut w = BufWriter::new(stream);
     for done in rx.iter() {
+        prof.set_stage("reply_write");
         let Some((p, trace)) = shared.pending.lock().expect("pending lock").remove(&done.tag)
         else {
+            prof.set_stage("idle");
             continue;
         };
         let line = match p {
@@ -891,6 +1017,7 @@ fn writer_loop(
         }
         // One reply drained: admit one more request past backpressure.
         shared.drained.notify_one();
+        prof.set_stage("idle");
     }
     // Whether the channel drained (connection done) or a write failed
     // (client stopped reading / disconnected): release a reader that

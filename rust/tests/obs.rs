@@ -16,7 +16,11 @@
 //! - two in-process daemons report fully isolated registries;
 //! - a live daemon's `/metrics` scrape passes a Prometheus text-format
 //!   lint (HELP/TYPE before samples, cumulative monotone `le` series,
-//!   `+Inf` == `_count`).
+//!   `+Inf` == `_count`);
+//! - the sampling profiler at full rate (997 Hz) is **bitwise
+//!   invisible** to embeddings, the `profile` op and `/profile`
+//!   endpoint only ever emit stages from the closed vocabulary, and
+//!   busy fractions separate a spinning thread from a sleeping one.
 //!
 //! Registries are **instance-scoped** — every daemon owns one — so the
 //! daemon-side count assertions here are direct equalities on exact
@@ -35,7 +39,8 @@ use graphlet_rf::coordinator::{
 };
 use graphlet_rf::gen::SbmConfig;
 use graphlet_rf::obs::metrics::{bucket_index, bucket_upper_us, NUM_BUCKETS, OVERFLOW_BUCKET};
-use graphlet_rf::obs::{Registry, SpanRing, TraceCtx};
+use graphlet_rf::obs::profile::is_stage;
+use graphlet_rf::obs::{cpu_clock_supported, Registry, SpanRing, ThreadRegistry, TraceCtx};
 use graphlet_rf::serve::{embed_request, parse_embed_reply, send_shutdown, ServeConfig, Server};
 use graphlet_rf::util::{Json, Rng};
 
@@ -724,5 +729,242 @@ fn tracing_on_and_off_are_bitwise_identical() {
                 "graph {g} dim {i}: traced {a} vs untraced {b}"
             );
         }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Sampling profiler
+// ---------------------------------------------------------------------------
+
+/// A daemon sampled at full rate (997 Hz, well above the 19 Hz
+/// default) must produce rows bitwise identical to a profiler-off
+/// daemon. The sampler only *reads* per-thread CPU clocks and stage
+/// slots; this pin is what lets it stay always-on in production.
+#[test]
+fn full_rate_profiler_changes_no_embedding_bits() {
+    let ds = SbmConfig { per_class: 3, r: 1.5, ..Default::default() }.generate(&mut Rng::new(11));
+    let n = ds.len();
+
+    // Reference rows with the profiler off.
+    let (addr, server) =
+        start_server(ServeConfig { gsa: test_gsa(), profile_hz: 0, ..Default::default() });
+    let mut client = Client::connect(addr);
+    let mut want = Vec::with_capacity(n);
+    for g in 0..n {
+        let (_, row, _) =
+            parse_embed_reply(&client.roundtrip(&embed_request(g as u64, g, &ds.graphs[g])))
+                .unwrap();
+        want.push(row);
+    }
+    drop(client);
+    send_shutdown(&addr.to_string()).unwrap();
+    server.join().unwrap();
+
+    // The same config hammered by the sampler for the whole window.
+    let (addr, server) =
+        start_server(ServeConfig { gsa: test_gsa(), profile_hz: 997, ..Default::default() });
+    let mut client = Client::connect(addr);
+    for g in 0..n {
+        let (_, row, _) =
+            parse_embed_reply(&client.roundtrip(&embed_request(g as u64, g, &ds.graphs[g])))
+                .unwrap();
+        for (i, (a, b)) in want[g].iter().zip(&row).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "graph {g} dim {i}: sampling moved a bit");
+        }
+    }
+
+    // The pin proves nothing if the sampler never actually ran.
+    let j = Json::parse(client.roundtrip(r#"{"op":"profile","id":90}"#).trim()).unwrap();
+    assert_eq!(j.get("ok").and_then(Json::as_bool), Some(true), "{j}");
+    assert!(
+        j.get("ticks").and_then(Json::as_u64).unwrap() > 0,
+        "997 Hz sampler never ticked during the traffic window: {j}"
+    );
+
+    drop(client);
+    send_shutdown(&addr.to_string()).unwrap();
+    server.join().unwrap();
+}
+
+/// The `profile` op's stage table and thread list: every stage comes
+/// from the closed vocabulary, the pipeline roles are registered, and
+/// every busy fraction is a valid [0, 1] ratio.
+#[test]
+fn profile_op_reports_stage_table_and_thread_busy_fractions() {
+    let ds = SbmConfig { per_class: 3, r: 1.5, ..Default::default() }.generate(&mut Rng::new(11));
+    let (addr, server) =
+        start_server(ServeConfig { gsa: test_gsa(), profile_hz: 499, ..Default::default() });
+    let mut client = Client::connect(addr);
+    for g in 0..ds.len() {
+        parse_embed_reply(&client.roundtrip(&embed_request(g as u64, g, &ds.graphs[g]))).unwrap();
+    }
+
+    // Poll until the sampler has caught the live threads at least once.
+    let mut j = Json::Null;
+    for _ in 0..500 {
+        j = Json::parse(client.roundtrip(r#"{"op":"profile","id":91}"#).trim()).unwrap();
+        assert_eq!(j.get("ok").and_then(Json::as_bool), Some(true), "{j}");
+        if j.get("samples").and_then(Json::as_u64).unwrap_or(0) > 0 {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(10));
+    }
+    assert_eq!(j.get("op").and_then(Json::as_str), Some("profile"));
+    assert_eq!(j.get("profile_hz").and_then(Json::as_u64), Some(499));
+    assert!(j.get("cpu_clock").and_then(Json::as_bool).is_some());
+    assert!(j.get("samples").and_then(Json::as_u64).unwrap_or(0) > 0, "sampler idle: {j}");
+
+    // Stage table: closed vocabulary only, counts present on each row.
+    let stages = j.get("stages").and_then(Json::as_array).unwrap();
+    assert!(!stages.is_empty());
+    for row in stages {
+        let stage = row.get("stage").and_then(Json::as_str).unwrap();
+        assert!(is_stage(stage), "unknown stage {stage:?} in {row}");
+        assert!(!row.get("role").and_then(Json::as_str).unwrap().is_empty());
+        for field in ["samples", "cpu_us", "entered"] {
+            assert!(row.get(field).and_then(Json::as_u64).is_some(), "{field} missing: {row}");
+        }
+    }
+
+    // Thread list: the long-lived pipeline roles all registered, and
+    // busy is a fraction. (conn threads come and go; these four live
+    // for the daemon.)
+    let threads = j.get("threads").and_then(Json::as_array).unwrap();
+    let roles: Vec<&str> =
+        threads.iter().filter_map(|t| t.get("role").and_then(Json::as_str)).collect();
+    for role in ["worker", "shard", "profiler", "conn_reader"] {
+        assert!(roles.contains(&role), "role {role} not registered: {roles:?}");
+    }
+    for t in threads {
+        let busy = t.get("busy").and_then(Json::as_f64).unwrap();
+        assert!((0.0..=1.0).contains(&busy), "busy {busy} out of range: {t}");
+        assert!(is_stage(t.get("stage").and_then(Json::as_str).unwrap()));
+        assert!(t.get("cpu_us").and_then(Json::as_u64).is_some());
+        assert!(t.get("wall_us").and_then(Json::as_u64).is_some());
+    }
+
+    drop(client);
+    send_shutdown(&addr.to_string()).unwrap();
+    server.join().unwrap();
+}
+
+/// `/profile` emits collapsed-stack text: every line is exactly
+/// `role;stage N` with a stage from the closed vocabulary, and the
+/// traffic this test generated shows up as conn frames. `/debug/threads`
+/// lists the registered threads as JSON.
+#[test]
+fn http_profile_collapsed_lines_use_the_stage_vocabulary() {
+    let ds = SbmConfig { per_class: 3, r: 1.5, ..Default::default() }.generate(&mut Rng::new(11));
+    let (addr, http, server) =
+        start_server_http(ServeConfig { gsa: test_gsa(), profile_hz: 499, ..Default::default() });
+    let mut client = Client::connect(addr);
+    for g in 0..ds.len() {
+        parse_embed_reply(&client.roundtrip(&embed_request(g as u64, g, &ds.graphs[g]))).unwrap();
+    }
+
+    let (status, body) = http_get(http, "/profile");
+    assert_eq!(status, "HTTP/1.1 200 OK");
+    assert!(!body.trim().is_empty(), "collapsed-stack output empty after traffic");
+    for line in body.lines() {
+        let (frame, weight) = line.rsplit_once(' ').unwrap_or_else(|| panic!("no weight: {line}"));
+        weight.parse::<u64>().unwrap_or_else(|_| panic!("bad weight: {line}"));
+        let (role, stage) = frame.split_once(';').unwrap_or_else(|| panic!("no ';': {line}"));
+        assert!(!role.is_empty(), "empty role: {line}");
+        assert!(is_stage(stage), "stage {stage:?} not in the vocabulary: {line}");
+    }
+    // This client's requests ran through a conn reader; stage *entry*
+    // counts surface deterministically even if sampling missed them.
+    assert!(
+        body.lines().any(|l| l.starts_with("conn_reader;")),
+        "no conn_reader frame after real traffic:\n{body}"
+    );
+
+    let (status, body) = http_get(http, "/debug/threads");
+    assert_eq!(status, "HTTP/1.1 200 OK");
+    let j = Json::parse(&body).unwrap();
+    assert!(j.get("cpu_clock").and_then(Json::as_bool).is_some());
+    let threads = j.get("threads").and_then(Json::as_array).unwrap();
+    assert!(!threads.is_empty());
+    for t in threads {
+        assert!(is_stage(t.get("stage").and_then(Json::as_str).unwrap()));
+        let busy = t.get("busy").and_then(Json::as_f64).unwrap();
+        assert!((0.0..=1.0).contains(&busy), "busy {busy} out of range: {t}");
+    }
+
+    drop(client);
+    send_shutdown(&addr.to_string()).unwrap();
+    server.join().unwrap();
+}
+
+/// Direct registry exercise: register/deregister lifecycle and the
+/// busy-fraction contract — a spinning thread attributes (nearly) all
+/// of its wall time to CPU, a sleeping thread almost none.
+#[test]
+fn busy_fractions_separate_spin_from_sleep() {
+    let reg = Arc::new(ThreadRegistry::default());
+    let stop = Arc::new(AtomicBool::new(false));
+    let spinner = {
+        let (reg, stop) = (reg.clone(), stop.clone());
+        std::thread::spawn(move || {
+            let prof = reg.register("worker", 0);
+            prof.set_stage("spin");
+            let mut x = 0u64;
+            while !stop.load(Ordering::Relaxed) {
+                x = x.wrapping_mul(6364136223846793005).wrapping_add(1);
+            }
+            x
+        })
+    };
+    let sleeper = {
+        let (reg, stop) = (reg.clone(), stop.clone());
+        std::thread::spawn(move || {
+            let prof = reg.register("worker", 1);
+            prof.set_stage("sleep");
+            while !stop.load(Ordering::Relaxed) {
+                std::thread::sleep(std::time::Duration::from_millis(5));
+            }
+        })
+    };
+
+    // Give both threads a real window, sampling as a profiler would.
+    for _ in 0..20 {
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        reg.sample_once();
+    }
+    let snap = reg.snapshot();
+    let busy_of = |idx: usize| {
+        snap.iter()
+            .find(|t| t.role == "worker" && t.index == idx)
+            .unwrap_or_else(|| panic!("worker {idx} not registered: {snap:?}"))
+            .busy
+    };
+    for idx in [0, 1] {
+        assert!((0.0..=1.0).contains(&busy_of(idx)), "busy {} out of range", busy_of(idx));
+    }
+    if cpu_clock_supported() {
+        // Thresholds leave wide margins for CI noise; without a
+        // per-thread CPU clock busy falls back to wall time and the
+        // two are indistinguishable.
+        assert!(busy_of(0) >= 0.5, "spinning thread busy = {}", busy_of(0));
+        assert!(busy_of(1) <= 0.1, "sleeping thread busy = {}", busy_of(1));
+    }
+
+    // Deregistration: after the guards drop, the next sample prunes the
+    // slots from the live list but keeps their stage history.
+    stop.store(true, Ordering::Relaxed);
+    spinner.join().unwrap();
+    sleeper.join().unwrap();
+    reg.sample_once();
+    assert!(
+        reg.snapshot().iter().all(|t| t.role != "worker"),
+        "deregistered threads still listed"
+    );
+    let table = reg.stage_table();
+    for stage in ["spin", "sleep"] {
+        let row = table
+            .iter()
+            .find(|r| r.role == "worker" && r.stage == stage)
+            .unwrap_or_else(|| panic!("stage {stage} lost at deregistration"));
+        assert!(row.entered >= 1, "stage {stage} entry count lost");
     }
 }
